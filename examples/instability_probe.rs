@@ -1,0 +1,59 @@
+//! Reproduce the paper's §3 analysis interactively: sweep the learning rate
+//! at a large batch and watch the loss-ratio spikes and Adam variance
+//! statistics grow, with and without SLW — the stability-efficiency dilemma
+//! in one screen of output.
+//!
+//!     cargo run --release --example instability_probe [-- --model tiny]
+
+use std::path::PathBuf;
+
+use slw::config::presets;
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let model =
+        std::env::args().skip_while(|a| a != "--model").nth(1).unwrap_or_else(|| "tiny".into());
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    let base_lr = presets::base_lr(&model);
+    println!(
+        "{:<8} {:>8} {:>6} | {:>14} {:>10} | {:>14} {:>10}",
+        "LR mult", "LR", "", "base spikes", "max ratio", "SLW spikes", "max ratio"
+    );
+    for mult in [1.0, 10.0, 30.0, 50.0] {
+        let mut cells = Vec::new();
+        for slw in [false, true] {
+            let mut cfg = presets::base(&model)?;
+            cfg.batch = 64;
+            cfg.lr.peak = base_lr * mult;
+            cfg.lr.min_lr = cfg.lr.peak / 15.0;
+            cfg.token_budget = 250_000;
+            if slw {
+                cfg = presets::with_slw(cfg, 8, 40)?;
+            }
+            cfg.name = format!("probe-{model}-{mult}x-{}", if slw { "slw" } else { "base" });
+            let mut trainer = slw::train::Trainer::new(&root, cfg)?;
+            let out = trainer.run()?;
+            let (spikes, max_ratio) = out.history.instability(1.1);
+            let corr = out.history.variance_correlations();
+            cells.push((spikes, max_ratio, corr.r_max, out.history.var_max_peak()));
+        }
+        println!(
+            "{:<8} {:>8.1e} {:>6} | {:>14} {:>10.3} | {:>14} {:>10.3}",
+            format!("{mult}x"),
+            base_lr * mult,
+            "",
+            cells[0].0,
+            cells[0].1,
+            cells[1].0,
+            cells[1].1
+        );
+        println!(
+            "         var_max peak: base {:.4} (r_max corr {:.2}) vs SLW {:.4} (r_max {:.2})",
+            cells[0].3, cells[0].2, cells[1].3, cells[1].2
+        );
+    }
+    println!("\nExpected shape (paper §3/§5): spike count and max ratio grow with LR for the");
+    println!("baseline; SLW suppresses both at the same LR (its var-max peak stays flat).");
+    Ok(())
+}

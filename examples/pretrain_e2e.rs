@@ -1,0 +1,103 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): pre-trains the
+//! `mini` GPT (~2M params — the largest model this single-core CPU box
+//! trains in minutes; the paper-scale substitution is documented in
+//! DESIGN.md §2) for a few hundred steps on the standard synthetic-wiki +
+//! induction blend with the full production stack:
+//!
+//!   corpus generation → BOS-packed window index → sharded threaded
+//!   prefetch → SLW truncation batcher → AOT Pallas/XLA train step →
+//!   instability instrumentation → periodic validation → probe suite →
+//!   checkpoint.
+//!
+//! Logs the loss curve and writes results/e2e_loss_curve.tsv. Recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example pretrain_e2e [steps] [--baseline]
+
+use std::path::PathBuf;
+
+use slw::config::presets;
+use slw::eval::probes;
+use slw::runtime::Engine;
+use slw::train::checkpoint;
+use slw::util::tsv::TsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.iter().find_map(|a| a.parse().ok()).unwrap_or(300);
+    let baseline = args.iter().any(|a| a == "--baseline");
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    let mut cfg = presets::base("mini")?;
+    // ~`steps` full-length steps worth of tokens
+    cfg.token_budget = (steps * cfg.batch * 128) as u64;
+    cfg.lr.horizon = slw::schedule::lr::Horizon::Tokens {
+        warmup: cfg.token_budget / 50,
+        total: cfg.token_budget,
+    };
+    cfg.eval_every = (steps / 12).max(5);
+    cfg.eval_batches = 4;
+    if !baseline {
+        cfg = presets::with_slw(cfg, 8, steps / 3)?;
+    }
+    cfg.name = if baseline { "e2e-baseline".into() } else { "e2e-slw".into() };
+    println!("config: {} | model=mini bsz={} budget={} tokens", cfg.name, cfg.batch,
+             cfg.token_budget);
+
+    let t0 = std::time::Instant::now();
+    let mut trainer = slw::train::Trainer::new(&root, cfg)?;
+    let out = trainer.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let h = &out.history;
+    println!("\n-- loss curve (every ~{} steps) --", (h.steps.len() / 20).max(1));
+    let stride = (h.steps.len() / 20).max(1);
+    for rec in h.steps.iter().step_by(stride) {
+        println!(
+            "step {:>5}  seqlen {:>3}  tokens {:>8}  loss {:.4}  lr {:.2e}",
+            rec.step, rec.seqlen, rec.tokens_after, rec.stats.loss, rec.lr
+        );
+    }
+    let mut w = TsvWriter::new(&["step", "seqlen", "tokens", "loss", "val_ppl"]);
+    let mut evals = h.evals.iter().peekable();
+    for rec in &h.steps {
+        let ppl = match evals.peek() {
+            Some(e) if e.step == rec.step => format!("{:.2}", evals.next().unwrap().val_ppl),
+            _ => String::new(),
+        };
+        w.row(&[
+            rec.step.to_string(),
+            rec.seqlen.to_string(),
+            rec.tokens_after.to_string(),
+            format!("{:.4}", rec.stats.loss),
+            ppl,
+        ]);
+    }
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results/e2e_loss_curve.tsv");
+    w.save(&out_path)?;
+
+    let (spikes, max_ratio) = h.instability(1.1);
+    println!("\n== e2e summary ==");
+    println!("steps: {}  tokens: {}  wall: {wall:.0}s ({:.2} steps/s)", h.steps.len(),
+             h.total_tokens(), h.steps.len() as f64 / wall);
+    println!("loss: {:.3} -> {:.3}", h.losses().first().unwrap(), h.losses().last().unwrap());
+    println!("stability: {spikes} spikes (>1.1), max ratio {max_ratio:.3}, diverged: {}",
+             h.diverged());
+    for e in &h.evals {
+        println!("  val ppl @ step {:>5}: {:.2}", e.step, e.val_ppl);
+    }
+
+    // probe suite on the final model
+    let mut engine = Engine::load(&root, "mini")?;
+    let (scores, avg) = probes::score_suite(&mut engine, &out.state, 0, 2, 1)?;
+    println!("probe suite (zero-shot): avg {:.1}%", 100.0 * avg);
+    for s in scores.iter().take(4) {
+        println!("  {:>14}: {:.1}%", s.name, 100.0 * s.accuracy);
+    }
+
+    let ckpt = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results/e2e_final.ckpt");
+    checkpoint::save(&out.state, &ckpt)?;
+    println!("checkpoint: {}  curve: {}", ckpt.display(), out_path.display());
+    Ok(())
+}

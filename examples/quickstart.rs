@@ -1,0 +1,45 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Generates a synthetic corpus, trains the `micro` GPT for ~60 steps with
+//! Sequence Length Warmup, and prints the stability report + validation
+//! perplexity. Requires `make artifacts` first.
+//!
+//!     cargo run --release --example quickstart
+
+use std::path::PathBuf;
+
+use slw::config::presets;
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    // A baseline config, then attach the paper's method: linear seqlen
+    // warmup from 8 to the model's full length over the first 30 steps.
+    let mut cfg = presets::base("micro")?;
+    cfg.token_budget = 10_000;
+    cfg.eval_every = 15;
+    let cfg = presets::with_slw(cfg, 8, 30)?;
+
+    let mut trainer = slw::train::Trainer::new(&root, cfg)?;
+    let out = trainer.run()?;
+
+    let h = &out.history;
+    let (spikes, max_ratio) = h.instability(1.1);
+    println!("steps: {}   tokens: {}", h.steps.len(), h.total_tokens());
+    println!(
+        "seqlen schedule: {} -> {} (first/last step)",
+        h.steps.first().unwrap().seqlen,
+        h.steps.last().unwrap().seqlen
+    );
+    println!(
+        "loss: {:.3} -> {:.3}",
+        h.losses().first().unwrap(),
+        h.losses().last().unwrap()
+    );
+    println!("stability: {spikes} spikes, max loss ratio {max_ratio:.3}");
+    if let Some(ppl) = h.best_val_ppl() {
+        println!("best validation ppl: {ppl:.1}");
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! The paper's §4 low-cost tuning recipe as a standalone workflow: find
+//! (seqlen_s, T) for a new training setup by probing only the first few
+//! multiples of the LR warmup, then train with the chosen pacing.
+//!
+//!     cargo run --release --example tune_pacing
+
+use std::path::PathBuf;
+
+use slw::config::presets;
+use slw::train::tuner::Tuner;
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    let mut base = presets::base("tiny")?;
+    base.batch = 64;
+    base.lr.peak = 5e-3;
+    base.lr.min_lr = base.lr.peak / 15.0;
+    base.token_budget = 400_000;
+    base.eval_batches = 4;
+
+    // Step 1-3 of the recipe: probe ~40 steps per candidate.
+    let tuner = Tuner::new(&root, base.clone(), 40);
+    let report = tuner.tune(&[8, 16, 24], &[25, 50, 100, 200])?;
+    println!("chosen: seqlen_s={} T={}", report.chosen_start, report.chosen_duration);
+    for p in &report.probes {
+        println!(
+            "  probe s={:<2} T={:<3} stable={:<5} max_fluct={:.3} ({} tokens)",
+            p.start, p.duration, p.stable, p.max_fluctuation, p.tokens_used
+        );
+    }
+    println!(
+        "tuning cost: {} tokens = {:.1}% of the full run budget",
+        report.probe_tokens,
+        100.0 * report.probe_tokens as f64 / base.token_budget as f64
+    );
+
+    // Train with the tuned pacing.
+    let cfg = presets::with_slw(base, report.chosen_start, report.chosen_duration)?
+        .with_name("tuned-slw");
+    let mut trainer = slw::train::Trainer::new(&root, cfg)?;
+    let out = trainer.run()?;
+    let (spikes, max_ratio) = out.history.instability(1.1);
+    println!(
+        "tuned run: {} steps, final loss {:.3}, {} spikes, max ratio {:.3}",
+        out.history.steps.len(),
+        out.history.losses().last().unwrap(),
+        spikes,
+        max_ratio
+    );
+    Ok(())
+}

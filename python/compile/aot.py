@@ -1,0 +1,158 @@
+"""AOT lowering driver: jax train/eval steps → HLO *text* artifacts + manifest.
+
+Run once by `make artifacts`; Python never touches the request path after
+this. For every ArtifactSet in configs.DEFAULT_SETS it emits
+
+    artifacts/<set>/train_s<L>.hlo.txt     one per seqlen bucket L
+    artifacts/<set>/eval_s<full>.hlo.txt   scoring pass (val PPL / probes)
+    artifacts/<set>/manifest.json          shapes, param layout, bucket table
+
+Interchange is HLO TEXT, not a serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+`xla` 0.1.6 crate binds) rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import ARTIFACT_SETS, DEFAULT_SETS, ArtifactSet
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple so the Rust side
+    unwraps one tuple literal per execute)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train(aset: ArtifactSet, seqlen: int) -> str:
+    cfg = aset.cfg()
+    n = M.n_params(cfg)
+    f32 = jnp.float32
+    spec = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)  # noqa: E731
+    lowered = jax.jit(lambda *a: M.train_step(*a, cfg)).lower(
+        spec((n,), f32),                                  # flat params
+        spec((n,), f32),                                  # adam m
+        spec((n,), f32),                                  # adam v
+        spec((n,), f32),                                  # decay mask
+        spec((), f32),                                    # step (1-based)
+        spec((), f32),                                    # lr
+        spec((), f32),                                    # clip_norm
+        spec((aset.batch_size, seqlen + 1), jnp.int32),   # tokens
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_eval(aset: ArtifactSet, seqlen: int) -> str:
+    cfg = aset.cfg()
+    n = M.n_params(cfg)
+    lowered = jax.jit(lambda *a: M.eval_step(*a, cfg)).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((aset.eval_batch, seqlen + 1), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def manifest(aset: ArtifactSet) -> dict:
+    cfg = aset.cfg()
+    specs = M.param_specs(cfg)
+    return {
+        "set": aset.name,
+        "model": {
+            "name": cfg.name,
+            "n_layer": cfg.n_layer,
+            "d_model": cfg.d_model,
+            "n_head": cfg.n_head,
+            "vocab": cfg.vocab,
+            "max_seqlen": cfg.max_seqlen,
+            "precision": cfg.precision,
+            "ln_eps": cfg.ln_eps,
+            "adam_beta1": cfg.adam_beta1,
+            "adam_beta2": cfg.adam_beta2,
+            "adam_eps": cfg.adam_eps,
+            "weight_decay": cfg.weight_decay,
+            "clip_norm": cfg.clip_norm,
+            "use_pallas": cfg.use_pallas,
+        },
+        "batch_size": aset.batch_size,
+        "eval_batch": aset.eval_batch,
+        "n_params": M.n_params(cfg),
+        "seqlen_buckets": list(aset.seqlen_buckets),
+        "full_only": aset.full_only,
+        "train_artifacts": {str(s): f"train_s{s}.hlo.txt" for s in aset.seqlen_buckets},
+        "eval_artifact": f"eval_s{cfg.max_seqlen}.hlo.txt",
+        "train_inputs": ["params", "m", "v", "decay_mask", "step", "lr", "clip_norm", "tokens"],
+        "train_outputs": ["params", "m", "v", "loss", "grad_l2", "var_l1",
+                          "var_max", "mom_l1", "clip_coef"],
+        "eval_outputs": ["sum_nll", "per_pos_nll", "correct"],
+        "params": [
+            {
+                "name": sp.name, "shape": list(sp.shape), "init": sp.init,
+                "std": sp.std, "decay": sp.decay, "offset": sp.offset, "size": sp.size,
+            }
+            for sp in specs
+        ],
+    }
+
+
+def build_set(aset: ArtifactSet, out_root: Path, force: bool) -> None:
+    out = out_root / aset.name
+    out.mkdir(parents=True, exist_ok=True)
+    man_path = out / "manifest.json"
+    todo = []
+    for s in aset.seqlen_buckets:
+        p = out / f"train_s{s}.hlo.txt"
+        if force or not p.exists():
+            todo.append(("train", s, p))
+    eval_p = out / f"eval_s{aset.cfg().max_seqlen}.hlo.txt"
+    if force or not eval_p.exists():
+        todo.append(("eval", aset.cfg().max_seqlen, eval_p))
+
+    for kind, s, path in todo:
+        t0 = time.time()
+        text = lower_train(aset, s) if kind == "train" else lower_eval(aset, s)
+        path.write_text(text)
+        print(f"  {aset.name}/{path.name}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s",
+              flush=True)
+    man_path.write_text(json.dumps(manifest(aset), indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sets", default=",".join(DEFAULT_SETS),
+                    help="comma-separated artifact set names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_root = Path(args.out_dir)
+    names = [n for n in args.sets.split(",") if n]
+    unknown = [n for n in names if n not in ARTIFACT_SETS]
+    if unknown:
+        sys.exit(f"unknown artifact sets: {unknown}; known: {sorted(ARTIFACT_SETS)}")
+
+    t0 = time.time()
+    for name in names:
+        print(f"[aot] {name}", flush=True)
+        build_set(ARTIFACT_SETS[name], out_root, args.force)
+    (out_root / "index.json").write_text(json.dumps({"sets": names}, indent=1))
+    print(f"[aot] done: {len(names)} sets in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Model + artifact-set presets, mirrored by rust/src/config/presets.rs.
+
+The paper's testbed (GPT-2 117M/1.5B, GPT-3 125M/1.3B on 128 V100s) is scaled
+to a single-core CPU-PJRT box per DESIGN.md §2: each preset keeps the paper's
+*ratios* (8x batch scaling, seqlen warmup range, LR multipliers) while the
+absolute sizes are chosen so a full experiment suite runs in minutes.
+
+Every artifact set = one model config × one batch size × a ladder of seqlen
+buckets (multiples of 8 — the paper's Tensor-Core constraint). aot.py lowers
+train_step once per (set, bucket) plus one eval/score step at full length.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    vocab: int
+    max_seqlen: int
+    precision: str = "f32"  # "f32" | "bf16" (bf16 activations, f32 masters)
+    ln_eps: float = 1e-5
+    adam_beta1: float = 0.9
+    adam_beta2: float = 0.999
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    use_pallas: bool = True
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+def _buckets(full: int) -> list[int]:
+    """Seqlen bucket ladder: multiples of 8 with denser low end (where the
+    pacing function spends its warmup) and the full length at the top."""
+    ladder = [8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512]
+    return [b for b in ladder if b < full] + [full]
+
+
+# ---------------------------------------------------------------------------
+# Model presets. Role mapping to the paper:
+#   micro  — unit/property tests and pipeline integration (fast)
+#   tiny   — plays GPT-2 117M (the grid-search / analysis model)
+#   small  — plays GPT-2 1.5B (the unstable large model; bf16 activations)
+#   gpt3   — plays GPT-3 125M (token-based LR recipe, batch-size-warmup home)
+#   mini   — the end-to-end example model (largest the box trains in minutes)
+# ---------------------------------------------------------------------------
+
+MODELS: dict[str, ModelConfig] = {
+    "micro": ModelConfig("micro", n_layer=2, d_model=32, n_head=2, vocab=256, max_seqlen=32),
+    "tiny": ModelConfig("tiny", n_layer=2, d_model=64, n_head=2, vocab=512, max_seqlen=64,
+                        precision="bf16"),
+    "small": ModelConfig("small", n_layer=4, d_model=128, n_head=4, vocab=512, max_seqlen=64,
+                         precision="bf16"),
+    "gpt3": ModelConfig("gpt3", n_layer=2, d_model=64, n_head=2, vocab=512, max_seqlen=64,
+                        precision="bf16"),
+    "mini": ModelConfig("mini", n_layer=4, d_model=192, n_head=6, vocab=1024, max_seqlen=128),
+}
+
+
+@dataclass(frozen=True)
+class ArtifactSet:
+    """One lowered family: model × batch size × seqlen buckets.
+
+    ``full_only`` sets are batch-size-warmup rungs: they are only ever run at
+    the full sequence length, so just one train_step is lowered for them.
+    """
+    name: str
+    model: str
+    batch_size: int
+    seqlen_buckets: tuple[int, ...]
+    eval_batch: int = 8
+    full_only: bool = False
+
+    def cfg(self) -> ModelConfig:
+        return MODELS[self.model]
+
+
+def _set(name: str, model: str, bsz: int, eval_batch: int = 8,
+         full_only: bool = False) -> ArtifactSet:
+    full = MODELS[model].max_seqlen
+    buckets = (full,) if full_only else tuple(_buckets(full))
+    return ArtifactSet(name, model, bsz, buckets, eval_batch, full_only)
+
+
+# Batch scaling mirrors the paper's 512 → 4K (8x). "b8" plays bsz 512,
+# "b64" plays bsz 4K; gpt3 ladder {1,2,4,8,16,64} supports batch-size warmup
+# (start 16 → 256 in the paper ≙ start 2 → 16/64 here).
+ARTIFACT_SETS: dict[str, ArtifactSet] = {s.name: s for s in [
+    _set("micro_b4", "micro", 4, eval_batch=4),
+    _set("tiny_b8", "tiny", 8),
+    _set("tiny_b64", "tiny", 64),
+    _set("small_b8", "small", 8),
+    _set("small_b16", "small", 16),   # A.3.1 LR sweep (paper used bsz 2K)
+    _set("small_b64", "small", 64),
+    _set("gpt3_b2", "gpt3", 2, full_only=True),
+    _set("gpt3_b4", "gpt3", 4, full_only=True),
+    _set("gpt3_b8", "gpt3", 8, full_only=True),
+    _set("gpt3_b16", "gpt3", 16, full_only=True),
+    _set("gpt3_b64", "gpt3", 64),
+    _set("mini_b8", "mini", 8),
+]}
+
+# Sets lowered by `make artifacts` by default. gpt3 bsz-warmup rungs and the
+# e2e model are included; everything an experiment references must be here.
+DEFAULT_SETS = [
+    "micro_b4",
+    "tiny_b8", "tiny_b64",
+    "small_b8", "small_b16", "small_b64",
+    "gpt3_b2", "gpt3_b4", "gpt3_b8", "gpt3_b16", "gpt3_b64",
+    "mini_b8",
+]

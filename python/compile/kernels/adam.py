@@ -1,0 +1,157 @@
+"""L1 Pallas kernel: fused Adam update + gradient clipping + the paper's
+variance statistics.
+
+The paper's core instrumentation (Fig 1, 4, 6, 10) is the l1 norm and max
+element of Adam's variance state sqrt(v_t), plus the momentum l1 norm
+(Appendix A.3.2). Computing these post-hoc would double the optimizer's HBM
+traffic, so — like the DeepSpeed implementation the paper shipped — they are
+fused into the update kernel itself: each grid step updates one VMEM-sized
+chunk of the flat parameter vector and emits partial (l1, max, mom-l1)
+reductions, which the wrapper combines.
+
+Gradient clipping needs the *global* l2 norm before any chunk can update, so
+the wrapper computes `clip_coef` in a first (cheap, bandwidth-bound) pass and
+feeds it to the kernel as a scalar — the same two-phase structure a
+data-parallel trainer uses (allreduce of the norm, then local update).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flat parameter vectors are padded to a multiple of the chunk. On a real
+# TPU core the natural chunk is 64K f32 elements (256 KiB per operand, 7
+# operands ≈ 1.8 MiB VMEM, inside the ~16 MiB budget). Under CPU interpret
+# mode each grid step pays a fixed emulation cost, so `auto_chunk` collapses
+# models that fit to a single grid step — the kernel body is identical, only
+# the BlockSpec schedule changes (see EXPERIMENTS.md §Perf L1).
+CHUNK = 65536
+MAX_CHUNK = 1 << 20
+
+
+def auto_chunk(n: int) -> int:
+    """Single-chunk when the flat vector fits in MAX_CHUNK, else CHUNK tiles."""
+    if n <= MAX_CHUNK:
+        return ((n + 1023) // 1024) * 1024
+    return CHUNK
+
+
+def _adam_kernel(p_ref, m_ref, v_ref, g_ref, sc_ref,
+                 p_out, m_out, v_out, stats_ref,
+                 *, beta1, beta2, eps, weight_decay):
+    # sc = [step, lr, clip_coef, wd_scale] broadcast to every chunk
+    step = sc_ref[0]
+    lr = sc_ref[1]
+    clip_coef = sc_ref[2]
+    wd_scale = sc_ref[3]
+
+    g = g_ref[...].astype(jnp.float32) * clip_coef
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * (g * g)
+    bc1 = 1.0 - jnp.power(beta1, step)
+    bc2 = 1.0 - jnp.power(beta2, step)
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    p = p_ref[...]
+    p_out[...] = p - lr * (update + weight_decay * wd_scale * p)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+    sqrt_v = jnp.sqrt(v_new)
+    stats_ref[0, 0] = jnp.sum(jnp.abs(sqrt_v))
+    stats_ref[0, 1] = jnp.max(sqrt_v)
+    stats_ref[0, 2] = jnp.sum(jnp.abs(m_new))
+
+
+def _pad(x: jax.Array, n_pad: int) -> jax.Array:
+    return jnp.pad(x, (0, n_pad)) if n_pad else x
+
+
+def adam_update(
+    p: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    step: jax.Array,
+    lr: jax.Array,
+    *,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    clip_norm: float = 1.0,
+    decay_mask: jax.Array | None = None,
+    chunk: int | None = None,
+    interpret: bool = True,
+):
+    """One fused Adam step over the flat f32 parameter vector.
+
+    Matches ``ref.adam_ref`` exactly (same clipping, bias correction, decay
+    masking, and stats). Returns (p', m', v', stats) with
+    stats = (grad_l2, var_l1, var_max, mom_l1, clip_coef).
+
+    ``decay_mask`` is folded in by splitting the update into masked/unmasked
+    weight-decay contributions: the kernel applies decay scaled by a single
+    wd_scale and the wrapper handles the mask via a second correction term —
+    to keep the kernel operand count low we instead pre-scale: when a mask is
+    given, the wrapper runs the kernel with weight_decay=0 and applies the
+    (cheap, elementwise) masked decay outside.
+    """
+    n = p.shape[0]
+    chunk = chunk or auto_chunk(n)
+    g = g.astype(jnp.float32)
+    grad_l2 = jnp.sqrt(jnp.sum(g * g))
+    clip_coef = jnp.minimum(1.0, clip_norm / (grad_l2 + 1e-6))
+
+    n_pad = (-n) % chunk
+    tiles = (n + n_pad) // chunk
+    p_p, m_p, v_p, g_p = (_pad(x, n_pad) for x in (p, m, v, g))
+
+    kernel_wd = 0.0 if decay_mask is not None else weight_decay
+    scalars = jnp.stack([step.astype(jnp.float32), lr.astype(jnp.float32), clip_coef,
+                         jnp.float32(1.0)])
+
+    kernel = functools.partial(
+        _adam_kernel, beta1=beta1, beta2=beta2, eps=eps, weight_decay=kernel_wd
+    )
+    p_new, m_new, v_new, stats = pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n + n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((tiles, 3), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p_p, m_p, v_p, g_p, scalars)
+
+    p_new, m_new, v_new = p_new[:n], m_new[:n], v_new[:n]
+    if decay_mask is not None:
+        p_new = p_new - lr * weight_decay * decay_mask * p
+
+    var_l1 = jnp.sum(stats[:, 0])
+    var_max = jnp.max(stats[:, 1])
+    mom_l1 = jnp.sum(stats[:, 2])
+    return p_new, m_new, v_new, (grad_l2, var_l1, var_max, mom_l1, clip_coef)
+
+
+def adam_vmem_bytes(chunk: int = CHUNK) -> int:
+    """VMEM residency per grid step: 4 input + 3 output f32 chunks."""
+    return 7 * chunk * 4

@@ -1,0 +1,296 @@
+"""L1 Pallas kernel: tiled causal flash-attention (fwd + custom-VJP bwd).
+
+This is the compute hot-spot of the GPT model (O(B·L²·H)) — exactly the term
+whose quadratic dependence on sequence length L gives Sequence Length Warmup
+its time saving (paper §5.1: "reducing the time complexity quadratically for
+the self-attention sub-layer").
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's GPU/Megatron
+implementation schedules the L² work across threadblocks; here the same
+structure is carried by the BlockSpec grid + an in-kernel K/V stream. The
+grid walks Q tiles of (block_q, Dh); each grid step streams K/V tiles of
+(block_k, Dh) through a fori-loop with an online-softmax accumulator (running
+max / denominator), so HBM↔VMEM traffic is O(L²/block) while VMEM residency
+stays O(block·Dh). Tile sizes are multiples of 8 — the same alignment the
+paper imposes on warmup sequence lengths for Tensor-Core efficiency.
+
+The batch·head axis rides *inside* the block (leading dim) rather than in the
+grid: BH is the data-parallel axis a real TPU pod would shard across cores,
+so per-core it is a small constant, and keeping it in-block turns the inner
+matmuls into a single batched MXU call per tile pair. (It also collapses the
+interpret-mode grid from BH·L/bq steps to L/bq, which is what makes the CPU
+artifacts fast.) Warmup-length sequences (≤ block_q) run as ONE grid step:
+the whole sequence is VMEM-resident — this is where SLW spends its early
+steps, at a single fused matmul pair per layer.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; the interpret path lowers to plain HLO so the
+same kernel runs inside the AOT artifacts on the Rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def default_block(seqlen: int) -> int:
+    """Largest multiple-of-8 tile ≤ 128 that divides seqlen (seqlen is a
+    multiple of 8 by the SLW contract)."""
+    for cand in (128, 64, 32, 16, 8):
+        if seqlen % cand == 0:
+            return min(cand, seqlen)
+    raise ValueError(f"seqlen {seqlen} is not a multiple of 8")
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_q, block_k, seqlen, causal):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * scale  # [bh, bq, dh]
+    bh, bq, dh = q.shape
+    q_off = qi * block_q
+    row_ids = q_off + jax.lax.iota(jnp.int32, block_q)
+
+    m_i = jnp.full((bh, bq), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((bh, bq), jnp.float32)
+    acc = jnp.zeros((bh, bq, dh), jnp.float32)
+
+    if causal:
+        # Only K/V tiles whose start is ≤ the last query row participate.
+        hi = (q_off + block_q + block_k - 1) // block_k
+    else:
+        hi = seqlen // block_k
+
+    def body(ki, carry):
+        m_i, l_i, acc = carry
+        k_blk = pl.load(k_ref, (slice(None), pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (slice(None), pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = jnp.einsum("bqd,bkd->bqk", q, k_blk)  # [bh, bq, bk]
+        if causal:
+            col_ids = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = row_ids[:, None] >= col_ids[None, :]
+            s = jnp.where(mask[None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bqk,bkd->bqd", p, v_blk)
+        return m_new, l_new, acc_new
+
+    m_i, l_i, acc = jax.lax.fori_loop(0, hi, body, (m_i, l_i, acc))
+    o_ref[...] = (acc / l_i[..., None]).astype(o_ref.dtype)
+    lse_ref[...] = m_i + jnp.log(l_i)
+
+
+def _fwd(q3, k3, v3, *, scale, block_q, block_k, causal, interpret):
+    bh, s, dh = q3.shape
+    grid = (s // block_q,)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_q=block_q, block_k=block_k, seqlen=s, causal=causal
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bh, block_q, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bh, block_q, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, block_q), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), q3.dtype),
+            jax.ShapeDtypeStruct((bh, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (flash-attention style recomputation using saved LSE)
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, scale, block_q, block_k, seqlen, causal):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+    bh, bq, dh = q.shape
+    q_off = qi * block_q
+    row_ids = q_off + jax.lax.iota(jnp.int32, block_q)
+
+    hi = (q_off + block_q + block_k - 1) // block_k if causal else seqlen // block_k
+    dq = jnp.zeros((bh, bq, dh), jnp.float32)
+
+    def body(ki, dq):
+        k_blk = pl.load(k_ref, (slice(None), pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (slice(None), pl.dslice(ki * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = jnp.einsum("bqd,bkd->bqk", q, k_blk) * scale
+        if causal:
+            col_ids = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = row_ids[:, None] >= col_ids[None, :]
+            s = jnp.where(mask[None, :, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        dp = jnp.einsum("bqd,bkd->bqk", do, v_blk)
+        ds = p * (dp - delta[..., None])
+        return dq + jnp.einsum("bqk,bkd->bqd", ds, k_blk) * scale
+
+    dq = jax.lax.fori_loop(0, hi, body, dq)
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+                    *, scale, block_q, block_k, seqlen, causal):
+    ki = pl.program_id(0)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    bh, bk, dh = k.shape
+    k_off = ki * block_k
+    col_ids = k_off + jax.lax.iota(jnp.int32, block_k)
+
+    lo = k_off // block_q if causal else 0
+    dk = jnp.zeros((bh, bk, dh), jnp.float32)
+    dv = jnp.zeros((bh, bk, dh), jnp.float32)
+
+    def body(qi, carry):
+        dk, dv = carry
+        q_blk = pl.load(q_ref, (slice(None), pl.dslice(qi * block_q, block_q), slice(None))).astype(jnp.float32)
+        do_blk = pl.load(do_ref, (slice(None), pl.dslice(qi * block_q, block_q), slice(None))).astype(jnp.float32)
+        lse_blk = pl.load(lse_ref, (slice(None), pl.dslice(qi * block_q, block_q)))
+        delta_blk = pl.load(delta_ref, (slice(None), pl.dslice(qi * block_q, block_q)))
+        s = jnp.einsum("bqd,bkd->bqk", q_blk, k) * scale
+        if causal:
+            row_ids = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+            mask = row_ids[:, None] >= col_ids[None, :]
+            s = jnp.where(mask[None, :, :], s, NEG_INF)
+        p = jnp.exp(s - lse_blk[..., None])  # [bh, bq, bk]
+        dv_new = dv + jnp.einsum("bqk,bqd->bkd", p, do_blk)
+        dp = jnp.einsum("bqd,bkd->bqk", do_blk, v)
+        ds = p * (dp - delta_blk[..., None])
+        dk_new = dk + jnp.einsum("bqk,bqd->bkd", ds, q_blk) * scale
+        return dk_new, dv_new
+
+    dk, dv = jax.lax.fori_loop(lo, seqlen // block_q, body, (dk, dv))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(q3, k3, v3, o3, lse, do3, *, scale, block_q, block_k, causal, interpret):
+    bh, s, dh = q3.shape
+    delta = jnp.sum(do3.astype(jnp.float32) * o3.astype(jnp.float32), axis=-1)  # [bh, s]
+
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, scale=scale, block_q=block_q, block_k=block_k, seqlen=s, causal=causal
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(s // block_q,),
+        in_specs=[
+            pl.BlockSpec((bh, block_q, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bh, block_q, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, block_q), lambda i: (0, i)),
+            pl.BlockSpec((bh, block_q), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bh, block_q, dh), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q3.dtype),
+        interpret=interpret,
+    )(q3, k3, v3, do3, lse, delta)
+
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, scale=scale, block_q=block_q, block_k=block_k, seqlen=s, causal=causal
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(s // block_k,),
+        in_specs=[
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bh, block_k, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, block_k, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bh, s), lambda i: (0, 0)),
+            pl.BlockSpec((bh, s), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bh, block_k, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((bh, block_k, dh), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), k3.dtype),
+            jax.ShapeDtypeStruct((bh, s, dh), v3.dtype),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3, do3, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper (config is static / nondiff)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q3, k3, v3, scale, block_q, block_k, causal):
+    o, _ = _fwd(q3, k3, v3, scale=scale, block_q=block_q, block_k=block_k,
+                causal=causal, interpret=True)
+    return o
+
+
+def _flash_fwd(q3, k3, v3, scale, block_q, block_k, causal):
+    o, lse = _fwd(q3, k3, v3, scale=scale, block_q=block_q, block_k=block_k,
+                  causal=causal, interpret=True)
+    return o, (q3, k3, v3, o, lse)
+
+
+def _flash_bwd(scale, block_q, block_k, causal, res, do3):
+    q3, k3, v3, o3, lse = res
+    dq, dk, dv = _bwd(q3, k3, v3, o3, lse, do3, scale=scale, block_q=block_q,
+                      block_k=block_k, causal=causal, interpret=True)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int | None = None, block_k: int | None = None) -> jax.Array:
+    """Tiled causal attention. q,k,v: [B,H,S,Dh] -> [B,H,S,Dh].
+
+    Differentiable (custom VJP, flash-style recomputation backward). Matches
+    ``ref.attention_ref`` to f32 accumulation accuracy.
+    """
+    b, h, s, dh = q.shape
+    bq = block_q or default_block(s)
+    bk = block_k or default_block(s)
+    if s % bq or s % bk:
+        raise ValueError(f"seqlen {s} must be divisible by blocks ({bq}, {bk})")
+    scale = 1.0 / (dh ** 0.5)
+    q3 = q.reshape(b * h, s, dh)
+    k3 = k.reshape(b * h, s, dh)
+    v3 = v.reshape(b * h, s, dh)
+    o3 = _flash(q3, k3, v3, scale, bq, bk, causal)
+    return o3.reshape(b, h, s, dh)
+
+
+def attention_vmem_bytes(seqlen: int, dh: int, bh: int = 1, *, block_q: int | None = None,
+                         block_k: int | None = None, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency per fwd grid step (EXPERIMENTS.md §Perf):
+    Q tile + one K/V stream tile pair + accumulator + softmax stats, per
+    batch-head resident on the core."""
+    bq = block_q or default_block(seqlen)
+    bk = block_k or default_block(seqlen)
+    per = (bq * dh) + 2 * (bk * dh) + (bq * dh) + 3 * bq  # q, k+v tiles, acc, m/l/lse
+    return per * dtype_bytes * bh

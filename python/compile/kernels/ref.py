@@ -1,0 +1,139 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact mathematical twin here.
+pytest (python/tests/) asserts allclose between the kernel (interpret=True)
+and these references across shape/dtype sweeps — this is the CORE L1
+correctness signal for the whole stack: the AOT artifacts embed the Pallas
+kernels, so if these match, the Rust-side numerics are anchored.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Plain softmax attention. q,k,v: [B, H, S, Dh] -> [B, H, S, Dh].
+
+    Softmax statistics are computed in f32 regardless of input dtype
+    (matching the kernel), output is cast back to the input dtype.
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_lse_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True):
+    """Attention that also returns the log-sum-exp rows (used by the bwd test)."""
+    b, h, s, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    probs = jnp.exp(logits - lse[..., None])
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype), lse
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis, statistics in f32. x: [..., D]."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Adam with gradient clipping + the paper's variance statistics
+# ---------------------------------------------------------------------------
+
+def adam_ref(
+    p: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    step: jax.Array,
+    lr: jax.Array,
+    *,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    clip_norm: float = 1.0,
+    decay_mask: jax.Array | None = None,
+):
+    """One fused Adam step over the flat parameter vector.
+
+    Matches the paper's instrumentation: returns the pre-clip global gradient
+    l2 norm, and the l1 norm / max element of sqrt(v_t) (Adam's variance
+    state), plus the l1 norm of the momentum state (Appendix A.3.2).
+
+    decay_mask: optional {0,1} vector — 1 where weight decay applies
+    (weights) and 0 where it does not (biases, LayerNorm, embeddings).
+
+    Returns (p_new, m_new, v_new, stats) where
+    stats = (grad_l2, var_l1, var_max, mom_l1, clip_coef).
+    """
+    g = g.astype(jnp.float32)
+    grad_l2 = jnp.sqrt(jnp.sum(g * g))
+    clip_coef = jnp.minimum(1.0, clip_norm / (grad_l2 + 1e-6))
+    g = g * clip_coef
+
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * (g * g)
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    update = m_hat / (jnp.sqrt(v_hat) + eps)
+    if decay_mask is not None:
+        wd = weight_decay * decay_mask
+    else:
+        wd = weight_decay
+    p_new = p - lr * (update + wd * p)
+
+    sqrt_v = jnp.sqrt(v_new)
+    stats = (
+        grad_l2,
+        jnp.sum(jnp.abs(sqrt_v)),
+        jnp.max(sqrt_v),
+        jnp.sum(jnp.abs(m_new)),
+        clip_coef,
+    )
+    return p_new, m_new, v_new, stats
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (kept jnp-side in the model; oracle used by model tests)
+# ---------------------------------------------------------------------------
+
+def xent_ref(logits: jax.Array, targets: jax.Array):
+    """Token-level cross entropy. logits [B,S,V] (any float), targets [B,S] i32.
+
+    Returns (mean_nll, per_pos_nll[B,S], correct[B,S]).
+    """
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt
+    correct = (jnp.argmax(lf, axis=-1) == targets).astype(jnp.float32)
+    return jnp.mean(nll), nll, correct

@@ -1,0 +1,231 @@
+"""L2: GPT-2/3-style decoder-only transformer in JAX, calling the L1 Pallas
+kernels, plus the pure-functional train/eval steps lowered by aot.py.
+
+State layout — the entire parameter set lives in ONE flat f32 vector (and the
+Adam m/v states are flat vectors of the same length). This is deliberate:
+
+* the Rust coordinator (L3) threads state through the AOT train step as three
+  opaque Literals — no pytree marshalling on the request path;
+* the fused Adam kernel and the paper's gradient-variance statistics
+  (l1 norm / max element of sqrt(v_t) *across all dimensions*) operate on
+  exactly this flat view, matching the paper's definition;
+* checkpointing on the Rust side is a trivial binary dump.
+
+``param_specs`` defines the (name, shape, init, weight-decay) layout; the
+manifest emitted by aot.py carries it to Rust so L3 can build the initial
+flat vector with its own RNG (same distributions; bit-exactness is not
+required — integration tests assert loss ≈ ln(V) at init).
+
+Mixed precision mirrors Megatron's recipe at bf16: activations and matmuls in
+bf16 (the gradient-noise channel implicated in the paper's loss spikes),
+LayerNorm/softmax statistics and the optimizer in f32.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.adam import adam_update
+from .kernels.attention import flash_attention
+from .kernels.layernorm import layer_norm
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    init: str      # "normal" | "zeros" | "ones"
+    std: float     # for init == "normal"
+    decay: bool    # weight decay applies
+    offset: int
+    size: int
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    d, v, s, l = cfg.d_model, cfg.vocab, cfg.max_seqlen, cfg.n_layer
+    proj_std = 0.02 / math.sqrt(2.0 * l)  # GPT-2 residual-projection scaling
+    out: list[ParamSpec] = []
+    off = 0
+
+    def add(name: str, shape: tuple[int, ...], init: str, std: float, decay: bool):
+        nonlocal off
+        size = 1
+        for dim in shape:
+            size *= dim
+        out.append(ParamSpec(name, shape, init, std, decay, off, size))
+        off += size
+
+    add("wte", (v, d), "normal", 0.02, True)
+    add("wpe", (s, d), "normal", 0.01, True)
+    for i in range(l):
+        p = f"h{i}."
+        add(p + "ln1.g", (d,), "ones", 0.0, False)
+        add(p + "ln1.b", (d,), "zeros", 0.0, False)
+        add(p + "attn.qkv.w", (d, 3 * d), "normal", 0.02, True)
+        add(p + "attn.qkv.b", (3 * d,), "zeros", 0.0, False)
+        add(p + "attn.proj.w", (d, d), "normal", proj_std, True)
+        add(p + "attn.proj.b", (d,), "zeros", 0.0, False)
+        add(p + "ln2.g", (d,), "ones", 0.0, False)
+        add(p + "ln2.b", (d,), "zeros", 0.0, False)
+        add(p + "mlp.fc.w", (d, cfg.d_ff), "normal", 0.02, True)
+        add(p + "mlp.fc.b", (cfg.d_ff,), "zeros", 0.0, False)
+        add(p + "mlp.proj.w", (cfg.d_ff, d), "normal", proj_std, True)
+        add(p + "mlp.proj.b", (d,), "zeros", 0.0, False)
+    add("lnf.g", (d,), "ones", 0.0, False)
+    add("lnf.b", (d,), "zeros", 0.0, False)
+    return out
+
+
+def n_params(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    return specs[-1].offset + specs[-1].size
+
+
+def unpack(flat: jax.Array, specs: list[ParamSpec]) -> dict[str, jax.Array]:
+    return {
+        sp.name: jax.lax.slice(flat, (sp.offset,), (sp.offset + sp.size,)).reshape(sp.shape)
+        for sp in specs
+    }
+
+
+def decay_mask(cfg: ModelConfig) -> jax.Array:
+    """{0,1} f32 vector over the flat layout — 1 where weight decay applies."""
+    specs = param_specs(cfg)
+    parts = [jnp.full((sp.size,), 1.0 if sp.decay else 0.0, jnp.float32) for sp in specs]
+    return jnp.concatenate(parts)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jax.Array:
+    """Python-side initializer (tests / artifact parity checks).
+
+    Rust builds the same-distribution vector from the manifest with PCG64.
+    """
+    specs = param_specs(cfg)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for sp in specs:
+        if sp.init == "normal":
+            key, sub = jax.random.split(key)
+            parts.append(jax.random.normal(sub, (sp.size,), jnp.float32) * sp.std)
+        elif sp.init == "ones":
+            parts.append(jnp.ones((sp.size,), jnp.float32))
+        else:
+            parts.append(jnp.zeros((sp.size,), jnp.float32))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _ln(x, g, b, cfg: ModelConfig):
+    if cfg.use_pallas:
+        return layer_norm(x, g, b, eps=cfg.ln_eps)
+    return ref.layernorm_ref(x, g, b, eps=cfg.ln_eps)
+
+
+def _attn(q, k, v, cfg: ModelConfig):
+    if cfg.use_pallas:
+        return flash_attention(q, k, v, causal=True)
+    return ref.attention_ref(q, k, v, causal=True)
+
+
+def forward(flat: jax.Array, tokens_in: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens_in: i32[B, S] -> logits f32[B, S, V]. S may be any bucket
+    length ≤ cfg.max_seqlen (position embeddings are sliced)."""
+    b, s = tokens_in.shape
+    p = unpack(flat, param_specs(cfg))
+    cdtype = jnp.bfloat16 if cfg.precision == "bf16" else jnp.float32
+
+    wte = p["wte"]
+    x = wte[tokens_in] + jax.lax.slice(p["wpe"], (0, 0), (s, cfg.d_model))[None, :, :]
+    x = x.astype(cdtype)
+
+    for i in range(cfg.n_layer):
+        pre = f"h{i}."
+        h = _ln(x, p[pre + "ln1.g"], p[pre + "ln1.b"], cfg)
+        qkv = h @ p[pre + "attn.qkv.w"].astype(cdtype) + p[pre + "attn.qkv.b"].astype(cdtype)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+        a = _attn(heads(q), heads(k), heads(v), cfg)
+        a = a.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        a = a @ p[pre + "attn.proj.w"].astype(cdtype) + p[pre + "attn.proj.b"].astype(cdtype)
+        x = x + a
+
+        h = _ln(x, p[pre + "ln2.g"], p[pre + "ln2.b"], cfg)
+        h = h @ p[pre + "mlp.fc.w"].astype(cdtype) + p[pre + "mlp.fc.b"].astype(cdtype)
+        h = jax.nn.gelu(h, approximate=True)
+        h = h @ p[pre + "mlp.proj.w"].astype(cdtype) + p[pre + "mlp.proj.b"].astype(cdtype)
+        x = x + h
+
+    x = _ln(x, p["lnf.g"], p["lnf.b"], cfg)
+    logits = x.astype(jnp.float32) @ wte.T  # tied LM head, f32 logits
+    return logits
+
+
+def loss_fn(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens: i32[B, S+1]; mean next-token NLL over all B·S positions."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits = forward(flat, inp, cfg)
+    mean_nll, _, _ = ref.xent_ref(logits, tgt)
+    return mean_nll
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (pure functions of their tensor args)
+# ---------------------------------------------------------------------------
+
+def train_step(flat, m, v, dmask, step, lr, clip_norm, tokens, cfg: ModelConfig):
+    """One fused pre-training step.
+
+    `clip_norm` is a runtime scalar (not baked into the HLO) so the gradient
+    -clipping ablation (paper Appendix A.3.2 / Fig 10) can sweep it without
+    re-lowering artifacts.
+
+    Returns (flat', m', v', loss, grad_l2, var_l1, var_max, mom_l1, clip_coef)
+    — the scalar tail is the paper's full instrumentation set.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+    if cfg.use_pallas:
+        p_new, m_new, v_new, stats = adam_update(
+            flat, m, v, grads, step, lr,
+            beta1=cfg.adam_beta1, beta2=cfg.adam_beta2, eps=cfg.adam_eps,
+            weight_decay=cfg.weight_decay, clip_norm=clip_norm,
+            decay_mask=dmask,
+        )
+    else:
+        p_new, m_new, v_new, stats = ref.adam_ref(
+            flat, m, v, grads, step, lr,
+            beta1=cfg.adam_beta1, beta2=cfg.adam_beta2, eps=cfg.adam_eps,
+            weight_decay=cfg.weight_decay, clip_norm=cfg.clip_norm,
+            decay_mask=dmask,
+        )
+    grad_l2, var_l1, var_max, mom_l1, clip_coef = stats
+    return (p_new, m_new, v_new, loss, grad_l2, var_l1, var_max, mom_l1, clip_coef)
+
+
+def eval_step(flat, tokens, cfg: ModelConfig):
+    """Scoring pass used for validation PPL and the probe-task suite.
+
+    tokens: i32[B, S+1]. Returns (sum_nll f32, per_pos_nll f32[B,S],
+    correct f32[B,S]) — Rust applies position masks for probe tasks.
+    """
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits = forward(flat, inp, cfg)
+    _, nll, correct = ref.xent_ref(logits, tgt)
+    return jnp.sum(nll), nll, correct

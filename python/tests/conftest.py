@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests run from python/ (see Makefile); make `compile` importable regardless.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Single-core CI box: keep sweeps small but meaningful.
+settings.register_profile("slw", max_examples=12, deadline=None, derandomize=True)
+settings.load_profile("slw")

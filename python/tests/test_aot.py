@@ -1,0 +1,77 @@
+"""AOT lowering: HLO text validity, manifest schema, config mirroring."""
+
+import json
+
+import pytest
+
+from compile import model as M
+from compile.aot import lower_eval, lower_train, manifest
+from compile.configs import ARTIFACT_SETS, DEFAULT_SETS, MODELS
+
+ASET = ARTIFACT_SETS["micro_b4"]
+
+
+@pytest.fixture(scope="module")
+def train_hlo():
+    return lower_train(ASET, 8)
+
+
+def test_train_hlo_structure(train_hlo):
+    assert "ENTRY" in train_hlo
+    assert "HloModule" in train_hlo
+    # 8 inputs: params, m, v, decay_mask, step, lr, clip_norm, tokens
+    for i in range(8):
+        assert f"parameter({i})" in train_hlo
+    n = M.n_params(ASET.cfg())
+    assert f"f32[{n}]" in train_hlo
+    assert f"s32[{ASET.batch_size},9]" in train_hlo  # tokens at seqlen 8
+
+
+def test_eval_hlo_structure():
+    text = lower_eval(ASET, ASET.cfg().max_seqlen)
+    assert "ENTRY" in text
+    assert "parameter(1)" in text
+
+
+def test_manifest_schema():
+    man = manifest(ASET)
+    js = json.loads(json.dumps(man))  # round-trips
+    assert js["set"] == "micro_b4"
+    assert js["n_params"] == M.n_params(ASET.cfg())
+    assert js["seqlen_buckets"] == list(ASET.seqlen_buckets)
+    assert len(js["params"]) == len(M.param_specs(ASET.cfg()))
+    assert js["train_outputs"][3] == "loss"
+    assert js["train_outputs"][6] == "var_max"
+    total = sum(p["size"] for p in js["params"])
+    assert total == js["n_params"]
+    # offsets are the running sum (Rust init relies on this)
+    off = 0
+    for p in js["params"]:
+        assert p["offset"] == off
+        off += p["size"]
+
+
+def test_bucket_ladders():
+    for name in DEFAULT_SETS:
+        aset = ARTIFACT_SETS[name]
+        full = MODELS[aset.model].max_seqlen
+        assert aset.seqlen_buckets[-1] == full
+        for b in aset.seqlen_buckets:
+            assert b % 8 == 0, "paper's Tensor-Core multiple-of-8 constraint"
+        assert list(aset.seqlen_buckets) == sorted(set(aset.seqlen_buckets))
+        if aset.full_only:
+            assert aset.seqlen_buckets == (full,)
+
+
+def test_batch_scaling_mirrors_paper():
+    """base → large batch is 8x, the paper's 512 → 4K ratio."""
+    assert ARTIFACT_SETS["tiny_b64"].batch_size == 8 * ARTIFACT_SETS["tiny_b8"].batch_size
+    assert ARTIFACT_SETS["small_b64"].batch_size == 8 * ARTIFACT_SETS["small_b8"].batch_size
+
+
+def test_gpt3_warmup_ladder():
+    """bsz-warmup rungs double up to the target batch (paper: 16 → 256)."""
+    rungs = [ARTIFACT_SETS[f"gpt3_b{b}"].batch_size for b in (2, 4, 8, 16)]
+    assert rungs == [2, 4, 8, 16]
+    assert all(ARTIFACT_SETS[f"gpt3_b{b}"].full_only for b in (2, 4, 8, 16))
+    assert not ARTIFACT_SETS["gpt3_b64"].full_only

@@ -1,0 +1,152 @@
+"""L1 flash-attention kernel vs pure-jnp oracle: shape/dtype/block sweeps."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels.attention import (
+    attention_vmem_bytes,
+    default_block,
+    flash_attention,
+)
+from compile.kernels.ref import attention_ref
+
+
+def rand_qkv(seed, b, h, s, dh, dtype=jnp.float32):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return [jax.random.normal(k, (b, h, s, dh), dtype) for k in keys]
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 16, 32, 64, 128]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_fwd_matches_ref(b, h, s, dh, seed):
+    q, k, v = rand_qkv(seed, b, h, s, dh)
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+@given(
+    s=st.sampled_from([32, 64]),
+    bq=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**8),
+)
+def test_fwd_block_independence(s, bq, bk, seed):
+    """The online-softmax result must not depend on the tile schedule."""
+    q, k, v = rand_qkv(seed, 1, 2, s, 16)
+    full = flash_attention(q, k, v, block_q=s, block_k=s)
+    tiled = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    assert jnp.max(jnp.abs(full - tiled)) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwd_dtypes(dtype):
+    q, k, v = rand_qkv(7, 2, 2, 32, 16, dtype)
+    out = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v)
+    assert out.dtype == dtype
+    assert jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))) < tol(dtype)
+
+
+def test_causality():
+    """Output at position i must be independent of tokens after i."""
+    q, k, v = rand_qkv(3, 1, 1, 32, 8)
+    out = flash_attention(q, k, v, block_q=8, block_k=8)
+    k2 = k.at[:, :, 20:, :].set(99.0)
+    v2 = v.at[:, :, 20:, :].set(-99.0)
+    out2 = flash_attention(q, k2, v2, block_q=8, block_k=8)
+    assert jnp.max(jnp.abs(out[:, :, :20] - out2[:, :, :20])) < 1e-6
+    assert jnp.max(jnp.abs(out[:, :, 20:] - out2[:, :, 20:])) > 1e-3
+
+
+def test_non_causal():
+    q, k, v = rand_qkv(11, 1, 2, 32, 16)
+    out = flash_attention(q, k, v, causal=False, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, causal=False)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+def test_prefix_consistency():
+    """Causal attention over a prefix equals the prefix of the full result —
+    the invariant the SLW truncation batcher relies on."""
+    q, k, v = rand_qkv(5, 1, 2, 64, 16)
+    full = flash_attention(q, k, v)
+    half = flash_attention(q[:, :, :32], k[:, :, :32], v[:, :, :32])
+    assert jnp.max(jnp.abs(full[:, :, :32] - half)) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# Backward (custom VJP)
+# ---------------------------------------------------------------------------
+
+@given(
+    s=st.sampled_from([16, 32, 64]),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**8),
+)
+def test_bwd_matches_ref(s, dh, seed):
+    q, k, v = rand_qkv(seed, 2, 2, s, dh)
+
+    def loss_k(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(q, k, v, block_q=min(16, s), block_k=min(32, s))))
+
+    def loss_r(q, k, v):
+        return jnp.sum(jnp.sin(attention_ref(q, k, v)))
+
+    gk = jax.grad(loss_k, (0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, (0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        assert jnp.max(jnp.abs(a - b)) < 5e-5
+
+
+def test_bwd_jit():
+    q, k, v = rand_qkv(9, 1, 2, 32, 16)
+    g = jax.jit(jax.grad(lambda q, k, v: jnp.sum(flash_attention(q, k, v) ** 2), (0, 1, 2)))
+    gr = jax.grad(lambda q, k, v: jnp.sum(attention_ref(q, k, v) ** 2), (0, 1, 2))(q, k, v)
+    for a, b in zip(g(q, k, v), gr):
+        assert jnp.max(jnp.abs(a - b)) < 5e-5
+
+
+# ---------------------------------------------------------------------------
+# Static structure
+# ---------------------------------------------------------------------------
+
+def test_default_block():
+    assert default_block(8) == 8
+    assert default_block(64) == 64
+    assert default_block(128) == 128
+    assert default_block(192) == 64
+    assert default_block(256) == 128
+    with pytest.raises(ValueError):
+        default_block(12)
+
+
+def test_rejects_bad_blocks():
+    q, k, v = rand_qkv(0, 1, 1, 32, 8)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, block_q=24)
+
+
+def test_vmem_estimate_monotone():
+    """VMEM per grid step grows with block size, not with seqlen once tiled —
+    the property the §Perf roofline table is built on."""
+    small = attention_vmem_bytes(64, 32)
+    tiled_256 = attention_vmem_bytes(256, 32)   # block 128
+    tiled_512 = attention_vmem_bytes(512, 32)   # block 128 too
+    assert small < tiled_256
+    assert tiled_256 == tiled_512

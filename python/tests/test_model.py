@@ -1,0 +1,228 @@
+"""L2 model invariants: layout, init, mixed precision, train/eval steps,
+and the pallas-vs-reference end-to-end parity that anchors the artifacts."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import ARTIFACT_SETS, DEFAULT_SETS, MODELS
+
+CFG = MODELS["micro"]
+
+
+def rand_tokens(seed, b, s, vocab):
+    rng = np.random.RandomState(seed)
+    return jnp.array(rng.randint(0, vocab, (b, s)), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+def test_param_specs_contiguous():
+    specs = M.param_specs(CFG)
+    off = 0
+    for sp in specs:
+        assert sp.offset == off
+        size = 1
+        for d in sp.shape:
+            size *= d
+        assert sp.size == size
+        off += size
+    assert off == M.n_params(CFG)
+
+
+def test_param_specs_decay_policy():
+    """Weight decay on weights only — never on biases or LayerNorm affine."""
+    for sp in M.param_specs(CFG):
+        if sp.name.endswith((".b", ".g")) and "w" not in sp.name.split(".")[-1]:
+            assert not sp.decay, sp.name
+        if sp.name.endswith(".w") or sp.name in ("wte", "wpe"):
+            assert sp.decay, sp.name
+
+
+def test_layout_scales_with_config():
+    for name, cfg in MODELS.items():
+        n = M.n_params(cfg)
+        # embeddings + 12 per-layer tensors + final LN
+        assert len(M.param_specs(cfg)) == 2 + 12 * cfg.n_layer + 2
+        assert n > cfg.vocab * cfg.d_model  # at least the embedding
+
+
+def test_decay_mask_matches_specs():
+    mask = M.decay_mask(CFG)
+    specs = M.param_specs(CFG)
+    assert mask.shape == (M.n_params(CFG),)
+    for sp in specs[:6]:
+        seg = mask[sp.offset:sp.offset + sp.size]
+        assert jnp.all(seg == (1.0 if sp.decay else 0.0))
+
+
+def test_init_distribution():
+    flat = M.init_params(CFG, seed=3)
+    specs = {sp.name: sp for sp in M.param_specs(CFG)}
+    wte = flat[specs["wte"].offset:specs["wte"].offset + specs["wte"].size]
+    assert abs(float(jnp.std(wte)) - 0.02) < 0.002
+    ln = specs["h0.ln1.g"]
+    assert jnp.all(flat[ln.offset:ln.offset + ln.size] == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def test_init_loss_near_uniform():
+    flat = M.init_params(CFG, seed=0)
+    toks = rand_tokens(0, 4, CFG.max_seqlen + 1, CFG.vocab)
+    loss = M.loss_fn(flat, toks, CFG)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_forward_shapes():
+    flat = M.init_params(CFG, seed=0)
+    for s in (8, 16, CFG.max_seqlen):
+        logits = M.forward(flat, rand_tokens(1, 2, s, CFG.vocab), CFG)
+        assert logits.shape == (2, s, CFG.vocab)
+        assert logits.dtype == jnp.float32
+
+
+def test_causal_prefix_consistency():
+    """logits[:, :s] from a truncated batch equal the full batch's prefix —
+    the invariant that makes SLW's truncation sound."""
+    flat = M.init_params(CFG, seed=1)
+    toks = rand_tokens(2, 2, CFG.max_seqlen, CFG.vocab)
+    full = M.forward(flat, toks, CFG)
+    s = 16
+    short = M.forward(flat, toks[:, :s], CFG)
+    assert jnp.max(jnp.abs(full[:, :s] - short)) < 1e-3
+
+
+def test_pallas_vs_ref_forward():
+    """End-to-end L1 anchor: the artifact graph (pallas) and the oracle graph
+    produce the same logits."""
+    cfg_p = dataclasses.replace(CFG, use_pallas=True)
+    cfg_r = dataclasses.replace(CFG, use_pallas=False)
+    flat = M.init_params(CFG, seed=2)
+    toks = rand_tokens(3, 2, CFG.max_seqlen, CFG.vocab)
+    lp = M.forward(flat, toks, cfg_p)
+    lr = M.forward(flat, toks, cfg_r)
+    assert jnp.max(jnp.abs(lp - lr)) < 1e-3
+
+
+def test_bf16_forward_runs():
+    cfg = dataclasses.replace(CFG, precision="bf16")
+    flat = M.init_params(cfg, seed=0)
+    logits = M.forward(flat, rand_tokens(0, 2, 16, cfg.vocab), cfg)
+    assert logits.dtype == jnp.float32  # f32 logits regardless
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def _state(cfg, seed=0):
+    flat = M.init_params(cfg, seed)
+    return flat, jnp.zeros_like(flat), jnp.zeros_like(flat), M.decay_mask(cfg)
+
+
+def test_train_step_learns():
+    """A few steps on a repetitive stream must reduce the loss."""
+    cfg = CFG
+    flat, m, v, dm = _state(cfg)
+    rng = np.random.RandomState(0)
+    base = rng.randint(0, cfg.vocab, 17)
+    stream = np.tile(base, 40)
+    f = jax.jit(lambda *a: M.train_step(*a, cfg))
+    losses = []
+    for i in range(12):
+        start = (i * 13) % (len(stream) - 4 * (cfg.max_seqlen + 1))
+        batch = stream[start:start + 4 * (cfg.max_seqlen + 1)].reshape(4, -1)
+        out = f(flat, m, v, dm, jnp.float32(i + 1), jnp.float32(3e-3),
+                jnp.float32(1.0), jnp.array(batch, jnp.int32))
+        flat, m, v = out[0], out[1], out[2]
+        losses.append(float(out[3]))
+    assert losses[-1] < losses[0] - 1.0
+
+
+def test_train_step_outputs():
+    cfg = CFG
+    flat, m, v, dm = _state(cfg)
+    toks = rand_tokens(0, 4, cfg.max_seqlen + 1, cfg.vocab)
+    out = M.train_step(flat, m, v, dm, jnp.float32(1), jnp.float32(1e-3),
+                       jnp.float32(1.0), toks, cfg)
+    assert len(out) == 9
+    p_new, m_new, v_new, loss, grad_l2, var_l1, var_max, mom_l1, clip = out
+    assert p_new.shape == flat.shape
+    assert float(grad_l2) > 0
+    assert float(var_max) > 0
+    assert float(var_l1) >= float(var_max)
+    assert 0 < float(clip) <= 1.0
+    # step 1, zero state: m = 0.1*g_clipped, v small
+    assert float(mom_l1) > 0
+
+
+def test_train_step_pallas_ref_parity():
+    """Full fused step parity — the strongest single L1/L2 test."""
+    cfg_p = dataclasses.replace(CFG, use_pallas=True)
+    cfg_r = dataclasses.replace(CFG, use_pallas=False)
+    toks = rand_tokens(5, 4, CFG.max_seqlen + 1, CFG.vocab)
+    outs = []
+    for cfg in (cfg_p, cfg_r):
+        flat, m, v, dm = _state(cfg, seed=4)
+        outs.append(M.train_step(flat, m, v, dm, jnp.float32(1), jnp.float32(1e-3),
+                                 jnp.float32(1.0), toks, cfg))
+    for a, b, name in zip(outs[0], outs[1],
+                          ["p", "m", "v", "loss", "g2", "v1", "vmax", "m1", "clip"]):
+        diff = float(jnp.max(jnp.abs(a - b)))
+        scale = 1.0 + float(jnp.max(jnp.abs(b)))
+        assert diff / scale < 2e-3, (name, diff)
+
+
+def test_variable_seqlen_buckets():
+    """Every bucket of every default artifact set must trace and run."""
+    for name in DEFAULT_SETS:
+        aset = ARTIFACT_SETS[name]
+        if aset.model != "micro":
+            continue
+        cfg = aset.cfg()
+        flat, m, v, dm = _state(cfg)
+        for s in aset.seqlen_buckets:
+            toks = rand_tokens(0, aset.batch_size, s + 1, cfg.vocab)
+            out = M.train_step(flat, m, v, dm, jnp.float32(1), jnp.float32(1e-3),
+                       jnp.float32(1.0), toks, cfg)
+            assert np.isfinite(float(out[3]))
+
+
+# ---------------------------------------------------------------------------
+# Eval step
+# ---------------------------------------------------------------------------
+
+def test_eval_step_consistent_with_loss():
+    cfg = CFG
+    flat, *_ = _state(cfg)
+    toks = rand_tokens(1, 4, cfg.max_seqlen + 1, cfg.vocab)
+    sum_nll, nll, correct = M.eval_step(flat, toks, cfg)
+    loss = M.loss_fn(flat, toks, cfg)
+    b, s = nll.shape
+    assert abs(float(sum_nll) / (b * s) - float(loss)) < 1e-4
+    assert correct.shape == nll.shape
+    assert jnp.all((correct == 0) | (correct == 1))
+
+
+def test_eval_step_detects_memorization():
+    cfg = CFG
+    flat, m, v, dm = _state(cfg)
+    rng = np.random.RandomState(1)
+    base = rng.randint(0, cfg.vocab, 11)
+    batch = jnp.array(np.tile(base, 3 * 4 * (cfg.max_seqlen + 1))[: 4 * (cfg.max_seqlen + 1)]
+                      .reshape(4, -1), jnp.int32)
+    f = jax.jit(lambda *a: M.train_step(*a, cfg))
+    for i in range(25):
+        out = f(flat, m, v, dm, jnp.float32(i + 1), jnp.float32(3e-3), jnp.float32(1.0), batch)
+        flat, m, v = out[0], out[1], out[2]
+    _, _, correct = M.eval_step(flat, batch, cfg)
+    assert float(jnp.mean(correct)) > 0.8

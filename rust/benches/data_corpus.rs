@@ -1,0 +1,45 @@
+//! Data substrate throughput: corpus generation (tokens/s), BPE tokenizer
+//! encode, window indexing + shuffled sampling, parameter init. These feed
+//! every experiment (Table 5's seed sweep re-generates corpora per seed).
+
+use slw::data::corpus::{Corpus, InductionCorpus, MarkovCorpus, MixtureCorpus};
+use slw::data::dataset::{Sampler, TokenStore};
+use slw::data::tokenizer::Tokenizer;
+use slw::runtime::Manifest;
+use slw::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("data_corpus").with_budget(500, 100);
+    b.case("markov_gen_100k", 100_000.0, || {
+        std::hint::black_box(MarkovCorpus::new(512, 1).generate(100_000));
+    });
+    b.case("induction_gen_100k", 100_000.0, || {
+        std::hint::black_box(InductionCorpus::new(512, 64, 1).generate(100_000));
+    });
+    b.case("mixture_gen_100k", 100_000.0, || {
+        std::hint::black_box(MixtureCorpus::standard(512, 64, 1).generate(100_000));
+    });
+
+    let mut tok = Tokenizer::byte_level(512).unwrap();
+    let text = "the quick brown fox jumps over the lazy dog. ".repeat(200);
+    tok.train_bpe(&text, 64);
+    b.case("bpe_encode_9k_chars", text.len() as f64, || {
+        std::hint::black_box(tok.encode(&text));
+    });
+
+    let store =
+        TokenStore::new(MixtureCorpus::standard(512, 64, 0).generate(64 * 2000 + 1), 512)
+            .unwrap();
+    let index = store.index(64, 0.05).unwrap();
+    let mut sampler = Sampler::new(index, 0);
+    b.case("sample_batch_b64", (64 * 65) as f64, || {
+        std::hint::black_box(sampler.next_batch(&store, 64));
+    });
+
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if let Ok(man) = Manifest::load(&root.join("micro_b4")) {
+        b.case("init_params_35k", man.n_params as f64, || {
+            std::hint::black_box(man.init_params(0));
+        });
+    }
+}

@@ -1,0 +1,36 @@
+//! Fig 1 / Table 1 cost driver: per-step latency of the AOT train step with
+//! the full instrumentation (loss + grad norm + Adam variance stats), at the
+//! base and large batch — the quantity the stability-efficiency dilemma
+//! trades against. Uses the micro artifacts so `cargo bench` stays fast.
+
+use slw::runtime::{Engine, TrainState};
+use slw::util::bench::Bench;
+use slw::util::rng::Pcg64;
+
+fn main() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut engine = Engine::load(&root, "micro").expect("run `make artifacts` first");
+    let man = engine.manifest_for_batch(4).unwrap().clone();
+    let mut state = TrainState::init(&man, 0);
+    let mut rng = Pcg64::new(0);
+
+    let b = Bench::new("fig1_step_stats").with_budget(1500, 300);
+    for &seqlen in &[8usize, 32] {
+        let toks: Vec<i32> = (0..4 * (seqlen + 1))
+            .map(|_| rng.below(man.model.vocab as u64) as i32)
+            .collect();
+        b.case(&format!("train_step_b4_s{seqlen}"), (4 * seqlen) as f64, || {
+            engine
+                .train_step(&mut state, &toks, 4, seqlen, 1e-3, 1.0)
+                .expect("step");
+        });
+    }
+    // instrumentation overhead: eval (fwd-only) as the no-stats baseline
+    let s = man.model.max_seqlen;
+    let toks: Vec<i32> = (0..man.eval_batch * (s + 1))
+        .map(|_| rng.below(man.model.vocab as u64) as i32)
+        .collect();
+    b.case("eval_step_fwd_only", (man.eval_batch * s) as f64, || {
+        engine.eval_step(&state, &toks).expect("eval");
+    });
+}

@@ -1,0 +1,68 @@
+//! Fig 4 cost driver: the data-pipeline hot path. The coordinator's rule is
+//! that batch assembly must never stall the train step (DESIGN §Perf L3):
+//! measures the SLW truncation batcher, the planner, and prefetcher
+//! end-to-end throughput vs the synchronous path.
+
+use std::sync::Arc;
+
+use slw::data::corpus::{Corpus, MixtureCorpus};
+use slw::data::dataset::{Sampler, TokenStore};
+use slw::pipeline::batcher::{SlwBatcher, TruncationMode};
+use slw::pipeline::bsz_warmup::BszWarmup;
+use slw::pipeline::pacing::{BucketedPacing, Pacing};
+use slw::pipeline::plan::{plan_run, Budget};
+use slw::pipeline::prefetch::Prefetcher;
+use slw::util::bench::Bench;
+
+fn main() {
+    let store = Arc::new(
+        TokenStore::new(MixtureCorpus::standard(512, 64, 0).generate(64 * 4000 + 1), 512)
+            .unwrap(),
+    );
+    let index = store.index(64, 0.05).unwrap();
+    let ladder = vec![8, 16, 24, 32, 48, 64];
+    let pacing = || {
+        BucketedPacing::new(Pacing::Linear { start: 8, end: 64, duration: 100 }, ladder.clone())
+            .unwrap()
+    };
+
+    let b = Bench::new("fig4_pipeline").with_budget(800, 100);
+
+    // synchronous batcher (tokens fetched per second)
+    let mut batcher = SlwBatcher::new(pacing(), TruncationMode::Drop, 64);
+    let mut sampler = Sampler::new(index.clone(), 0);
+    let mut step = 0usize;
+    b.case("slw_batcher_sync_b64", (64 * 65) as f64, || {
+        let _ = batcher.next_batch(step % 100_000, 64, &mut sampler, &store).unwrap();
+        step += 1;
+    });
+
+    // recycle mode (no data dropped)
+    let mut rec = SlwBatcher::new(pacing(), TruncationMode::Recycle, 64);
+    let mut sampler2 = Sampler::new(index.clone(), 1);
+    let mut step2 = 0usize;
+    b.case("slw_batcher_recycle_b64", (64 * 65) as f64, || {
+        let _ = rec.next_batch(step2 % 100_000, 64, &mut sampler2, &store).unwrap();
+        step2 += 1;
+    });
+
+    // planner cost
+    b.case("plan_10k_steps", 10_000.0, || {
+        let _ = plan_run(&pacing(), &BszWarmup::constant(64), Budget::Steps(10_000)).unwrap();
+    });
+
+    // threaded prefetch end-to-end: drain 200 prefetched batches
+    let plan = Arc::new(
+        plan_run(&pacing(), &BszWarmup::constant(64), Budget::Steps(200)).unwrap(),
+    );
+    let b2 = Bench::new("fig4_prefetch").with_budget(1200, 100);
+    b2.case("drain_200_batches_2workers", (200 * 64 * 65) as f64, || {
+        let mut pf =
+            Prefetcher::spawn(store.clone(), index.clone(), plan.clone(), 2, 4, 0).unwrap();
+        let mut n = 0;
+        while pf.next_batch().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 200);
+    });
+}

@@ -1,0 +1,25 @@
+//! Fig 5/6 cost driver: the GPT-3 batch-size-warmup schedule — rung lookup
+//! must be O(log rungs) per step, and rung-aligned plan generation over a
+//! token budget must be linear in steps.
+
+use slw::pipeline::bsz_warmup::BszWarmup;
+use slw::pipeline::pacing::{BucketedPacing, Pacing};
+use slw::pipeline::plan::{plan_run, Budget};
+use slw::util::bench::Bench;
+
+fn main() {
+    let w = BszWarmup::new(2, 64, 1_000_000, vec![2, 4, 8, 16, 64], 2).unwrap();
+    let b = Bench::new("fig5_6_bszwarmup").with_budget(400, 50);
+    let mut t = 0u64;
+    b.case("bsz_at_lookup", 1.0, || {
+        t = (t + 4096) % 2_000_000;
+        std::hint::black_box(w.bsz_at(t));
+    });
+
+    let pacing =
+        BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![8, 64]).unwrap();
+    b.case("plan_with_warmup_tokens_3M", 1.0, || {
+        let plan = plan_run(&pacing, &w, Budget::Tokens(3_000_000)).unwrap();
+        std::hint::black_box(plan.len());
+    });
+}

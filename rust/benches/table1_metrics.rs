@@ -1,0 +1,53 @@
+//! Table 1 / Table 3 cost driver: the instability instrumentation — loss
+//! ratios, spike counts, and the Pearson correlation + p-value — computed
+//! over long run histories (these run after every experiment and inside the
+//! adaptive pacing loop, so they must stay sub-millisecond at 100K steps).
+
+use slw::runtime::StepStats;
+use slw::train::metrics::{RunHistory, StepRecord};
+use slw::util::bench::Bench;
+use slw::util::rng::Pcg64;
+
+fn synth_history(n: usize) -> RunHistory {
+    let mut h = RunHistory::new("bench");
+    let mut rng = Pcg64::new(7);
+    let mut loss = 6.0f32;
+    for i in 0..n {
+        let spike = rng.f64() < 0.01;
+        let l = if spike { loss * 1.4 } else { loss };
+        h.record(StepRecord {
+            step: i,
+            seqlen: 64,
+            bsz: 64,
+            lr: 1e-3,
+            tokens_after: ((i + 1) * 4096) as u64,
+            stats: StepStats {
+                loss: l,
+                grad_l2: 1.0,
+                var_l1: 100.0 + rng.f32(),
+                var_max: if spike { 0.9 } else { 0.1 },
+                mom_l1: 10.0,
+                clip_coef: 1.0,
+            },
+            sim_seconds: 1.0,
+        });
+        loss *= 0.99997;
+    }
+    h
+}
+
+fn main() {
+    let b = Bench::new("table1_metrics").with_budget(600, 100);
+    for &n in &[1_000usize, 100_000] {
+        let h = synth_history(n);
+        b.case(&format!("loss_ratios_{n}"), n as f64, || {
+            std::hint::black_box(h.loss_ratios());
+        });
+        b.case(&format!("instability_{n}"), n as f64, || {
+            std::hint::black_box(h.instability(1.1));
+        });
+        b.case(&format!("pearson_corr_{n}"), n as f64, || {
+            std::hint::black_box(h.variance_correlations());
+        });
+    }
+}

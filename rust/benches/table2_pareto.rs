@@ -1,0 +1,44 @@
+//! Table 2 cost driver: the seqlen-bucket step-cost ladder — the quadratic
+//! attention saving that makes SLW's early steps cheap — plus the cluster
+//! time model's throughput (it prices every step of every experiment).
+
+use slw::pipeline::bsz_warmup::BszWarmup;
+use slw::pipeline::pacing::{BucketedPacing, Pacing};
+use slw::pipeline::plan::{plan_run, Budget};
+use slw::runtime::{Engine, TrainState};
+use slw::sim::cluster::{gpt2_1_5b, ClusterConfig, ClusterSim};
+use slw::util::bench::Bench;
+use slw::util::rng::Pcg64;
+
+fn main() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut engine = Engine::load(&root, "micro").expect("run `make artifacts` first");
+    let man = engine.manifest_for_batch(4).unwrap().clone();
+    let mut state = TrainState::init(&man, 0);
+    let mut rng = Pcg64::new(0);
+
+    let b = Bench::new("table2_pareto").with_budget(1200, 200);
+    // the bucket ladder: measured cost per trained token must *fall* as
+    // seqlen shrinks (tokens/s throughput printed per case)
+    for &s in &man.seqlen_buckets.clone() {
+        let toks: Vec<i32> =
+            (0..4 * (s + 1)).map(|_| rng.below(man.model.vocab as u64) as i32).collect();
+        b.case(&format!("bucket_s{s}"), (4 * s) as f64, || {
+            engine.train_step(&mut state, &toks, 4, s, 1e-3, 1.0).expect("step");
+        });
+    }
+
+    // cluster model pricing throughput (pure function, must be ~free)
+    let sim = ClusterSim::new(ClusterConfig::default(), gpt2_1_5b());
+    let pacing = BucketedPacing::new(
+        Pacing::Linear { start: 8, end: 1024, duration: 20_000 },
+        vec![8, 16, 32, 64, 128, 256, 512, 1024],
+    )
+    .unwrap();
+    let plan =
+        plan_run(&pacing, &BszWarmup::constant(512), Budget::Steps(40_000)).unwrap();
+    let b2 = Bench::new("table2_sim").with_budget(400, 50);
+    b2.case("plan_hours_40k_steps", plan.len() as f64, || {
+        std::hint::black_box(sim.plan_hours(&plan));
+    });
+}

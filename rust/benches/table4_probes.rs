@@ -1,0 +1,35 @@
+//! Table 4 / Tables 8-9 cost driver: probe-task batch generation and suite
+//! scoring (11 tasks × zero/few-shot) — the evaluation half of the GPT-3
+//! experiments.
+
+use slw::eval::probes;
+use slw::runtime::{Engine, TrainState};
+use slw::util::bench::Bench;
+use slw::util::rng::Pcg64;
+
+fn main() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut engine = Engine::load(&root, "micro").expect("run `make artifacts` first");
+    let man = engine.manifest_for_batch(4).unwrap().clone();
+    let state = TrainState::init(&man, 0);
+
+    let b = Bench::new("table4_probes").with_budget(600, 100);
+
+    // batch generation alone (pure rust, no XLA)
+    let tasks = probes::suite(man.model.max_seqlen);
+    let mut rng = Pcg64::new(0);
+    for shots in [1usize, 3] {
+        b.case(&format!("gen_11_tasks_{shots}shot"), 11.0, || {
+            for t in &tasks {
+                std::hint::black_box(t.make_batch(&mut rng, man.model.vocab,
+                                                  man.model.max_seqlen, 4, shots));
+            }
+        });
+    }
+
+    // full scored suite (includes the eval executable)
+    let b2 = Bench::new("table4_suite").with_budget(2000, 200);
+    b2.case("score_suite_zero_shot", 11.0, || {
+        std::hint::black_box(probes::score_suite(&mut engine, &state, 0, 1, 1).unwrap());
+    });
+}

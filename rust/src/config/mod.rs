@@ -1,0 +1,248 @@
+//! Typed run configuration + a TOML-subset parser + the paper-case presets.
+//!
+//! A [`RunConfig`] fully determines a training run: model/artifact family,
+//! batch schedule, pacing function, LR schedule, token/step budget, data
+//! recipe, and seed. Experiments construct configs programmatically
+//! (`presets`); the CLI can also load `key = value` files (`parse_config`).
+
+pub mod presets;
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+use crate::pipeline::batcher::TruncationMode;
+use crate::pipeline::pacing::Pacing;
+use crate::schedule::lr::{Horizon, LrSchedule};
+
+#[derive(Clone, Debug)]
+pub enum DataRecipe {
+    /// 60/40 topical-Markov + induction blend (the standard experiment diet).
+    Mixture { tokens: usize },
+    Markov { tokens: usize },
+    Induction { tokens: usize, max_distance: usize },
+    /// Any UTF-8 text file via the byte/BPE tokenizer.
+    TextFile { path: String, bpe_merges: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BszWarmupCfg {
+    pub start: usize,
+    pub warmup_tokens: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Display name for tables ("Baseline bsz64", "SLW 200", ...).
+    pub name: String,
+    /// Model family ("tiny", "small", "gpt3", "mini", "micro").
+    pub model: String,
+    /// Target (full) batch size — must have a lowered artifact set.
+    pub batch: usize,
+    /// GPT-3-style batch-size warmup (baseline technique; None = constant).
+    pub bsz_warmup: Option<BszWarmupCfg>,
+    pub pacing: Pacing,
+    pub truncation: TruncationMode,
+    pub lr: LrSchedule,
+    /// Stop when this many tokens are consumed (the paper's fairness rule).
+    pub token_budget: u64,
+    pub data: DataRecipe,
+    pub val_frac: f64,
+    /// Global gradient-clipping threshold (paper default 1.0; Fig 10 sweeps).
+    pub clip_norm: f64,
+    /// Validation cadence in steps (0 = never).
+    pub eval_every: usize,
+    /// Number of eval batches per validation pass.
+    pub eval_batches: usize,
+    pub seed: u64,
+    /// Prefetch workers (simulated data-parallel shards).
+    pub n_workers: usize,
+    pub prefetch_depth: usize,
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.token_budget == 0 {
+            bail!("token_budget must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.val_frac) {
+            bail!("val_frac must be in [0, 1)");
+        }
+        if self.n_workers == 0 {
+            bail!("need at least one worker");
+        }
+        if let Some(w) = &self.bsz_warmup {
+            if w.start > self.batch {
+                bail!("bsz warmup start {} > target batch {}", w.start, self.batch);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TOML-subset config files: `key = value`, strings unquoted or quoted,
+// comments with '#'. Only scalar keys (no sections) — enough for the CLI.
+// ---------------------------------------------------------------------------
+
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+        };
+        let v = v.trim().trim_matches('"');
+        out.insert(k.trim().to_string(), v.to_string());
+    }
+    Ok(out)
+}
+
+/// Build a RunConfig from a config file over a preset base.
+pub fn parse_config(text: &str) -> Result<RunConfig> {
+    let kv = parse_kv(text)?;
+    let model = kv.get("model").map(String::as_str).unwrap_or("tiny").to_string();
+    let mut cfg = presets::base(&model)?;
+    for (k, v) in &kv {
+        apply_key(&mut cfg, k, v).with_context(|| format!("config key '{k}'"))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn apply_key(cfg: &mut RunConfig, key: &str, v: &str) -> Result<()> {
+    match key {
+        "name" => cfg.name = v.to_string(),
+        "model" => {} // consumed by preset selection
+        "batch" => cfg.batch = v.parse()?,
+        "seed" => cfg.seed = v.parse()?,
+        "token_budget" => cfg.token_budget = v.parse()?,
+        "eval_every" => cfg.eval_every = v.parse()?,
+        "eval_batches" => cfg.eval_batches = v.parse()?,
+        "val_frac" => cfg.val_frac = v.parse()?,
+        "clip_norm" => cfg.clip_norm = v.parse()?,
+        "n_workers" => cfg.n_workers = v.parse()?,
+        "prefetch_depth" => cfg.prefetch_depth = v.parse()?,
+        "lr" => cfg.lr.peak = v.parse()?,
+        "min_lr" => cfg.lr.min_lr = v.parse()?,
+        "lr_horizon" => {
+            cfg.lr.horizon = match (v, cfg.lr.horizon) {
+                ("tokens", Horizon::Steps { .. }) => {
+                    Horizon::Tokens { warmup: cfg.token_budget / 100, total: cfg.token_budget }
+                }
+                ("tokens", h) => h,
+                ("steps", h @ Horizon::Steps { .. }) => h,
+                ("steps", Horizon::Tokens { .. }) => Horizon::Steps { warmup: 30, total: 1000 },
+                _ => bail!("lr_horizon must be 'steps' or 'tokens'"),
+            }
+        }
+        "pacing" => {
+            cfg.pacing = match v {
+                "constant" => Pacing::Constant { seqlen: full_seqlen_of(&cfg.model)? },
+                "linear" => Pacing::Linear {
+                    start: 8,
+                    end: full_seqlen_of(&cfg.model)?,
+                    duration: 100,
+                },
+                other => bail!("unknown pacing '{other}' (constant|linear; \
+                                set details programmatically)"),
+            }
+        }
+        "pacing_start" => {
+            if let Pacing::Linear { ref mut start, .. } = cfg.pacing {
+                *start = v.parse()?;
+            }
+        }
+        "pacing_duration" => {
+            if let Pacing::Linear { ref mut duration, .. } = cfg.pacing {
+                *duration = v.parse()?;
+            }
+        }
+        "truncation" => {
+            cfg.truncation = match v {
+                "drop" => TruncationMode::Drop,
+                "recycle" => TruncationMode::Recycle,
+                _ => bail!("truncation must be drop|recycle"),
+            }
+        }
+        "corpus_tokens" => {
+            cfg.data = match &cfg.data {
+                DataRecipe::Mixture { .. } => DataRecipe::Mixture { tokens: v.parse()? },
+                DataRecipe::Markov { .. } => DataRecipe::Markov { tokens: v.parse()? },
+                DataRecipe::Induction { max_distance, .. } => DataRecipe::Induction {
+                    tokens: v.parse()?,
+                    max_distance: *max_distance,
+                },
+                other => other.clone(),
+            }
+        }
+        "text_file" => {
+            cfg.data = DataRecipe::TextFile { path: v.to_string(), bpe_merges: 128 }
+        }
+        other => bail!("unknown key '{other}'"),
+    }
+    Ok(())
+}
+
+pub fn full_seqlen_of(model: &str) -> Result<usize> {
+    Ok(match model {
+        "micro" => 32,
+        "tiny" | "small" | "gpt3" => 64,
+        "mini" => 128,
+        other => bail!("unknown model '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kv_basics() {
+        let kv = parse_kv("a = 1\n# comment\nb = \"two\"  # trailing\n\nc=3").unwrap();
+        assert_eq!(kv["a"], "1");
+        assert_eq!(kv["b"], "two");
+        assert_eq!(kv["c"], "3");
+        assert!(parse_kv("garbage line").is_err());
+    }
+
+    #[test]
+    fn parse_config_overrides_preset() {
+        let cfg = parse_config(
+            "model = tiny\nbatch = 64\nlr = 0.003\npacing = linear\npacing_duration = 50\n\
+             token_budget = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.batch, 64);
+        assert_eq!(cfg.lr.peak, 0.003);
+        assert_eq!(cfg.token_budget, 100_000);
+        assert!(matches!(cfg.pacing, Pacing::Linear { duration: 50, .. }));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(parse_config("bogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = presets::base("tiny").unwrap();
+        cfg.token_budget = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = presets::base("tiny").unwrap();
+        cfg.bsz_warmup = Some(BszWarmupCfg { start: 1000, warmup_tokens: 10 });
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! Data substrate: synthetic corpora, tokenizer, token store + samplers.
+
+pub mod corpus;
+pub mod dataset;
+pub mod tokenizer;

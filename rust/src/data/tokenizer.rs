@@ -1,0 +1,177 @@
+//! Byte-level tokenizer with an optional BPE merge table, for ingesting real
+//! text corpora (`slw data --text <file>`), mirroring GPT-2's byte-level BPE
+//! at miniature scale. Synthetic corpora bypass this and emit token ids
+//! directly; the tokenizer exists so the pipeline also runs on any UTF-8
+//! file a user points it at.
+//!
+//! Vocabulary layout: [0, SPECIALS) reserved (0 = BOS), then 256 byte
+//! tokens, then learned merges up to the model vocab size.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::corpus::{BOS, SPECIALS};
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab: usize,
+    /// merge list in priority order: (left, right) -> new id
+    merges: Vec<(u16, u16)>,
+    merge_map: HashMap<(u16, u16), u16>,
+}
+
+impl Tokenizer {
+    pub fn byte_level(vocab: usize) -> Result<Self> {
+        if vocab < SPECIALS as usize + 256 {
+            bail!("vocab {vocab} too small for byte-level coverage (need ≥ {})",
+                  SPECIALS as usize + 256);
+        }
+        Ok(Self { vocab, merges: Vec::new(), merge_map: HashMap::new() })
+    }
+
+    /// Train greedy BPE merges on a sample until the vocab is full (or no
+    /// pair repeats). Standard counting BPE, small-scale.
+    pub fn train_bpe(&mut self, sample: &str, max_merges: usize) {
+        let mut ids: Vec<u16> = sample.bytes().map(|b| SPECIALS + b as u16).collect();
+        let budget = (self.vocab - SPECIALS as usize - 256).min(max_merges);
+        for _ in 0..budget {
+            let mut counts: HashMap<(u16, u16), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(p, c)| (**c, (p.0, p.1)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = (SPECIALS as usize + 256 + self.merges.len()) as u16;
+            self.merges.push(pair);
+            self.merge_map.insert(pair, new_id);
+            ids = merge_pass(&ids, pair, new_id);
+        }
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Encode text; documents (split on blank lines) are BOS-separated.
+    pub fn encode(&self, text: &str) -> Vec<u16> {
+        let mut out = Vec::with_capacity(text.len() / 2 + 16);
+        for doc in text.split("\n\n") {
+            if doc.trim().is_empty() {
+                continue;
+            }
+            out.push(BOS);
+            let mut ids: Vec<u16> = doc.bytes().map(|b| SPECIALS + b as u16).collect();
+            // apply merges in training order (standard BPE application)
+            for (i, &pair) in self.merges.iter().enumerate() {
+                let new_id = (SPECIALS as usize + 256 + i) as u16;
+                if ids.windows(2).any(|w| (w[0], w[1]) == pair) {
+                    ids = merge_pass(&ids, pair, new_id);
+                }
+            }
+            out.extend(ids);
+        }
+        out
+    }
+
+    /// Decode token ids back to (lossy) text; merge ids expand recursively.
+    pub fn decode(&self, ids: &[u16]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn push_bytes(&self, id: u16, out: &mut Vec<u8>) {
+        if id < SPECIALS {
+            return; // specials render as nothing
+        }
+        let byte_end = SPECIALS + 256;
+        if id < byte_end {
+            out.push((id - SPECIALS) as u8);
+        } else {
+            let (l, r) = self.merges[(id - byte_end) as usize];
+            self.push_bytes(l, out);
+            self.push_bytes(r, out);
+        }
+    }
+}
+
+fn merge_pass(ids: &[u16], pair: (u16, u16), new_id: u16) -> Vec<u16> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = Tokenizer::byte_level(512).unwrap();
+        let text = "hello world";
+        let ids = t.encode(text);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn bpe_compresses() {
+        let mut t = Tokenizer::byte_level(512).unwrap();
+        let sample = "the cat sat on the mat. the cat sat on the mat. ".repeat(20);
+        let before = t.encode(&sample).len();
+        t.train_bpe(&sample, 100);
+        assert!(t.n_merges() > 10);
+        let after = t.encode(&sample).len();
+        assert!(after < before / 2, "before {before} after {after}");
+        assert_eq!(t.decode(&t.encode(&sample)), sample);
+    }
+
+    #[test]
+    fn bpe_ids_within_vocab() {
+        let mut t = Tokenizer::byte_level(300).unwrap();
+        t.train_bpe(&"abab".repeat(100), 1000);
+        assert!(t.n_merges() <= 300 - SPECIALS as usize - 256);
+        let ids = t.encode("ababab");
+        assert!(ids.iter().all(|&i| (i as usize) < 300));
+    }
+
+    #[test]
+    fn documents_bos_separated() {
+        let t = Tokenizer::byte_level(512).unwrap();
+        let ids = t.encode("doc one\n\ndoc two");
+        assert_eq!(ids.iter().filter(|&&i| i == BOS).count(), 2);
+    }
+
+    #[test]
+    fn vocab_too_small_rejected() {
+        assert!(Tokenizer::byte_level(100).is_err());
+    }
+
+    #[test]
+    fn unicode_lossless() {
+        let t = Tokenizer::byte_level(512).unwrap();
+        let text = "héllo wörld — ünïcode";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+}

@@ -1,0 +1,4 @@
+//! Evaluation harness: validation perplexity + the zero/few-shot probe suite.
+
+pub mod perplexity;
+pub mod probes;

@@ -1,0 +1,71 @@
+//! Fig 2: the mixed-seqlen probe — training instability is tied to *early
+//! long sequences*.
+//!
+//! Paper setup: GPT-2 1.5B, bsz 4K, first 10K steps, comparing (a) constant
+//! seqlen 1K, (b) constant seqlen 128, (c) mixed 900×128 + 100×1K per 1K
+//! steps. Findings: (b) has no instability; (c)'s spikes concentrate at the
+//! short→long switches and fade after the early phase.
+//!
+//! Scaled: `small` bsz 64, constant 64 vs constant 8 vs mixed 9:1, with
+//! spikes attributed to the step's sequence length.
+
+use anyhow::Result;
+
+use crate::config::presets;
+use crate::pipeline::pacing::Pacing;
+use crate::util::tsv::{f3, TsvWriter};
+
+use super::{ExpCtx, SPIKE_THRESHOLD};
+
+pub fn run(ctx: &mut ExpCtx) -> Result<()> {
+    let budget = ctx.budget(120_000);
+    let mk = |name: &str, pacing: Pacing| -> Result<crate::config::RunConfig> {
+        let mut c = presets::base("small")?;
+        c.batch = 64;
+        c.lr.peak = super::core::SMALL_AGGR_LR;
+        c.lr.min_lr = c.lr.peak / 15.0;
+        c.token_budget = budget;
+        c.pacing = pacing;
+        Ok(c.with_name(name))
+    };
+    let configs = vec![
+        mk("fig2_const64", Pacing::Constant { seqlen: 64 })?,
+        mk("fig2_const8", Pacing::Constant { seqlen: 8 })?,
+        mk("fig2_mixed", Pacing::Mixed { short: 8, end: 64, short_steps: 9, long_steps: 1 })?,
+    ];
+
+    let mut w = TsvWriter::new(&[
+        "setting", "steps", "spikes>1.1", "spikes_at_long", "spikes_at_short", "max_ratio",
+        "final_loss",
+    ]);
+    for cfg in configs {
+        let run = &ctx.run(cfg)?.history;
+        let ratios = run.loss_ratios();
+        let mut at_long = 0;
+        let mut at_short = 0;
+        for (r, rec) in ratios.iter().zip(&run.steps) {
+            if *r > SPIKE_THRESHOLD {
+                if rec.seqlen >= 64 {
+                    at_long += 1;
+                } else {
+                    at_short += 1;
+                }
+            }
+        }
+        let (spikes, max_ratio) = run.instability(SPIKE_THRESHOLD);
+        w.row(&[
+            run.name.clone(),
+            run.steps.len().to_string(),
+            spikes.to_string(),
+            at_long.to_string(),
+            at_short.to_string(),
+            f3(max_ratio),
+            f3(*run.losses().last().unwrap_or(&f64::NAN)),
+        ]);
+    }
+    ctx.emit(
+        "fig2",
+        "mixed-seqlen probe: spikes concentrate at short→long switches (paper Fig 2)",
+        &w,
+    )
+}

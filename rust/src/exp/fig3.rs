@@ -1,0 +1,78 @@
+//! Fig 3 + Table 6: pacing-duration grid search and the low-cost tuning
+//! heuristic.
+//!
+//! Paper: GPT-2 117M bsz 512, SLW durations {20K, 60K, 100K, 140K}; all
+//! durations land within a narrow quality band ("not very sensitive within
+//! a reasonable range"), and the §4 heuristic — the longest T with no
+//! early validation fluctuation > 1.3× — picks the grid's best without full
+//! runs. Scaled: `tiny` bsz 8, durations {50, 100, 200, 400}.
+
+use anyhow::Result;
+
+use crate::config::presets;
+use crate::train::tuner::Tuner;
+use crate::util::tsv::{f2, f3, TsvWriter};
+
+use super::ExpCtx;
+
+const DURATIONS: [usize; 4] = [50, 100, 200, 400];
+
+pub fn run(ctx: &mut ExpCtx) -> Result<()> {
+    let budget = ctx.budget(300_000);
+
+    // full grid (the expensive way the paper does for 117M)
+    let mut w = TsvWriter::new(&[
+        "case", "steps", "tokens", "best_val_ppl", "final_val_ppl", "early_fluct(≤1.3 stable)",
+    ]);
+    let mut base = presets::base("tiny")?;
+    base.token_budget = budget;
+    base.eval_every = 25;
+    let mut grid: Vec<(String, f64)> = Vec::new();
+    for cfg in std::iter::once(base.clone().with_name("fig3_baseline")).chain(
+        DURATIONS.iter().map(|&t| {
+            presets::with_slw(base.clone(), 8, t).unwrap().with_name(&format!("fig3_slw{t}"))
+        }),
+    ) {
+        let run = &ctx.run(cfg)?.history;
+        let ppls: Vec<f64> = run.evals.iter().map(|e| e.val_ppl).collect();
+        // the §4 criterion applied to the first quarter of the evals
+        let early = &ppls[..(ppls.len() / 4).max(2).min(ppls.len())];
+        let fluct = Tuner::fluctuation(early);
+        let best = run.best_val_ppl().unwrap_or(f64::NAN);
+        grid.push((run.name.clone(), best));
+        w.row(&[
+            run.name.clone(),
+            run.steps.len().to_string(),
+            run.total_tokens().to_string(),
+            f2(best),
+            run.evals.last().map(|e| f2(e.val_ppl)).unwrap_or("-".into()),
+            f3(fluct),
+        ]);
+    }
+    ctx.emit("fig3", "pacing-duration grid (paper Fig 3 / Table 6)", &w)?;
+
+    // the low-cost heuristic (cheap way), compared against the grid winner
+    let tuner = Tuner::new(&ctx.root, base.clone(), 60);
+    let (chosen, probes) = tuner.tune_duration(8, &DURATIONS)?;
+    let probe_tokens: u64 = probes.iter().map(|p| p.tokens_used).sum();
+    let grid_best = grid
+        .iter()
+        .filter(|(n, _)| n.contains("slw"))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .cloned()
+        .unwrap_or(("-".into(), f64::NAN));
+    let mut t = TsvWriter::new(&["method", "chosen_T", "cost_tokens", "cost_vs_full_grid"]);
+    t.row(&[
+        "full grid (4 runs)".into(),
+        grid_best.0.replace("fig3_slw", ""),
+        (budget * DURATIONS.len() as u64).to_string(),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "low-cost tuner (§4)".into(),
+        chosen.to_string(),
+        probe_tokens.to_string(),
+        format!("{:.3}x", probe_tokens as f64 / (budget * DURATIONS.len() as u64) as f64),
+    ]);
+    ctx.emit("fig3_tuner", "low-cost tuning vs full grid (paper §4)", &t)
+}

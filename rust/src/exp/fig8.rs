@@ -1,0 +1,52 @@
+//! Appendix A.2 / Fig 8: step-wise vs token-wise LR decay under SLW.
+//!
+//! SLW needs more steps than baseline for the same tokens, so a step-wise
+//! cosine decays *faster per token* (even with +T/2 extra decay steps) and
+//! hurts convergence; token-wise decay matches the baseline schedule
+//! exactly. The table reports both SLW variants against the baseline.
+
+use anyhow::Result;
+
+use crate::config::presets;
+use crate::schedule::lr::Horizon;
+use crate::util::tsv::{f2, TsvWriter};
+
+use super::ExpCtx;
+
+pub fn run(ctx: &mut ExpCtx) -> Result<()> {
+    let budget = ctx.budget(300_000);
+    let mut base = presets::base("tiny")?;
+    base.token_budget = budget;
+    base.eval_every = 30;
+
+    let baseline = base.clone().with_name("fig8_baseline");
+
+    let slw_token = presets::with_slw(base.clone(), 8, 200)?.with_name("fig8_slw_tokenwise");
+
+    let mut slw_step = presets::with_slw(base.clone(), 8, 200)?;
+    // step-wise decay with the paper's first attempt: baseline step count
+    // + T/2 extra decay steps
+    let base_steps = (budget / (base.batch as u64 * 64)) as usize;
+    slw_step.lr.horizon = Horizon::Steps { warmup: base_steps / 50, total: base_steps + 100 };
+    let slw_step = slw_step.with_name("fig8_slw_stepwise");
+
+    let mut w = TsvWriter::new(&[
+        "case", "lr_decay", "steps", "final_lr", "best_val_ppl", "final_val_ppl",
+    ]);
+    for (cfg, decay) in [
+        (baseline, "token-wise"),
+        (slw_token, "token-wise"),
+        (slw_step, "step-wise (+T/2 steps)"),
+    ] {
+        let run = &ctx.run(cfg)?.history;
+        w.row(&[
+            run.name.clone(),
+            decay.into(),
+            run.steps.len().to_string(),
+            format!("{:.2e}", run.steps.last().map(|r| r.lr).unwrap_or(f64::NAN)),
+            run.best_val_ppl().map(f2).unwrap_or("-".into()),
+            run.evals.last().map(|e| f2(e.val_ppl)).unwrap_or("-".into()),
+        ]);
+    }
+    ctx.emit("fig8", "SLW LR-decay schedule ablation (paper Appendix A.2)", &w)
+}

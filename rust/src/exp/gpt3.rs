@@ -1,0 +1,156 @@
+//! §5.2 GPT-3 experiments: Fig 5 (training loss), Fig 6 (gradient variance
+//! max), Table 4 (+ Appendix A.5 Table 7 per-task breakdown).
+//!
+//! Paper recipe → testbed:
+//! * "original recipe repro": 300B tokens, bsz 256, bsz-warmup 16→256,
+//!   token-based cosine LR  →  `gpt3` model, budget B, bsz 16, warmup 2→16.
+//! * "10% data aggressive": 30B tokens, bsz 2K (8x), min LR 0, LR decay over
+//!   the reduced budget, baseline keeps bsz-warmup / SLW drops it
+//!   →  budget B/10, bsz 64, calibrated high/higher LR pair where the
+//!   baseline fails and SLW survives.
+//!
+//! "Fails" at this scale = NaN divergence or a run whose loss never returns
+//! below its initial value (the paper's Fig 5 blue line is the NaN case).
+
+use anyhow::Result;
+
+use crate::config::presets;
+use crate::eval::probes;
+use crate::runtime::Engine;
+use crate::util::tsv::{f2, f3, TsvWriter};
+
+use super::{ExpCtx, SPIKE_THRESHOLD};
+
+/// Calibrated LR multipliers over the gpt3 base 6e-4 (EXPERIMENTS.md §Calib):
+/// the scaled model tolerates far larger relative LRs than GPT-3 125M, so
+/// the paper's 30x/40x map to the testbed's marginal/failing multipliers.
+pub const LR_MULT_DEGRADED: f64 = 650.0; // plays "30x" (trains, degraded)
+pub const LR_MULT_FAIL: f64 = 1000.0; // plays "40x" (baseline fails, SLW borderline-survives)
+
+pub const REPRO_BUDGET: u64 = 1_500_000;
+
+fn repro_cfg(ctx: &ExpCtx) -> Result<crate::config::RunConfig> {
+    let mut c = presets::gpt3_recipe()?;
+    c.token_budget = ctx.budget(REPRO_BUDGET);
+    c.lr.horizon = crate::schedule::lr::Horizon::Tokens {
+        warmup: c.token_budget / 100,
+        total: c.token_budget * 26 / 30,
+    };
+    c.bsz_warmup = Some(crate::config::BszWarmupCfg {
+        start: 2,
+        warmup_tokens: c.token_budget / 75,
+    });
+    c.eval_every = 100;
+    Ok(c.with_name("gpt3_repro"))
+}
+
+fn low_data_cfg(ctx: &ExpCtx, mult: f64, slw: bool) -> Result<crate::config::RunConfig> {
+    let budget = ctx.budget(REPRO_BUDGET) / 10;
+    let mut c = presets::gpt3_low_data(mult, if slw { Some((8, 30)) } else { None })?;
+    c.token_budget = budget;
+    c.lr.horizon = crate::schedule::lr::Horizon::Tokens { warmup: budget / 75, total: budget };
+    if !slw {
+        c.bsz_warmup = Some(crate::config::BszWarmupCfg { start: 2, warmup_tokens: budget / 8 });
+    }
+    c.eval_every = 10;
+    let tag = if slw { "slw" } else { "base" };
+    Ok(c.with_name(&format!("gpt3_low_{tag}_{mult}x")))
+}
+
+/// A run "failed" when it NaN-diverged or its loss never recovered below the
+/// starting loss.
+fn failed(h: &crate::train::metrics::RunHistory) -> bool {
+    if h.diverged() {
+        return true;
+    }
+    let losses = h.losses();
+    match (losses.first(), losses.iter().cloned().reduce(f64::min)) {
+        (Some(first), Some(min)) => min > first - 0.05,
+        _ => true,
+    }
+}
+
+pub fn fig5_6(ctx: &mut ExpCtx) -> Result<()> {
+    let runs = vec![
+        low_data_cfg(ctx, LR_MULT_FAIL, false)?,     // baseline 40x-analog: fails
+        low_data_cfg(ctx, LR_MULT_DEGRADED, false)?, // baseline 30x-analog: degraded
+        low_data_cfg(ctx, LR_MULT_FAIL, true)?,      // SLW 40x-analog: stable
+    ];
+    let mut w = TsvWriter::new(&[
+        "case", "steps", "final_loss", "min_loss", "failed", "spikes>1.1", "var_max_peak",
+        "trace",
+    ]);
+    for cfg in runs {
+        let run = &ctx.run(cfg)?.history;
+        let losses = run.losses();
+        let (spikes, _) = run.instability(SPIKE_THRESHOLD);
+        w.row(&[
+            run.name.clone(),
+            run.steps.len().to_string(),
+            f3(*losses.last().unwrap_or(&f64::NAN)),
+            f3(losses.iter().cloned().fold(f64::INFINITY, f64::min)),
+            failed(run).to_string(),
+            spikes.to_string(),
+            format!("{:.5}", run.var_max_peak()),
+            format!("results/runs/{}.tsv", super::slugify(&run.name)),
+        ]);
+    }
+    ctx.emit("fig5_6", "GPT-3 low-data runs: loss + gradient-variance-max traces", &w)
+}
+
+pub fn table4(ctx: &mut ExpCtx) -> Result<()> {
+    // ensure all runs (repro is the accuracy anchor)
+    let repro = repro_cfg(ctx)?;
+    let cases = vec![
+        ("1: Baseline repro", repro.clone()),
+        ("3: Baseline lowLR (30x-analog)", low_data_cfg(ctx, LR_MULT_DEGRADED, false)?),
+        ("4: SLW highLR (40x-analog)", low_data_cfg(ctx, LR_MULT_FAIL, true)?),
+    ];
+    let mut engine = Engine::load(&ctx.root, "gpt3")?;
+
+    // per-task scores → table7; averages → table4
+    let mut t4 = TsvWriter::new(&[
+        "case", "batch", "tokens", "sim_hours", "avg_acc", "retention_vs_repro",
+    ]);
+    let mut t7_rows: Vec<(String, Vec<probes::ProbeScore>, f64)> = Vec::new();
+    let mut repro_acc = f64::NAN;
+    for (label, cfg) in cases {
+        let batch = cfg.batch;
+        let (scores, avg, tokens, hours) = {
+            let run = ctx.run(cfg)?;
+            let (scores, avg) = probes::score_suite(&mut engine, &run.state, 11, 3, 1)?;
+            (scores, avg, run.history.total_tokens(), run.history.sim_hours())
+        };
+        if label.starts_with("1:") {
+            repro_acc = avg;
+        }
+        t4.row(&[
+            label.into(),
+            batch.to_string(),
+            tokens.to_string(),
+            format!("{hours:.3}"),
+            format!("{:.2}%", 100.0 * avg),
+            format!("{:.0}%", 100.0 * avg / repro_acc),
+        ]);
+        t7_rows.push((label.into(), scores, avg));
+    }
+    ctx.emit("table4", "GPT-3 zero-shot probe accuracy: 10x data / aggressive LR (paper Table 4)", &t4)?;
+
+    let mut t7 = TsvWriter::new(&["task", "repro", "baseline_lowLR", "SLW_highLR"]);
+    let n_tasks = t7_rows[0].1.len();
+    for i in 0..n_tasks {
+        t7.row(&[
+            t7_rows[0].1[i].name.clone(),
+            f2(100.0 * t7_rows[0].1[i].accuracy),
+            f2(100.0 * t7_rows[1].1[i].accuracy),
+            f2(100.0 * t7_rows[2].1[i].accuracy),
+        ]);
+    }
+    t7.row(&[
+        "AVERAGE".into(),
+        f2(100.0 * t7_rows[0].2),
+        f2(100.0 * t7_rows[1].2),
+        f2(100.0 * t7_rows[2].2),
+    ]);
+    ctx.emit("table7", "per-task probe accuracy (paper Appendix A.5 Table 7)", &t7)
+}

@@ -1,0 +1,193 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation on the scaled testbed (DESIGN.md §4 maps ids → paper artifacts).
+//!
+//! `slw exp <id>` prints the paper-shaped rows and writes
+//! `results/<id>.tsv` (+ per-run step traces under `results/runs/`).
+//! Runs are cached in-process by config name, so `slw exp all` executes
+//! each training configuration exactly once even though several tables
+//! consume the same runs.
+//!
+//! Scaling note (EXPERIMENTS.md): thresholds and LR multipliers are
+//! calibrated for the testbed — the paper's *shape* (who is stable, who
+//! wins, where crossovers fall) is the reproduction target, not absolute
+//! numbers.
+
+pub mod core;
+pub mod fig10;
+pub mod fig2;
+pub mod fig3;
+pub mod fig8;
+pub mod gpt3;
+pub mod table5;
+pub mod table8_9;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::runtime::TrainState;
+use crate::train::metrics::RunHistory;
+use crate::train::trainer::Trainer;
+use crate::util::cli::Args;
+use crate::util::tsv::TsvWriter;
+
+/// Loss-ratio spike threshold for the scaled testbed. The paper uses 1.2 at
+/// GPT-2 scale; our models are 3 orders of magnitude smaller and spikes are
+/// proportionally shallower, so tables report both 1.1 (headline) and 1.2.
+pub const SPIKE_THRESHOLD: f64 = 1.1;
+
+pub struct CachedRun {
+    pub history: RunHistory,
+    pub state: TrainState,
+}
+
+pub struct ExpCtx {
+    pub root: PathBuf,
+    pub out_dir: PathBuf,
+    /// token-budget scale factor (1.0 = standard, --quick = 0.5, --full = 3.0)
+    pub scale: f64,
+    cache: BTreeMap<String, CachedRun>,
+}
+
+impl ExpCtx {
+    pub fn new(root: PathBuf, out_dir: PathBuf, scale: f64) -> Self {
+        Self { root, out_dir, scale, cache: BTreeMap::new() }
+    }
+
+    pub fn budget(&self, tokens: u64) -> u64 {
+        ((tokens as f64 * self.scale) as u64).max(20_000)
+    }
+
+    /// Run (or fetch) a training config; the step trace lands in
+    /// `results/runs/<name>.tsv`.
+    pub fn run(&mut self, cfg: RunConfig) -> Result<&CachedRun> {
+        let key = cfg.name.clone();
+        if !self.cache.contains_key(&key) {
+            crate::info!("exp run: {key}");
+            let mut trainer = Trainer::new(&self.root, cfg)?;
+            let out = trainer.run()?;
+            self.save_trace(&out.history)?;
+            self.cache.insert(key.clone(), CachedRun { history: out.history, state: out.state });
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Immutable access to an already-executed run (panics if missing —
+    /// call [`ExpCtx::run`] first).
+    pub fn get(&self, name: &str) -> &CachedRun {
+        &self.cache[name]
+    }
+
+    pub fn save_trace(&self, h: &RunHistory) -> Result<()> {
+        let mut w = TsvWriter::new(&[
+            "step", "seqlen", "bsz", "lr", "tokens", "loss", "loss_ratio", "grad_l2",
+            "var_l1", "var_max", "mom_l1", "clip_coef", "sim_s",
+        ]);
+        let ratios = h.loss_ratios();
+        for (r, ratio) in h.steps.iter().zip(ratios) {
+            w.row(&[
+                r.step.to_string(),
+                r.seqlen.to_string(),
+                r.bsz.to_string(),
+                format!("{:.3e}", r.lr),
+                r.tokens_after.to_string(),
+                format!("{:.4}", r.stats.loss),
+                format!("{ratio:.4}"),
+                format!("{:.4}", r.stats.grad_l2),
+                format!("{:.4}", r.stats.var_l1),
+                format!("{:.6}", r.stats.var_max),
+                format!("{:.4}", r.stats.mom_l1),
+                format!("{:.4}", r.stats.clip_coef),
+                format!("{:.4}", r.sim_seconds),
+            ]);
+        }
+        let slug = slugify(&h.name);
+        w.save(&self.out_dir.join("runs").join(format!("{slug}.tsv")))?;
+        if !h.evals.is_empty() {
+            let mut e = TsvWriter::new(&["step", "tokens", "val_ppl", "sim_hours"]);
+            for ev in &h.evals {
+                e.row(&[
+                    ev.step.to_string(),
+                    ev.tokens_after.to_string(),
+                    format!("{:.4}", ev.val_ppl),
+                    format!("{:.4}", ev.sim_hours),
+                ]);
+            }
+            e.save(&self.out_dir.join("runs").join(format!("{slug}.eval.tsv")))?;
+        }
+        Ok(())
+    }
+
+    /// Print + persist a finished table.
+    pub fn emit(&self, id: &str, title: &str, w: &TsvWriter) -> Result<()> {
+        println!("\n== {id}: {title} ==");
+        println!("{}", w.to_markdown());
+        let path = self.out_dir.join(format!("{id}.tsv"));
+        w.save(&path)?;
+        println!("saved {}", path.display());
+        Ok(())
+    }
+}
+
+pub fn slugify(name: &str) -> String {
+    name.chars().map(|c| if c.is_alphanumeric() || c == '.' { c } else { '_' }).collect()
+}
+
+pub const ALL_IDS: &[&str] = &[
+    "fig1", "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5_6", "table4",
+    "table5", "fig8", "fig10", "table8_9",
+];
+
+pub fn cmd_exp(mut args: Args) -> Result<()> {
+    let id = args.positionals.get(1).cloned().unwrap_or_else(|| "list".into());
+    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let out_dir = PathBuf::from(args.str_or("out", "results"));
+    let scale = if args.flag("quick") {
+        0.5
+    } else if args.flag("full") {
+        3.0
+    } else {
+        args.f64_or("scale", 1.0)?
+    };
+    args.finish()?;
+    let mut ctx = ExpCtx::new(root, out_dir, scale);
+
+    fn run_one(ctx: &mut ExpCtx, id: &str) -> Result<()> {
+        match id {
+            // fig1/table1/table2/table3/fig4 share the core run set
+            "fig1" => core::fig1(ctx),
+            "table1" => core::table1(ctx),
+            "table2" => core::table2(ctx),
+            "table3" => core::table3(ctx),
+            "fig4" => core::fig4(ctx),
+            "fig2" => fig2::run(ctx),
+            "fig3" => fig3::run(ctx),
+            "fig5_6" => gpt3::fig5_6(ctx),
+            "table4" => gpt3::table4(ctx),
+            "table5" => table5::run(ctx),
+            "fig8" => fig8::run(ctx),
+            "fig10" => fig10::run(ctx),
+            "table8_9" => table8_9::run(ctx),
+            other => bail!("unknown experiment '{other}'; known: {ALL_IDS:?} or 'all'"),
+        }
+    }
+
+    match id.as_str() {
+        "all" => {
+            let t0 = std::time::Instant::now();
+            for id in ALL_IDS {
+                run_one(&mut ctx, id)?;
+            }
+            println!("\nall experiments done in {:.1} min", t0.elapsed().as_secs_f64() / 60.0);
+            Ok(())
+        }
+        "list" => {
+            println!("experiments: {}", ALL_IDS.join(", "));
+            println!("usage: slw exp <id|all> [--quick|--full|--scale X] [--out results/]");
+            Ok(())
+        }
+        other => run_one(&mut ctx, other),
+    }
+}

@@ -1,0 +1,63 @@
+//! Appendix A.3.1 Table 5: LR × seed instability sweep (same batch size).
+//!
+//! Paper: GPT-2 1.5B bsz 2K, first 3K steps, 5 seeds × 4 LRs, counting
+//! steps with loss ratio > 1.5, baseline vs SLW side by side. Findings:
+//! instability grows with LR; SLW pushes the stable-LR frontier out and
+//! reduces spike counts even where both are unstable.
+//!
+//! Scaled: `small` bsz 16 (the paper's mid batch), first ~40 steps,
+//! 3 seeds × 4 LR multipliers, spike threshold scaled to 1.1.
+
+use anyhow::Result;
+
+use crate::config::presets;
+use crate::util::tsv::TsvWriter;
+
+use super::{ExpCtx, SPIKE_THRESHOLD};
+
+const LR_MULTS: [f64; 4] = [1.0, 4.0, 16.0, 32.0];
+const SEEDS: [u64; 3] = [1234, 1235, 1236];
+
+pub fn run(ctx: &mut ExpCtx) -> Result<()> {
+    let budget = ctx.budget(40_000); // ≈40 steps at bsz16·seq64
+    let mut w = TsvWriter::new(&[
+        "seed", "lr=1x", "lr=4x", "lr=16x", "lr=32x",
+    ]);
+    let mut totals = vec![(0usize, 0usize); LR_MULTS.len()];
+    for &seed in &SEEDS {
+        let mut cells = Vec::new();
+        for (i, &mult) in LR_MULTS.iter().enumerate() {
+            let mut spikes = [0usize; 2];
+            for (j, slw) in [false, true].iter().enumerate() {
+                let mut c = presets::base("small")?;
+                c.batch = 16;
+                c.lr.peak = presets::base_lr("small") * mult;
+                c.lr.min_lr = c.lr.peak / 15.0;
+                c.token_budget = budget;
+                c.seed = seed;
+                if *slw {
+                    c = presets::with_slw(c, 16, 20)?;
+                }
+                let tag = if *slw { "slw" } else { "base" };
+                let cfg = c.with_name(&format!("t5_{tag}_lr{mult}x_s{seed}"));
+                let run = &ctx.run(cfg)?.history;
+                let (s, _) = run.instability(SPIKE_THRESHOLD);
+                spikes[j] = s;
+            }
+            totals[i].0 += spikes[0];
+            totals[i].1 += spikes[1];
+            cells.push(format!("{}/{}", spikes[0], spikes[1]));
+        }
+        let mut row = vec![seed.to_string()];
+        row.extend(cells);
+        w.row(&row);
+    }
+    let mut row = vec!["TOTAL (base/SLW)".to_string()];
+    row.extend(totals.iter().map(|(b, s)| format!("{b}/{s}")));
+    w.row(&row);
+    ctx.emit(
+        "table5",
+        "LR × seed sweep: #steps with loss ratio > 1.1, baseline/SLW (paper Table 5)",
+        &w,
+    )
+}

@@ -1,0 +1,58 @@
+//! Appendix A.6 Tables 8/9: larger model, same token budget — SLW at 8x
+//! batch vs the baseline (with batch-size warmup), zero-shot AND few-shot.
+//!
+//! Paper findings on GPT-3 1.3B @ 300B tokens: (a) baseline at 8x batch
+//! diverges, SLW trains stably 2x faster; (b) at the same tokens SLW's
+//! average accuracy ≥ baseline's for both zero-shot (41.6 → 41.9) and
+//! few-shot (44.8 → 45.3); (c) few-shot > zero-shot for both.
+//!
+//! Scaled: `small` (the largest analysis model), reusing the core fig4 runs
+//! — baseline-with-bsz-warmup vs SLW at bsz 64 — scored on the 11-task
+//! probe suite with shots=1 (zero-shot) and shots=3 (few-shot: the evidence
+//! is repeated k times in context, exactly how k-shot prompting works).
+
+use anyhow::Result;
+
+use crate::eval::probes;
+use crate::runtime::Engine;
+use crate::util::tsv::{f2, TsvWriter};
+
+use super::core::case_config;
+use super::ExpCtx;
+
+pub fn run(ctx: &mut ExpCtx) -> Result<()> {
+    let mut engine = Engine::load(&ctx.root, "small")?;
+    let cases = [("Baseline (BszWarmup)", "small_b64_bw"), ("SLW 8x bsz", "small_b64_slw")];
+
+    let mut table: Vec<(String, Vec<probes::ProbeScore>, f64, Vec<probes::ProbeScore>, f64)> =
+        Vec::new();
+    for (label, id) in cases {
+        let cfg = case_config(ctx, id)?;
+        let (zs, za, fs, fa) = {
+            let run = ctx.run(cfg)?;
+            let (zs, za) = probes::score_suite(&mut engine, &run.state, 21, 3, 1)?;
+            let (fs, fa) = probes::score_suite(&mut engine, &run.state, 21, 3, 3)?;
+            (zs, za, fs, fa)
+        };
+        table.push((label.to_string(), zs, za, fs, fa));
+    }
+
+    let mut w = TsvWriter::new(&["task", "base 0-shot", "SLW 0-shot", "base 3-shot", "SLW 3-shot"]);
+    for i in 0..table[0].1.len() {
+        w.row(&[
+            table[0].1[i].name.clone(),
+            f2(100.0 * table[0].1[i].accuracy),
+            f2(100.0 * table[1].1[i].accuracy),
+            f2(100.0 * table[0].3[i].accuracy),
+            f2(100.0 * table[1].3[i].accuracy),
+        ]);
+    }
+    w.row(&[
+        "AVERAGE".into(),
+        f2(100.0 * table[0].2),
+        f2(100.0 * table[1].2),
+        f2(100.0 * table[0].4),
+        f2(100.0 * table[1].4),
+    ]);
+    ctx.emit("table8_9", "zero-/few-shot probe accuracy: baseline vs SLW (paper A.6)", &w)
+}

@@ -1,0 +1,28 @@
+//! # slw — Sequence Length Warmup training pipeline
+//!
+//! Rust + JAX + Pallas reproduction of *"The Stability-Efficiency Dilemma:
+//! Investigating Sequence Length Warmup for Training GPT Models"*
+//! (Li, Zhang & He, NeurIPS 2022).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - **L3 (this crate)** — coordinator: data pipeline, SLW batcher + pacing
+//!   functions, LR schedules, training loop, instability instrumentation,
+//!   low-cost tuner, evaluation, experiment harness.
+//! - **L2 (python/compile/model.py)** — GPT fwd/bwd + fused Adam, AOT-lowered
+//!   to HLO text per (model, batch, seqlen-bucket).
+//! - **L1 (python/compile/kernels/)** — Pallas flash-attention / LayerNorm /
+//!   Adam kernels embedded in the L2 graph.
+//!
+//! Python never runs on the request path: the binary loads `artifacts/` and
+//! executes via the PJRT CPU client (`xla` crate).
+
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod pipeline;
+pub mod schedule;
+pub mod train;
+pub mod sim;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,259 @@
+//! `slw` — CLI for the Sequence Length Warmup training pipeline.
+//!
+//! Subcommands:
+//!   train   run one pre-training config and print the stability report
+//!   tune    run the paper's low-cost (seqlen_s, T) tuning recipe (§4)
+//!   probes  score the zero/few-shot probe suite on a checkpoint
+//!   data    generate a synthetic corpus to a file
+//!   exp     regenerate a paper table/figure (fig1, table1, ... or `all`)
+//!   info    list artifact sets and models
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use slw::config::{presets, RunConfig};
+use slw::data::corpus::Corpus;
+use slw::pipeline::batcher::TruncationMode;
+use slw::train::checkpoint;
+use slw::train::trainer::Trainer;
+use slw::train::tuner::Tuner;
+use slw::util::cli::Args;
+
+fn main() -> Result<()> {
+    slw::util::log::init_from_env();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cmd = args.positionals.first().cloned().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "train" => cmd_train(args),
+        "tune" => cmd_tune(args),
+        "probes" => cmd_probes(args),
+        "data" => cmd_data(args),
+        "exp" => slw::exp::cmd_exp(args),
+        "info" => cmd_info(args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_root(args: &mut Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn build_config(args: &mut Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = args.opt_str("config") {
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        slw::config::parse_config(&text)?
+    } else {
+        let model = args.str_or("model", "tiny");
+        presets::base(&model)?
+    };
+    if let Some(b) = args.opt_usize("batch")? {
+        cfg.batch = b;
+    }
+    if let Some(lr) = args.opt_f64("lr")? {
+        cfg.lr.peak = lr;
+        cfg.lr.min_lr = lr / 15.0;
+    }
+    if let Some(t) = args.opt_usize("tokens")? {
+        cfg.token_budget = t as u64;
+        // keep the token-wise LR horizon in sync with the budget
+        if let slw::schedule::lr::Horizon::Tokens { .. } = cfg.lr.horizon {
+            cfg.lr.horizon = slw::schedule::lr::Horizon::Tokens {
+                warmup: cfg.token_budget / 50,
+                total: cfg.token_budget,
+            };
+        }
+    }
+    if let Some(d) = args.opt_usize("slw")? {
+        let start = args.usize_or("slw-start", 8)?;
+        cfg = presets::with_slw(cfg, start, d)?;
+    }
+    if args.flag("shortformer") {
+        let switch = args.usize_or("switch", 50)?;
+        cfg = presets::with_shortformer(cfg, 16, switch)?;
+    }
+    if args.flag("bsz-warmup") {
+        let start = args.usize_or("bsz-start", 2)?;
+        let wtok = args.u64_or("bsz-warmup-tokens", cfg.token_budget / 8)?;
+        cfg = presets::with_bsz_warmup(cfg, start, wtok)?;
+    }
+    if args.flag("recycle") {
+        cfg.truncation = TruncationMode::Recycle;
+    }
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.n_workers = args.usize_or("workers", cfg.n_workers)?;
+    if let Some(n) = args.opt_str("name") {
+        cfg.name = n;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let root = artifacts_root(&mut args);
+    let cfg = build_config(&mut args)?;
+    let save = args.opt_str("save");
+    args.finish()?;
+    let name = cfg.name.clone();
+    let mut trainer = Trainer::new(&root, cfg)?;
+    let t0 = std::time::Instant::now();
+    let out = trainer.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let h = &out.history;
+    let (spikes, max_ratio) = h.instability(1.2);
+    let corr = h.variance_correlations();
+    println!("run: {name}");
+    println!(
+        "  steps: {}  tokens: {}  wall: {wall:.1}s  sim_hours: {:.2}",
+        h.steps.len(),
+        h.total_tokens(),
+        h.sim_hours()
+    );
+    println!(
+        "  final loss: {:.4}  diverged: {}",
+        h.losses().last().unwrap_or(&f64::NAN),
+        h.diverged()
+    );
+    println!("  instability: {spikes} steps with ratio>1.2, max ratio {max_ratio:.3}");
+    println!(
+        "  var corr: r_norm={:.3} (p={:.2e})  r_max={:.3} (p={:.2e})  var_max_peak={:.4}",
+        corr.r_norm, corr.p_norm, corr.r_max, corr.p_max, h.var_max_peak()
+    );
+    if let Some(p) = h.best_val_ppl() {
+        println!("  best val ppl: {p:.3}");
+    }
+    if let Some(path) = save {
+        checkpoint::save(&out.state, &PathBuf::from(&path))?;
+        println!("  checkpoint: {path}");
+    }
+    Ok(())
+}
+
+fn cmd_tune(mut args: Args) -> Result<()> {
+    let root = artifacts_root(&mut args);
+    let cfg = build_config(&mut args)?;
+    let probe_steps = args.usize_or("probe-steps", 60)?;
+    let durations: Vec<usize> = args
+        .str_or("durations", "25,50,100,200,400")
+        .split(',')
+        .map(|s| s.parse().unwrap_or(50))
+        .collect();
+    let starts: Vec<usize> = args
+        .str_or("starts", "8,16,24")
+        .split(',')
+        .map(|s| s.parse().unwrap_or(8))
+        .collect();
+    args.finish()?;
+    let tuner = Tuner::new(&root, cfg.clone(), probe_steps);
+    let report = tuner.tune(&starts, &durations)?;
+    println!(
+        "low-cost tuning (§4): chose seqlen_s={} T={}",
+        report.chosen_start, report.chosen_duration
+    );
+    for p in &report.probes {
+        println!(
+            "    s={} T={} stable={} max_fluct={:.3}",
+            p.start, p.duration, p.stable, p.max_fluctuation
+        );
+    }
+    println!(
+        "  probe cost: {} tokens ({:.1}% of one full run)",
+        report.probe_tokens,
+        100.0 * report.probe_tokens as f64 / cfg.token_budget as f64
+    );
+    Ok(())
+}
+
+fn cmd_probes(mut args: Args) -> Result<()> {
+    let root = artifacts_root(&mut args);
+    let model = args.str_or("model", "tiny");
+    let ckpt = args.opt_str("ckpt");
+    let shots = args.usize_or("shots", 1)?;
+    let batches = args.usize_or("batches", 4)?;
+    let seed = args.u64_or("seed", 0)?;
+    args.finish()?;
+    let mut engine = slw::runtime::Engine::load(&root, &model)?;
+    let man = engine.manifest_for_batch(engine.batch_rungs()[0])?.clone();
+    let state = match ckpt {
+        Some(p) => checkpoint::load(&man, &PathBuf::from(p))?,
+        None => slw::runtime::TrainState::init(&man, seed),
+    };
+    let (scores, avg) =
+        slw::eval::probes::score_suite(&mut engine, &state, seed, batches, shots)?;
+    println!("probe suite ({shots}-shot):");
+    for s in &scores {
+        println!("  {:>16}: {:6.2}%  ({} positions)", s.name, 100.0 * s.accuracy, s.n_scored);
+    }
+    println!("  {:>16}: {:6.2}%", "AVERAGE", 100.0 * avg);
+    Ok(())
+}
+
+fn cmd_data(mut args: Args) -> Result<()> {
+    let kind = args.str_or("kind", "mixture");
+    let tokens = args.usize_or("tokens", 1_000_000)?;
+    let vocab = args.usize_or("vocab", 512)?;
+    let seed = args.u64_or("seed", 0)?;
+    let out = args.str_or("out", "corpus.tokens");
+    args.finish()?;
+    let toks = match kind.as_str() {
+        "mixture" => slw::data::corpus::MixtureCorpus::standard(vocab, 64, seed).generate(tokens),
+        "markov" => slw::data::corpus::MarkovCorpus::new(vocab, seed).generate(tokens),
+        "induction" => slw::data::corpus::InductionCorpus::new(vocab, 64, seed).generate(tokens),
+        other => bail!("unknown corpus kind '{other}'"),
+    };
+    let bytes: Vec<u8> = toks.iter().flat_map(|t| t.to_le_bytes()).collect();
+    std::fs::write(&out, bytes)?;
+    println!("wrote {} tokens ({} bytes) to {out}", toks.len(), toks.len() * 2);
+    Ok(())
+}
+
+fn cmd_info(mut args: Args) -> Result<()> {
+    let root = artifacts_root(&mut args);
+    args.finish()?;
+    let index = std::fs::read_to_string(root.join("index.json"))
+        .context("artifacts/index.json missing — run `make artifacts`")?;
+    let j = slw::util::json::Json::parse(&index)?;
+    println!(
+        "{:<12} {:<8} {:>6} {:>9} {:>9}  buckets",
+        "set", "model", "batch", "params", "precision"
+    );
+    for s in j.get("sets")?.arr()? {
+        let man = slw::runtime::Manifest::load(&root.join(s.str()?))?;
+        println!(
+            "{:<12} {:<8} {:>6} {:>9} {:>9}  {:?}",
+            man.set,
+            man.model.name,
+            man.batch_size,
+            man.n_params,
+            man.model.precision,
+            man.seqlen_buckets
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "slw — Sequence Length Warmup training pipeline (NeurIPS 2022 reproduction)\n\
+         \n\
+         USAGE: slw <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           train   --model tiny --batch 64 --lr 4e-3 [--slw T [--slw-start 8]]\n\
+                   [--shortformer --switch N] [--bsz-warmup] [--tokens N]\n\
+                   [--eval-every N] [--seed N] [--save ckpt] [--recycle]\n\
+           tune    --model tiny [--probe-steps N] [--durations a,b,c] [--starts a,b]\n\
+           probes  --model tiny [--ckpt file] [--shots K] [--batches N]\n\
+           data    --kind mixture|markov|induction --tokens N --out file\n\
+           exp     <fig1|table1|table2|table3|fig2|fig3|fig4|fig5_6|table4|table5|\n\
+                    fig8|fig10|table8_9|all> [--quick] [--out results/]\n\
+           info    list artifact sets\n\
+         \n\
+         Run `make artifacts` first. SLW_LOG=debug for verbose logs."
+    );
+}

@@ -1,0 +1,200 @@
+//! The truncation-based SLW batcher — the paper's implementation choice
+//! (§4): the dataloader keeps indexing *full-length* sequences; at each step
+//! the pacing function picks seqlen_t and the batch is truncated to
+//! `seqlen_t + 1` columns. "It is true that this truncation-based
+//! implementation will drop some data in the current step. However, ... it's
+//! possible to record the index of dropped data and use them in future
+//! steps" — both modes are implemented (`TruncationMode::Drop` /
+//! `TruncationMode::Recycle`).
+
+use anyhow::Result;
+
+use crate::data::dataset::{Sampler, TokenStore};
+use crate::pipeline::pacing::BucketedPacing;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TruncationMode {
+    /// Paper default: drop the tail beyond seqlen_t.
+    Drop,
+    /// Queue the dropped tails and serve them as future sequences once they
+    /// are at least one window long (the paper's suggested refinement).
+    Recycle,
+}
+
+/// One training batch, ready for the runtime.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Flattened `[bsz, seqlen + 1]` token ids.
+    pub tokens: Vec<i32>,
+    pub bsz: usize,
+    pub seqlen: usize,
+    /// Tokens the model will train on this step (bsz × seqlen).
+    pub train_tokens: u64,
+    /// Tokens fetched but not trained on (truncation loss; 0 in Recycle
+    /// mode once the recycle queue is warm).
+    pub dropped_tokens: u64,
+}
+
+pub struct SlwBatcher {
+    pacing: BucketedPacing,
+    mode: TruncationMode,
+    /// Recycle queue: concatenated dropped tails.
+    leftovers: Vec<i32>,
+    full_seqlen: usize,
+}
+
+impl SlwBatcher {
+    pub fn new(pacing: BucketedPacing, mode: TruncationMode, full_seqlen: usize) -> Self {
+        Self { pacing, mode, leftovers: Vec::new(), full_seqlen }
+    }
+
+    pub fn pacing(&self) -> &BucketedPacing {
+        &self.pacing
+    }
+
+    pub fn seqlen_at(&self, step: usize) -> usize {
+        self.pacing.seqlen_at(step)
+    }
+
+    pub fn observe_loss(&mut self, loss: f64) {
+        self.pacing.observe_loss(loss);
+    }
+
+    /// Assemble the batch for `step`: fetch full-length rows from the
+    /// sampler (or the recycle queue), truncate to the bucketed seqlen.
+    pub fn next_batch(
+        &mut self,
+        step: usize,
+        bsz: usize,
+        sampler: &mut Sampler,
+        store: &TokenStore,
+    ) -> Result<Batch> {
+        let seqlen = self.pacing.seqlen_at(step);
+        let width = seqlen + 1;
+        let full_width = self.full_seqlen + 1;
+        let mut tokens = Vec::with_capacity(bsz * width);
+        let mut dropped = 0u64;
+
+        for _ in 0..bsz {
+            // Recycle mode: serve a leftover window when one is available.
+            if self.mode == TruncationMode::Recycle && self.leftovers.len() >= width {
+                let row: Vec<i32> = self.leftovers.drain(..width).collect();
+                // keep the boundary token as context for the next drain
+                if !self.leftovers.is_empty() {
+                    self.leftovers.insert(0, row[width - 1]);
+                }
+                tokens.extend(row);
+                continue;
+            }
+            let full = sampler.next_sequence(store);
+            debug_assert_eq!(full.len(), full_width);
+            tokens.extend(&full[..width]);
+            let tail = &full[width..];
+            match self.mode {
+                TruncationMode::Drop => dropped += tail.len() as u64,
+                TruncationMode::Recycle => self.leftovers.extend(tail),
+            }
+        }
+        // cap recycle memory: never hold more than 64 full windows
+        let cap = 64 * full_width;
+        if self.leftovers.len() > cap {
+            let excess = self.leftovers.len() - cap;
+            self.leftovers.drain(..excess);
+            dropped += excess as u64;
+        }
+        Ok(Batch {
+            bsz,
+            seqlen,
+            train_tokens: (bsz * seqlen) as u64,
+            dropped_tokens: dropped,
+            tokens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, MarkovCorpus};
+    use crate::pipeline::pacing::Pacing;
+
+    fn setup(full: usize) -> (TokenStore, Sampler) {
+        let toks = MarkovCorpus::new(512, 0).generate(full * 200 + 1);
+        let store = TokenStore::new(toks, 512).unwrap();
+        let idx = store.index(full, 0.1).unwrap();
+        let sampler = Sampler::new(idx, 0);
+        (store, sampler)
+    }
+
+    fn pacing(start: usize, end: usize, dur: usize) -> BucketedPacing {
+        BucketedPacing::new(
+            Pacing::Linear { start, end, duration: dur },
+            vec![8, 16, 24, 32, 48, 64],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batch_shape_follows_pacing() {
+        let (store, mut sampler) = setup(64);
+        let mut b = SlwBatcher::new(pacing(8, 64, 10), TruncationMode::Drop, 64);
+        let b0 = b.next_batch(0, 4, &mut sampler, &store).unwrap();
+        assert_eq!(b0.seqlen, 8);
+        assert_eq!(b0.tokens.len(), 4 * 9);
+        assert_eq!(b0.train_tokens, 32);
+        assert_eq!(b0.dropped_tokens, 4 * (64 - 8) as u64);
+        let b_end = b.next_batch(10, 4, &mut sampler, &store).unwrap();
+        assert_eq!(b_end.seqlen, 64);
+        assert_eq!(b_end.dropped_tokens, 0);
+    }
+
+    #[test]
+    fn truncation_is_prefix() {
+        let (store, mut sampler) = setup(64);
+        let mut s2 = Sampler::new(store.index(64, 0.1).unwrap(), 0);
+        let full = s2.next_sequence(&store);
+        let mut b = SlwBatcher::new(pacing(16, 64, 100), TruncationMode::Drop, 64);
+        let batch = b.next_batch(0, 1, &mut sampler, &store).unwrap();
+        assert_eq!(batch.tokens[..17], full[..17]);
+    }
+
+    #[test]
+    fn recycle_reuses_tails() {
+        let (store, mut drop_sampler) = setup(64);
+        let mut rec_sampler = Sampler::new(store.index(64, 0.1).unwrap(), 0);
+        let mut bd = SlwBatcher::new(pacing(8, 64, 1000), TruncationMode::Drop, 64);
+        let mut br = SlwBatcher::new(pacing(8, 64, 1000), TruncationMode::Recycle, 64);
+        for step in 0..10 {
+            let d = bd.next_batch(step, 4, &mut drop_sampler, &store).unwrap();
+            let r = br.next_batch(step, 4, &mut rec_sampler, &store).unwrap();
+            assert_eq!(d.tokens.len(), r.tokens.len());
+            assert!(d.dropped_tokens > 0);
+            assert_eq!(r.dropped_tokens, 0); // tails queued, not dropped
+        }
+        // recycle served most rows from leftovers → far fewer fresh windows
+        assert!(rec_sampler.consumed() * 4 < drop_sampler.consumed(),
+                "recycle {} vs drop {}", rec_sampler.consumed(), drop_sampler.consumed());
+    }
+
+    #[test]
+    fn recycle_queue_bounded() {
+        let (store, mut sampler) = setup(64);
+        let mut b = SlwBatcher::new(pacing(8, 64, 100_000), TruncationMode::Recycle, 64);
+        for step in 0..200 {
+            b.next_batch(step, 8, &mut sampler, &store).unwrap();
+        }
+        assert!(b.leftovers.len() <= 64 * 65 + 1);
+    }
+
+    #[test]
+    fn constant_pacing_never_truncates() {
+        let (store, mut sampler) = setup(64);
+        let p = BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![8, 64]).unwrap();
+        let mut b = SlwBatcher::new(p, TruncationMode::Drop, 64);
+        for step in 0..5 {
+            let batch = b.next_batch(step, 2, &mut sampler, &store).unwrap();
+            assert_eq!(batch.seqlen, 64);
+            assert_eq!(batch.dropped_tokens, 0);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Batch-size warmup — the GPT-3 baseline technique (Brown et al. 2020)
+//! the paper compares against ("Bsz Warmup", Table 1 row 12 / Fig 4).
+//!
+//! GPT-3 ramps the batch size "gradually ... from 32k tokens to the full
+//! value over the first 4-12 billion tokens"; the paper's replication starts
+//! at 16 → 256 over the first 4B tokens. Two constraints the paper calls
+//! out are modeled faithfully:
+//!
+//! * the batch must be a **multiple of the data-parallel size** (a dynamic
+//!   constraint that gets prohibitive at scale — §5.1), and
+//! * the runtime only has executables for a **rung ladder** of batch sizes,
+//!   so the linear ramp rounds down to a rung (the same bucketing idea the
+//!   seqlen side uses).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct BszWarmup {
+    start: usize,
+    end: usize,
+    /// tokens over which the linear ramp runs
+    warmup_tokens: u64,
+    /// available executable rungs (sorted ascending, must contain `end`)
+    rungs: Vec<usize>,
+    /// data-parallel size constraint (batch must be a multiple)
+    dp_size: usize,
+}
+
+impl BszWarmup {
+    pub fn new(start: usize, end: usize, warmup_tokens: u64, mut rungs: Vec<usize>,
+               dp_size: usize) -> Result<Self> {
+        rungs.sort_unstable();
+        rungs.dedup();
+        if start > end {
+            bail!("start batch {start} > end batch {end}");
+        }
+        if !rungs.contains(&end) {
+            bail!("rung ladder {rungs:?} missing end batch {end}");
+        }
+        if dp_size == 0 {
+            bail!("dp_size must be ≥ 1");
+        }
+        for &r in &rungs {
+            if r % dp_size != 0 {
+                bail!("rung {r} is not a multiple of data-parallel size {dp_size} \
+                       (the limitation §5.1 describes)");
+            }
+        }
+        Ok(Self { start, end, warmup_tokens, rungs, dp_size })
+    }
+
+    /// Constant batch size (no warmup) helper.
+    pub fn constant(bsz: usize) -> Self {
+        Self { start: bsz, end: bsz, warmup_tokens: 0, rungs: vec![bsz], dp_size: 1 }
+    }
+
+    pub fn dp_size(&self) -> usize {
+        self.dp_size
+    }
+
+    pub fn end(&self) -> usize {
+        self.end
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// Batch size after `tokens_consumed` tokens: linear in tokens, rounded
+    /// down to the nearest rung.
+    pub fn bsz_at(&self, tokens_consumed: u64) -> usize {
+        if self.warmup_tokens == 0 || tokens_consumed >= self.warmup_tokens {
+            return self.end;
+        }
+        let frac = tokens_consumed as f64 / self.warmup_tokens as f64;
+        let raw = self.start as f64 + (self.end - self.start) as f64 * frac;
+        let raw = raw as usize;
+        match self.rungs.binary_search(&raw) {
+            Ok(i) => self.rungs[i],
+            Err(0) => self.rungs[0],
+            Err(i) => self.rungs[i - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_shape() {
+        let w = BszWarmup::new(2, 64, 10_000, vec![2, 4, 8, 16, 64], 2).unwrap();
+        assert_eq!(w.bsz_at(0), 2);
+        assert_eq!(w.bsz_at(10_000), 64);
+        assert_eq!(w.bsz_at(1_000_000), 64);
+        // monotone non-decreasing
+        let mut prev = 0;
+        for t in (0..12_000).step_by(100) {
+            let b = w.bsz_at(t);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn rounds_down_to_rung() {
+        let w = BszWarmup::new(2, 64, 1000, vec![2, 4, 8, 16, 64], 1).unwrap();
+        // halfway: raw = 33 → rung 16 (not 64)
+        assert_eq!(w.bsz_at(500), 16);
+    }
+
+    #[test]
+    fn dp_constraint_enforced() {
+        // rung 2 is not a multiple of dp 4 — exactly the §5.1 limitation
+        assert!(BszWarmup::new(2, 64, 1000, vec![2, 4, 64], 4).is_err());
+        assert!(BszWarmup::new(4, 64, 1000, vec![4, 8, 64], 4).is_ok());
+    }
+
+    #[test]
+    fn missing_end_rung_rejected() {
+        assert!(BszWarmup::new(2, 64, 1000, vec![2, 4, 8], 1).is_err());
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let w = BszWarmup::constant(8);
+        assert!(w.is_constant());
+        assert_eq!(w.bsz_at(0), 8);
+        assert_eq!(w.bsz_at(u64::MAX / 2), 8);
+    }
+}

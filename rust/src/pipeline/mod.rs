@@ -1,0 +1,11 @@
+//! The paper's system contribution as a first-class pipeline stage: pacing
+//! functions, the truncation-based SLW batcher, the batch-size-warmup
+//! baseline, step planning, data-parallel sharding, and threaded prefetch
+//! with backpressure.
+
+pub mod batcher;
+pub mod bsz_warmup;
+pub mod pacing;
+pub mod plan;
+pub mod prefetch;
+pub mod shard;

@@ -1,0 +1,399 @@
+//! Pacing functions — §4 of the paper.
+//!
+//! A pacing function maps the training step to the sequence length used for
+//! that step's batch. The paper's method is the step-wise **linear** ramp
+//!     seqlen_t = seqlen_s + (seqlen_e − seqlen_s) · min(t/T, 1)
+//! with the post-processing `seqlen_t −= seqlen_t mod 8` (Tensor-Core
+//! alignment; §5.1). The paper also evaluates a **root** ramp, the
+//! Shortformer-style **discrete 2-stage** schedule, an **adaptive**
+//! (validation-loss driven) variant, and of course the **constant** baseline
+//! — all implemented here so the comparison experiments are first-class.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Pacing {
+    /// Baseline: always the full sequence length.
+    Constant { seqlen: usize },
+    /// The paper's SLW: linear ramp from `start` to `end` over `duration` steps.
+    Linear { start: usize, end: usize, duration: usize },
+    /// Root ramp: start + (end-start) · min((t/T)^r, 1). r < 1 front-loads
+    /// growth; the paper reports it "performs similar to linear".
+    Root { start: usize, end: usize, duration: usize, degree: f64 },
+    /// Shortformer (Press et al. 2020): `short` for the first `switch_step`
+    /// steps, then full length — the 2-stage schedule the paper shows
+    /// diverging at the switch (Fig 4h).
+    TwoStage { short: usize, end: usize, switch_step: usize },
+    /// Adaptive: grow by `grow` whenever smoothed training loss improves,
+    /// hold otherwise (the paper's "based on training/validation losses"
+    /// variant). Driven via [`PacingState::observe_loss`].
+    Adaptive { start: usize, end: usize, grow: usize, patience: usize },
+    /// Fig 2's artificial probe: `short_steps` of `short` then `long_steps`
+    /// of `end`, repeating (the 900×128 + 100×1K mixed schedule).
+    Mixed { short: usize, end: usize, short_steps: usize, long_steps: usize },
+}
+
+impl Pacing {
+    pub fn validate(&self, full_seqlen: usize) -> Result<()> {
+        let check = |s: usize, e: usize| -> Result<()> {
+            if s < 8 || s > e {
+                bail!("start seqlen {s} must be in [8, {e}]");
+            }
+            if e > full_seqlen {
+                bail!("end seqlen {e} exceeds full {full_seqlen}");
+            }
+            Ok(())
+        };
+        match *self {
+            Pacing::Constant { seqlen } => check(8.max(seqlen), seqlen.max(8)),
+            Pacing::Linear { start, end, duration } | Pacing::Root { start, end, duration, .. } => {
+                if duration == 0 {
+                    bail!("duration must be > 0");
+                }
+                check(start, end)
+            }
+            Pacing::TwoStage { short, end, .. } => check(short, end),
+            Pacing::Adaptive { start, end, grow, .. } => {
+                if grow == 0 {
+                    bail!("grow must be > 0");
+                }
+                check(start, end)
+            }
+            Pacing::Mixed { short, end, short_steps, long_steps } => {
+                if short_steps + long_steps == 0 {
+                    bail!("mixed cycle must be non-empty");
+                }
+                check(short, end)
+            }
+        }
+    }
+
+    /// Raw (pre-alignment) sequence length at 0-based step `t`.
+    fn raw_seqlen(&self, t: usize, state: &PacingState) -> usize {
+        match *self {
+            Pacing::Constant { seqlen } => seqlen,
+            Pacing::Linear { start, end, duration } => {
+                let frac = (t as f64 / duration as f64).min(1.0);
+                start + ((end - start) as f64 * frac).round() as usize
+            }
+            Pacing::Root { start, end, duration, degree } => {
+                let frac = (t as f64 / duration as f64).min(1.0).powf(degree);
+                start + ((end - start) as f64 * frac).round() as usize
+            }
+            Pacing::TwoStage { short, end, switch_step } => {
+                if t < switch_step {
+                    short
+                } else {
+                    end
+                }
+            }
+            Pacing::Adaptive { end, .. } => state.adaptive_len.min(end),
+            Pacing::Mixed { short, end, short_steps, long_steps } => {
+                let pos = t % (short_steps + long_steps);
+                if pos < short_steps {
+                    short
+                } else {
+                    end
+                }
+            }
+        }
+    }
+
+    /// The paper's alignment post-processing: round down to a multiple of 8
+    /// (never below 8).
+    pub fn align8(len: usize) -> usize {
+        (len - len % 8).max(8)
+    }
+
+    /// Step at which the full length is first reached (None for Mixed, which
+    /// oscillates). Used by the token-budget planner.
+    pub fn full_length_step(&self) -> Option<usize> {
+        match *self {
+            Pacing::Constant { .. } => Some(0),
+            Pacing::Linear { duration, .. } | Pacing::Root { duration, .. } => Some(duration),
+            Pacing::TwoStage { switch_step, .. } => Some(switch_step),
+            Pacing::Adaptive { .. } => None,
+            Pacing::Mixed { .. } => None,
+        }
+    }
+}
+
+/// Mutable pacing state (only the adaptive variant uses it).
+#[derive(Clone, Debug)]
+pub struct PacingState {
+    adaptive_len: usize,
+    best_loss: f64,
+    stall: usize,
+    patience: usize,
+    grow: usize,
+}
+
+impl PacingState {
+    pub fn new(p: &Pacing) -> Self {
+        let (start, grow, patience) = match *p {
+            Pacing::Adaptive { start, grow, patience, .. } => (start, grow, patience),
+            _ => (0, 0, 0),
+        };
+        Self { adaptive_len: start, best_loss: f64::INFINITY, stall: 0, patience, grow }
+    }
+
+    /// Feed the step loss; the adaptive schedule grows the length by `grow`
+    /// for every `patience` new-best losses observed (improvement-paced, so
+    /// the ramp stalls exactly when training stalls or spikes).
+    pub fn observe_loss(&mut self, loss: f64) {
+        if self.grow == 0 {
+            return;
+        }
+        if loss < self.best_loss {
+            self.best_loss = loss;
+            self.stall += 1;
+            if self.stall >= self.patience {
+                self.adaptive_len += self.grow;
+                self.stall = 0;
+            }
+        }
+    }
+}
+
+/// A pacing function bound to a bucket ladder: the runtime only has
+/// executables for the lowered seqlen buckets, so the aligned length is
+/// rounded *down* to the nearest bucket (the conservative direction — never
+/// longer than the schedule asks).
+#[derive(Clone, Debug)]
+pub struct BucketedPacing {
+    pacing: Pacing,
+    buckets: Vec<usize>,
+    state: PacingState,
+}
+
+impl BucketedPacing {
+    pub fn new(pacing: Pacing, mut buckets: Vec<usize>) -> Result<Self> {
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            bail!("empty bucket ladder");
+        }
+        // the ladder must be able to serve the shortest length the pacing
+        // function can ask for (full-only artifact sets have ladder = [full],
+        // which is fine for constant pacing)
+        let min_len = match pacing {
+            Pacing::Constant { seqlen } => seqlen,
+            Pacing::Linear { start, .. } | Pacing::Root { start, .. } => start,
+            Pacing::TwoStage { short, .. } => short,
+            Pacing::Adaptive { start, .. } => start,
+            Pacing::Mixed { short, .. } => short,
+        };
+        if buckets[0] > Pacing::align8(min_len) {
+            bail!(
+                "bucket ladder starts at {} but the pacing function needs {} \
+                 (aligned {})",
+                buckets[0],
+                min_len,
+                Pacing::align8(min_len)
+            );
+        }
+        pacing.validate(*buckets.last().unwrap())?;
+        let state = PacingState::new(&pacing);
+        Ok(Self { pacing, buckets, state })
+    }
+
+    pub fn pacing(&self) -> &Pacing {
+        &self.pacing
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Bucketed sequence length for step `t`.
+    pub fn seqlen_at(&self, t: usize) -> usize {
+        let aligned = Pacing::align8(self.pacing.raw_seqlen(t, &self.state));
+        // round down to nearest bucket
+        match self.buckets.binary_search(&aligned) {
+            Ok(i) => self.buckets[i],
+            Err(0) => self.buckets[0],
+            Err(i) => self.buckets[i - 1],
+        }
+    }
+
+    pub fn observe_loss(&mut self, loss: f64) {
+        self.state.observe_loss(loss);
+    }
+
+    /// Total tokens consumed by steps [0, n) at batch size `bsz` — used to
+    /// terminate runs on a token budget (paper: "all cases stop when
+    /// reaching the same 157B training tokens").
+    pub fn tokens_after(&self, n: usize, bsz: usize) -> u64 {
+        (0..n).map(|t| (self.seqlen_at(t) * bsz) as u64).sum()
+    }
+
+    /// Number of steps needed to consume `budget` tokens at batch `bsz`.
+    pub fn steps_for_tokens(&self, budget: u64, bsz: usize) -> usize {
+        let mut acc = 0u64;
+        let mut t = 0usize;
+        while acc < budget {
+            acc += (self.seqlen_at(t) * bsz) as u64;
+            t += 1;
+            if t > 100_000_000 {
+                break; // safety
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> Vec<usize> {
+        vec![8, 16, 24, 32, 48, 64]
+    }
+
+    #[test]
+    fn linear_ramp_shape() {
+        let p = BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 64, duration: 100 },
+            ladder(),
+        )
+        .unwrap();
+        assert_eq!(p.seqlen_at(0), 8);
+        assert_eq!(p.seqlen_at(100), 64);
+        assert_eq!(p.seqlen_at(10_000), 64);
+        // monotone non-decreasing
+        let mut prev = 0;
+        for t in 0..120 {
+            let s = p.seqlen_at(t);
+            assert!(s >= prev);
+            prev = s;
+        }
+        // mid-ramp ≈ halfway (36 → bucket 32)
+        assert_eq!(p.seqlen_at(50), 32);
+    }
+
+    #[test]
+    fn align8_matches_paper_postprocessing() {
+        assert_eq!(Pacing::align8(8), 8);
+        assert_eq!(Pacing::align8(9), 8);
+        assert_eq!(Pacing::align8(15), 8);
+        assert_eq!(Pacing::align8(16), 16);
+        assert_eq!(Pacing::align8(1000), 1000 - 1000 % 8);
+        assert_eq!(Pacing::align8(3), 8); // floor at 8
+    }
+
+    #[test]
+    fn root_frontloads_vs_linear() {
+        let lin = BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 64, duration: 100 },
+            ladder(),
+        )
+        .unwrap();
+        let root = BucketedPacing::new(
+            Pacing::Root { start: 8, end: 64, duration: 100, degree: 0.5 },
+            ladder(),
+        )
+        .unwrap();
+        // sqrt ramp is ahead of linear mid-ramp, equal at the ends
+        assert!(root.seqlen_at(25) >= lin.seqlen_at(25));
+        assert_eq!(root.seqlen_at(100), lin.seqlen_at(100));
+    }
+
+    #[test]
+    fn two_stage_switches_once() {
+        let p = BucketedPacing::new(
+            Pacing::TwoStage { short: 16, end: 64, switch_step: 50 },
+            ladder(),
+        )
+        .unwrap();
+        assert_eq!(p.seqlen_at(49), 16);
+        assert_eq!(p.seqlen_at(50), 64);
+    }
+
+    #[test]
+    fn mixed_cycles() {
+        // Fig 2: 900 short + 100 long per 1K steps (scaled 9+1 per 10)
+        let p = BucketedPacing::new(
+            Pacing::Mixed { short: 8, end: 64, short_steps: 9, long_steps: 1 },
+            ladder(),
+        )
+        .unwrap();
+        for t in 0..9 {
+            assert_eq!(p.seqlen_at(t), 8);
+        }
+        assert_eq!(p.seqlen_at(9), 64);
+        assert_eq!(p.seqlen_at(10), 8);
+    }
+
+    #[test]
+    fn adaptive_grows_on_progress() {
+        let mut p = BucketedPacing::new(
+            Pacing::Adaptive { start: 8, end: 64, grow: 8, patience: 2 },
+            ladder(),
+        )
+        .unwrap();
+        assert_eq!(p.seqlen_at(0), 8);
+        for i in 0..20 {
+            p.observe_loss(10.0 - i as f64); // monotone improvement
+        }
+        assert!(p.seqlen_at(20) > 8);
+        let grown = p.seqlen_at(20);
+        for _ in 0..20 {
+            p.observe_loss(100.0); // stall
+        }
+        assert_eq!(p.seqlen_at(40), grown); // holds, never shrinks
+    }
+
+    #[test]
+    fn bucket_rounding_is_downward() {
+        let p = BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 64, duration: 56 },
+            vec![8, 32, 64],
+        )
+        .unwrap();
+        // raw 40 at t=32 → aligned 40 → bucket 32 (round down, never up)
+        assert_eq!(p.seqlen_at(32), 32);
+    }
+
+    #[test]
+    fn token_budget_roundtrip() {
+        let p = BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 64, duration: 100 },
+            ladder(),
+        )
+        .unwrap();
+        let tokens = p.tokens_after(150, 4);
+        let steps = p.steps_for_tokens(tokens, 4);
+        assert_eq!(steps, 150);
+        // SLW consumes fewer tokens than constant over the warmup
+        let c = BucketedPacing::new(Pacing::Constant { seqlen: 64 }, ladder()).unwrap();
+        assert!(tokens < c.tokens_after(150, 4));
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        assert!(BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 128, duration: 10 },
+            ladder()
+        )
+        .is_err()); // end beyond ladder
+        assert!(BucketedPacing::new(
+            Pacing::Linear { start: 4, end: 64, duration: 10 },
+            ladder()
+        )
+        .is_err()); // start < 8
+        assert!(BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 64, duration: 0 },
+            ladder()
+        )
+        .is_err());
+        assert!(BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![]).is_err());
+        // full-only ladder is fine for constant pacing at that length...
+        assert!(BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![64]).is_ok());
+        // ...but not for a warmup that needs shorter buckets
+        assert!(BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 64, duration: 10 },
+            vec![64]
+        )
+        .is_err());
+    }
+}

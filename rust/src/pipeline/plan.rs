@@ -1,0 +1,131 @@
+//! Step planner: resolves (pacing × batch-size warmup × budget) into the
+//! concrete per-step `(seqlen, bsz)` schedule before the run starts.
+//!
+//! Everything downstream — the prefetch workers, the cluster time model,
+//! the token-budget termination rule ("all cases stop when reaching the
+//! same 157B training tokens", §5.1) — consumes this plan, so the whole run
+//! is deterministic and workers need no shared mutable state. The adaptive
+//! pacing function cannot be pre-planned and runs through the synchronous
+//! path in `train::Trainer` instead.
+
+use anyhow::{bail, Result};
+
+use super::bsz_warmup::BszWarmup;
+use super::pacing::{BucketedPacing, Pacing};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepSpec {
+    pub step: usize,
+    pub seqlen: usize,
+    pub bsz: usize,
+    /// tokens consumed by all previous steps
+    pub tokens_before: u64,
+}
+
+impl StepSpec {
+    pub fn train_tokens(&self) -> u64 {
+        (self.seqlen * self.bsz) as u64
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum Budget {
+    Steps(usize),
+    Tokens(u64),
+}
+
+pub fn plan_run(pacing: &BucketedPacing, bszw: &BszWarmup, budget: Budget) -> Result<Vec<StepSpec>> {
+    if matches!(pacing.pacing(), Pacing::Adaptive { .. }) {
+        bail!("adaptive pacing cannot be pre-planned; use the synchronous trainer path");
+    }
+    let mut plan = Vec::new();
+    let mut tokens = 0u64;
+    let mut step = 0usize;
+    loop {
+        match budget {
+            Budget::Steps(n) if step >= n => break,
+            Budget::Tokens(t) if tokens >= t => break,
+            _ => {}
+        }
+        let bsz = bszw.bsz_at(tokens);
+        let seqlen = pacing.seqlen_at(step);
+        plan.push(StepSpec { step, seqlen, bsz, tokens_before: tokens });
+        tokens += (seqlen * bsz) as u64;
+        step += 1;
+        if step > 50_000_000 {
+            bail!("budget produced an implausibly long plan (> 5e7 steps)");
+        }
+    }
+    Ok(plan)
+}
+
+/// Total trained tokens in a plan.
+pub fn total_tokens(plan: &[StepSpec]) -> u64 {
+    plan.last().map(|s| s.tokens_before + s.train_tokens()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pacing(start: usize, dur: usize) -> BucketedPacing {
+        BucketedPacing::new(
+            Pacing::Linear { start, end: 64, duration: dur },
+            vec![8, 16, 24, 32, 48, 64],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn steps_budget() {
+        let plan = plan_run(&pacing(8, 10), &BszWarmup::constant(4), Budget::Steps(20)).unwrap();
+        assert_eq!(plan.len(), 20);
+        assert_eq!(plan[0].seqlen, 8);
+        assert_eq!(plan[19].seqlen, 64);
+        assert_eq!(plan[0].tokens_before, 0);
+        assert_eq!(plan[1].tokens_before, 32);
+    }
+
+    #[test]
+    fn token_budget_terminates_on_same_tokens() {
+        // the paper's fairness rule: same token budget, SLW needs more steps
+        let budget = Budget::Tokens(64 * 4 * 100); // 100 full-length steps
+        let base = plan_run(
+            &BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![8, 64]).unwrap(),
+            &BszWarmup::constant(4),
+            budget,
+        )
+        .unwrap();
+        let slw = plan_run(&pacing(8, 50), &BszWarmup::constant(4), budget).unwrap();
+        assert_eq!(base.len(), 100);
+        assert!(slw.len() > 100, "SLW must take more steps for the same tokens");
+        let bt = total_tokens(&base);
+        let st = total_tokens(&slw);
+        assert!(bt >= 64 * 4 * 100);
+        // both stop within one step of the budget
+        assert!(st >= 64 * 4 * 100 && st < 64 * 4 * 101);
+    }
+
+    #[test]
+    fn bsz_warmup_interacts_with_tokens() {
+        let bszw = BszWarmup::new(2, 16, 1000, vec![2, 4, 8, 16], 1).unwrap();
+        let p = BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![8, 64]).unwrap();
+        let plan = plan_run(&p, &bszw, Budget::Tokens(5000)).unwrap();
+        assert_eq!(plan[0].bsz, 2);
+        assert_eq!(plan.last().unwrap().bsz, 16);
+        // monotone batch growth
+        for w in plan.windows(2) {
+            assert!(w[1].bsz >= w[0].bsz);
+        }
+    }
+
+    #[test]
+    fn adaptive_rejected() {
+        let p = BucketedPacing::new(
+            Pacing::Adaptive { start: 8, end: 64, grow: 8, patience: 2 },
+            vec![8, 16, 64],
+        )
+        .unwrap();
+        assert!(plan_run(&p, &BszWarmup::constant(4), Budget::Steps(10)).is_err());
+    }
+}

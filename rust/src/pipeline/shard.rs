@@ -1,0 +1,180 @@
+//! Data-parallel sharding of the training window space + rebalancing.
+//!
+//! Each (simulated) data-parallel worker owns a disjoint subset of the
+//! train windows — the standard Megatron contract that every sample is seen
+//! once per epoch with no cross-worker duplication. `rebalance` implements
+//! the streaming-orchestrator half: when one worker lags (slow node, skewed
+//! document lengths after recycling), unvisited windows migrate from the
+//! most- to the least-loaded shard, preserving the exactly-once invariant.
+
+use anyhow::{bail, Result};
+
+use crate::data::dataset::{SequenceIndex, TokenStore};
+use crate::util::rng::Pcg64;
+
+pub struct ShardSampler {
+    pub worker: usize,
+    /// epoch-shuffled window ids still to visit (pop from the back)
+    queue: Vec<u32>,
+    /// all windows owned by this shard (refilled each epoch)
+    owned: Vec<u32>,
+    epoch: u64,
+    seed: u64,
+}
+
+impl ShardSampler {
+    pub fn remaining(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn owned(&self) -> usize {
+        self.owned.len()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn refill(&mut self) {
+        self.queue = self.owned.clone();
+        let mut rng = Pcg64::new(
+            self.seed ^ (self.worker as u64) << 32 ^ self.epoch.wrapping_mul(0x9e3779b97f4a7c15),
+        );
+        rng.shuffle(&mut self.queue);
+    }
+
+    pub fn next_sequence(&mut self, store: &TokenStore, index: &SequenceIndex) -> Vec<i32> {
+        if self.queue.is_empty() {
+            self.epoch += 1;
+            self.refill();
+        }
+        let idx = self.queue.pop().expect("shard owns at least one window") as usize;
+        let full = index.full_seqlen();
+        store.tokens()[idx * full..idx * full + full + 1]
+            .iter()
+            .map(|&t| t as i32)
+            .collect()
+    }
+}
+
+/// Partition the train windows round-robin across `n_workers` shards.
+pub fn make_shards(index: &SequenceIndex, n_workers: usize, seed: u64) -> Result<Vec<ShardSampler>> {
+    if n_workers == 0 {
+        bail!("need at least one worker");
+    }
+    if index.n_train() < n_workers {
+        bail!("{} train windows cannot feed {} workers", index.n_train(), n_workers);
+    }
+    let mut shards: Vec<ShardSampler> = (0..n_workers)
+        .map(|w| ShardSampler { worker: w, queue: Vec::new(), owned: Vec::new(), epoch: 0, seed })
+        .collect();
+    for idx in 0..index.n_train() as u32 {
+        shards[(idx as usize) % n_workers].owned.push(idx);
+    }
+    for s in &mut shards {
+        s.refill();
+    }
+    Ok(shards)
+}
+
+/// Migrate unvisited windows from the most- to the least-loaded shard until
+/// the spread (max - min remaining) is ≤ `tolerance`. Returns the number of
+/// windows moved. Ownership moves too, so future epochs stay balanced.
+pub fn rebalance(shards: &mut [ShardSampler], tolerance: usize) -> usize {
+    let mut moved = 0;
+    loop {
+        let (mut hi, mut lo) = (0, 0);
+        for (i, s) in shards.iter().enumerate() {
+            if s.remaining() > shards[hi].remaining() {
+                hi = i;
+            }
+            if s.remaining() < shards[lo].remaining() {
+                lo = i;
+            }
+        }
+        let spread = shards[hi].remaining() - shards[lo].remaining();
+        if spread <= tolerance.max(1) {
+            return moved;
+        }
+        let n_move = spread / 2;
+        for _ in 0..n_move {
+            let Some(w) = shards[hi].queue.pop() else { break };
+            shards[hi].owned.retain(|&x| x != w);
+            shards[lo].owned.push(w);
+            shards[lo].queue.push(w);
+            moved += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, MarkovCorpus};
+    use crate::data::dataset::TokenStore;
+
+    fn setup() -> (TokenStore, SequenceIndex) {
+        let toks = MarkovCorpus::new(512, 0).generate(64 * 101 + 1);
+        let store = TokenStore::new(toks, 512).unwrap();
+        let idx = store.index(64, 0.1).unwrap();
+        (store, idx)
+    }
+
+    #[test]
+    fn shards_partition_disjointly() {
+        let (_, idx) = setup();
+        let shards = make_shards(&idx, 4, 0).unwrap();
+        let mut all: Vec<u32> = shards.iter().flat_map(|s| s.owned.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..idx.n_train() as u32).collect::<Vec<_>>());
+        let max = shards.iter().map(|s| s.owned()).max().unwrap();
+        let min = shards.iter().map(|s| s.owned()).min().unwrap();
+        assert!(max - min <= 1, "round-robin must balance within 1");
+    }
+
+    #[test]
+    fn epoch_visits_every_owned_window_once() {
+        let (store, idx) = setup();
+        let mut shards = make_shards(&idx, 3, 1).unwrap();
+        let shard = &mut shards[0];
+        let n = shard.owned();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..n {
+            seen.insert(shard.next_sequence(&store, &idx));
+        }
+        assert_eq!(seen.len(), n);
+        assert_eq!(shard.epoch(), 0);
+        shard.next_sequence(&store, &idx);
+        assert_eq!(shard.epoch(), 1);
+    }
+
+    #[test]
+    fn rebalance_levels_load_and_preserves_coverage() {
+        let (store, idx) = setup();
+        let mut shards = make_shards(&idx, 4, 2).unwrap();
+        // simulate worker 0 racing ahead: drain most of its queue
+        for _ in 0..shards[0].remaining() - 2 {
+            shards[0].next_sequence(&store, &idx);
+        }
+        let spread_before = shards.iter().map(|s| s.remaining()).max().unwrap()
+            - shards.iter().map(|s| s.remaining()).min().unwrap();
+        assert!(spread_before > 10);
+        let moved = rebalance(&mut shards, 2);
+        assert!(moved > 0);
+        let spread_after = shards.iter().map(|s| s.remaining()).max().unwrap()
+            - shards.iter().map(|s| s.remaining()).min().unwrap();
+        assert!(spread_after <= 2 + 1);
+        // exactly-once overall: owned sets still partition the space
+        let mut all: Vec<u32> = shards.iter().flat_map(|s| s.owned.clone()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), idx.n_train());
+    }
+
+    #[test]
+    fn too_many_workers_rejected() {
+        let (_, idx) = setup();
+        assert!(make_shards(&idx, idx.n_train() + 1, 0).is_err());
+        assert!(make_shards(&idx, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU client, and runs train/eval steps against Literal-resident state.
+//!
+//! This is the only module that touches the `xla` crate on the hot path.
+//! Executables are compiled lazily per (batch, seqlen) on first use and
+//! cached for the life of the engine — an SLW run touches each bucket once
+//! and then stays on it, so warm-path cost is a single BTreeMap lookup.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{family_sets, Manifest};
+
+/// Per-step training statistics — the paper's full instrumentation set
+/// (train_outputs tail in the manifest).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    pub grad_l2: f32,
+    pub var_l1: f32,
+    pub var_max: f32,
+    pub mom_l1: f32,
+    pub clip_coef: f32,
+}
+
+impl StepStats {
+    pub fn is_finite(&self) -> bool {
+        self.loss.is_finite() && self.grad_l2.is_finite() && self.var_l1.is_finite()
+    }
+}
+
+/// Mutable training state: flat params + Adam moments as device literals,
+/// threaded through the pure-functional train step.
+pub struct TrainState {
+    pub params: Literal,
+    pub m: Literal,
+    pub v: Literal,
+    pub decay_mask: Literal,
+    /// 1-based Adam step (bias correction).
+    pub step: u64,
+    pub tokens: u64,
+    pub n_params: usize,
+}
+
+impl TrainState {
+    pub fn init(man: &Manifest, seed: u64) -> Self {
+        let flat = man.init_params(seed);
+        let zeros = vec![0f32; man.n_params];
+        Self {
+            params: Literal::vec1(&flat),
+            m: Literal::vec1(&zeros),
+            v: Literal::vec1(&zeros),
+            decay_mask: Literal::vec1(&man.decay_mask()),
+            step: 0,
+            tokens: 0,
+            n_params: man.n_params,
+        }
+    }
+
+    pub fn params_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.params.to_vec::<f32>()?)
+    }
+}
+
+struct LazyExe {
+    path: PathBuf,
+    exe: Option<PjRtLoadedExecutable>,
+}
+
+impl LazyExe {
+    fn get(&mut self, client: &PjRtClient) -> Result<&PjRtLoadedExecutable> {
+        if self.exe.is_none() {
+            let proto = HloModuleProto::from_text_file(&self.path)
+                .with_context(|| format!("parsing HLO {:?}", self.path))?;
+            let comp = XlaComputation::from_proto(&proto);
+            self.exe = Some(client.compile(&comp).with_context(|| format!("compiling {:?}", self.path))?);
+        }
+        Ok(self.exe.as_ref().unwrap())
+    }
+}
+
+/// All executables for one model family: train steps keyed by
+/// (batch, seqlen bucket) across the family's artifact sets, plus one eval
+/// executable (full seqlen, eval batch).
+pub struct Engine {
+    client: PjRtClient,
+    /// primary manifest (the set matching the run's target batch)
+    manifests: Vec<Manifest>,
+    train: BTreeMap<(usize, usize), LazyExe>,
+    eval: LazyExe,
+    eval_batch: usize,
+    compiles: std::cell::Cell<usize>,
+}
+
+impl Engine {
+    /// Load every artifact set of `model` under `root`.
+    pub fn load(root: &Path, model: &str) -> Result<Self> {
+        let manifests = family_sets(root, model)?;
+        let client = PjRtClient::cpu()?;
+        let mut train = BTreeMap::new();
+        for man in &manifests {
+            for (&seqlen, file) in &man.train_artifacts {
+                train.insert((man.batch_size, seqlen), LazyExe {
+                    path: man.dir.join(file),
+                    exe: None,
+                });
+            }
+        }
+        // eval executable from the first (lowest-batch) set — they all share
+        // the model; eval batch is uniform across sets by construction
+        let man0 = &manifests[0];
+        let eval = LazyExe { path: man0.eval_path(), exe: None };
+        let eval_batch = man0.eval_batch;
+        Ok(Self { client, manifests, train, eval, eval_batch, compiles: std::cell::Cell::new(0) })
+    }
+
+    pub fn manifest_for_batch(&self, batch: usize) -> Result<&Manifest> {
+        self.manifests
+            .iter()
+            .find(|m| m.batch_size == batch)
+            .ok_or_else(|| anyhow::anyhow!("no artifact set with batch {batch}"))
+    }
+
+    /// The union bucket ladder available at `batch`.
+    pub fn buckets(&self, batch: usize) -> Result<Vec<usize>> {
+        Ok(self.manifest_for_batch(batch)?.seqlen_buckets.clone())
+    }
+
+    /// Batch rungs available in this family (for bsz warmup).
+    pub fn batch_rungs(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.manifests.iter().map(|m| m.batch_size).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+
+    pub fn model(&self) -> &super::manifest::ModelInfo {
+        &self.manifests[0].model
+    }
+
+    pub fn n_compiles(&self) -> usize {
+        self.compiles.get()
+    }
+
+    /// Execute one training step in place. `tokens` is the flattened
+    /// `[bsz, seqlen+1]` batch; `lr` the resolved learning rate; `clip_norm`
+    /// the global gradient-clipping threshold (runtime scalar — Fig 10
+    /// ablation sweeps it without re-lowering).
+    pub fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        bsz: usize,
+        seqlen: usize,
+        lr: f64,
+        clip_norm: f64,
+    ) -> Result<StepStats> {
+        if tokens.len() != bsz * (seqlen + 1) {
+            bail!("batch is {} tokens, expected {}x{}", tokens.len(), bsz, seqlen + 1);
+        }
+        let key = (bsz, seqlen);
+        let Some(lazy) = self.train.get_mut(&key) else {
+            bail!("no train executable for batch {bsz} seqlen {seqlen} \
+                   (lowered buckets: {:?})", self.train.keys().collect::<Vec<_>>());
+        };
+        if lazy.exe.is_none() {
+            self.compiles.set(self.compiles.get() + 1);
+        }
+        let exe = lazy.get(&self.client)?;
+
+        let step_lit = Literal::scalar((state.step + 1) as f32);
+        let lr_lit = Literal::scalar(lr as f32);
+        let clip_lit = Literal::scalar(clip_norm as f32);
+        let tok_lit = Literal::vec1(tokens).reshape(&[bsz as i64, seqlen as i64 + 1])?;
+
+        let result = exe.execute::<&Literal>(&[
+            &state.params,
+            &state.m,
+            &state.v,
+            &state.decay_mask,
+            &step_lit,
+            &lr_lit,
+            &clip_lit,
+            &tok_lit,
+        ])?[0][0]
+            .to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        if parts.len() != 9 {
+            bail!("train step returned {} outputs, expected 9", parts.len());
+        }
+        // outputs: params, m, v, loss, grad_l2, var_l1, var_max, mom_l1, clip
+        let scalar = |l: &Literal| -> Result<f32> { Ok(l.to_vec::<f32>()?[0]) };
+        let stats = StepStats {
+            loss: scalar(&parts[3])?,
+            grad_l2: scalar(&parts[4])?,
+            var_l1: scalar(&parts[5])?,
+            var_max: scalar(&parts[6])?,
+            mom_l1: scalar(&parts[7])?,
+            clip_coef: scalar(&parts[8])?,
+        };
+        state.v = parts.remove(2);
+        state.m = parts.remove(1);
+        state.params = parts.remove(0);
+        state.step += 1;
+        state.tokens += (bsz * seqlen) as u64;
+        Ok(stats)
+    }
+
+    /// Score a `[eval_batch, max_seqlen+1]` batch: returns (sum_nll,
+    /// per-position nll, per-position exact-match correctness).
+    pub fn eval_step(
+        &mut self,
+        state: &TrainState,
+        tokens: &[i32],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let man = &self.manifests[0];
+        let b = self.eval_batch;
+        let s = man.model.max_seqlen;
+        if tokens.len() != b * (s + 1) {
+            bail!("eval batch is {} tokens, expected {}x{}", tokens.len(), b, s + 1);
+        }
+        if self.eval.exe.is_none() {
+            self.compiles.set(self.compiles.get() + 1);
+        }
+        let exe = self.eval.get(&self.client)?;
+        let tok_lit = Literal::vec1(tokens).reshape(&[b as i64, s as i64 + 1])?;
+        let result = exe.execute::<&Literal>(&[&state.params, &tok_lit])?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("eval step returned {} outputs, expected 3", parts.len());
+        }
+        Ok((
+            parts[0].to_vec::<f32>()?[0],
+            parts[1].to_vec::<f32>()?,
+            parts[2].to_vec::<f32>()?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Engine {
+        Engine::load(&root(), "micro").unwrap()
+    }
+
+    fn rand_tokens(n: usize, vocab: usize, seed: u64) -> Vec<i32> {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+    }
+
+    #[test]
+    fn loads_family_and_rungs() {
+        let e = engine();
+        assert_eq!(e.batch_rungs(), vec![4]);
+        assert_eq!(e.buckets(4).unwrap(), vec![8, 16, 24, 32]);
+        assert!(e.manifest_for_batch(99).is_err());
+    }
+
+    #[test]
+    fn train_step_runs_and_updates_state() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let mut st = TrainState::init(&man, 0);
+        let toks = rand_tokens(4 * 9, man.model.vocab, 1);
+        let stats = e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        assert!(stats.is_finite());
+        assert!((stats.loss - (man.model.vocab as f32).ln()).abs() < 0.7);
+        assert!(stats.grad_l2 > 0.0);
+        assert_eq!(st.step, 1);
+        assert_eq!(st.tokens, 32);
+        // params changed
+        let p0 = man.init_params(0);
+        let p1 = st.params_vec().unwrap();
+        assert_ne!(p0, p1);
+        // second step at a different bucket reuses state
+        let toks2 = rand_tokens(4 * 17, man.model.vocab, 2);
+        let stats2 = e.train_step(&mut st, &toks2, 4, 16, 1e-3, 1.0).unwrap();
+        assert!(stats2.is_finite());
+        assert_eq!(st.step, 2);
+        assert_eq!(e.n_compiles(), 2);
+    }
+
+    #[test]
+    fn train_step_learns_repetitive_batch() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let mut st = TrainState::init(&man, 0);
+        // fixed repetitive batch at seqlen 32
+        let base: Vec<i32> = (0..11).map(|i| (i * 17 + 3) % 256).collect();
+        let toks: Vec<i32> = (0..4 * 33).map(|i| base[i % 11]).collect();
+        let mut first = 0f32;
+        let mut last = 0f32;
+        for i in 0..15 {
+            let stats = e.train_step(&mut st, &toks, 4, 32, 3e-3, 1.0).unwrap();
+            if i == 0 {
+                first = stats.loss;
+            }
+            last = stats.loss;
+        }
+        assert!(last < first - 1.0, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn eval_step_shapes_and_consistency() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let st = TrainState::init(&man, 3);
+        let b = e.eval_batch();
+        let s = man.model.max_seqlen;
+        let toks = rand_tokens(b * (s + 1), man.model.vocab, 4);
+        let (sum_nll, nll, correct) = e.eval_step(&st, &toks).unwrap();
+        assert_eq!(nll.len(), b * s);
+        assert_eq!(correct.len(), b * s);
+        let total: f32 = nll.iter().sum();
+        assert!((total - sum_nll).abs() / sum_nll < 1e-4);
+        assert!(correct.iter().all(|&c| c == 0.0 || c == 1.0));
+        // mean nll near ln(V) at init
+        assert!((sum_nll / (b * s) as f32 - (man.model.vocab as f32).ln()).abs() < 0.7);
+    }
+
+    #[test]
+    fn wrong_shapes_rejected() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let mut st = TrainState::init(&man, 0);
+        assert!(e.train_step(&mut st, &[0i32; 10], 4, 8, 1e-3, 1.0).is_err());
+        assert!(e.train_step(&mut st, &vec![0i32; 4 * 13], 4, 12, 1e-3, 1.0).is_err());
+    }
+}

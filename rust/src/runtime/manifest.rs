@@ -1,0 +1,255 @@
+//! Artifact manifest: the contract between aot.py (L2) and the coordinator.
+//!
+//! Parsed from `artifacts/<set>/manifest.json`. Carries the model config,
+//! the flat-parameter layout (so Rust can build the init vector and the
+//! weight-decay mask itself — no numpy interchange needed), the seqlen
+//! bucket ladder, and the artifact file map.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // "normal" | "zeros" | "ones"
+    pub std: f64,
+    pub decay: bool,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub vocab: usize,
+    pub max_seqlen: usize,
+    pub precision: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub set: String,
+    pub model: ModelInfo,
+    pub batch_size: usize,
+    pub eval_batch: usize,
+    pub n_params: usize,
+    pub seqlen_buckets: Vec<usize>,
+    pub full_only: bool,
+    pub train_artifacts: BTreeMap<usize, String>,
+    pub eval_artifact: String,
+    pub params: Vec<ParamSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let m = j.get("model")?;
+        let model = ModelInfo {
+            name: m.get("name")?.str()?.to_string(),
+            n_layer: m.get("n_layer")?.usize()?,
+            d_model: m.get("d_model")?.usize()?,
+            n_head: m.get("n_head")?.usize()?,
+            vocab: m.get("vocab")?.usize()?,
+            max_seqlen: m.get("max_seqlen")?.usize()?,
+            precision: m.get("precision")?.str()?.to_string(),
+        };
+
+        let mut train_artifacts = BTreeMap::new();
+        if let Json::Obj(map) = j.get("train_artifacts")? {
+            for (k, v) in map {
+                train_artifacts.insert(k.parse::<usize>()?, v.str()?.to_string());
+            }
+        } else {
+            bail!("train_artifacts must be an object");
+        }
+
+        let mut params = Vec::new();
+        let mut expect_offset = 0usize;
+        for p in j.get("params")?.arr()? {
+            let spec = ParamSpec {
+                name: p.get("name")?.str()?.to_string(),
+                shape: p.get("shape")?.arr()?.iter().map(|d| d.usize()).collect::<Result<_>>()?,
+                init: p.get("init")?.str()?.to_string(),
+                std: p.get("std")?.num()?,
+                decay: p.get("decay")?.bool()?,
+                offset: p.get("offset")?.usize()?,
+                size: p.get("size")?.usize()?,
+            };
+            if spec.offset != expect_offset {
+                bail!("param {} offset {} != expected {}", spec.name, spec.offset, expect_offset);
+            }
+            if spec.size != spec.shape.iter().product::<usize>() {
+                bail!("param {} size/shape mismatch", spec.name);
+            }
+            expect_offset += spec.size;
+            params.push(spec);
+        }
+
+        let man = Manifest {
+            set: j.get("set")?.str()?.to_string(),
+            model,
+            batch_size: j.get("batch_size")?.usize()?,
+            eval_batch: j.get("eval_batch")?.usize()?,
+            n_params: j.get("n_params")?.usize()?,
+            seqlen_buckets: j
+                .get("seqlen_buckets")?
+                .arr()?
+                .iter()
+                .map(|b| b.usize())
+                .collect::<Result<_>>()?,
+            full_only: j.get("full_only")?.bool()?,
+            train_artifacts,
+            eval_artifact: j.get("eval_artifact")?.str()?.to_string(),
+            params,
+            dir: dir.to_path_buf(),
+        };
+        if expect_offset != man.n_params {
+            bail!("param sizes sum to {expect_offset}, manifest says {}", man.n_params);
+        }
+        for &b in &man.seqlen_buckets {
+            if !man.train_artifacts.contains_key(&b) {
+                bail!("bucket {b} has no train artifact");
+            }
+        }
+        Ok(man)
+    }
+
+    /// Initial flat parameter vector with the manifest's layout/distributions
+    /// (PCG64-seeded; same distributions as the Python initializer, bit-exact
+    /// parity not required — see model.py docstring).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut flat = vec![0f32; self.n_params];
+        let mut rng = Pcg64::new(seed ^ 0x1b17);
+        for sp in &self.params {
+            let seg = &mut flat[sp.offset..sp.offset + sp.size];
+            match sp.init.as_str() {
+                "normal" => {
+                    let std = sp.std as f32;
+                    for x in seg.iter_mut() {
+                        *x = rng.normal_f32(std);
+                    }
+                }
+                "ones" => seg.fill(1.0),
+                _ => {} // zeros
+            }
+        }
+        flat
+    }
+
+    /// {0,1} weight-decay mask over the flat layout.
+    pub fn decay_mask(&self) -> Vec<f32> {
+        let mut mask = vec![0f32; self.n_params];
+        for sp in &self.params {
+            if sp.decay {
+                mask[sp.offset..sp.offset + sp.size].fill(1.0);
+            }
+        }
+        mask
+    }
+
+    pub fn train_path(&self, seqlen: usize) -> Result<PathBuf> {
+        match self.train_artifacts.get(&seqlen) {
+            Some(f) => Ok(self.dir.join(f)),
+            None => bail!("no train artifact for seqlen {seqlen} in set {}", self.set),
+        }
+    }
+
+    pub fn eval_path(&self) -> PathBuf {
+        self.dir.join(&self.eval_artifact)
+    }
+}
+
+/// Locate every artifact set for a model family under `root`.
+pub fn family_sets(root: &Path, model: &str) -> Result<Vec<Manifest>> {
+    let index = root.join("index.json");
+    let text = std::fs::read_to_string(&index)
+        .with_context(|| format!("reading {index:?} (run `make artifacts`)"))?;
+    let j = Json::parse(&text)?;
+    let mut out = Vec::new();
+    for s in j.get("sets")?.arr()? {
+        let dir = root.join(s.str()?);
+        let man = Manifest::load(&dir)?;
+        if man.model.name == model {
+            out.push(man);
+        }
+    }
+    if out.is_empty() {
+        bail!("no artifact sets for model '{model}' under {root:?}");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_micro_manifest() {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        assert_eq!(man.set, "micro_b4");
+        assert_eq!(man.model.vocab, 256);
+        assert_eq!(man.batch_size, 4);
+        assert_eq!(man.seqlen_buckets, vec![8, 16, 24, 32]);
+        assert_eq!(man.params.len(), 2 + 12 * man.model.n_layer + 2);
+        assert!(man.train_path(8).unwrap().exists());
+        assert!(man.eval_path().exists());
+        assert!(man.train_path(12).is_err());
+    }
+
+    #[test]
+    fn init_params_distribution() {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        let flat = man.init_params(0);
+        assert_eq!(flat.len(), man.n_params);
+        // wte std ≈ 0.02
+        let wte = &man.params[0];
+        assert_eq!(wte.name, "wte");
+        let seg = &flat[wte.offset..wte.offset + wte.size];
+        let mean = seg.iter().map(|&x| x as f64).sum::<f64>() / seg.len() as f64;
+        let var = seg.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / seg.len() as f64;
+        assert!(mean.abs() < 2e-3);
+        assert!((var.sqrt() - 0.02).abs() < 2e-3);
+        // LN gammas are exactly 1
+        let ln = man.params.iter().find(|p| p.name.ends_with("ln1.g")).unwrap();
+        assert!(flat[ln.offset..ln.offset + ln.size].iter().all(|&x| x == 1.0));
+        // deterministic per seed
+        assert_eq!(man.init_params(7), man.init_params(7));
+        assert_ne!(man.init_params(7), man.init_params(8));
+    }
+
+    #[test]
+    fn decay_mask_covers_weights_only() {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        let mask = man.decay_mask();
+        for sp in &man.params {
+            let seg = &mask[sp.offset..sp.offset + sp.size];
+            let expect = if sp.decay { 1.0 } else { 0.0 };
+            assert!(seg.iter().all(|&x| x == expect), "{}", sp.name);
+        }
+    }
+
+    #[test]
+    fn family_lookup() {
+        let fams = family_sets(&root(), "gpt3").unwrap();
+        assert!(fams.len() >= 5, "gpt3 family has the bsz-warmup rungs");
+        assert!(family_sets(&root(), "zzz").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: manifest parsing + the execution engine that runs the AOT
+//! artifacts (see /opt/xla-example/load_hlo for the interchange pattern).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, StepStats, TrainState};
+pub use manifest::Manifest;

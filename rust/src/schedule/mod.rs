@@ -1,0 +1,3 @@
+//! LR schedules + gradient-clipping config.
+
+pub mod lr;

@@ -1,0 +1,253 @@
+//! Cluster wall-clock model (DESIGN.md §2 substitution for the paper's 128
+//! V100 testbed).
+//!
+//! The paper's time columns (Table 2/4) are a deterministic function of the
+//! schedule: per-step compute scales O(B·L²·H + B·L·H²) with the Transformer
+//! split the paper quotes in §5.1, and data-parallel all-reduce cost is
+//! independent of B and L. The model reproduces exactly the effects the
+//! paper reports:
+//!
+//! * larger batch at the same token budget → fewer steps → fewer all-reduce
+//!   rounds → up to ~2.3× time saving (Table 2 case 1 vs 4);
+//! * SLW's short early sequences cut the quadratic attention term, and its
+//!   extra steps at small batch partially "cancel" the saving via extra
+//!   communication (§5.1);
+//! * seqlen 2K at the same tokens costs more than 1K (case 1 vs 7).
+//!
+//! Constants are V100-like (per-GPU sustained throughput, NVLink/IB ring
+//! all-reduce) and are surfaced so benches can sweep them.
+
+use crate::pipeline::plan::StepSpec;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub n_gpus: usize,
+    /// achievable matmul throughput per GPU at large per-GPU batch (FLOP/s).
+    /// V100 fp16 peak is 112e12; Megatron-class models sustain ~20e12.
+    pub gpu_flops: f64,
+    /// per-GPU batch (sequences) at which efficiency reaches 50% — models
+    /// the kernel-efficiency gap the paper's Table 2 shows between bsz 512
+    /// (≈9 TF/GPU achieved) and bsz 4K (≈20 TF/GPU) on 128 GPUs.
+    pub batch_eff_half: f64,
+    /// ring all-reduce effective bus bandwidth (bytes/s), 100 Gb IB ≈ 10e9
+    pub allreduce_bw: f64,
+    /// per-step fixed launch/sync latency (s)
+    pub step_latency: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            n_gpus: 128,
+            gpu_flops: 22e12,
+            batch_eff_half: 4.0,
+            allreduce_bw: 10e9,
+            step_latency: 2e-3,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub n_params: u64,
+    pub n_layer: usize,
+    pub d_model: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SimTime {
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub latency_s: f64,
+}
+
+impl SimTime {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s + self.latency_s
+    }
+}
+
+pub struct ClusterSim {
+    pub cluster: ClusterConfig,
+    pub model: ModelDims,
+}
+
+impl ClusterSim {
+    pub fn new(cluster: ClusterConfig, model: ModelDims) -> Self {
+        Self { cluster, model }
+    }
+
+    /// FLOPs for one fwd+bwd step at (global batch, seqlen): the standard
+    /// 6·P·tokens dense term plus the 12·L·H·B·S² attention-score term the
+    /// paper's §5.1 complexity split isolates (6 for fwd+bwd ×
+    /// QKᵀ-and-PV pair).
+    pub fn step_flops(&self, bsz: usize, seqlen: usize) -> f64 {
+        let tokens = (bsz * seqlen) as f64;
+        let dense = 6.0 * self.model.n_params as f64 * tokens;
+        let attn = 12.0
+            * self.model.n_layer as f64
+            * self.model.d_model as f64
+            * bsz as f64
+            * (seqlen as f64) * (seqlen as f64);
+        dense + attn
+    }
+
+    /// Kernel efficiency as a function of per-GPU batch (sequences):
+    /// saturating s/(s + half). Seqlen-independent, so SLW's truncated
+    /// steps run at the same efficiency as full-length ones at equal batch.
+    pub fn batch_efficiency(&self, bsz: usize) -> f64 {
+        let local = bsz as f64 / self.cluster.n_gpus as f64;
+        local / (local + self.cluster.batch_eff_half)
+    }
+
+    /// Simulated wall-clock for one step.
+    pub fn step_time(&self, bsz: usize, seqlen: usize) -> SimTime {
+        let c = &self.cluster;
+        let eff = self.batch_efficiency(bsz);
+        let compute = self.step_flops(bsz, seqlen) / (c.gpu_flops * eff * c.n_gpus as f64);
+        // ring all-reduce of fp16 grads: 2·(n-1)/n · P · 2 bytes / bw
+        let n = c.n_gpus as f64;
+        let comm = 2.0 * (n - 1.0) / n * self.model.n_params as f64 * 2.0 / c.allreduce_bw;
+        SimTime { compute_s: compute, comm_s: comm, latency_s: c.step_latency }
+    }
+
+    /// Total simulated hours for a full plan.
+    pub fn plan_hours(&self, plan: &[StepSpec]) -> f64 {
+        plan.iter().map(|s| self.step_time(s.bsz, s.seqlen).total()).sum::<f64>() / 3600.0
+    }
+}
+
+/// The paper-scale reference models, used to sanity-check the time ratios
+/// against Table 2 (not used by the runtime — our runtime models are the
+/// scaled presets; this keeps the simulator honest at the paper's scale).
+pub fn gpt2_117m() -> ModelDims {
+    ModelDims { n_params: 117_000_000, n_layer: 12, d_model: 768 }
+}
+
+pub fn gpt2_1_5b() -> ModelDims {
+    ModelDims { n_params: 1_500_000_000, n_layer: 48, d_model: 1600 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::bsz_warmup::BszWarmup;
+    use crate::pipeline::pacing::{BucketedPacing, Pacing};
+    use crate::pipeline::plan::{plan_run, Budget};
+
+    fn sim_1_5b() -> ClusterSim {
+        ClusterSim::new(ClusterConfig::default(), gpt2_1_5b())
+    }
+
+    #[test]
+    fn larger_batch_saves_time_at_same_tokens() {
+        // Table 2 case 10 vs 13: bsz 512 → 4K at 157B tokens ⇒ ~2.3x faster
+        let sim = sim_1_5b();
+        let tokens = 1_000_000_000u64; // scaled budget, ratio is budget-free
+        let ladder = vec![8, 1024];
+        let p = BucketedPacing::new(Pacing::Constant { seqlen: 1024 }, ladder).unwrap();
+        let small = plan_run(&p, &BszWarmup::constant(512), Budget::Tokens(tokens)).unwrap();
+        let large = plan_run(&p, &BszWarmup::constant(4096), Budget::Tokens(tokens)).unwrap();
+        let t_small = sim.plan_hours(&small);
+        let t_large = sim.plan_hours(&large);
+        let ratio = t_small / t_large;
+        assert!(ratio > 1.5 && ratio < 4.0, "time ratio {ratio:.2} (paper ≈ 2.3x)");
+    }
+
+    #[test]
+    fn slw_cuts_early_step_time_quadratically() {
+        let sim = sim_1_5b();
+        let t8 = sim.step_time(4096, 8).compute_s;
+        let t1024 = sim.step_time(4096, 1024).compute_s;
+        // 128x tokens and quadratic attention → well beyond linear 128x
+        assert!(t1024 / t8 > 128.0);
+    }
+
+    #[test]
+    fn comm_independent_of_batch_and_seqlen() {
+        let sim = sim_1_5b();
+        assert_eq!(sim.step_time(512, 1024).comm_s, sim.step_time(4096, 8).comm_s);
+    }
+
+    #[test]
+    fn slw_same_tokens_comparable_time_fewer_tokens_big_saving() {
+        // Table 2 case 13 vs 15: at the SAME 157B tokens SLW's hours are
+        // within a few percent of baseline (151 vs 155Hr — the extra steps'
+        // comm cancels the quadratic saving). Case 13 vs 14: at the
+        // same-quality checkpoint (fewer tokens) SLW is decisively faster.
+        let sim = sim_1_5b();
+        let tokens = 1_000_000_000u64;
+        let ladder: Vec<usize> = vec![8, 16, 32, 64, 128, 256, 512, 1024];
+        let base = plan_run(
+            &BucketedPacing::new(Pacing::Constant { seqlen: 1024 }, ladder.clone()).unwrap(),
+            &BszWarmup::constant(4096),
+            Budget::Tokens(tokens),
+        )
+        .unwrap();
+        let slw_pacing = BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 1024, duration: base.len() * 12 / 10 },
+            ladder,
+        )
+        .unwrap();
+        let slw_full =
+            plan_run(&slw_pacing, &BszWarmup::constant(4096), Budget::Tokens(tokens)).unwrap();
+        let tb = sim.plan_hours(&base);
+        let ts = sim.plan_hours(&slw_full);
+        assert!((ts - tb).abs() / tb < 0.15, "same tokens: SLW {ts:.2}h vs base {tb:.2}h");
+        // paper case 14: SLW reaches baseline quality at ~77% of the tokens
+        let slw_early = plan_run(
+            &slw_pacing,
+            &BszWarmup::constant(4096),
+            Budget::Tokens(tokens * 77 / 100),
+        )
+        .unwrap();
+        let te = sim.plan_hours(&slw_early);
+        assert!(te < 0.85 * tb, "early checkpoint: SLW {te:.2}h vs base {tb:.2}h");
+    }
+
+    #[test]
+    fn small_batch_comm_cancellation() {
+        // §5.1: at bsz 512 SLW's extra steps add all-reduce rounds that
+        // cancel part of the saving → relative gain smaller than at 4K.
+        let sim = sim_1_5b();
+        let tokens = 500_000_000u64;
+        let ladder: Vec<usize> = vec![8, 16, 32, 64, 128, 256, 512, 1024];
+        let gain = |bsz: usize| {
+            let base = plan_run(
+                &BucketedPacing::new(Pacing::Constant { seqlen: 1024 }, ladder.clone()).unwrap(),
+                &BszWarmup::constant(bsz),
+                Budget::Tokens(tokens),
+            )
+            .unwrap();
+            let slw = plan_run(
+                &BucketedPacing::new(
+                    Pacing::Linear { start: 8, end: 1024, duration: base.len() / 2 },
+                    ladder.clone(),
+                )
+                .unwrap(),
+                &BszWarmup::constant(bsz),
+                Budget::Tokens(tokens),
+            )
+            .unwrap();
+            sim.plan_hours(&base) / sim.plan_hours(&slw)
+        };
+        assert!(gain(4096) > gain(512), "large-batch gain must exceed small-batch gain");
+    }
+
+    #[test]
+    fn paper_scale_absolute_sanity() {
+        // 117M, bsz 512, seqlen 1K, 157B tokens on 128 V100s: paper = 37h.
+        // The model should land within ~3x of that (it is a model, not a
+        // measurement — the *ratios* are what the tables reproduce).
+        let sim = ClusterSim::new(ClusterConfig::default(), gpt2_117m());
+        let p = BucketedPacing::new(Pacing::Constant { seqlen: 1024 }, vec![8, 1024]).unwrap();
+        let plan = plan_run(
+            &p,
+            &BszWarmup::constant(512),
+            Budget::Tokens(157_000_000_000),
+        )
+        .unwrap();
+        let hours = sim.plan_hours(&plan);
+        assert!(hours > 12.0 && hours < 110.0, "sim {hours:.0}h vs paper 37h");
+    }
+}

@@ -1,0 +1,3 @@
+//! Simulated-cluster performance model (time columns of Tables 2/4).
+
+pub mod cluster;

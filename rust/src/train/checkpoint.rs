@@ -1,0 +1,118 @@
+//! Binary checkpoints for the flat training state.
+//!
+//! Format (little-endian): magic "SLWCKPT1", n_params u64, step u64,
+//! tokens u64, then params/m/v as raw f32 arrays. The flat-vector state
+//! layout (model.py) makes this a straight dump — no pytree schema.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::TrainState;
+
+const MAGIC: &[u8; 8] = b"SLWCKPT1";
+
+pub fn save(state: &TrainState, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(state.n_params as u64).to_le_bytes())?;
+    f.write_all(&state.step.to_le_bytes())?;
+    f.write_all(&state.tokens.to_le_bytes())?;
+    for lit in [&state.params, &state.m, &state.v] {
+        let v = lit.to_vec::<f32>()?;
+        if v.len() != state.n_params {
+            bail!("state literal has {} elements, expected {}", v.len(), state.n_params);
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load(man: &Manifest, path: &Path) -> Result<TrainState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an SLW checkpoint: {path:?}");
+    }
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    if n != man.n_params {
+        bail!("checkpoint has {n} params, manifest expects {}", man.n_params);
+    }
+    f.read_exact(&mut u64buf)?;
+    let step = u64::from_le_bytes(u64buf);
+    f.read_exact(&mut u64buf)?;
+    let tokens = u64::from_le_bytes(u64buf);
+
+    let mut read_arr = || -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let params = read_arr()?;
+    let m = read_arr()?;
+    let v = read_arr()?;
+    Ok(TrainState {
+        params: Literal::vec1(&params),
+        m: Literal::vec1(&m),
+        v: Literal::vec1(&v),
+        decay_mask: Literal::vec1(&man.decay_mask()),
+        step,
+        tokens,
+        n_params: n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn roundtrip() {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        let mut state = TrainState::init(&man, 5);
+        state.step = 42;
+        state.tokens = 12345;
+        let dir = std::env::temp_dir().join("slw_ckpt_test");
+        let path = dir.join("a.ckpt");
+        save(&state, &path).unwrap();
+        let loaded = load(&man, &path).unwrap();
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.tokens, 12345);
+        assert_eq!(loaded.params_vec().unwrap(), state.params_vec().unwrap());
+        assert_eq!(loaded.m.to_vec::<f32>().unwrap(), state.m.to_vec::<f32>().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_mismatch() {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        let dir = std::env::temp_dir().join("slw_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&man, &path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Training loop, per-step instrumentation, and the low-cost tuner.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+pub mod tuner;
+
+pub use metrics::{RunHistory, StepRecord};
+pub use trainer::{RunResult, Trainer};

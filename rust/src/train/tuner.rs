@@ -1,0 +1,195 @@
+//! The paper's low-cost hyperparameter tuning strategy (§4).
+//!
+//! Tuning SLW's (seqlen_s, T) by full training runs is exactly the cost the
+//! method is supposed to avoid. The paper's recipe, implemented here:
+//!
+//! 1. start with seqlen_s = 8 and T = a few multiples of the LR warmup;
+//! 2. increase seqlen_s until validation perplexity no longer has
+//!    "significant fluctuation" at the very beginning;
+//! 3. **binary search** the largest T whose validation perplexity never
+//!    exceeds 1.3× the previous best during the first few multiples of the
+//!    LR warmup steps.
+//!
+//! Each probe runs only `probe_steps` steps, so the whole search costs a
+//! small fraction of one full run (reported in [`TuneReport::probe_tokens`]).
+
+use anyhow::Result;
+
+use crate::config::{presets, RunConfig};
+use crate::train::trainer::Trainer;
+
+/// The paper's fluctuation criterion: "whether the perplexity value becomes
+/// larger than 1.3x of the previous best perplexity".
+pub const FLUCTUATION_RATIO: f64 = 1.3;
+
+#[derive(Clone, Debug)]
+pub struct ProbeOutcome {
+    pub duration: usize,
+    pub start: usize,
+    pub stable: bool,
+    pub max_fluctuation: f64,
+    pub tokens_used: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub chosen_start: usize,
+    pub chosen_duration: usize,
+    pub probes: Vec<ProbeOutcome>,
+    /// total tokens spent probing (compare against cfg.token_budget)
+    pub probe_tokens: u64,
+}
+
+pub struct Tuner<'a> {
+    pub artifacts_root: &'a std::path::Path,
+    pub base: RunConfig,
+    /// steps per probe ("a few multiples of the LR warmup steps")
+    pub probe_steps: usize,
+    pub eval_every: usize,
+}
+
+impl<'a> Tuner<'a> {
+    pub fn new(artifacts_root: &'a std::path::Path, base: RunConfig, probe_steps: usize) -> Self {
+        let eval_every = (probe_steps / 10).max(1);
+        Self { artifacts_root, base, probe_steps, eval_every }
+    }
+
+    /// Max val-ppl fluctuation ratio over a probe's eval trace.
+    pub fn fluctuation(ppls: &[f64]) -> f64 {
+        let mut best = f64::INFINITY;
+        let mut worst = 1.0f64;
+        for &p in ppls {
+            if !p.is_finite() {
+                return f64::INFINITY;
+            }
+            if best.is_finite() {
+                worst = worst.max(p / best);
+            }
+            best = best.min(p);
+        }
+        worst
+    }
+
+    fn probe(&self, start: usize, duration: usize, steps: usize) -> Result<ProbeOutcome> {
+        let mut cfg = presets::with_slw(self.base.clone(), start, duration)?;
+        cfg.eval_every = (steps / 10).max(1);
+        cfg.name = format!("probe s{start} T{duration}");
+        let mut trainer = Trainer::new(self.artifacts_root, cfg)?;
+        let out = trainer.run_sync_steps(steps)?;
+        let ppls: Vec<f64> = out.history.evals.iter().map(|e| e.val_ppl).collect();
+        let fluct = Self::fluctuation(&ppls);
+        Ok(ProbeOutcome {
+            duration,
+            start,
+            stable: fluct <= FLUCTUATION_RATIO && !out.history.diverged(),
+            max_fluctuation: fluct,
+            tokens_used: out.history.total_tokens(),
+        })
+    }
+
+    /// Step 2: smallest seqlen_s with a stable very-beginning (short probes).
+    pub fn tune_start(
+        &self,
+        candidates: &[usize],
+        duration: usize,
+    ) -> Result<(usize, Vec<ProbeOutcome>)> {
+        let mut probes = Vec::new();
+        for &s in candidates {
+            let p = self.probe(s, duration, (self.probe_steps / 2).max(4))?;
+            let stable = p.stable;
+            probes.push(p);
+            if stable {
+                return Ok((s, probes));
+            }
+        }
+        Ok((*candidates.last().unwrap(), probes))
+    }
+
+    /// Step 3: binary search the largest stable duration among `candidates`
+    /// (sorted ascending).
+    pub fn tune_duration(
+        &self,
+        start: usize,
+        candidates: &[usize],
+    ) -> Result<(usize, Vec<ProbeOutcome>)> {
+        assert!(!candidates.is_empty());
+        let mut probes = Vec::new();
+        let mut lo = 0isize;
+        let mut hi = candidates.len() as isize - 1;
+        let mut best: Option<usize> = None;
+        while lo <= hi {
+            let mid = (lo + hi) / 2;
+            let p = self.probe(start, candidates[mid as usize], self.probe_steps)?;
+            let stable = p.stable;
+            probes.push(p);
+            if stable {
+                best = Some(candidates[mid as usize]);
+                lo = mid + 1; // longest stable duration wins
+            } else {
+                hi = mid - 1;
+            }
+        }
+        Ok((best.unwrap_or(candidates[0]), probes))
+    }
+
+    /// The full §4 recipe.
+    pub fn tune(
+        &self,
+        start_candidates: &[usize],
+        duration_candidates: &[usize],
+    ) -> Result<TuneReport> {
+        let (start, mut probes) = self.tune_start(start_candidates, duration_candidates[0])?;
+        let (duration, dprobes) = self.tune_duration(start, duration_candidates)?;
+        probes.extend(dprobes);
+        let probe_tokens = probes.iter().map(|p| p.tokens_used).sum();
+        Ok(TuneReport { chosen_start: start, chosen_duration: duration, probes, probe_tokens })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataRecipe;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn base() -> RunConfig {
+        let mut cfg = presets::base("micro").unwrap();
+        cfg.data = DataRecipe::Mixture { tokens: 40_000 };
+        cfg.eval_batches = 2;
+        cfg
+    }
+
+    #[test]
+    fn fluctuation_metric() {
+        assert!(Tuner::fluctuation(&[30.0, 25.0, 24.0]) <= 1.05);
+        let f = Tuner::fluctuation(&[30.0, 20.0, 29.0]);
+        assert!((f - 29.0 / 20.0).abs() < 1e-9);
+        assert!(Tuner::fluctuation(&[10.0, f64::NAN]).is_infinite());
+    }
+
+    #[test]
+    fn tune_duration_picks_a_stable_candidate() {
+        let r = root();
+        let tuner = Tuner::new(&r, base(), 16);
+        let (t, probes) = tuner.tune_duration(8, &[4, 8, 16]).unwrap();
+        assert!([4usize, 8, 16].contains(&t));
+        assert!(!probes.is_empty());
+        // probes cost a small fraction of the full budget
+        let spent: u64 = probes.iter().map(|p| p.tokens_used).sum();
+        assert!(spent < base().token_budget);
+    }
+
+    #[test]
+    fn full_recipe_runs() {
+        let r = root();
+        let tuner = Tuner::new(&r, base(), 12);
+        let report = tuner.tune(&[8, 16], &[4, 8]).unwrap();
+        assert!(report.chosen_start >= 8);
+        assert!(report.chosen_duration >= 4);
+        assert!(report.probe_tokens > 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`]
+//! closures; each case is warmed up, then timed over adaptive iterations,
+//! reporting mean / p50 / p95 and derived throughput. Output is both
+//! human-readable and machine-parseable (`bench:` prefixed TSV lines).
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub name: String,
+    min_time: Duration,
+    warmup: Duration,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Report {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            min_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(50),
+        }
+    }
+
+    pub fn with_budget(mut self, min_time_ms: u64, warmup_ms: u64) -> Self {
+        self.min_time = Duration::from_millis(min_time_ms);
+        self.warmup = Duration::from_millis(warmup_ms);
+        self
+    }
+
+    /// Time `f` adaptively; `work_units` lets the report derive throughput
+    /// (e.g. tokens per iteration).
+    pub fn case<F: FnMut()>(&self, case: &str, work_units: f64, mut f: F) -> Report {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.min_time || samples.len() < 5 {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let rep = Report {
+            iters: samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: samples[samples.len() / 2],
+            p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        };
+        let thr = if work_units > 0.0 && mean > 0.0 {
+            format!("  {:>12.0} units/s", work_units * 1e9 / mean)
+        } else {
+            String::new()
+        };
+        println!(
+            "bench:\t{}\t{}\titers={}\tmean={}\tp50={}\tp95={}{}",
+            self.name,
+            case,
+            rep.iters,
+            fmt_ns(rep.mean_ns),
+            fmt_ns(rep.p50_ns),
+            fmt_ns(rep.p95_ns),
+            thr
+        );
+        rep
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new("self").with_budget(20, 5);
+        let mut acc = 0u64;
+        let r = b.case("noop-ish", 1.0, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("us"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,159 @@
+//! Tiny argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `slw <subcommand> [positionals] [--key value | --flag]...`.
+//! Typed accessors consume recognized keys; `finish()` rejects leftovers so
+//! typos fail loudly instead of being silently ignored.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt_str(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.options.get(key).cloned()
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.opt_str(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_f64(&mut self, key: &str) -> Result<Option<f64>> {
+        match self.opt_str(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{key} expects a number, got '{v}'"),
+            },
+        }
+    }
+
+    pub fn f64_or(&mut self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.opt_f64(key)?.unwrap_or(default))
+    }
+
+    pub fn opt_usize(&mut self, key: &str) -> Result<Option<usize>> {
+        match self.opt_str(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{key} expects an integer, got '{v}'"),
+            },
+        }
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.opt_usize(key)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.opt_str(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{key} expects an integer, got '{v}'"),
+            },
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on unrecognized options/flags (call after all accessors).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.options.keys() {
+            if !self.consumed.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.consumed.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let mut a = args("train --steps 100 --lr 0.001 preset --quick");
+        assert_eq!(a.positionals, vec!["train", "preset"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("absent"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let mut a = args("--steps=42");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let mut a = args("--offset -3.5");
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = args("--bogus 1");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let mut a = args("--steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = args("");
+        assert_eq!(a.str_or("mode", "fast"), "fast");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-repo (the offline vendor set has no
+//! rand/serde/clap/criterion — see DESIGN.md §2 substitution table).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod tsv;

@@ -1,0 +1,192 @@
+//! Deterministic PCG64-based RNG.
+//!
+//! The offline vendor set has no `rand` crate, so the pipeline carries its
+//! own generator (PCG XSL-RR 128/64, O'Neill 2014). Every stochastic choice
+//! in the system — corpus generation, shuffling, parameter init, the 5-seed
+//! Table 5 sweep — flows through this type keyed by a single `u64` seed, so
+//! runs are exactly reproducible.
+
+const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+const INC: u128 = 0x5851f42d4c957f2d14057b7ef767814f;
+
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+}
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        // splitmix-style seeding into the 128-bit state
+        let mut s = Self { state: (seed as u128) ^ 0xcafef00dd15ea5e5 };
+        s.next_u64();
+        s.state = s.state.wrapping_add((seed as u128) << 64 | 0xda3e39cb94b95bdb);
+        s.next_u64();
+        s
+    }
+
+    /// Derive an independent stream (e.g. per worker shard).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(INC);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l >= n || l >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal via Box–Muller (one value per call; no caching keeps
+    /// the stream position deterministic and fork-safe).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn normal_f32(&mut self, std: f32) -> f32 {
+        (self.normal() as f32) * std
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut r = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Pcg64::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Pcg64::new(9);
+        let w = [1.0, 0.0, 9.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..5000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5);
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Pcg64::new(1);
+        let mut f1 = base.fork(1);
+        let mut f2 = base.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+}

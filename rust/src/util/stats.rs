@@ -1,0 +1,222 @@
+//! Small statistics toolkit: moments, percentiles, and the Pearson
+//! correlation (+ p-value) the paper's Table 3 reports.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Nearest-rank percentile over an unsorted slice. q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((q / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Pearson correlation coefficient between equal-length samples.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Two-sided p-value for the Pearson r under H0: r = 0, via the
+/// t-distribution with n-2 dof (regularized incomplete beta).
+pub fn pearson_p_value(r: f64, n: usize) -> f64 {
+    if n < 3 || !r.is_finite() {
+        return f64::NAN;
+    }
+    let df = (n - 2) as f64;
+    let r2 = (r * r).min(1.0 - 1e-15);
+    let t2 = r2 * df / (1.0 - r2);
+    // P(|T| > t) = I_{df/(df+t^2)}(df/2, 1/2)
+    incomplete_beta(df / 2.0, 0.5, df / (df + t2))
+}
+
+/// Regularized incomplete beta I_x(a, b) via the continued fraction
+/// (Numerical Recipes betacf form).
+pub fn incomplete_beta(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_beta = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b);
+    let front = (ln_beta + a * x.ln() + b * (1.0 - x).ln()).exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(a, b, x) / a
+    } else {
+        1.0 - front * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 1e-12;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Lanczos approximation of ln Γ(x).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 7] = [
+        1.000000000190015,
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = G[0];
+    for (j, g) in G.iter().enumerate().skip(1) {
+        ser += g / (y + j as f64);
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_noise() {
+        let mut r = crate::util::rng::Pcg64::new(0);
+        let xs: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let ys: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.06);
+    }
+
+    #[test]
+    fn p_value_strong_correlation_significant() {
+        // r = 0.26 with n = 30000 (paper Table 3 scale) → p ≈ 0
+        let p = pearson_p_value(0.26, 30_000);
+        assert!(p < 1e-10, "p = {p}");
+        // r = 0.05 with n = 20 → not significant
+        let p2 = pearson_p_value(0.05, 20);
+        assert!(p2 > 0.5, "p2 = {p2}");
+    }
+
+    #[test]
+    fn incomplete_beta_reference_values() {
+        // I_0.5(1,1) = 0.5 (uniform)
+        assert!((incomplete_beta(1.0, 1.0, 0.5) - 0.5).abs() < 1e-10);
+        // symmetric tails
+        let x = incomplete_beta(2.0, 3.0, 0.3);
+        let y = 1.0 - incomplete_beta(3.0, 2.0, 0.7);
+        assert!((x - y).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for n in 1..10u64 {
+            let fact: f64 = (1..n).map(|k| k as f64).product();
+            assert!((ln_gamma(n as f64) - fact.ln()).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! TSV emitter for experiment outputs (`results/*.tsv`) — one writer shared
+//! by every `exp::` module so the paper tables regenerate in a uniform,
+//! diff-friendly format.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub struct TsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TsvWriter {
+    pub fn new(columns: &[&str]) -> Self {
+        Self { header: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width != header width");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join("\t"));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-style markdown table (used for console output so
+    /// `slw exp <id>` prints rows shaped like the paper's tables).
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, " {:width$} |", c, width = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&self.header, &mut out);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_tsv()).with_context(|| format!("writing {path:?}"))
+    }
+}
+
+/// Format helpers used across experiment tables.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+pub fn xfactor(x: f64) -> String {
+    format!("{x:.1}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_roundtrip() {
+        let mut w = TsvWriter::new(&["case", "loss"]);
+        w.row(&["baseline".into(), f3(1.234)]);
+        w.row(&["slw".into(), f3(0.9)]);
+        let text = w.to_tsv();
+        assert_eq!(text, "case\tloss\nbaseline\t1.234\nslw\t0.900\n");
+        assert_eq!(w.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut w = TsvWriter::new(&["a", "b"]);
+        w.row(&["x".into()]);
+    }
+
+    #[test]
+    fn markdown_alignment() {
+        let mut w = TsvWriter::new(&["name", "v"]);
+        w.row(&["long-case-name".into(), "1".into()]);
+        let md = w.to_markdown();
+        assert!(md.starts_with("| name"));
+        assert!(md.contains("| long-case-name |"));
+        assert_eq!(md.lines().count(), 3);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.005), "1.00");
+        assert_eq!(pct(0.335), "33.50%");
+        assert_eq!(xfactor(2.25), "2.2x");
+    }
+}
