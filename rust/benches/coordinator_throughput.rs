@@ -1,0 +1,103 @@
+//! Coordinator throughput: a core-grid-shaped case set (baseline/SLW pairs
+//! across seeds, at the micro scale so the bench is self-contained) executed
+//! three ways — cold serial (`--jobs 1`), cold parallel (`--jobs 4`), and
+//! warm from the persistent run cache. Asserts that parallel scheduling
+//! reproduces the serial histories exactly, then emits
+//! `BENCH_coordinator.json` so the perf trajectory has machine-readable
+//! data.
+//!
+//! `SLW_BENCH_SMOKE=1` shrinks the grid for CI.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use slw::config::{presets, DataRecipe, RunConfig};
+use slw::coordinator::Coordinator;
+use slw::util::json;
+
+fn grid(n_cases: usize, budget_steps: usize) -> Vec<RunConfig> {
+    (0..n_cases)
+        .map(|i| {
+            let mut c = presets::base("micro").unwrap();
+            c.token_budget = (budget_steps * 4 * 32) as u64;
+            c.data = DataRecipe::Mixture { tokens: 40_000 };
+            c.seed = 1000 + i as u64;
+            c.eval_every = 0;
+            let c = if i % 2 == 1 {
+                presets::with_slw(c, 8, budget_steps / 2).unwrap()
+            } else {
+                c
+            };
+            c.with_name(&format!("bench_core_{i}"))
+        })
+        .collect()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("slw_bench_coord_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let smoke = std::env::var("SLW_BENCH_SMOKE").is_ok();
+    let (n_cases, steps) = if smoke { (4, 8) } else { (10, 30) };
+    let jobs = 4;
+    let cfgs = grid(n_cases, steps);
+
+    let d_serial = fresh_dir("serial");
+    let t0 = Instant::now();
+    let serial =
+        Coordinator::new(root.clone(), d_serial.clone(), 1, true).run_many(cfgs.clone())?;
+    let cold_serial_s = t0.elapsed().as_secs_f64();
+
+    let d_par = fresh_dir("parallel");
+    let par_coord = Coordinator::new(root.clone(), d_par.clone(), jobs, true);
+    let t0 = Instant::now();
+    let parallel = par_coord.run_many(cfgs.clone())?;
+    let cold_parallel_s = t0.elapsed().as_secs_f64();
+
+    // determinism gate: parallel scheduling must not change a single loss
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            s.history.losses(),
+            p.history.losses(),
+            "parallel run '{}' diverged from serial",
+            s.history.name
+        );
+    }
+
+    let t0 = Instant::now();
+    let warm = par_coord.run_many(cfgs)?;
+    let warm_cached_s = t0.elapsed().as_secs_f64();
+    assert!(warm.iter().all(|r| r.from_cache), "warm pass must be all cache hits");
+
+    let speedup_parallel = cold_serial_s / cold_parallel_s.max(1e-9);
+    let speedup_cached = cold_serial_s / warm_cached_s.max(1e-9);
+    println!(
+        "bench:\tcoordinator\tcases={n_cases}\tcold_j1={cold_serial_s:.2}s\t\
+         cold_j{jobs}={cold_parallel_s:.2}s\twarm={warm_cached_s:.3}s\t\
+         speedup_parallel={speedup_parallel:.2}x\tspeedup_cached={speedup_cached:.1}x"
+    );
+
+    let out = json::obj(vec![
+        ("bench", json::s("coordinator_throughput")),
+        ("cases", json::num(n_cases as f64)),
+        ("jobs_parallel", json::num(jobs as f64)),
+        ("cold_serial_s", json::num(cold_serial_s)),
+        ("cold_parallel_s", json::num(cold_parallel_s)),
+        ("warm_cached_s", json::num(warm_cached_s)),
+        ("speedup_parallel", json::num(speedup_parallel)),
+        ("speedup_cached", json::num(speedup_cached)),
+        ("deterministic", slw::util::json::Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_coordinator.json", out.to_string())?;
+    println!("wrote BENCH_coordinator.json");
+
+    for d in [d_serial, d_par] {
+        std::fs::remove_dir_all(&d).ok();
+    }
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Embeds the git revision as SLW_BUILD_REV so the coordinator's persistent
+//! run cache can fold the code version into its keys — a rebuilt binary must
+//! not serve result histories computed by older training code.
+
+use std::path::Path;
+
+fn main() {
+    let git_dir = Path::new("../.git");
+    // HEAD alone only changes on branch switch; a commit to the current
+    // branch moves the resolved ref file (or packed-refs), so watch those
+    // too — otherwise the embedded rev goes stale and the cache
+    // invalidation this exists for silently stops working
+    println!("cargo:rerun-if-changed={}", git_dir.join("HEAD").display());
+    println!("cargo:rerun-if-changed={}", git_dir.join("packed-refs").display());
+    if let Ok(head) = std::fs::read_to_string(git_dir.join("HEAD")) {
+        if let Some(r) = head.strip_prefix("ref: ") {
+            println!("cargo:rerun-if-changed={}", git_dir.join(r.trim()).display());
+        }
+    }
+    let rev = std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into());
+    println!("cargo:rustc-env=SLW_BUILD_REV={rev}");
+}

@@ -1,0 +1,424 @@
+//! Persistent run cache: completed runs keyed by a fingerprint of
+//! (RunConfig, artifact manifests, seed).
+//!
+//! Layout under the cache root (default `results/cache/`):
+//!
+//! ```text
+//! <name-slug>_<key>/entry.json   # history + metadata (util::json)
+//! <name-slug>_<key>/state.ckpt   # final TrainState (train::checkpoint)
+//! ```
+//!
+//! The key folds in the build's git revision (changed training code re-keys
+//! everything), the `Debug` rendering of the *full* RunConfig (any change —
+//! budget, LR, pacing, seed, data recipe — re-keys the run), plus the raw
+//! `manifest.json` text of every artifact set of the model family, so
+//! re-lowered artifacts invalidate cached histories. `entry.json` is
+//! written last: a partial entry (checkpoint without json) reads as a miss.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::runtime::manifest::{family_sets, Manifest};
+use crate::runtime::{StepStats, TrainState};
+use crate::train::checkpoint;
+use crate::train::metrics::{EvalRecord, RunHistory, StepRecord};
+use crate::util::json::{self, Json};
+
+/// FNV-1a 64-bit over bytes — stable across processes and platforms (std's
+/// SipHash is randomly keyed per process and unusable for a persistent key).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Concatenated raw `manifest.json` text of every artifact set of `model`'s
+/// family — the artifact half of the cache key.
+pub fn family_text(artifacts_root: &Path, model: &str) -> Result<String> {
+    let mut text = String::new();
+    for man in family_sets(artifacts_root, model)? {
+        let raw = std::fs::read_to_string(man.dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest for cache key in {:?}", man.dir))?;
+        text.push('|');
+        text.push_str(&raw);
+    }
+    Ok(text)
+}
+
+/// Key from an already-fetched family text (see [`family_text`]). Folds in
+/// the build's git revision (build.rs): a binary rebuilt from changed
+/// training code must not serve histories the old code computed.
+pub fn run_key_with(cfg: &RunConfig, family_text: &str) -> String {
+    let text = format!("{}|{cfg:?}|seed={}{family_text}", env!("SLW_BUILD_REV"), cfg.seed);
+    format!("{:016x}", fnv1a64(text.as_bytes()))
+}
+
+/// Cache key of a run: hash of (RunConfig, artifact manifests, seed).
+pub fn run_key(artifacts_root: &Path, cfg: &RunConfig) -> Result<String> {
+    Ok(run_key_with(cfg, &family_text(artifacts_root, &cfg.model)?))
+}
+
+/// A run loaded back from disk.
+pub struct CacheEntry {
+    pub history: RunHistory,
+    pub state: TrainState,
+    pub plan_steps: usize,
+}
+
+pub struct RunCache {
+    dir: PathBuf,
+    /// per-model family manifest text, fetched once per coordinator — a
+    /// batch keys dozens of runs against the same few families, and
+    /// re-scanning the artifact dir per key dominated `run_many` setup
+    family_memo: Mutex<BTreeMap<String, String>>,
+    /// per-(model, batch) state-layout manifest, same reasoning
+    manifest_memo: Mutex<BTreeMap<(String, usize), Manifest>>,
+}
+
+impl RunCache {
+    pub fn new(dir: PathBuf) -> Self {
+        Self {
+            dir,
+            family_memo: Mutex::new(BTreeMap::new()),
+            manifest_memo: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Memoized [`run_key`]: the family manifest text is read from disk at
+    /// most once per model per cache instance.
+    fn key_for(&self, artifacts_root: &Path, cfg: &RunConfig) -> Result<String> {
+        let mut memo = self.family_memo.lock().unwrap();
+        if !memo.contains_key(&cfg.model) {
+            memo.insert(cfg.model.clone(), family_text(artifacts_root, &cfg.model)?);
+        }
+        Ok(run_key_with(cfg, &memo[&cfg.model]))
+    }
+
+    /// Memoized [`manifest_for`].
+    pub fn manifest_for(&self, artifacts_root: &Path, cfg: &RunConfig) -> Result<Manifest> {
+        let key = (cfg.model.clone(), cfg.batch);
+        let mut memo = self.manifest_memo.lock().unwrap();
+        if !memo.contains_key(&key) {
+            memo.insert(key.clone(), manifest_for(artifacts_root, cfg)?);
+        }
+        Ok(memo[&key].clone())
+    }
+
+    fn entry_dir(&self, cfg: &RunConfig, key: &str) -> PathBuf {
+        self.dir.join(format!("{}_{key}", crate::util::slugify(&cfg.name)))
+    }
+
+    /// Fetch the cached run for `cfg`, or `None` on a miss. Corrupt or
+    /// stale entries are demoted to misses (with a warning), never errors —
+    /// the coordinator can always re-execute.
+    pub fn load(&self, artifacts_root: &Path, cfg: &RunConfig) -> Result<Option<CacheEntry>> {
+        let key = self.key_for(artifacts_root, cfg)?;
+        let dir = self.entry_dir(cfg, &key);
+        let entry_path = dir.join("entry.json");
+        if !entry_path.exists() {
+            return Ok(None);
+        }
+        match self.load_entry(artifacts_root, cfg, &key, &dir) {
+            Ok(entry) => Ok(Some(entry)),
+            Err(e) => {
+                crate::warn_!("run cache: discarding unreadable entry {dir:?}: {e:#}");
+                Ok(None)
+            }
+        }
+    }
+
+    fn load_entry(
+        &self,
+        artifacts_root: &Path,
+        cfg: &RunConfig,
+        key: &str,
+        dir: &Path,
+    ) -> Result<CacheEntry> {
+        let text = std::fs::read_to_string(dir.join("entry.json"))?;
+        let j = Json::parse(&text)?;
+        if j.get("key")?.str()? != key {
+            bail!("key mismatch (hash collision on the slug?)");
+        }
+        let history = history_from_json(&j, &cfg.name)?;
+        let man = self.manifest_for(artifacts_root, cfg)?;
+        let state = checkpoint::load(&man, &dir.join("state.ckpt"))?;
+        Ok(CacheEntry { history, state, plan_steps: j.get("plan_steps")?.usize()? })
+    }
+
+    /// Persist a completed run (overwrites any previous entry for the key).
+    pub fn store(
+        &self,
+        artifacts_root: &Path,
+        cfg: &RunConfig,
+        history: &RunHistory,
+        state: &TrainState,
+        plan_steps: usize,
+    ) -> Result<()> {
+        let key = self.key_for(artifacts_root, cfg)?;
+        let dir = self.entry_dir(cfg, &key);
+        std::fs::create_dir_all(&dir)?;
+        checkpoint::save(state, &dir.join("state.ckpt"))?;
+        let j = history_to_json(cfg, &key, history, plan_steps);
+        std::fs::write(dir.join("entry.json"), j.to_string())
+            .with_context(|| format!("writing cache entry in {dir:?}"))?;
+        Ok(())
+    }
+}
+
+/// The manifest backing `cfg`'s TrainState layout: the set matching the
+/// run's target batch, else the family's first set (all sets of a family
+/// share the model and flat-parameter layout).
+pub fn manifest_for(artifacts_root: &Path, cfg: &RunConfig) -> Result<Manifest> {
+    let mut sets = family_sets(artifacts_root, &cfg.model)?;
+    let at = sets.iter().position(|m| m.batch_size == cfg.batch).unwrap_or(0);
+    Ok(sets.swap_remove(at))
+}
+
+// ---------------------------------------------------------------------------
+// history <-> json (util::json has no NaN/Infinity — divergence histories
+// carry non-finite losses, encoded as the strings "nan"/"inf"/"-inf")
+// ---------------------------------------------------------------------------
+
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn jget(v: &Json) -> Result<f64> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => bail!("not a cached number: '{other}'"),
+        },
+        other => bail!("not a cached number: {other:?}"),
+    }
+}
+
+fn history_to_json(cfg: &RunConfig, key: &str, h: &RunHistory, plan_steps: usize) -> Json {
+    let steps = h
+        .steps
+        .iter()
+        .map(|r| {
+            Json::Arr(vec![
+                jnum(r.step as f64),
+                jnum(r.seqlen as f64),
+                jnum(r.bsz as f64),
+                jnum(r.lr),
+                jnum(r.tokens_after as f64),
+                jnum(r.stats.loss as f64),
+                jnum(r.stats.grad_l2 as f64),
+                jnum(r.stats.var_l1 as f64),
+                jnum(r.stats.var_max as f64),
+                jnum(r.stats.mom_l1 as f64),
+                jnum(r.stats.clip_coef as f64),
+                jnum(r.sim_seconds),
+            ])
+        })
+        .collect();
+    let evals = h
+        .evals
+        .iter()
+        .map(|e| {
+            Json::Arr(vec![
+                jnum(e.step as f64),
+                jnum(e.tokens_after as f64),
+                jnum(e.val_ppl),
+                jnum(e.sim_hours),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("key", json::s(key)),
+        ("name", json::s(&h.name)),
+        ("model", json::s(&cfg.model)),
+        ("config", json::s(&format!("{cfg:?}"))),
+        ("plan_steps", json::num(plan_steps as f64)),
+        ("steps", Json::Arr(steps)),
+        ("evals", Json::Arr(evals)),
+    ])
+}
+
+fn history_from_json(j: &Json, name: &str) -> Result<RunHistory> {
+    // replaying through `record` recomputes diverged_at exactly as the live
+    // trainer did (first step with non-finite stats)
+    let mut h = RunHistory::new(name);
+    for row in j.get("steps")?.arr()? {
+        let c = row.arr()?;
+        if c.len() != 12 {
+            bail!("step row has {} columns, expected 12", c.len());
+        }
+        h.record(StepRecord {
+            step: jget(&c[0])? as usize,
+            seqlen: jget(&c[1])? as usize,
+            bsz: jget(&c[2])? as usize,
+            lr: jget(&c[3])?,
+            tokens_after: jget(&c[4])? as u64,
+            stats: StepStats {
+                loss: jget(&c[5])? as f32,
+                grad_l2: jget(&c[6])? as f32,
+                var_l1: jget(&c[7])? as f32,
+                var_max: jget(&c[8])? as f32,
+                mom_l1: jget(&c[9])? as f32,
+                clip_coef: jget(&c[10])? as f32,
+            },
+            sim_seconds: jget(&c[11])?,
+        });
+    }
+    for row in j.get("evals")?.arr()? {
+        let c = row.arr()?;
+        if c.len() != 4 {
+            bail!("eval row has {} columns, expected 4", c.len());
+        }
+        h.evals.push(EvalRecord {
+            step: jget(&c[0])? as usize,
+            tokens_after: jget(&c[1])? as u64,
+            val_ppl: jget(&c[2])?,
+            sim_hours: jget(&c[3])?,
+        });
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("slw_cache_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn rec(step: usize, loss: f32) -> StepRecord {
+        StepRecord {
+            step,
+            seqlen: 32,
+            bsz: 4,
+            lr: 1.5e-3,
+            tokens_after: ((step + 1) * 128) as u64,
+            stats: StepStats {
+                loss,
+                grad_l2: 0.5,
+                var_l1: 10.0,
+                var_max: 0.125,
+                mom_l1: 2.0,
+                clip_coef: 1.0,
+            },
+            sim_seconds: 0.75,
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // published FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a64(b"run-a"), fnv1a64(b"run-b"));
+    }
+
+    #[test]
+    fn key_tracks_config_and_seed() {
+        let cfg = presets::base("micro").unwrap().with_name("k");
+        let k1 = run_key(&root(), &cfg).unwrap();
+        assert_eq!(k1, run_key(&root(), &cfg).unwrap(), "key must be deterministic");
+        let mut budget = cfg.clone();
+        budget.token_budget += 1;
+        assert_ne!(k1, run_key(&root(), &budget).unwrap());
+        let seeded = cfg.clone().with_seed(cfg.seed + 1);
+        assert_ne!(k1, run_key(&root(), &seeded).unwrap());
+    }
+
+    #[test]
+    fn nonfinite_numbers_roundtrip() {
+        for x in [1.5, 0.0, -3.25, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let enc = jnum(x).to_string();
+            let dec = jget(&Json::parse(&enc).unwrap()).unwrap();
+            if x.is_nan() {
+                assert!(dec.is_nan());
+            } else {
+                assert_eq!(dec, x);
+            }
+        }
+    }
+
+    #[test]
+    fn entry_roundtrip_preserves_history_and_state() {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        let cfg = presets::base("micro").unwrap().with_name("cache-rt");
+        let mut h = RunHistory::new("cache-rt");
+        for (i, l) in [5.5f32, 5.0, 4.4, f32::NAN, 4.1].iter().enumerate() {
+            h.record(rec(i, *l));
+        }
+        h.evals.push(EvalRecord { step: 2, tokens_after: 384, val_ppl: 88.25, sim_hours: 0.01 });
+        let state = TrainState::init(&man, 3);
+
+        let dir = temp_dir("rt");
+        let cache = RunCache::new(dir.clone());
+        assert!(cache.load(&root(), &cfg).unwrap().is_none(), "cold cache must miss");
+        cache.store(&root(), &cfg, &h, &state, 5).unwrap();
+
+        let e = cache.load(&root(), &cfg).unwrap().expect("warm cache must hit");
+        assert_eq!(e.plan_steps, 5);
+        assert_eq!(e.history.steps.len(), h.steps.len());
+        assert_eq!(e.history.diverged_at, Some(3));
+        assert_eq!(e.history.evals.len(), 1);
+        assert_eq!(e.history.evals[0].val_ppl, 88.25);
+        for (a, b) in e.history.steps.iter().zip(&h.steps) {
+            assert_eq!(a.seqlen, b.seqlen);
+            assert_eq!(a.lr, b.lr);
+            assert_eq!(a.tokens_after, b.tokens_after);
+            if b.stats.loss.is_nan() {
+                assert!(a.stats.loss.is_nan());
+            } else {
+                assert_eq!(a.stats.loss, b.stats.loss);
+            }
+            assert_eq!(a.sim_seconds, b.sim_seconds);
+        }
+        assert_eq!(e.state.params_vec().unwrap(), state.params_vec().unwrap());
+
+        // a different config must not see this entry
+        let mut other = cfg.clone();
+        other.token_budget *= 2;
+        assert!(cache.load(&root(), &other).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_entry_reads_as_miss() {
+        let cfg = presets::base("micro").unwrap().with_name("cache-bad");
+        let dir = temp_dir("bad");
+        let cache = RunCache::new(dir.clone());
+        let key = run_key(&root(), &cfg).unwrap();
+        let edir = dir.join(format!("{}_{key}", crate::util::slugify(&cfg.name)));
+        std::fs::create_dir_all(&edir).unwrap();
+        std::fs::write(edir.join("entry.json"), b"{ not json").unwrap();
+        assert!(cache.load(&root(), &cfg).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,1 +1,362 @@
-// paper's L3 coordination contribution
+//! The experiment coordinator — the paper's L3 coordination contribution as
+//! a real subsystem: a work-stealing scheduler that executes independent
+//! experiment runs on a pool of worker threads, plus a persistent run cache
+//! so `exp all` re-executes only cases whose configuration changed.
+//!
+//! Design:
+//! * **Per-worker engines.** Each worker thread owns its `PjRtClient`,
+//!   `Engine`, and `Trainer` instances — nothing XLA-side crosses threads.
+//!   A worker keeps one warm engine per model family, so compiled HLO
+//!   executables are reused across every run of that family it executes
+//!   (the serial path used to rebuild the engine and recompile per case).
+//! * **Model-grouped work stealing.** Jobs are grouped by model and the
+//!   groups are dealt round-robin across workers, so the `tiny` and
+//!   `small` grids proceed concurrently; idle workers steal from the back
+//!   of the most-loaded queue (`queue::StealQueues`).
+//! * **Cache as transport.** Workers send back plain host vectors
+//!   ([`PortableState`]) and the `RunHistory`; the main thread rebuilds
+//!   `TrainState` literals and persists both under `results/cache/`
+//!   (`cache::RunCache`). Runs are keyed by a hash of
+//!   (RunConfig, artifact manifests, seed).
+//! * **Determinism.** A run's result depends only on its config and seed —
+//!   data generation, init, and XLA CPU execution are all deterministic —
+//!   so parallel scheduling and cache hits produce byte-identical tables.
+
+pub mod cache;
+pub mod queue;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::config::RunConfig;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{Engine, TrainState};
+use crate::train::metrics::RunHistory;
+use crate::train::trainer::Trainer;
+
+use cache::RunCache;
+use queue::StealQueues;
+
+/// Thread-portable final training state: plain host vectors. xla `Literal`s
+/// wrap raw runtime handles and stay confined to the thread that made them;
+/// the main thread rebuilds literals from these vectors.
+pub struct PortableState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    pub tokens: u64,
+}
+
+impl PortableState {
+    pub fn from_state(state: &TrainState) -> Result<Self> {
+        Ok(Self {
+            params: state.params.to_vec::<f32>()?,
+            m: state.m.to_vec::<f32>()?,
+            v: state.v.to_vec::<f32>()?,
+            step: state.step,
+            tokens: state.tokens,
+        })
+    }
+
+    pub fn into_state(self, man: &Manifest) -> Result<TrainState> {
+        if self.params.len() != man.n_params {
+            bail!("portable state has {} params, manifest expects {}",
+                  self.params.len(), man.n_params);
+        }
+        let n_params = self.params.len();
+        Ok(TrainState {
+            params: Literal::vec1(&self.params),
+            m: Literal::vec1(&self.m),
+            v: Literal::vec1(&self.v),
+            decay_mask: Literal::vec1(&man.decay_mask()),
+            step: self.step,
+            tokens: self.tokens,
+            n_params,
+        })
+    }
+}
+
+/// One finished run, whether freshly executed or loaded from the cache.
+pub struct CompletedRun {
+    pub history: RunHistory,
+    pub state: TrainState,
+    pub plan_steps: usize,
+    pub from_cache: bool,
+}
+
+struct WorkerOut {
+    history: RunHistory,
+    state: PortableState,
+    plan_steps: usize,
+}
+
+type Job = (usize, RunConfig);
+type JobResult = (usize, RunConfig, Result<WorkerOut>);
+
+pub struct Coordinator {
+    artifacts_root: PathBuf,
+    cache: RunCache,
+    jobs: usize,
+    use_cache: bool,
+}
+
+impl Coordinator {
+    /// `jobs` is the worker-pool width; `use_cache = false` bypasses cache
+    /// reads (every run re-executes) but fresh results still refresh the
+    /// cache on disk.
+    pub fn new(artifacts_root: PathBuf, cache_dir: PathBuf, jobs: usize, use_cache: bool) -> Self {
+        Self { artifacts_root, cache: RunCache::new(cache_dir), jobs: jobs.max(1), use_cache }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    pub fn run_one(&self, cfg: RunConfig) -> Result<CompletedRun> {
+        let mut out = self.run_many(vec![cfg])?;
+        Ok(out.pop().expect("run_many returns one result per config"))
+    }
+
+    /// Execute a batch of run configs, returning results in input order.
+    /// Cached runs are served from disk; the rest are scheduled across the
+    /// worker pool.
+    pub fn run_many(&self, cfgs: Vec<RunConfig>) -> Result<Vec<CompletedRun>> {
+        let total = cfgs.len();
+        let mut out: Vec<Option<CompletedRun>> = Vec::with_capacity(total);
+        let mut misses: Vec<Job> = Vec::new();
+        for (i, cfg) in cfgs.into_iter().enumerate() {
+            if self.use_cache {
+                if let Some(e) = self.cache.load(&self.artifacts_root, &cfg)? {
+                    crate::debug!("coordinator: cache hit for '{}'", cfg.name);
+                    out.push(Some(CompletedRun {
+                        history: e.history,
+                        state: e.state,
+                        plan_steps: e.plan_steps,
+                        from_cache: true,
+                    }));
+                    continue;
+                }
+            }
+            out.push(None);
+            misses.push((i, cfg));
+        }
+        let n_hits = total - misses.len();
+        if !misses.is_empty() {
+            let n_workers = self.jobs.min(misses.len());
+            crate::info!(
+                "coordinator: {n_hits}/{total} cached, executing {} run(s) on {n_workers} worker(s)",
+                misses.len()
+            );
+            // results are persisted as they arrive off the channel, so an
+            // interrupt mid-batch keeps every already-finished run, and a
+            // failed case doesn't throw away its siblings' work — the retry
+            // after a config fix is all cache hits. Errors don't abort the
+            // drain; the earliest-indexed one is surfaced at the end
+            // (deterministic regardless of worker completion order).
+            let n_jobs = misses.len();
+            let (rx, handles) = self.spawn_workers(misses, n_workers);
+            let mut n_done = 0usize;
+            let mut first_err: Option<(usize, anyhow::Error)> = None;
+            for (i, cfg, result) in rx.iter() {
+                n_done += 1;
+                let stored = result
+                    .with_context(|| format!("run '{}' failed", cfg.name))
+                    .and_then(|wo| {
+                        let man = self.cache.manifest_for(&self.artifacts_root, &cfg)?;
+                        let state = wo.state.into_state(&man)?;
+                        self.cache
+                            .store(&self.artifacts_root, &cfg, &wo.history, &state, wo.plan_steps)?;
+                        Ok(CompletedRun {
+                            history: wo.history,
+                            state,
+                            plan_steps: wo.plan_steps,
+                            from_cache: false,
+                        })
+                    });
+                match stored {
+                    Ok(run) => out[i] = Some(run),
+                    Err(e) => {
+                        if first_err.as_ref().map_or(true, |(j, _)| i < *j) {
+                            first_err = Some((i, e));
+                        }
+                    }
+                }
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+            if let Some((_, e)) = first_err {
+                return Err(e);
+            }
+            if n_done != n_jobs {
+                bail!("coordinator lost {} run(s) (worker panic?)", n_jobs - n_done);
+            }
+        } else if n_hits > 0 {
+            crate::info!("coordinator: {n_hits}/{total} run(s) served from cache");
+        }
+        Ok(out.into_iter().map(|r| r.expect("every slot filled")).collect())
+    }
+
+    /// Deal jobs into per-worker queues (grouped by model so each family's
+    /// runs share a worker's warm engine, and distinct families run
+    /// concurrently) and start the pool. The caller drains the returned
+    /// receiver (it yields one [`JobResult`] per job, in completion order)
+    /// and joins the handles.
+    fn spawn_workers(
+        &self,
+        jobs: Vec<Job>,
+        n_workers: usize,
+    ) -> (Receiver<JobResult>, Vec<JoinHandle<()>>) {
+        let queues = Arc::new(StealQueues::new(n_workers));
+        let mut groups: BTreeMap<String, Vec<Job>> = BTreeMap::new();
+        for job in jobs {
+            groups.entry(job.1.model.clone()).or_default().push(job);
+        }
+        for (g, (_, group)) in groups.into_iter().enumerate() {
+            for job in group {
+                queues.push(g % n_workers, job);
+            }
+        }
+
+        let (tx, rx) = channel::<JobResult>();
+        let mut handles = Vec::new();
+        for w in 0..n_workers {
+            let queues = queues.clone();
+            let tx = tx.clone();
+            let root = self.artifacts_root.clone();
+            handles.push(std::thread::spawn(move || worker_loop(w, root, queues, tx)));
+        }
+        (rx, handles)
+    }
+}
+
+fn worker_loop(
+    w: usize,
+    artifacts_root: PathBuf,
+    queues: Arc<StealQueues<Job>>,
+    tx: Sender<JobResult>,
+) {
+    // one warm engine per model family, reused across this worker's runs
+    let mut engines: BTreeMap<String, Engine> = BTreeMap::new();
+    while let Some((idx, cfg)) = queues.take(w) {
+        crate::info!("coordinator[w{w}]: running '{}'", cfg.name);
+        let model = cfg.model.clone();
+        let engine = match engines.remove(&model) {
+            Some(e) => Ok(e),
+            None => Engine::load(&artifacts_root, &model),
+        };
+        // keep the warm engine whether the run succeeds, construction fails,
+        // or training fails: one bad config must not cost the family's
+        // compiled executables
+        let result = engine.and_then(|engine| {
+            match Trainer::with_engine_recoverable(engine, cfg.clone()) {
+                Err((engine, e)) => {
+                    engines.insert(model.clone(), engine);
+                    Err(e)
+                }
+                Ok(mut trainer) => {
+                    let run = trainer.run().and_then(|out| {
+                        let state = PortableState::from_state(&out.state)?;
+                        Ok(WorkerOut { history: out.history, state, plan_steps: out.plan_steps })
+                    });
+                    engines.insert(model.clone(), trainer.into_engine());
+                    run
+                }
+            }
+        });
+        if tx.send((idx, cfg, result)).is_err() {
+            return; // coordinator dropped the receiver
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, DataRecipe};
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn temp_cache(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("slw_coord_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn micro_cfg(name: &str, seed: u64) -> RunConfig {
+        let mut cfg = presets::base("micro").unwrap();
+        cfg.token_budget = 4 * 32 * 10;
+        cfg.data = DataRecipe::Mixture { tokens: 30_000 };
+        cfg.eval_every = 0;
+        cfg.seed = seed;
+        cfg.with_name(name)
+    }
+
+    #[test]
+    fn cache_hit_skips_reexecution_and_no_cache_forces_it() {
+        let dir = temp_cache("hit");
+        let coord = Coordinator::new(root(), dir.clone(), 1, true);
+        let first = coord.run_one(micro_cfg("coord-a", 5)).unwrap();
+        assert!(!first.from_cache, "cold cache must execute");
+        assert!(!first.history.steps.is_empty());
+
+        let second = coord.run_one(micro_cfg("coord-a", 5)).unwrap();
+        assert!(second.from_cache, "identical config must hit the cache");
+        assert_eq!(first.history.losses(), second.history.losses());
+        assert_eq!(
+            first.state.params_vec().unwrap(),
+            second.state.params_vec().unwrap()
+        );
+
+        // any config change re-keys the run
+        let reseeded = coord.run_one(micro_cfg("coord-a", 6)).unwrap();
+        assert!(!reseeded.from_cache);
+
+        // --no-cache bypasses the warm cache and re-executes
+        let no_cache = Coordinator::new(root(), dir.clone(), 1, false);
+        let forced = no_cache.run_one(micro_cfg("coord-a", 5)).unwrap();
+        assert!(!forced.from_cache);
+        assert_eq!(first.history.losses(), forced.history.losses());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_scheduling_matches_serial_results() {
+        let cfgs: Vec<RunConfig> =
+            (0..4).map(|i| micro_cfg(&format!("coord-p{i}"), 100 + i as u64)).collect();
+        let d1 = temp_cache("ser");
+        let d2 = temp_cache("par");
+        let serial = Coordinator::new(root(), d1.clone(), 1, false)
+            .run_many(cfgs.clone())
+            .unwrap();
+        let parallel = Coordinator::new(root(), d2.clone(), 4, false).run_many(cfgs).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.history.name, p.history.name, "order must be preserved");
+            assert_eq!(s.history.losses(), p.history.losses());
+            assert_eq!(s.plan_steps, p.plan_steps);
+        }
+        for d in [d1, d2] {
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+
+    #[test]
+    fn missing_artifacts_are_a_clean_error() {
+        let dir = temp_cache("err");
+        // a root with no index.json: the run must fail, not hang the pool
+        let empty = std::env::temp_dir().join("slw_no_artifacts_here");
+        let bad = Coordinator::new(empty, dir.clone(), 2, false);
+        assert!(bad.run_one(micro_cfg("coord-bad", 0)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,119 @@
+//! Work-stealing job queues for the coordinator's worker pool.
+//!
+//! Jobs are dealt into per-worker deques up front — grouped so every run of
+//! one model family lands on the same worker, which then reuses that
+//! worker's warm `Engine` (compiled HLO executables) across the whole group
+//! — and an idle worker steals from the *back* of the most-loaded other
+//! queue, so stolen work is the work its owner would reach last. Nothing is
+//! enqueued after the workers start, which keeps termination trivial: a
+//! worker may exit once every queue scans empty.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+pub struct StealQueues<T> {
+    queues: Vec<Mutex<VecDeque<T>>>,
+}
+
+impl<T> StealQueues<T> {
+    pub fn new(n_workers: usize) -> Self {
+        Self { queues: (0..n_workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect() }
+    }
+
+    pub fn n_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Seed worker `w`'s local queue (call before the workers start).
+    pub fn push(&self, w: usize, job: T) {
+        self.queues[w].lock().unwrap().push_back(job);
+    }
+
+    /// Next job for worker `me`: own queue front first, then steal from the
+    /// back of the longest other queue. Returns `None` only once every
+    /// queue is empty — correct here because queues only ever shrink after
+    /// startup.
+    pub fn take(&self, me: usize) -> Option<T> {
+        if let Some(job) = self.queues[me].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        loop {
+            let mut victim: Option<(usize, usize)> = None;
+            for (i, q) in self.queues.iter().enumerate() {
+                if i == me {
+                    continue;
+                }
+                let len = q.lock().unwrap().len();
+                if len > 0 && victim.map(|(_, best)| len > best).unwrap_or(true) {
+                    victim = Some((i, len));
+                }
+            }
+            let (v, _) = victim?;
+            if let Some(job) = self.queues[v].lock().unwrap().pop_back() {
+                return Some(job);
+            }
+            // the victim drained between the scan and the steal — rescan
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn local_order_is_fifo() {
+        let q = StealQueues::new(1);
+        for i in 0..5 {
+            q.push(0, i);
+        }
+        let drained: Vec<i32> = std::iter::from_fn(|| q.take(0)).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn idle_worker_steals_from_the_back() {
+        let q = StealQueues::new(2);
+        for i in 0..10 {
+            q.push(0, i);
+        }
+        // worker 1 has nothing local: it must steal worker 0's *last* job
+        assert_eq!(q.take(1), Some(9));
+        // worker 0 still pops its own front
+        assert_eq!(q.take(0), Some(0));
+    }
+
+    #[test]
+    fn every_job_is_consumed_exactly_once_under_contention() {
+        let q = Arc::new(StealQueues::new(3));
+        // deliberately imbalanced: everything on queue 0
+        for i in 0..200 {
+            q.push(0, i);
+        }
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for w in 0..3 {
+            let q = q.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(job) = q.take(w) {
+                    seen.lock().unwrap().push(job);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = seen.lock().unwrap().clone();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_queues_return_none() {
+        let q: StealQueues<u32> = StealQueues::new(2);
+        assert_eq!(q.take(0), None);
+        assert_eq!(q.take(1), None);
+    }
+}

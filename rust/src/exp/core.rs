@@ -120,12 +120,16 @@ pub fn case_config(ctx: &ExpCtx, id: &str) -> Result<RunConfig> {
     Ok(cfg.with_name(id))
 }
 
+/// Execute the whole core grid through the coordinator: the ten cases are
+/// independent, so they run in parallel across `--jobs` workers (tiny and
+/// small families concurrently) with completed runs served from the
+/// persistent cache.
 fn ensure_all(ctx: &mut ExpCtx) -> Result<()> {
-    for case in CASES {
-        let cfg = case_config(ctx, case.id)?;
-        ctx.run(cfg)?;
-    }
-    Ok(())
+    let cfgs = CASES
+        .iter()
+        .map(|case| case_config(ctx, case.id))
+        .collect::<Result<Vec<_>>>()?;
+    ctx.run_all(cfgs)
 }
 
 // ---------------------------------------------------------------------------
@@ -140,13 +144,28 @@ pub fn fig1(ctx: &mut ExpCtx) -> Result<()> {
     ]);
     for case in CASES.iter().filter(|c| c.id.ends_with("_base")) {
         let run = &ctx.run(case_config(ctx, case.id)?)?.history;
+        // a run that diverged before recording a single step still gets a
+        // row — dashes, not a panic
+        let Some(last) = run.steps.last() else {
+            w.row(&[
+                case.label.into(),
+                case.params.into(),
+                "0".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        };
         let (spikes, max_ratio) = run.instability(SPIKE_THRESHOLD);
-        let last = run.steps.last().unwrap();
         w.row(&[
             case.label.into(),
             case.params.into(),
             run.steps.len().to_string(),
-            f3(*run.losses().last().unwrap()),
+            f3(last.stats.loss as f64),
             spikes.to_string(),
             f3(max_ratio),
             f2(last.stats.var_l1 as f64),

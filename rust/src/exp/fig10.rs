@@ -35,6 +35,7 @@ pub fn run(ctx: &mut ExpCtx) -> Result<()> {
         mk("fig10_base_clip0.25", 0.25, false)?,
         mk("fig10_slw_clip1.0", 1.0, true)?,
     ];
+    ctx.run_all(cases.clone())?;
 
     let mut w = TsvWriter::new(&[
         "case", "spikes>1.1", "max_ratio", "clip_engaged(%)", "mom_l1_final", "var_l1_final",

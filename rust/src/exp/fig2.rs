@@ -33,6 +33,7 @@ pub fn run(ctx: &mut ExpCtx) -> Result<()> {
         mk("fig2_const8", Pacing::Constant { seqlen: 8 })?,
         mk("fig2_mixed", Pacing::Mixed { short: 8, end: 64, short_steps: 9, long_steps: 1 })?,
     ];
+    ctx.run_all(configs.clone())?;
 
     let mut w = TsvWriter::new(&[
         "setting", "steps", "spikes>1.1", "spikes_at_long", "spikes_at_short", "max_ratio",

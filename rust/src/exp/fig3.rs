@@ -27,12 +27,15 @@ pub fn run(ctx: &mut ExpCtx) -> Result<()> {
     let mut base = presets::base("tiny")?;
     base.token_budget = budget;
     base.eval_every = 25;
+    let cfgs: Vec<crate::config::RunConfig> =
+        std::iter::once(base.clone().with_name("fig3_baseline"))
+            .chain(DURATIONS.iter().map(|&t| {
+                presets::with_slw(base.clone(), 8, t).unwrap().with_name(&format!("fig3_slw{t}"))
+            }))
+            .collect();
+    ctx.run_all(cfgs.clone())?;
     let mut grid: Vec<(String, f64)> = Vec::new();
-    for cfg in std::iter::once(base.clone().with_name("fig3_baseline")).chain(
-        DURATIONS.iter().map(|&t| {
-            presets::with_slw(base.clone(), 8, t).unwrap().with_name(&format!("fig3_slw{t}"))
-        }),
-    ) {
+    for cfg in cfgs {
         let run = &ctx.run(cfg)?.history;
         let ppls: Vec<f64> = run.evals.iter().map(|e| e.val_ppl).collect();
         // the §4 criterion applied to the first quarter of the evals

@@ -30,14 +30,17 @@ pub fn run(ctx: &mut ExpCtx) -> Result<()> {
     slw_step.lr.horizon = Horizon::Steps { warmup: base_steps / 50, total: base_steps + 100 };
     let slw_step = slw_step.with_name("fig8_slw_stepwise");
 
-    let mut w = TsvWriter::new(&[
-        "case", "lr_decay", "steps", "final_lr", "best_val_ppl", "final_val_ppl",
-    ]);
-    for (cfg, decay) in [
+    let cases = [
         (baseline, "token-wise"),
         (slw_token, "token-wise"),
         (slw_step, "step-wise (+T/2 steps)"),
-    ] {
+    ];
+    ctx.run_all(cases.iter().map(|(cfg, _)| cfg.clone()).collect())?;
+
+    let mut w = TsvWriter::new(&[
+        "case", "lr_decay", "steps", "final_lr", "best_val_ppl", "final_val_ppl",
+    ]);
+    for (cfg, decay) in cases {
         let run = &ctx.run(cfg)?.history;
         w.row(&[
             run.name.clone(),

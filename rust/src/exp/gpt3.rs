@@ -76,6 +76,7 @@ pub fn fig5_6(ctx: &mut ExpCtx) -> Result<()> {
         low_data_cfg(ctx, LR_MULT_DEGRADED, false)?, // baseline 30x-analog: degraded
         low_data_cfg(ctx, LR_MULT_FAIL, true)?,      // SLW 40x-analog: stable
     ];
+    ctx.run_all(runs.clone())?;
     let mut w = TsvWriter::new(&[
         "case", "steps", "final_loss", "min_loss", "failed", "spikes>1.1", "var_max_peak",
         "trace",
@@ -106,6 +107,7 @@ pub fn table4(ctx: &mut ExpCtx) -> Result<()> {
         ("3: Baseline lowLR (30x-analog)", low_data_cfg(ctx, LR_MULT_DEGRADED, false)?),
         ("4: SLW highLR (40x-analog)", low_data_cfg(ctx, LR_MULT_FAIL, true)?),
     ];
+    ctx.run_all(cases.iter().map(|(_, cfg)| cfg.clone()).collect())?;
     let mut engine = Engine::load(&ctx.root, "gpt3")?;
 
     // per-task scores → table7; averages → table4

@@ -5,7 +5,11 @@
 //! `results/<id>.tsv` (+ per-run step traces under `results/runs/`).
 //! Runs are cached in-process by config name, so `slw exp all` executes
 //! each training configuration exactly once even though several tables
-//! consume the same runs.
+//! consume the same runs. Execution goes through the
+//! [`crate::coordinator`]: independent cases run in parallel on `--jobs N`
+//! workers, and completed runs persist under `results/cache/` keyed by
+//! (config, artifact manifests, seed) — a re-invocation only re-executes
+//! cases whose configuration changed (`--no-cache` forces re-execution).
 //!
 //! Scaling note (EXPERIMENTS.md): thresholds and LR multipliers are
 //! calibrated for the testbed — the paper's *shape* (who is stable, who
@@ -21,15 +25,15 @@ pub mod gpt3;
 pub mod table5;
 pub mod table8_9;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
 use crate::config::RunConfig;
+use crate::coordinator::Coordinator;
 use crate::runtime::TrainState;
 use crate::train::metrics::RunHistory;
-use crate::train::trainer::Trainer;
 use crate::util::cli::Args;
 use crate::util::tsv::TsvWriter;
 
@@ -48,12 +52,32 @@ pub struct ExpCtx {
     pub out_dir: PathBuf,
     /// token-budget scale factor (1.0 = standard, --quick = 0.5, --full = 3.0)
     pub scale: f64,
+    coord: Coordinator,
     cache: BTreeMap<String, CachedRun>,
+}
+
+/// Default worker-pool width for `exp`: the machine's parallelism, capped —
+/// experiment runs are memory-hungry (per-worker engine + corpus).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
 }
 
 impl ExpCtx {
     pub fn new(root: PathBuf, out_dir: PathBuf, scale: f64) -> Self {
-        Self { root, out_dir, scale, cache: BTreeMap::new() }
+        Self::configured(root, out_dir, scale, default_jobs(), true)
+    }
+
+    /// Full constructor: `jobs` workers, `use_cache = false` to force
+    /// re-execution (the `--no-cache` flag).
+    pub fn configured(
+        root: PathBuf,
+        out_dir: PathBuf,
+        scale: f64,
+        jobs: usize,
+        use_cache: bool,
+    ) -> Self {
+        let coord = Coordinator::new(root.clone(), out_dir.join("cache"), jobs, use_cache);
+        Self { root, out_dir, scale, coord, cache: BTreeMap::new() }
     }
 
     pub fn budget(&self, tokens: u64) -> u64 {
@@ -61,17 +85,42 @@ impl ExpCtx {
     }
 
     /// Run (or fetch) a training config; the step trace lands in
-    /// `results/runs/<name>.tsv`.
+    /// `results/runs/<name>.tsv`. Single-config entry point — batches of
+    /// independent runs should go through [`ExpCtx::run_all`] so the
+    /// coordinator can parallelize them.
     pub fn run(&mut self, cfg: RunConfig) -> Result<&CachedRun> {
         let key = cfg.name.clone();
         if !self.cache.contains_key(&key) {
-            crate::info!("exp run: {key}");
-            let mut trainer = Trainer::new(&self.root, cfg)?;
-            let out = trainer.run()?;
-            self.save_trace(&out.history)?;
-            self.cache.insert(key.clone(), CachedRun { history: out.history, state: out.state });
+            self.run_all(vec![cfg])?;
         }
         Ok(&self.cache[&key])
+    }
+
+    /// Execute a batch of configs through the coordinator (work-stealing
+    /// worker pool + persistent run cache); results are memoized in-process
+    /// by run name, so follow-up `run()` calls are free.
+    pub fn run_all(&mut self, cfgs: Vec<RunConfig>) -> Result<()> {
+        let mut queued = BTreeSet::new();
+        let todo: Vec<RunConfig> = cfgs
+            .into_iter()
+            .filter(|c| !self.cache.contains_key(&c.name) && queued.insert(c.name.clone()))
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        for cfg in &todo {
+            // "want", not "run": the coordinator decides per config whether
+            // this executes or comes from the persistent cache (it logs the
+            // accurate hit/miss split itself)
+            crate::debug!("exp want: {}", cfg.name);
+        }
+        let done = self.coord.run_many(todo.clone())?;
+        for (cfg, run) in todo.iter().zip(done) {
+            self.save_trace(&run.history)?;
+            self.cache
+                .insert(cfg.name.clone(), CachedRun { history: run.history, state: run.state });
+        }
+        Ok(())
     }
 
     /// Immutable access to an already-executed run (panics if missing —
@@ -131,9 +180,7 @@ impl ExpCtx {
     }
 }
 
-pub fn slugify(name: &str) -> String {
-    name.chars().map(|c| if c.is_alphanumeric() || c == '.' { c } else { '_' }).collect()
-}
+pub use crate::util::slugify;
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5_6", "table4",
@@ -151,8 +198,13 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
     } else {
         args.f64_or("scale", 1.0)?
     };
+    let jobs = args.usize_or("jobs", default_jobs())?;
+    let no_cache = args.flag("no-cache");
     args.finish()?;
-    let mut ctx = ExpCtx::new(root, out_dir, scale);
+    if jobs == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    let mut ctx = ExpCtx::configured(root, out_dir, scale, jobs, !no_cache);
 
     fn run_one(ctx: &mut ExpCtx, id: &str) -> Result<()> {
         match id {
@@ -185,7 +237,10 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
         }
         "list" => {
             println!("experiments: {}", ALL_IDS.join(", "));
-            println!("usage: slw exp <id|all> [--quick|--full|--scale X] [--out results/]");
+            println!(
+                "usage: slw exp <id|all> [--quick|--full|--scale X] [--jobs N] \
+                 [--no-cache] [--out results/]"
+            );
             Ok(())
         }
         other => run_one(&mut ctx, other),

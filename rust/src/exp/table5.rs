@@ -18,8 +18,35 @@ use super::{ExpCtx, SPIKE_THRESHOLD};
 const LR_MULTS: [f64; 4] = [1.0, 4.0, 16.0, 32.0];
 const SEEDS: [u64; 3] = [1234, 1235, 1236];
 
+fn sweep_config(budget: u64, seed: u64, mult: f64, slw: bool) -> Result<crate::config::RunConfig> {
+    let mut c = presets::base("small")?;
+    c.batch = 16;
+    c.lr.peak = presets::base_lr("small") * mult;
+    c.lr.min_lr = c.lr.peak / 15.0;
+    c.token_budget = budget;
+    c.seed = seed;
+    if slw {
+        c = presets::with_slw(c, 16, 20)?;
+    }
+    let tag = if slw { "slw" } else { "base" };
+    Ok(c.with_name(&format!("t5_{tag}_lr{mult}x_s{seed}")))
+}
+
 pub fn run(ctx: &mut ExpCtx) -> Result<()> {
     let budget = ctx.budget(40_000); // ≈40 steps at bsz16·seq64
+
+    // the full 3 seeds × 4 LRs × {base, slw} sweep is 24 independent runs —
+    // exactly the shape the coordinator parallelizes
+    let mut cfgs = Vec::new();
+    for &seed in &SEEDS {
+        for &mult in &LR_MULTS {
+            for slw in [false, true] {
+                cfgs.push(sweep_config(budget, seed, mult, slw)?);
+            }
+        }
+    }
+    ctx.run_all(cfgs)?;
+
     let mut w = TsvWriter::new(&[
         "seed", "lr=1x", "lr=4x", "lr=16x", "lr=32x",
     ]);
@@ -29,17 +56,7 @@ pub fn run(ctx: &mut ExpCtx) -> Result<()> {
         for (i, &mult) in LR_MULTS.iter().enumerate() {
             let mut spikes = [0usize; 2];
             for (j, slw) in [false, true].iter().enumerate() {
-                let mut c = presets::base("small")?;
-                c.batch = 16;
-                c.lr.peak = presets::base_lr("small") * mult;
-                c.lr.min_lr = c.lr.peak / 15.0;
-                c.token_budget = budget;
-                c.seed = seed;
-                if *slw {
-                    c = presets::with_slw(c, 16, 20)?;
-                }
-                let tag = if *slw { "slw" } else { "base" };
-                let cfg = c.with_name(&format!("t5_{tag}_lr{mult}x_s{seed}"));
+                let cfg = sweep_config(budget, seed, mult, *slw)?;
                 let run = &ctx.run(cfg)?.history;
                 let (s, _) = run.instability(SPIKE_THRESHOLD);
                 spikes[j] = s;

@@ -21,8 +21,11 @@ use super::core::case_config;
 use super::ExpCtx;
 
 pub fn run(ctx: &mut ExpCtx) -> Result<()> {
-    let mut engine = Engine::load(&ctx.root, "small")?;
     let cases = [("Baseline (BszWarmup)", "small_b64_bw"), ("SLW 8x bsz", "small_b64_slw")];
+    ctx.run_all(
+        cases.iter().map(|(_, id)| case_config(ctx, id)).collect::<Result<Vec<_>>>()?,
+    )?;
+    let mut engine = Engine::load(&ctx.root, "small")?;
 
     let mut table: Vec<(String, Vec<probes::ProbeScore>, f64, Vec<probes::ProbeScore>, f64)> =
         Vec::new();

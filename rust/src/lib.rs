@@ -17,6 +17,7 @@
 //! executes via the PJRT CPU client (`xla` crate).
 
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod exp;

@@ -251,7 +251,8 @@ fn print_help() {
            probes  --model tiny [--ckpt file] [--shots K] [--batches N]\n\
            data    --kind mixture|markov|induction --tokens N --out file\n\
            exp     <fig1|table1|table2|table3|fig2|fig3|fig4|fig5_6|table4|table5|\n\
-                    fig8|fig10|table8_9|all> [--quick] [--out results/]\n\
+                    fig8|fig10|table8_9|all> [--quick] [--jobs N] [--no-cache]\n\
+                    [--out results/]\n\
            info    list artifact sets\n\
          \n\
          Run `make artifacts` first. SLW_LOG=debug for verbose logs."

@@ -5,12 +5,18 @@
 //! Executables are compiled lazily per (batch, seqlen) on first use and
 //! cached for the life of the engine — an SLW run touches each bucket once
 //! and then stays on it, so warm-path cost is a single BTreeMap lookup.
+//!
+//! Host-transfer discipline: a step performs exactly two host↔device
+//! crossings — the token batch is materialized as one shaped literal (no
+//! intermediate `vec1` + `reshape` copies), and the result tuple comes back
+//! in one readback that every stat scalar is then read from. The
+//! `n_host_transfers` counter asserts this in tests, next to `n_compiles`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::manifest::{family_sets, Manifest};
 
@@ -93,12 +99,20 @@ pub struct Engine {
     eval: LazyExe,
     eval_batch: usize,
     compiles: std::cell::Cell<usize>,
+    /// host<->device crossings (token uploads + result readbacks)
+    transfers: std::cell::Cell<usize>,
 }
 
 impl Engine {
     /// Load every artifact set of `model` under `root`.
     pub fn load(root: &Path, model: &str) -> Result<Self> {
         let manifests = family_sets(root, model)?;
+        // family_sets rejects empty families today, but guard the indexing
+        // anyway: a future caller handing us a filtered list must get an
+        // error naming the model, not an index panic
+        let Some(man0) = manifests.first() else {
+            bail!("model '{model}' has no artifact sets under {root:?}");
+        };
         let client = PjRtClient::cpu()?;
         let mut train = BTreeMap::new();
         for man in &manifests {
@@ -111,10 +125,17 @@ impl Engine {
         }
         // eval executable from the first (lowest-batch) set — they all share
         // the model; eval batch is uniform across sets by construction
-        let man0 = &manifests[0];
         let eval = LazyExe { path: man0.eval_path(), exe: None };
         let eval_batch = man0.eval_batch;
-        Ok(Self { client, manifests, train, eval, eval_batch, compiles: std::cell::Cell::new(0) })
+        Ok(Self {
+            client,
+            manifests,
+            train,
+            eval,
+            eval_batch,
+            compiles: std::cell::Cell::new(0),
+            transfers: std::cell::Cell::new(0),
+        })
     }
 
     pub fn manifest_for_batch(&self, batch: usize) -> Result<&Manifest> {
@@ -149,6 +170,31 @@ impl Engine {
         self.compiles.get()
     }
 
+    /// Host↔device transfers performed so far: exactly 2 per train/eval
+    /// step — one token-literal upload and one result-tuple readback.
+    pub fn n_host_transfers(&self) -> usize {
+        self.transfers.get()
+    }
+
+    /// Build the `[bsz, width]` i32 token literal in a single staging copy:
+    /// the token slice is viewed as raw bytes and materialized directly at
+    /// its final shape — no intermediate `vec1` literal, no `reshape` copy.
+    fn token_literal(&self, tokens: &[i32], bsz: usize, width: usize) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                tokens.as_ptr() as *const u8,
+                std::mem::size_of_val(tokens),
+            )
+        };
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[bsz, width],
+            bytes,
+        )?;
+        self.transfers.set(self.transfers.get() + 1);
+        Ok(lit)
+    }
+
     /// Execute one training step in place. `tokens` is the flattened
     /// `[bsz, seqlen+1]` batch; `lr` the resolved learning rate; `clip_norm`
     /// the global gradient-clipping threshold (runtime scalar — Fig 10
@@ -166,20 +212,24 @@ impl Engine {
             bail!("batch is {} tokens, expected {}x{}", tokens.len(), bsz, seqlen + 1);
         }
         let key = (bsz, seqlen);
-        let Some(lazy) = self.train.get_mut(&key) else {
+        if !self.train.contains_key(&key) {
             bail!("no train executable for batch {bsz} seqlen {seqlen} \
                    (lowered buckets: {:?})", self.train.keys().collect::<Vec<_>>());
-        };
+        }
+        let step_lit = Literal::scalar((state.step + 1) as f32);
+        let lr_lit = Literal::scalar(lr as f32);
+        let clip_lit = Literal::scalar(clip_norm as f32);
+        let tok_lit = self.token_literal(tokens, bsz, seqlen + 1)?;
+
+        let lazy = self.train.get_mut(&key).expect("presence checked above");
         if lazy.exe.is_none() {
             self.compiles.set(self.compiles.get() + 1);
         }
         let exe = lazy.get(&self.client)?;
 
-        let step_lit = Literal::scalar((state.step + 1) as f32);
-        let lr_lit = Literal::scalar(lr as f32);
-        let clip_lit = Literal::scalar(clip_norm as f32);
-        let tok_lit = Literal::vec1(tokens).reshape(&[bsz as i64, seqlen as i64 + 1])?;
-
+        // one readback for the whole step: the 9-tuple comes back as a
+        // single host literal and every scalar below is an element read on
+        // it, not its own device round-trip
         let result = exe.execute::<&Literal>(&[
             &state.params,
             &state.m,
@@ -191,12 +241,13 @@ impl Engine {
             &tok_lit,
         ])?[0][0]
             .to_literal_sync()?;
+        self.transfers.set(self.transfers.get() + 1);
         let mut parts = result.to_tuple()?;
         if parts.len() != 9 {
             bail!("train step returned {} outputs, expected 9", parts.len());
         }
         // outputs: params, m, v, loss, grad_l2, var_l1, var_max, mom_l1, clip
-        let scalar = |l: &Literal| -> Result<f32> { Ok(l.to_vec::<f32>()?[0]) };
+        let scalar = |l: &Literal| -> Result<f32> { Ok(l.get_first_element::<f32>()?) };
         let stats = StepStats {
             loss: scalar(&parts[3])?,
             grad_l2: scalar(&parts[4])?,
@@ -229,16 +280,17 @@ impl Engine {
         if self.eval.exe.is_none() {
             self.compiles.set(self.compiles.get() + 1);
         }
+        let tok_lit = self.token_literal(tokens, b, s + 1)?;
         let exe = self.eval.get(&self.client)?;
-        let tok_lit = Literal::vec1(tokens).reshape(&[b as i64, s as i64 + 1])?;
         let result = exe.execute::<&Literal>(&[&state.params, &tok_lit])?[0][0]
             .to_literal_sync()?;
+        self.transfers.set(self.transfers.get() + 1);
         let parts = result.to_tuple()?;
         if parts.len() != 3 {
             bail!("eval step returned {} outputs, expected 3", parts.len());
         }
         Ok((
-            parts[0].to_vec::<f32>()?[0],
+            parts[0].get_first_element::<f32>()?,
             parts[1].to_vec::<f32>()?,
             parts[2].to_vec::<f32>()?,
         ))
@@ -330,6 +382,31 @@ mod tests {
         assert!(correct.iter().all(|&c| c == 0.0 || c == 1.0));
         // mean nll near ln(V) at init
         assert!((sum_nll / (b * s) as f32 - (man.model.vocab as f32).ln()).abs() < 0.7);
+    }
+
+    #[test]
+    fn train_step_costs_exactly_two_host_transfers() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let mut st = TrainState::init(&man, 0);
+        assert_eq!(e.n_host_transfers(), 0);
+        let toks = rand_tokens(4 * 9, man.model.vocab, 1);
+        e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        assert_eq!(e.n_host_transfers(), 2, "one token upload + one tuple readback");
+        // warm path (no compile) costs the same two transfers
+        let toks2 = rand_tokens(4 * 9, man.model.vocab, 2);
+        e.train_step(&mut st, &toks2, 4, 8, 1e-3, 1.0).unwrap();
+        assert_eq!(e.n_host_transfers(), 4);
+        assert_eq!(e.n_compiles(), 1);
+        // a rejected call must not move the counter
+        assert!(e.train_step(&mut st, &[0i32; 3], 4, 8, 1e-3, 1.0).is_err());
+        assert_eq!(e.n_host_transfers(), 4);
+        // eval follows the same 2-transfer discipline
+        let b = e.eval_batch();
+        let s = man.model.max_seqlen;
+        let etoks = rand_tokens(b * (s + 1), man.model.vocab, 3);
+        e.eval_step(&st, &etoks).unwrap();
+        assert_eq!(e.n_host_transfers(), 6);
     }
 
     #[test]

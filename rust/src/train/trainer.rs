@@ -48,22 +48,63 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(artifacts_root: &std::path::Path, config: RunConfig) -> Result<Self> {
+        // validate before Engine::load: a bad config should fail with the
+        // cheap, actionable error, not after seconds of artifact loading
         config.validate()?;
         let engine = Engine::load(artifacts_root, &config.model)
             .with_context(|| format!("loading artifacts for model '{}'", config.model))?;
-        let vocab = engine.model().vocab;
-        let full = engine.model().max_seqlen;
-        let store = Arc::new(build_data(&config.data, vocab, config.seed)?);
-        let index = store.index(full, config.val_frac)?;
-        let dims = ModelDims {
-            n_params: engine.manifest_for_batch(config.batch)?.n_params as u64,
-            n_layer: engine.model().n_layer,
-            d_model: engine.model().d_model,
-        };
-        // scaled cluster: 8 "GPUs" so base batch 8 = 1 seq/GPU (plays the
-        // paper's 512 on 128 GPUs = 4 seq/GPU regime via batch_eff_half)
-        let cluster = ClusterConfig { n_gpus: 8, batch_eff_half: 2.0, ..Default::default() };
-        Ok(Self { engine, config, store, index, sim: ClusterSim::new(cluster, dims) })
+        Self::with_engine(engine, config)
+    }
+
+    /// Build a trainer around an already-loaded engine. The coordinator's
+    /// workers keep one warm engine per model family so compiled HLO
+    /// executables are reused across runs; recover it with
+    /// [`Trainer::into_engine`] when the run finishes.
+    pub fn with_engine(engine: Engine, config: RunConfig) -> Result<Self> {
+        Self::with_engine_recoverable(engine, config).map_err(|(_, e)| e)
+    }
+
+    /// [`Trainer::with_engine`], but construction failure hands the engine
+    /// back instead of dropping it — a bad config must not cost a caller's
+    /// warm compiled-executable cache.
+    pub fn with_engine_recoverable(
+        engine: Engine,
+        config: RunConfig,
+    ) -> std::result::Result<Self, (Engine, anyhow::Error)> {
+        // every fallible step only reads the engine; it is consumed at the end
+        let parts = (|| -> Result<(Arc<TokenStore>, SequenceIndex, ClusterSim)> {
+            config.validate()?;
+            if engine.model().name != config.model {
+                bail!(
+                    "engine holds model '{}' but the config wants '{}'",
+                    engine.model().name,
+                    config.model
+                );
+            }
+            let vocab = engine.model().vocab;
+            let full = engine.model().max_seqlen;
+            let store = Arc::new(build_data(&config.data, vocab, config.seed)?);
+            let index = store.index(full, config.val_frac)?;
+            let dims = ModelDims {
+                n_params: engine.manifest_for_batch(config.batch)?.n_params as u64,
+                n_layer: engine.model().n_layer,
+                d_model: engine.model().d_model,
+            };
+            // scaled cluster: 8 "GPUs" so base batch 8 = 1 seq/GPU (plays the
+            // paper's 512 on 128 GPUs = 4 seq/GPU regime via batch_eff_half)
+            let cluster =
+                ClusterConfig { n_gpus: 8, batch_eff_half: 2.0, ..Default::default() };
+            Ok((store, index, ClusterSim::new(cluster, dims)))
+        })();
+        match parts {
+            Ok((store, index, sim)) => Ok(Self { engine, config, store, index, sim }),
+            Err(e) => Err((engine, e)),
+        }
+    }
+
+    /// Recover the engine (and its compiled-executable cache) after a run.
+    pub fn into_engine(self) -> Engine {
+        self.engine
     }
 
     fn bucketed_pacing(&self) -> Result<BucketedPacing> {
@@ -137,19 +178,7 @@ impl Trainer {
                 .engine
                 .train_step(&mut state, &batch.tokens, batch.bsz, batch.seqlen, lr_t,
                             self.config.clip_norm)?;
-            let finite = stats.is_finite();
-            history.record(StepRecord {
-                step: spec.step,
-                seqlen: batch.seqlen,
-                bsz: batch.bsz,
-                lr: lr_t,
-                tokens_after: spec.tokens_before + spec.train_tokens(),
-                stats,
-                sim_seconds: self.sim.step_time(batch.bsz, batch.seqlen).total(),
-            });
-            bad_streak = if finite { 0 } else { bad_streak + 1 };
-            if bad_streak >= DIVERGENCE_PATIENCE {
-                crate::info!("{}: diverged at step {} (NaN), stopping", self.config.name, spec.step);
+            if self.record_step(&mut history, spec, lr_t, stats, &mut bad_streak) {
                 break;
             }
             self.maybe_eval(&mut history, &state, spec)?;
@@ -199,25 +228,48 @@ impl Trainer {
                 batcher.observe_loss(stats.loss as f64);
             }
             tokens += batch.train_tokens;
-            let spec = StepSpec { step, seqlen: batch.seqlen, bsz, tokens_before: tokens - batch.train_tokens };
-            let finite = stats.is_finite();
-            history.record(StepRecord {
+            let spec = StepSpec {
                 step,
                 seqlen: batch.seqlen,
-                bsz,
-                lr: lr_t,
-                tokens_after: tokens,
-                stats,
-                sim_seconds: self.sim.step_time(bsz, batch.seqlen).total(),
-            });
-            bad_streak = if finite { 0 } else { bad_streak + 1 };
-            if bad_streak >= DIVERGENCE_PATIENCE {
+                bsz: batch.bsz,
+                tokens_before: tokens - batch.train_tokens,
+            };
+            if self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak) {
                 break;
             }
             self.maybe_eval(&mut history, &state, &spec)?;
             step += 1;
         }
         Ok(RunResult { history, state, plan_steps: step })
+    }
+
+    /// Record one executed step and advance the divergence-patience
+    /// counter — the single bookkeeping path shared by the planned and
+    /// synchronous loops (and therefore by coordinator-driven runs).
+    /// Returns `true` when the run must stop (unrecoverable divergence).
+    fn record_step(
+        &self,
+        history: &mut RunHistory,
+        spec: &StepSpec,
+        lr: f64,
+        stats: crate::runtime::StepStats,
+        bad_streak: &mut usize,
+    ) -> bool {
+        history.record(StepRecord {
+            step: spec.step,
+            seqlen: spec.seqlen,
+            bsz: spec.bsz,
+            lr,
+            tokens_after: spec.tokens_before + spec.train_tokens(),
+            stats,
+            sim_seconds: self.sim.step_time(spec.bsz, spec.seqlen).total(),
+        });
+        *bad_streak = if stats.is_finite() { 0 } else { *bad_streak + 1 };
+        if *bad_streak >= DIVERGENCE_PATIENCE {
+            crate::info!("{}: diverged at step {} (NaN), stopping", self.config.name, spec.step);
+            return true;
+        }
+        false
     }
 
     fn maybe_eval(&mut self, history: &mut RunHistory, state: &TrainState, spec: &StepSpec) -> Result<()> {
@@ -336,6 +388,49 @@ mod tests {
         assert_eq!(out.history.steps[0].seqlen, 8);
         // adaptive must have grown given steadily-falling loss
         assert!(out.history.steps.last().unwrap().seqlen > 8);
+    }
+
+    #[test]
+    fn planned_and_sync_paths_share_schedule() {
+        // the coordinator's determinism contract: for the same config/seed
+        // the pre-planned prefetch path and the synchronous path must step
+        // through the identical (bsz, seqlen) schedule
+        let mut cfg = micro_cfg();
+        cfg = presets::with_slw(cfg, 8, 20).unwrap();
+        cfg.eval_every = 0;
+        cfg.token_budget = 4 * 32 * 30;
+        let planned = Trainer::new(&root(), cfg.clone()).unwrap().run().unwrap();
+        let sync = Trainer::new(&root(), cfg).unwrap().run_sync().unwrap();
+        let schedule = |out: &RunResult| -> Vec<(usize, usize, u64)> {
+            out.history.steps.iter().map(|r| (r.bsz, r.seqlen, r.tokens_after)).collect()
+        };
+        assert!(!planned.history.steps.is_empty());
+        assert_eq!(schedule(&planned), schedule(&sync));
+    }
+
+    #[test]
+    fn engine_survives_reuse_across_runs() {
+        // the coordinator's engine-recycling contract: run, recover the
+        // engine, run a different config on it without recompiling
+        let mut t = Trainer::new(&root(), micro_cfg().with_name("reuse-1")).unwrap();
+        t.run().unwrap();
+        let engine = t.into_engine();
+        let compiles = engine.n_compiles();
+        assert!(compiles > 0);
+        let mut cfg2 = micro_cfg().with_name("reuse-2");
+        cfg2.seed = 77;
+        let mut t2 = Trainer::with_engine(engine, cfg2).unwrap();
+        let out = t2.run().unwrap();
+        assert!(!out.history.steps.is_empty());
+        assert_eq!(
+            t2.engine.n_compiles(),
+            compiles,
+            "second run at the same buckets must not recompile"
+        );
+        // model mismatch is rejected up front
+        let engine = t2.into_engine();
+        let wrong = presets::base("tiny").unwrap();
+        assert!(Trainer::with_engine(engine, wrong).is_err());
     }
 
     #[test]

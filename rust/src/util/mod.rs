@@ -8,3 +8,9 @@ pub mod log;
 pub mod rng;
 pub mod stats;
 pub mod tsv;
+
+/// Filesystem-safe slug shared by run traces (`results/runs/`) and the
+/// coordinator's run cache (`results/cache/`).
+pub fn slugify(name: &str) -> String {
+    name.chars().map(|c| if c.is_alphanumeric() || c == '.' { c } else { '_' }).collect()
+}

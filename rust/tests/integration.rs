@@ -110,6 +110,39 @@ fn config_file_to_run() {
 }
 
 #[test]
+fn exp_ctx_runs_through_coordinator_with_cache() {
+    use slw::exp::ExpCtx;
+    let out_dir = std::env::temp_dir().join(format!("slw_it_expctx_{}", std::process::id()));
+    std::fs::remove_dir_all(&out_dir).ok();
+
+    let cfgs: Vec<slw::config::RunConfig> = (0..2u64)
+        .map(|i| micro(8).with_seed(40 + i).with_name(&format!("it-coord-{i}")))
+        .collect();
+
+    // first context: cold cache, parallel execution
+    let mut ctx = ExpCtx::configured(root(), out_dir.clone(), 1.0, 2, true);
+    ctx.run_all(cfgs.clone()).unwrap();
+    let losses0: Vec<f64> = ctx.get("it-coord-0").history.losses();
+    assert!(!losses0.is_empty());
+    // traces + cache entries landed on disk
+    assert!(out_dir.join("runs").join("it_coord_0.tsv").exists());
+    let cache_entries = std::fs::read_dir(out_dir.join("cache")).unwrap().count();
+    assert_eq!(cache_entries, 2);
+
+    // second context (fresh process state): same configs come from cache
+    // with identical histories
+    let mut ctx2 = ExpCtx::configured(root(), out_dir.clone(), 1.0, 2, true);
+    ctx2.run_all(cfgs.clone()).unwrap();
+    assert_eq!(ctx2.get("it-coord-0").history.losses(), losses0);
+
+    // --no-cache re-executes and still reproduces the same history
+    let mut ctx3 = ExpCtx::configured(root(), out_dir.clone(), 1.0, 2, false);
+    ctx3.run_all(cfgs).unwrap();
+    assert_eq!(ctx3.get("it-coord-0").history.losses(), losses0);
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+#[test]
 fn tuner_probe_cost_is_fraction_of_run() {
     let r = root();
     let tuner = Tuner::new(&r, micro(400), 10);
