@@ -1,0 +1,92 @@
+//! Watch the stability autopilot save an intentionally-divergent run.
+//!
+//! Trains the micro model twice at an absurd learning rate: once open-loop
+//! (the paper's unrecoverable divergence) and once with `--autopilot`
+//! semantics — the sentinel flags the blow-up online, the checkpoint ring
+//! restores the last healthy state, and the controller re-enters the
+//! pacing ramp at seqlen 8 with a decayed LR, re-growing as health returns.
+//!
+//!     cargo run --release --example autopilot [-- --lr 1.0]
+
+use std::path::PathBuf;
+
+use slw::config::presets;
+use slw::stability::StabilityPolicy;
+use slw::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let lr: f64 = std::env::args()
+        .skip_while(|a| a != "--lr")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+
+    let mut cfg = presets::base("micro")?;
+    cfg.lr.peak = lr;
+    cfg.lr.min_lr = lr / 15.0;
+    // no warmup: the full absurd LR hits from the first update, so the
+    // open loop blows up immediately and the contrast is unmistakable
+    cfg.lr.horizon = slw::schedule::lr::Horizon::Steps { warmup: 1, total: 0 };
+    cfg.token_budget = 4 * 32 * 60;
+    cfg.eval_every = 0;
+
+    println!("== open loop @ LR {lr} ==");
+    let open = {
+        let mut t = Trainer::new(&root, cfg.clone().with_name("open-loop"))?;
+        t.run()?
+    };
+    println!(
+        "  steps: {}  diverged: {}  final loss: {:.3}",
+        open.history.steps.len(),
+        open.history.diverged(),
+        open.history.losses().last().copied().unwrap_or(f64::NAN)
+    );
+
+    println!("\n== autopilot @ LR {lr} ==");
+    cfg.stability = Some(StabilityPolicy {
+        warmup_steps: 3,
+        snapshot_every: 3,
+        regrow_after: 5,
+        max_rollbacks: 20,
+        ..StabilityPolicy::default()
+    });
+    let auto = {
+        let mut t = Trainer::new(&root, cfg.with_name("autopilot"))?;
+        t.run()?
+    };
+    println!(
+        "  steps: {}  diverged: {}  final loss: {:.3}",
+        auto.history.steps.len(),
+        auto.history.diverged(),
+        auto.history.losses().last().copied().unwrap_or(f64::NAN)
+    );
+    let trace = auto.history.stability.as_ref().expect("autopilot trace");
+    println!("  sentinel: {}", trace.summary());
+    for r in &trace.rollbacks {
+        let reason = if r.loss_ratio.is_infinite() {
+            "NaN/ceiling".to_string()
+        } else {
+            format!("loss x{:.2} var x{:.2}", r.loss_ratio, r.var_ratio)
+        };
+        println!(
+            "    rollback @ step {:>4} -> step {:<4}  [{reason}]  \
+             re-enter seqlen {} @ lr scale {:.4}  ({} steps wasted)",
+            r.at_step, r.restored_step, r.reentry_seqlen, r.lr_scale_after, r.wasted_steps
+        );
+    }
+    for i in &trace.interventions {
+        match i.override_len {
+            Some(len) => println!("    schedule @ step {:>4}: seqlen cap -> {len}", i.at_step),
+            None => println!("    schedule @ step {:>4}: cap lifted (nominal ramp)", i.at_step),
+        }
+    }
+
+    println!(
+        "\nExpected shape: the open loop ends diverged (or hopelessly spiked); the \
+         autopilot ends with finite loss after ≥1 rollback, having re-entered the \
+         ramp short and decayed the LR until training held."
+    );
+    Ok(())
+}

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use crate::pipeline::batcher::TruncationMode;
 use crate::pipeline::pacing::Pacing;
 use crate::schedule::lr::{Horizon, LrSchedule};
+use crate::stability::StabilityPolicy;
 
 #[derive(Clone, Debug)]
 pub enum DataRecipe {
@@ -57,6 +58,9 @@ pub struct RunConfig {
     /// Prefetch workers (simulated data-parallel shards).
     pub n_workers: usize,
     pub prefetch_depth: usize,
+    /// Stability autopilot (sentinel + rollback + closed-loop pacing/LR);
+    /// None = open loop. Autopilot runs take the synchronous trainer path.
+    pub stability: Option<StabilityPolicy>,
 }
 
 impl RunConfig {
@@ -74,6 +78,9 @@ impl RunConfig {
             if w.start > self.batch {
                 bail!("bsz warmup start {} > target batch {}", w.start, self.batch);
             }
+        }
+        if let Some(p) = &self.stability {
+            p.validate()?;
         }
         Ok(())
     }
@@ -191,6 +198,13 @@ fn apply_key(cfg: &mut RunConfig, key: &str, v: &str) -> Result<()> {
         "text_file" => {
             cfg.data = DataRecipe::TextFile { path: v.to_string(), bpe_merges: 128 }
         }
+        "autopilot" => {
+            cfg.stability = match v {
+                "true" | "1" | "on" => Some(StabilityPolicy::default()),
+                "false" | "0" | "off" => None,
+                other => bail!("autopilot must be true/false, got '{other}'"),
+            }
+        }
         other => bail!("unknown key '{other}'"),
     }
     Ok(())
@@ -244,5 +258,17 @@ mod tests {
         let mut cfg = presets::base("tiny").unwrap();
         cfg.bsz_warmup = Some(BszWarmupCfg { start: 1000, warmup_tokens: 10 });
         assert!(cfg.validate().is_err());
+        let mut cfg = presets::base("tiny").unwrap();
+        cfg.stability = Some(StabilityPolicy { lr_decay: 0.0, ..Default::default() });
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn autopilot_key_toggles_policy() {
+        let cfg = parse_config("model = tiny\nautopilot = true\n").unwrap();
+        assert!(cfg.stability.is_some());
+        let cfg = parse_config("model = tiny\nautopilot = off\n").unwrap();
+        assert!(cfg.stability.is_none());
+        assert!(parse_config("autopilot = maybe\n").is_err());
     }
 }

@@ -78,6 +78,7 @@ pub fn base(model: &str) -> Result<RunConfig> {
         seed: 1234,
         n_workers: 2,
         prefetch_depth: 4,
+        stability: None,
     })
 }
 
@@ -114,6 +115,14 @@ pub fn with_bsz_warmup(mut cfg: RunConfig, start: usize, warmup_tokens: u64) -> 
     cfg.bsz_warmup = Some(BszWarmupCfg { start, warmup_tokens });
     cfg.name = format!("{} BszWarmup", cfg.name);
     Ok(cfg)
+}
+
+/// Attach the stability autopilot (online sentinel + checkpoint rollback +
+/// closed-loop pacing/LR control) with its default policy.
+pub fn with_autopilot(mut cfg: RunConfig) -> RunConfig {
+    cfg.stability = Some(crate::stability::StabilityPolicy::default());
+    cfg.name = format!("{} Autopilot", cfg.name);
+    cfg
 }
 
 /// The GPT-3 125M replication recipe (§5.2): token-based LR schedule with
@@ -188,6 +197,14 @@ mod tests {
         // baseline and SLW share the identical token-wise schedule
         let base = large_batch("tiny").unwrap();
         assert_eq!(format!("{:?}", base.lr.horizon), format!("{:?}", cfg.lr.horizon));
+    }
+
+    #[test]
+    fn autopilot_preset_attaches_valid_policy() {
+        let cfg = with_autopilot(large_batch("tiny").unwrap());
+        assert!(cfg.stability.is_some());
+        cfg.validate().unwrap();
+        assert!(cfg.name.contains("Autopilot"));
     }
 
     #[test]

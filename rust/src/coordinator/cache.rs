@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 use crate::runtime::manifest::{family_sets, Manifest};
 use crate::runtime::{StepStats, TrainState};
+use crate::stability::report::StabilityTrace;
 use crate::train::checkpoint;
 use crate::train::metrics::{EvalRecord, RunHistory, StepRecord};
 use crate::util::json::{self, Json};
@@ -99,8 +100,8 @@ impl RunCache {
     /// most once per model per cache instance.
     fn key_for(&self, artifacts_root: &Path, cfg: &RunConfig) -> Result<String> {
         let mut memo = self.family_memo.lock().unwrap();
-        if !memo.contains_key(&cfg.model) {
-            memo.insert(cfg.model.clone(), family_text(artifacts_root, &cfg.model)?);
+        if let std::collections::btree_map::Entry::Vacant(e) = memo.entry(cfg.model.clone()) {
+            e.insert(family_text(artifacts_root, &cfg.model)?);
         }
         Ok(run_key_with(cfg, &memo[&cfg.model]))
     }
@@ -109,8 +110,8 @@ impl RunCache {
     pub fn manifest_for(&self, artifacts_root: &Path, cfg: &RunConfig) -> Result<Manifest> {
         let key = (cfg.model.clone(), cfg.batch);
         let mut memo = self.manifest_memo.lock().unwrap();
-        if !memo.contains_key(&key) {
-            memo.insert(key.clone(), manifest_for(artifacts_root, cfg)?);
+        if let std::collections::btree_map::Entry::Vacant(e) = memo.entry(key.clone()) {
+            e.insert(manifest_for(artifacts_root, cfg)?);
         }
         Ok(memo[&key].clone())
     }
@@ -187,33 +188,10 @@ pub fn manifest_for(artifacts_root: &Path, cfg: &RunConfig) -> Result<Manifest> 
 
 // ---------------------------------------------------------------------------
 // history <-> json (util::json has no NaN/Infinity — divergence histories
-// carry non-finite losses, encoded as the strings "nan"/"inf"/"-inf")
+// carry non-finite losses, encoded via json::num_nf as "nan"/"inf"/"-inf")
 // ---------------------------------------------------------------------------
 
-fn jnum(x: f64) -> Json {
-    if x.is_finite() {
-        Json::Num(x)
-    } else if x.is_nan() {
-        Json::Str("nan".into())
-    } else if x > 0.0 {
-        Json::Str("inf".into())
-    } else {
-        Json::Str("-inf".into())
-    }
-}
-
-fn jget(v: &Json) -> Result<f64> {
-    match v {
-        Json::Num(x) => Ok(*x),
-        Json::Str(s) => match s.as_str() {
-            "nan" => Ok(f64::NAN),
-            "inf" => Ok(f64::INFINITY),
-            "-inf" => Ok(f64::NEG_INFINITY),
-            other => bail!("not a cached number: '{other}'"),
-        },
-        other => bail!("not a cached number: {other:?}"),
-    }
-}
+use crate::util::json::{get_nf as jget, num_nf as jnum};
 
 fn history_to_json(cfg: &RunConfig, key: &str, h: &RunHistory, plan_steps: usize) -> Json {
     let steps = h
@@ -256,6 +234,13 @@ fn history_to_json(cfg: &RunConfig, key: &str, h: &RunHistory, plan_steps: usize
         ("plan_steps", json::num(plan_steps as f64)),
         ("steps", Json::Arr(steps)),
         ("evals", Json::Arr(evals)),
+        (
+            "stability",
+            match &h.stability {
+                Some(t) => t.to_json(),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -296,6 +281,11 @@ fn history_from_json(j: &Json, name: &str) -> Result<RunHistory> {
             val_ppl: jget(&c[2])?,
             sim_hours: jget(&c[3])?,
         });
+    }
+    if let Some(v) = j.opt("stability") {
+        if !matches!(v, Json::Null) {
+            h.stability = Some(StabilityTrace::from_json(v)?);
+        }
     }
     Ok(h)
 }
@@ -355,19 +345,6 @@ mod tests {
     }
 
     #[test]
-    fn nonfinite_numbers_roundtrip() {
-        for x in [1.5, 0.0, -3.25, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
-            let enc = jnum(x).to_string();
-            let dec = jget(&Json::parse(&enc).unwrap()).unwrap();
-            if x.is_nan() {
-                assert!(dec.is_nan());
-            } else {
-                assert_eq!(dec, x);
-            }
-        }
-    }
-
-    #[test]
     fn entry_roundtrip_preserves_history_and_state() {
         let man = Manifest::load(&root().join("micro_b4")).unwrap();
         let cfg = presets::base("micro").unwrap().with_name("cache-rt");
@@ -376,6 +353,25 @@ mod tests {
             h.record(rec(i, *l));
         }
         h.evals.push(EvalRecord { step: 2, tokens_after: 384, val_ppl: 88.25, sim_hours: 0.01 });
+        h.stability = Some(StabilityTrace {
+            n_healthy: 4,
+            n_warning: 1,
+            n_diverged: 1,
+            rollbacks: vec![crate::stability::RollbackEvent {
+                at_step: 3,
+                restored_step: 2,
+                wasted_steps: 2,
+                loss_ratio: f64::INFINITY,
+                var_ratio: 4.0,
+                lr_scale_after: 0.5,
+                reentry_seqlen: 8,
+            }],
+            interventions: vec![crate::stability::Intervention {
+                at_step: 3,
+                override_len: Some(8),
+            }],
+            gave_up: false,
+        });
         let state = TrainState::init(&man, 3);
 
         let dir = temp_dir("rt");
@@ -389,6 +385,11 @@ mod tests {
         assert_eq!(e.history.diverged_at, Some(3));
         assert_eq!(e.history.evals.len(), 1);
         assert_eq!(e.history.evals[0].val_ppl, 88.25);
+        let trace = e.history.stability.as_ref().expect("stability trace must roundtrip");
+        assert_eq!(trace.n_rollbacks(), 1);
+        assert!(trace.rollbacks[0].loss_ratio.is_infinite());
+        assert_eq!(trace.rollbacks[0].reentry_seqlen, 8);
+        assert_eq!(trace.interventions[0].override_len, Some(8));
         for (a, b) in e.history.steps.iter().zip(&h.steps) {
             assert_eq!(a.seqlen, b.seqlen);
             assert_eq!(a.lr, b.lr);

@@ -38,7 +38,7 @@ use crate::config::RunConfig;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::{Engine, TrainState};
 use crate::train::metrics::RunHistory;
-use crate::train::trainer::Trainer;
+use crate::train::trainer::{StoreCache, Trainer};
 
 use cache::RunCache;
 use queue::StealQueues;
@@ -243,8 +243,11 @@ fn worker_loop(
     queues: Arc<StealQueues<Job>>,
     tx: Sender<JobResult>,
 ) {
-    // one warm engine per model family, reused across this worker's runs
+    // one warm engine per model family, reused across this worker's runs,
+    // plus a per-worker corpus cache so sweep runs sharing a (recipe, seed)
+    // diet stop regenerating identical synthetic corpora
     let mut engines: BTreeMap<String, Engine> = BTreeMap::new();
+    let mut stores = StoreCache::new();
     while let Some((idx, cfg)) = queues.take(w) {
         crate::info!("coordinator[w{w}]: running '{}'", cfg.name);
         let model = cfg.model.clone();
@@ -256,7 +259,7 @@ fn worker_loop(
         // or training fails: one bad config must not cost the family's
         // compiled executables
         let result = engine.and_then(|engine| {
-            match Trainer::with_engine_recoverable(engine, cfg.clone()) {
+            match Trainer::with_engine_recoverable_cached(engine, cfg.clone(), Some(&mut stores)) {
                 Err((engine, e)) => {
                     engines.insert(model.clone(), engine);
                     Err(e)

@@ -22,6 +22,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig8;
 pub mod gpt3;
+pub mod stability;
 pub mod table5;
 pub mod table8_9;
 
@@ -47,6 +48,18 @@ pub struct CachedRun {
     pub state: TrainState,
 }
 
+/// Headline metrics of one seed replica, aggregated by the `--seeds`
+/// replication report (generalizes Table 5's 3-seed shape to every case).
+pub struct SeedSummary {
+    pub seed: u64,
+    pub steps: usize,
+    pub final_loss: f64,
+    pub spikes: usize,
+    pub max_ratio: f64,
+    pub best_val_ppl: Option<f64>,
+    pub diverged: bool,
+}
+
 pub struct ExpCtx {
     pub root: PathBuf,
     pub out_dir: PathBuf,
@@ -54,6 +67,10 @@ pub struct ExpCtx {
     pub scale: f64,
     coord: Coordinator,
     cache: BTreeMap<String, CachedRun>,
+    /// replicas scheduled per case beyond its own seed (`--seeds N` = N-1)
+    extra_seeds: usize,
+    /// per-case seed replicas for the mean ± std replication report
+    seed_runs: BTreeMap<String, Vec<SeedSummary>>,
 }
 
 /// Default worker-pool width for `exp`: the machine's parallelism, capped —
@@ -77,7 +94,22 @@ impl ExpCtx {
         use_cache: bool,
     ) -> Self {
         let coord = Coordinator::new(root.clone(), out_dir.join("cache"), jobs, use_cache);
-        Self { root, out_dir, scale, coord, cache: BTreeMap::new() }
+        Self {
+            root,
+            out_dir,
+            scale,
+            coord,
+            cache: BTreeMap::new(),
+            extra_seeds: 0,
+            seed_runs: BTreeMap::new(),
+        }
+    }
+
+    /// Fan every case out across `n` seeds total (its own plus `n - 1`
+    /// reseeded replicas) and collect the replication report
+    /// ([`ExpCtx::emit_seed_report`]). Tables keep rendering the base seed.
+    pub fn set_seeds(&mut self, n: usize) {
+        self.extra_seeds = n.saturating_sub(1);
     }
 
     pub fn budget(&self, tokens: u64) -> u64 {
@@ -98,7 +130,9 @@ impl ExpCtx {
 
     /// Execute a batch of configs through the coordinator (work-stealing
     /// worker pool + persistent run cache); results are memoized in-process
-    /// by run name, so follow-up `run()` calls are free.
+    /// by run name, so follow-up `run()` calls are free. With `--seeds N`,
+    /// every new case also fans out N-1 reseeded replicas in the same
+    /// coordinator batch, feeding the replication report.
     pub fn run_all(&mut self, cfgs: Vec<RunConfig>) -> Result<()> {
         let mut queued = BTreeSet::new();
         let todo: Vec<RunConfig> = cfgs
@@ -108,19 +142,98 @@ impl ExpCtx {
         if todo.is_empty() {
             return Ok(());
         }
+        // seed fan-out: replicas ride in the same batch so the coordinator
+        // parallelizes them with the base runs
+        let mut jobs = todo.clone();
+        let mut replica_base: Vec<String> = Vec::new();
         for cfg in &todo {
+            if self.extra_seeds == 0 || self.seed_runs.contains_key(&cfg.name) {
+                continue;
+            }
+            for k in 1..=self.extra_seeds {
+                let seed = cfg.seed + k as u64;
+                let replica = cfg
+                    .clone()
+                    .with_seed(seed)
+                    .with_name(&format!("{}@s{seed}", cfg.name));
+                replica_base.push(cfg.name.clone());
+                jobs.push(replica);
+            }
+        }
+        for cfg in &jobs {
             // "want", not "run": the coordinator decides per config whether
             // this executes or comes from the persistent cache (it logs the
             // accurate hit/miss split itself)
             crate::debug!("exp want: {}", cfg.name);
         }
-        let done = self.coord.run_many(todo.clone())?;
-        for (cfg, run) in todo.iter().zip(done) {
+        let n_base = todo.len();
+        let done = self.coord.run_many(jobs.clone())?;
+        for (i, (cfg, run)) in jobs.iter().zip(done).enumerate() {
             self.save_trace(&run.history)?;
-            self.cache
-                .insert(cfg.name.clone(), CachedRun { history: run.history, state: run.state });
+            if self.extra_seeds > 0 {
+                let base_name = if i < n_base {
+                    cfg.name.clone()
+                } else {
+                    replica_base[i - n_base].clone()
+                };
+                let (spikes, max_ratio) = run.history.instability(SPIKE_THRESHOLD);
+                self.seed_runs.entry(base_name).or_default().push(SeedSummary {
+                    seed: cfg.seed,
+                    steps: run.history.steps.len(),
+                    final_loss: run.history.losses().last().copied().unwrap_or(f64::NAN),
+                    spikes,
+                    max_ratio,
+                    best_val_ppl: run.history.best_val_ppl(),
+                    diverged: run.history.diverged(),
+                });
+            }
+            if i < n_base {
+                self.cache
+                    .insert(cfg.name.clone(), CachedRun { history: run.history, state: run.state });
+            }
         }
         Ok(())
+    }
+
+    /// The `--seeds N` replication report: mean ± std of the headline
+    /// metrics across every case's seed replicas (Table 5's shape,
+    /// generalized to whatever experiment just ran).
+    pub fn emit_seed_report(&self, id: &str) -> Result<()> {
+        if self.seed_runs.is_empty() {
+            return Ok(());
+        }
+        let pm = |xs: &[f64]| -> String {
+            if xs.is_empty() {
+                "-".into()
+            } else {
+                format!("{:.3} ± {:.3}", crate::util::stats::mean(xs), crate::util::stats::std_dev(xs))
+            }
+        };
+        let finite = |xs: Vec<f64>| -> Vec<f64> { xs.into_iter().filter(|x| x.is_finite()).collect() };
+        let mut w = TsvWriter::new(&[
+            "case", "seeds", "final_loss", "spikes>1.1", "max_ratio", "best_val_ppl", "diverged",
+        ]);
+        for (name, runs) in &self.seed_runs {
+            let losses = finite(runs.iter().map(|r| r.final_loss).collect());
+            let spikes: Vec<f64> = runs.iter().map(|r| r.spikes as f64).collect();
+            let ratios = finite(runs.iter().map(|r| r.max_ratio).collect());
+            let ppls = finite(runs.iter().filter_map(|r| r.best_val_ppl).collect());
+            let n_div = runs.iter().filter(|r| r.diverged).count();
+            w.row(&[
+                name.clone(),
+                runs.len().to_string(),
+                pm(&losses),
+                pm(&spikes),
+                pm(&ratios),
+                pm(&ppls),
+                format!("{n_div}/{}", runs.len()),
+            ]);
+        }
+        self.emit(
+            &format!("{id}_seeds"),
+            "multi-seed replication: mean ± std across seed replicas per case",
+            &w,
+        )
     }
 
     /// Immutable access to an already-executed run (panics if missing —
@@ -184,7 +297,7 @@ pub use crate::util::slugify;
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5_6", "table4",
-    "table5", "fig8", "fig10", "table8_9",
+    "table5", "fig8", "fig10", "table8_9", "stability",
 ];
 
 pub fn cmd_exp(mut args: Args) -> Result<()> {
@@ -200,11 +313,16 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
     };
     let jobs = args.usize_or("jobs", default_jobs())?;
     let no_cache = args.flag("no-cache");
+    let n_seeds = args.usize_or("seeds", 1)?;
     args.finish()?;
     if jobs == 0 {
         bail!("--jobs must be >= 1");
     }
+    if n_seeds == 0 {
+        bail!("--seeds must be >= 1");
+    }
     let mut ctx = ExpCtx::configured(root, out_dir, scale, jobs, !no_cache);
+    ctx.set_seeds(n_seeds);
 
     fn run_one(ctx: &mut ExpCtx, id: &str) -> Result<()> {
         match id {
@@ -222,6 +340,7 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
             "fig8" => fig8::run(ctx),
             "fig10" => fig10::run(ctx),
             "table8_9" => table8_9::run(ctx),
+            "stability" => stability::run(ctx),
             other => bail!("unknown experiment '{other}'; known: {ALL_IDS:?} or 'all'"),
         }
     }
@@ -232,6 +351,7 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
             for id in ALL_IDS {
                 run_one(&mut ctx, id)?;
             }
+            ctx.emit_seed_report("all")?;
             println!("\nall experiments done in {:.1} min", t0.elapsed().as_secs_f64() / 60.0);
             Ok(())
         }
@@ -239,10 +359,13 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
             println!("experiments: {}", ALL_IDS.join(", "));
             println!(
                 "usage: slw exp <id|all> [--quick|--full|--scale X] [--jobs N] \
-                 [--no-cache] [--out results/]"
+                 [--seeds N] [--no-cache] [--out results/]"
             );
             Ok(())
         }
-        other => run_one(&mut ctx, other),
+        other => {
+            run_one(&mut ctx, other)?;
+            ctx.emit_seed_report(other)
+        }
     }
 }

@@ -1,0 +1,135 @@
+//! The stability-autopilot headline: under an aggressive large-batch /
+//! large-LR recipe the open-loop baseline diverges, while the closed loop
+//! detects the blow-up online, rolls back to the last healthy checkpoint,
+//! re-enters the pacing ramp at a short sequence length with a decayed LR,
+//! and finishes the token budget with finite loss.
+//!
+//! The divergent LR is found by a deterministic escalation ladder over the
+//! baseline (the calibrated marginal LR drifts with scale; escalating past
+//! it keeps the contrast robust) — the §3 "raise the LR until the run
+//! blows up" probe as a first-class experiment. All runs go through the
+//! coordinator, so the ladder executes in parallel and re-invocations are
+//! cache hits.
+
+use anyhow::Result;
+
+use crate::config::{presets, RunConfig};
+use crate::stability::StabilityPolicy;
+use crate::util::tsv::{f3, TsvWriter};
+
+use super::{ExpCtx, SPIKE_THRESHOLD};
+
+/// Escalation rungs: (LR multiplier over the tiny base LR, clip_norm).
+/// The calibrated marginal for the tiny bsz-64 role is 50x (exp::core);
+/// the ladder starts above it, and the last rung also disables gradient
+/// clipping (Fig 10's stabilizer) — the full §3 pathology.
+const LADDER: [(f64, f64); 4] =
+    [(100.0, 1.0), (300.0, 1.0), (1000.0, 1.0), (1000.0, 1e9)];
+const BUDGET: u64 = 120_000;
+
+fn base_name(mult: f64, clip: f64) -> String {
+    if clip > 100.0 {
+        format!("stab_base_{mult}x_noclip")
+    } else {
+        format!("stab_base_{mult}x")
+    }
+}
+
+fn base_cfg(ctx: &ExpCtx, mult: f64, clip: f64) -> Result<RunConfig> {
+    let mut c = presets::base("tiny")?;
+    c.batch = 64;
+    c.lr.peak = presets::base_lr("tiny") * mult;
+    c.lr.min_lr = c.lr.peak / 15.0;
+    c.clip_norm = clip;
+    c.token_budget = ctx.budget(BUDGET);
+    c.eval_every = 0;
+    Ok(c.with_name(&base_name(mult, clip)))
+}
+
+/// Tighter cadence than the library default: these runs are short, so the
+/// sentinel must warm up and the ring must fill within a few steps.
+fn autopilot_policy() -> StabilityPolicy {
+    StabilityPolicy {
+        warmup_steps: 3,
+        snapshot_every: 3,
+        regrow_after: 5,
+        max_rollbacks: 20,
+        ..StabilityPolicy::default()
+    }
+}
+
+pub fn run(ctx: &mut ExpCtx) -> Result<()> {
+    // phase 1: escalate the open-loop baseline until it diverges
+    let ladder: Vec<RunConfig> =
+        LADDER.iter().map(|&(m, c)| base_cfg(ctx, m, c)).collect::<Result<_>>()?;
+    ctx.run_all(ladder.clone())?;
+    let (headline_mult, headline_clip) = LADDER
+        .iter()
+        .copied()
+        .find(|&(m, c)| ctx.get(&base_name(m, c)).history.diverged())
+        .unwrap_or_else(|| {
+            crate::warn_!(
+                "stability: no ladder rung diverged open-loop; \
+                 contrasting against the most aggressive rung"
+            );
+            *LADDER.last().unwrap()
+        });
+
+    // phase 2: the autopilot twin of the divergent recipe
+    let mut auto_cfg = base_cfg(ctx, headline_mult, headline_clip)?;
+    auto_cfg.stability = Some(autopilot_policy());
+    let auto_cfg = auto_cfg.with_name(&format!(
+        "stab_auto_{}",
+        base_name(headline_mult, headline_clip).trim_start_matches("stab_base_")
+    ));
+    ctx.run_all(vec![auto_cfg.clone()])?;
+
+    let mut w = TsvWriter::new(&[
+        "case", "lr", "steps", "final_loss", "diverged", "rollbacks", "interventions",
+        "spikes>1.1", "max_ratio", "sentinel",
+    ]);
+    for cfg in ladder.iter().chain(std::iter::once(&auto_cfg)) {
+        let run = &ctx.get(&cfg.name).history;
+        let (spikes, max_ratio) = run.instability(SPIKE_THRESHOLD);
+        let (rollbacks, interventions, sentinel) = match &run.stability {
+            Some(t) => (
+                t.n_rollbacks().to_string(),
+                t.interventions.len().to_string(),
+                t.summary(),
+            ),
+            None => ("-".into(), "-".into(), "open loop".into()),
+        };
+        w.row(&[
+            run.name.clone(),
+            format!("{:.1e}", cfg.lr.peak),
+            run.steps.len().to_string(),
+            run.losses().last().map(|l| f3(*l)).unwrap_or_else(|| "-".into()),
+            run.diverged().to_string(),
+            rollbacks,
+            interventions,
+            spikes.to_string(),
+            f3(max_ratio),
+            sentinel,
+        ]);
+    }
+
+    // the acceptance contrast, verified loudly
+    let auto = &ctx.get(&auto_cfg.name).history;
+    let recovered = !auto.diverged()
+        && auto.losses().last().is_some_and(|l| l.is_finite())
+        && auto.stability.as_ref().is_some_and(|t| t.n_rollbacks() >= 1 && !t.gave_up);
+    if recovered {
+        crate::info!(
+            "stability: baseline {headline_mult}x diverged open-loop; autopilot recovered \
+             ({})",
+            auto.stability.as_ref().map(|t| t.summary()).unwrap_or_default()
+        );
+    } else {
+        crate::warn_!("stability: autopilot run did not demonstrate a recovery");
+    }
+    ctx.emit(
+        "stability",
+        "open-loop divergence vs autopilot recovery (sentinel + rollback + closed-loop pacing)",
+        &w,
+    )
+}

@@ -16,6 +16,12 @@
 //! Python never runs on the request path: the binary loads `artifacts/` and
 //! executes via the PJRT CPU client (`xla` crate).
 
+// CI gates on `cargo clippy -- -D warnings`. One deliberate API trips a
+// size lint: the recoverable trainer constructors return the `Engine` in
+// their error type so a bad config can't cost a worker's warm
+// compiled-executable cache (`result_large_err` counts those bytes).
+#![allow(clippy::result_large_err)]
+
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -23,6 +29,7 @@ pub mod eval;
 pub mod exp;
 pub mod pipeline;
 pub mod schedule;
+pub mod stability;
 pub mod train;
 pub mod sim;
 pub mod runtime;

@@ -83,6 +83,9 @@ fn build_config(args: &mut Args) -> Result<RunConfig> {
     if args.flag("recycle") {
         cfg.truncation = TruncationMode::Recycle;
     }
+    if args.flag("autopilot") {
+        cfg.stability = Some(slw::stability::StabilityPolicy::default());
+    }
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
     cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
@@ -120,6 +123,9 @@ fn cmd_train(mut args: Args) -> Result<()> {
         h.diverged()
     );
     println!("  instability: {spikes} steps with ratio>1.2, max ratio {max_ratio:.3}");
+    if let Some(t) = &h.stability {
+        println!("  autopilot: {}", t.summary());
+    }
     println!(
         "  var corr: r_norm={:.3} (p={:.2e})  r_max={:.3} (p={:.2e})  var_max_peak={:.4}",
         corr.r_norm, corr.p_norm, corr.r_max, corr.p_max, h.var_max_peak()
@@ -247,12 +253,13 @@ fn print_help() {
            train   --model tiny --batch 64 --lr 4e-3 [--slw T [--slw-start 8]]\n\
                    [--shortformer --switch N] [--bsz-warmup] [--tokens N]\n\
                    [--eval-every N] [--seed N] [--save ckpt] [--recycle]\n\
+                   [--autopilot]  (online sentinel + rollback + closed-loop pacing)\n\
            tune    --model tiny [--probe-steps N] [--durations a,b,c] [--starts a,b]\n\
            probes  --model tiny [--ckpt file] [--shots K] [--batches N]\n\
            data    --kind mixture|markov|induction --tokens N --out file\n\
            exp     <fig1|table1|table2|table3|fig2|fig3|fig4|fig5_6|table4|table5|\n\
-                    fig8|fig10|table8_9|all> [--quick] [--jobs N] [--no-cache]\n\
-                    [--out results/]\n\
+                    fig8|fig10|table8_9|stability|all> [--quick] [--jobs N]\n\
+                    [--seeds N] [--no-cache] [--out results/]\n\
            info    list artifact sets\n\
          \n\
          Run `make artifacts` first. SLW_LOG=debug for verbose logs."

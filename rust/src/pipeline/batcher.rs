@@ -60,6 +60,12 @@ impl SlwBatcher {
         self.pacing.observe_loss(loss);
     }
 
+    /// Forward of the pacing layer's autopilot re-entry cap (see
+    /// [`crate::pipeline::pacing::PacingState::override_seqlen`]).
+    pub fn override_seqlen(&mut self, len: Option<usize>) {
+        self.pacing.override_seqlen(len);
+    }
+
     /// Assemble the batch for `step`: fetch full-length rows from the
     /// sampler (or the recycle queue), truncate to the bucketed seqlen.
     pub fn next_batch(

@@ -45,7 +45,9 @@ impl Pacing {
             Ok(())
         };
         match *self {
-            Pacing::Constant { seqlen } => check(8.max(seqlen), seqlen.max(8)),
+            // no clamping: a sub-8 constant length must be rejected like
+            // every other variant, not silently waved through
+            Pacing::Constant { seqlen } => check(seqlen, seqlen),
             Pacing::Linear { start, end, duration } | Pacing::Root { start, end, duration, .. } => {
                 if duration == 0 {
                     bail!("duration must be > 0");
@@ -118,7 +120,8 @@ impl Pacing {
     }
 }
 
-/// Mutable pacing state (only the adaptive variant uses it).
+/// Mutable pacing state: the adaptive variant's growth tracker, plus the
+/// stability autopilot's re-entry override (a cap on every variant).
 #[derive(Clone, Debug)]
 pub struct PacingState {
     adaptive_len: usize,
@@ -126,6 +129,8 @@ pub struct PacingState {
     stall: usize,
     patience: usize,
     grow: usize,
+    /// cap on the scheduled length (autopilot re-entry); None = nominal
+    override_len: Option<usize>,
 }
 
 impl PacingState {
@@ -134,7 +139,25 @@ impl PacingState {
             Pacing::Adaptive { start, grow, patience, .. } => (start, grow, patience),
             _ => (0, 0, 0),
         };
-        Self { adaptive_len: start, best_loss: f64::INFINITY, stall: 0, patience, grow }
+        Self {
+            adaptive_len: start,
+            best_loss: f64::INFINITY,
+            stall: 0,
+            patience,
+            grow,
+            override_len: None,
+        }
+    }
+
+    /// Re-entry API for the stability autopilot: cap the scheduled length
+    /// at `len` (the ramp resumes from there as the cap is raised), or
+    /// lift the cap with `None`.
+    pub fn override_seqlen(&mut self, len: Option<usize>) {
+        self.override_len = len;
+    }
+
+    pub fn override_len(&self) -> Option<usize> {
+        self.override_len
     }
 
     /// Feed the step loss; the adaptive schedule grows the length by `grow`
@@ -207,7 +230,11 @@ impl BucketedPacing {
 
     /// Bucketed sequence length for step `t`.
     pub fn seqlen_at(&self, t: usize) -> usize {
-        let aligned = Pacing::align8(self.pacing.raw_seqlen(t, &self.state));
+        let mut raw = self.pacing.raw_seqlen(t, &self.state);
+        if let Some(cap) = self.state.override_len() {
+            raw = raw.min(cap);
+        }
+        let aligned = Pacing::align8(raw);
         // round down to nearest bucket
         match self.buckets.binary_search(&aligned) {
             Ok(i) => self.buckets[i],
@@ -218,6 +245,16 @@ impl BucketedPacing {
 
     pub fn observe_loss(&mut self, loss: f64) {
         self.state.observe_loss(loss);
+    }
+
+    /// Forward of [`PacingState::override_seqlen`] — the autopilot's ramp
+    /// re-entry point.
+    pub fn override_seqlen(&mut self, len: Option<usize>) {
+        self.state.override_seqlen(len);
+    }
+
+    pub fn override_len(&self) -> Option<usize> {
+        self.state.override_len()
     }
 
     /// Total tokens consumed by steps [0, n) at batch size `bsz` — used to
@@ -367,6 +404,80 @@ mod tests {
         // SLW consumes fewer tokens than constant over the warmup
         let c = BucketedPacing::new(Pacing::Constant { seqlen: 64 }, ladder()).unwrap();
         assert!(tokens < c.tokens_after(150, 4));
+    }
+
+    #[test]
+    fn constant_rejects_sub8_seqlen() {
+        // regression: check(8.max(seqlen), seqlen.max(8)) used to wave a
+        // sub-8 constant length through instead of bailing
+        assert!(Pacing::Constant { seqlen: 4 }.validate(64).is_err());
+        assert!(Pacing::Constant { seqlen: 7 }.validate(64).is_err());
+        assert!(Pacing::Constant { seqlen: 8 }.validate(64).is_ok());
+        assert!(BucketedPacing::new(Pacing::Constant { seqlen: 4 }, ladder()).is_err());
+        // the ≤ full check still applies
+        assert!(Pacing::Constant { seqlen: 128 }.validate(64).is_err());
+    }
+
+    #[test]
+    fn override_caps_and_releases_the_schedule() {
+        let mut p = BucketedPacing::new(
+            Pacing::Linear { start: 8, end: 64, duration: 10 },
+            ladder(),
+        )
+        .unwrap();
+        assert_eq!(p.seqlen_at(100), 64);
+        // re-entry: cap at 8 pins every step to the shortest bucket
+        p.override_seqlen(Some(8));
+        assert_eq!(p.override_len(), Some(8));
+        assert_eq!(p.seqlen_at(0), 8);
+        assert_eq!(p.seqlen_at(100), 8);
+        // a non-bucket cap rounds down to the nearest bucket (20 -> 16)
+        p.override_seqlen(Some(20));
+        assert_eq!(p.seqlen_at(100), 16);
+        // the cap never lengthens a step beyond the schedule
+        assert_eq!(p.seqlen_at(0), 8);
+        // lifting the cap resumes the nominal ramp exactly
+        p.override_seqlen(None);
+        assert_eq!(p.seqlen_at(100), 64);
+        // constant pacing is cappable the same way
+        let mut c = BucketedPacing::new(Pacing::Constant { seqlen: 64 }, ladder()).unwrap();
+        c.override_seqlen(Some(24));
+        assert_eq!(c.seqlen_at(5), 24);
+    }
+
+    #[test]
+    fn adaptive_grow_hold_edges() {
+        let mut p = BucketedPacing::new(
+            Pacing::Adaptive { start: 8, end: 24, grow: 8, patience: 2 },
+            ladder(),
+        )
+        .unwrap();
+        // equal losses are not improvements: no growth however many
+        for _ in 0..20 {
+            p.observe_loss(5.0);
+        }
+        assert_eq!(p.seqlen_at(20), 8);
+        // NaN losses never count as new bests (NaN < best is false)
+        for _ in 0..10 {
+            p.observe_loss(f64::NAN);
+        }
+        assert_eq!(p.seqlen_at(30), 8);
+        // steady improvement grows, but the length is clamped at `end`
+        for i in 0..40 {
+            p.observe_loss(4.0 - 0.05 * i as f64);
+        }
+        assert_eq!(p.seqlen_at(80), 24, "growth must clamp at end");
+        // a single improvement below patience holds
+        let mut q = BucketedPacing::new(
+            Pacing::Adaptive { start: 8, end: 64, grow: 8, patience: 3 },
+            ladder(),
+        )
+        .unwrap();
+        q.observe_loss(10.0);
+        q.observe_loss(9.0);
+        assert_eq!(q.seqlen_at(2), 8, "2 new bests < patience 3 must hold");
+        q.observe_loss(8.0);
+        assert_eq!(q.seqlen_at(3), 16, "3rd new best triggers the grow");
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! The closed-loop schedule policy: what to do once the sentinel has
+//! spoken and the ring has restored a healthy state.
+//!
+//! On rollback it applies the paper's two stabilizers at once — re-enter
+//! the sequence-length ramp at a short length (SLW's mechanism, §4) and
+//! decay the LR (the blunt classical fix) — then re-grows the length
+//! cautiously after a sustained healthy streak. This is the paper's
+//! "adaptive" SLW variant promoted from a loss heuristic to a
+//! variance-driven controller.
+
+use super::{StabilityPolicy, Verdict};
+
+pub struct Controller {
+    policy: StabilityPolicy,
+    /// the run's full sequence length — the re-grow target
+    full_len: usize,
+    lr_scale: f64,
+    override_len: Option<usize>,
+    healthy_streak: usize,
+    n_rollbacks: usize,
+}
+
+impl Controller {
+    pub fn new(policy: StabilityPolicy, full_len: usize) -> Self {
+        Self {
+            policy,
+            full_len,
+            lr_scale: 1.0,
+            override_len: None,
+            healthy_streak: 0,
+            n_rollbacks: 0,
+        }
+    }
+
+    /// Cumulative LR multiplier (1.0 until the first rollback).
+    pub fn lr_scale(&self) -> f64 {
+        self.lr_scale
+    }
+
+    /// Current sequence-length cap (None = nominal schedule).
+    pub fn override_len(&self) -> Option<usize> {
+        self.override_len
+    }
+
+    pub fn n_rollbacks(&self) -> usize {
+        self.n_rollbacks
+    }
+
+    /// True once the rollback budget is spent.
+    pub fn exhausted(&self) -> bool {
+        self.n_rollbacks >= self.policy.max_rollbacks
+    }
+
+    /// Apply the rollback response: shrink the sequence length to the
+    /// re-entry point and decay the LR. Returns (re-entry seqlen, new
+    /// cumulative LR scale).
+    pub fn on_rollback(&mut self) -> (usize, f64) {
+        self.n_rollbacks += 1;
+        self.healthy_streak = 0;
+        self.lr_scale *= self.policy.lr_decay;
+        let len = self.policy.reentry_seqlen.min(self.full_len);
+        self.override_len = Some(len);
+        (len, self.lr_scale)
+    }
+
+    /// Streak bookkeeping for non-rollback verdicts. After `regrow_after`
+    /// consecutive healthy steps the override grows by `regrow_step`,
+    /// clearing entirely once it reaches the full length. Returns
+    /// `Some(new override)` when the cap changed (`Some(None)` = cleared).
+    pub fn on_verdict(&mut self, v: Verdict) -> Option<Option<usize>> {
+        match v {
+            Verdict::Healthy => {
+                self.healthy_streak += 1;
+                if let Some(cur) = self.override_len {
+                    if self.healthy_streak >= self.policy.regrow_after {
+                        self.healthy_streak = 0;
+                        let next = (cur + self.policy.regrow_step).min(self.full_len);
+                        self.override_len =
+                            if next >= self.full_len { None } else { Some(next) };
+                        return Some(self.override_len);
+                    }
+                }
+            }
+            Verdict::Warning => self.healthy_streak = 0,
+            Verdict::Diverged => {}
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller() -> Controller {
+        let policy = StabilityPolicy {
+            reentry_seqlen: 8,
+            lr_decay: 0.5,
+            regrow_after: 3,
+            regrow_step: 8,
+            max_rollbacks: 2,
+            ..StabilityPolicy::default()
+        };
+        Controller::new(policy, 32)
+    }
+
+    #[test]
+    fn rollback_shrinks_and_decays() {
+        let mut c = controller();
+        assert_eq!(c.lr_scale(), 1.0);
+        assert_eq!(c.override_len(), None);
+        let (len, scale) = c.on_rollback();
+        assert_eq!(len, 8);
+        assert_eq!(scale, 0.5);
+        assert_eq!(c.override_len(), Some(8));
+        let (_, scale) = c.on_rollback();
+        assert_eq!(scale, 0.25); // cumulative
+        assert!(c.exhausted()); // max_rollbacks = 2
+    }
+
+    #[test]
+    fn healthy_streak_regrows_then_clears() {
+        let mut c = controller();
+        c.on_rollback();
+        // two healthy steps: not enough (regrow_after = 3)
+        assert!(c.on_verdict(Verdict::Healthy).is_none());
+        assert!(c.on_verdict(Verdict::Healthy).is_none());
+        // third: 8 -> 16
+        assert_eq!(c.on_verdict(Verdict::Healthy), Some(Some(16)));
+        for _ in 0..2 {
+            assert!(c.on_verdict(Verdict::Healthy).is_none());
+        }
+        // 16 -> 24
+        assert_eq!(c.on_verdict(Verdict::Healthy), Some(Some(24)));
+        for _ in 0..2 {
+            assert!(c.on_verdict(Verdict::Healthy).is_none());
+        }
+        // 24 + 8 = 32 = full: cap cleared
+        assert_eq!(c.on_verdict(Verdict::Healthy), Some(None));
+        assert_eq!(c.override_len(), None);
+        // LR scale persists after the cap clears
+        assert_eq!(c.lr_scale(), 0.5);
+    }
+
+    #[test]
+    fn warning_resets_the_streak() {
+        let mut c = controller();
+        c.on_rollback();
+        c.on_verdict(Verdict::Healthy);
+        c.on_verdict(Verdict::Healthy);
+        c.on_verdict(Verdict::Warning); // streak back to 0
+        assert!(c.on_verdict(Verdict::Healthy).is_none());
+        assert!(c.on_verdict(Verdict::Healthy).is_none());
+        assert_eq!(c.on_verdict(Verdict::Healthy), Some(Some(16)));
+    }
+
+    #[test]
+    fn reentry_clamped_to_full_length() {
+        let policy =
+            StabilityPolicy { reentry_seqlen: 64, ..StabilityPolicy::default() };
+        let mut c = Controller::new(policy, 32);
+        let (len, _) = c.on_rollback();
+        assert_eq!(len, 32);
+    }
+}

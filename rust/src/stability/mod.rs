@@ -1,0 +1,317 @@
+//! The stability autopilot — the paper's §3 analysis promoted from a
+//! post-hoc diagnosis to an online control loop.
+//!
+//! The paper's central finding is that instability is *detectable online*:
+//! extreme gradient-variance spikes, driven by long sequences early in
+//! training, precede the loss blow-ups that end a run. This subsystem turns
+//! that observation into a feedback controller with three parts:
+//!
+//! * [`sentinel`] — an online detector over the per-step training stats
+//!   (EWMA of the Adam variance max-element, loss-spike ratio, an absolute
+//!   loss ceiling calibrated off the init loss, and a NaN/inf guard) that
+//!   classifies every step as `Healthy / Warning / Diverged`;
+//! * [`rollback`] — a ring of periodic in-memory snapshots of the full
+//!   `TrainState` (optionally spilled to disk via `train::checkpoint`), so
+//!   a `Diverged` verdict restores the last healthy state instead of
+//!   killing the run;
+//! * [`controller`] — the closed-loop policy: on rollback it re-enters the
+//!   pacing ramp at a short sequence length and decays the LR, then
+//!   cautiously re-grows the length after a healthy streak — the paper's
+//!   *adaptive* SLW variant driven by variance statistics instead of a
+//!   loss heuristic;
+//! * [`report`] — the per-run [`report::StabilityTrace`] (verdict counts,
+//!   rollbacks, schedule interventions) that rides on `RunHistory` into
+//!   the experiment tables and the coordinator's persistent run cache.
+//!
+//! The [`Autopilot`] below wires the three together behind a two-call
+//! surface (`bootstrap` once, `observe` per step) so the trainer's hot
+//! loop stays a single match.
+
+pub mod controller;
+pub mod report;
+pub mod rollback;
+pub mod sentinel;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{StepStats, TrainState};
+
+pub use controller::Controller;
+pub use report::{Intervention, RollbackEvent, StabilityTrace};
+pub use rollback::{CheckpointRing, Snapshot};
+pub use sentinel::{Observation, Sentinel, Verdict};
+
+/// Knobs of the closed loop. Part of `RunConfig`, so the coordinator's run
+/// cache keys fold it in (any threshold change re-executes the run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StabilityPolicy {
+    /// EWMA smoothing factor for the loss / variance reference series.
+    pub ewma_alpha: f64,
+    /// `var_max ≥ factor × EWMA(var_max)` ⇒ Diverged (half that ⇒ Warning).
+    pub var_spike_factor: f64,
+    /// `loss ≥ ratio × EWMA(loss)` ⇒ Warning.
+    pub warn_ratio: f64,
+    /// `loss ≥ ratio × EWMA(loss)` ⇒ Diverged.
+    pub diverge_ratio: f64,
+    /// `loss ≥ factor × first observed loss` ⇒ Diverged, even while the
+    /// EWMAs are still warming up (the init loss ≈ ln(vocab) is the
+    /// random-prediction baseline; far above it means pathology).
+    pub loss_ceiling_factor: f64,
+    /// Steps of EWMA warmup before the ratio tests start judging (the
+    /// NaN/inf guard and the loss ceiling are always active).
+    pub warmup_steps: usize,
+    /// Snapshot the training state every this many healthy steps.
+    pub snapshot_every: usize,
+    /// Snapshots kept in the ring.
+    pub ring: usize,
+    /// On rollback, re-enter the pacing ramp at this sequence length.
+    pub reentry_seqlen: usize,
+    /// On rollback, multiply the LR scale by this.
+    pub lr_decay: f64,
+    /// Healthy steps before the controller re-grows the seqlen override.
+    pub regrow_after: usize,
+    /// Re-grow increment (the pacing layer aligns it to the bucket ladder).
+    pub regrow_step: usize,
+    /// Give up (record the divergence and stop) after this many rollbacks.
+    pub max_rollbacks: usize,
+    /// Also spill ring snapshots to `<dir>/ring_<slot>.ckpt` for crash
+    /// recovery (None = in-memory only).
+    pub spill_dir: Option<String>,
+}
+
+impl Default for StabilityPolicy {
+    fn default() -> Self {
+        Self {
+            ewma_alpha: 0.25,
+            var_spike_factor: 16.0,
+            warn_ratio: 1.5,
+            diverge_ratio: 3.0,
+            loss_ceiling_factor: 2.5,
+            warmup_steps: 5,
+            snapshot_every: 5,
+            ring: 3,
+            reentry_seqlen: 8,
+            lr_decay: 0.5,
+            regrow_after: 8,
+            regrow_step: 8,
+            max_rollbacks: 12,
+            spill_dir: None,
+        }
+    }
+}
+
+impl StabilityPolicy {
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.ewma_alpha && self.ewma_alpha <= 1.0) {
+            bail!("ewma_alpha must be in (0, 1], got {}", self.ewma_alpha);
+        }
+        if self.var_spike_factor <= 1.0 {
+            bail!("var_spike_factor must be > 1, got {}", self.var_spike_factor);
+        }
+        if !(1.0 < self.warn_ratio && self.warn_ratio < self.diverge_ratio) {
+            bail!(
+                "need 1 < warn_ratio < diverge_ratio, got {} / {}",
+                self.warn_ratio,
+                self.diverge_ratio
+            );
+        }
+        if self.loss_ceiling_factor <= 1.0 {
+            bail!("loss_ceiling_factor must be > 1, got {}", self.loss_ceiling_factor);
+        }
+        if self.snapshot_every == 0 || self.ring == 0 {
+            bail!("snapshot_every and ring must be ≥ 1");
+        }
+        if self.reentry_seqlen < 8 {
+            bail!("reentry_seqlen {} must be ≥ 8 (alignment floor)", self.reentry_seqlen);
+        }
+        if !(0.0 < self.lr_decay && self.lr_decay <= 1.0) {
+            bail!("lr_decay must be in (0, 1], got {}", self.lr_decay);
+        }
+        if self.regrow_after == 0 || self.regrow_step == 0 {
+            bail!("regrow_after and regrow_step must be ≥ 1");
+        }
+        if self.max_rollbacks == 0 {
+            bail!("max_rollbacks must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
+/// What the trainer must do after the autopilot inspected a step.
+#[derive(Debug)]
+pub enum Outcome {
+    /// Step is fine (or merely a warning) — record it and carry on.
+    Proceed,
+    /// The state was restored to an earlier snapshot; rewind the loop's
+    /// bookkeeping to `to_step` / `to_tokens` and do not record the step.
+    RolledBack { to_step: u64, to_tokens: u64 },
+    /// Out of rollbacks — record the divergence and stop the run.
+    GaveUp,
+}
+
+/// Sentinel + checkpoint ring + controller behind one per-step call.
+pub struct Autopilot {
+    policy: StabilityPolicy,
+    sentinel: Sentinel,
+    ring: CheckpointRing,
+    controller: Controller,
+    trace: StabilityTrace,
+    steps_since_snapshot: usize,
+    snapshots_since_rollback: usize,
+}
+
+impl Autopilot {
+    /// `full_len` is the run's full sequence length (the re-grow target).
+    pub fn new(policy: StabilityPolicy, full_len: usize) -> Self {
+        let mut ring = CheckpointRing::new(policy.ring);
+        if let Some(dir) = &policy.spill_dir {
+            ring = ring.with_spill(std::path::PathBuf::from(dir));
+        }
+        Self {
+            sentinel: Sentinel::new(&policy),
+            controller: Controller::new(policy.clone(), full_len),
+            ring,
+            policy,
+            trace: StabilityTrace::default(),
+            steps_since_snapshot: 0,
+            snapshots_since_rollback: 0,
+        }
+    }
+
+    /// Snapshot the pristine init state so a rollback always has a floor,
+    /// even when the run diverges before the first periodic snapshot.
+    pub fn bootstrap(&mut self, state: &TrainState) -> Result<()> {
+        self.ring.snapshot(state)?;
+        self.snapshots_since_rollback = 1;
+        Ok(())
+    }
+
+    /// Cumulative LR multiplier (decayed on every rollback).
+    pub fn lr_scale(&self) -> f64 {
+        self.controller.lr_scale()
+    }
+
+    /// Current sequence-length cap (None = nominal schedule).
+    pub fn override_len(&self) -> Option<usize> {
+        self.controller.override_len()
+    }
+
+    /// Inspect one executed step. Call BEFORE recording it into the run
+    /// history: a rolled-back step never happened as far as the history is
+    /// concerned (it lives in the [`StabilityTrace`] instead).
+    pub fn observe(
+        &mut self,
+        step: usize,
+        stats: &StepStats,
+        state: &mut TrainState,
+    ) -> Result<Outcome> {
+        let obs = self.sentinel.observe(stats);
+        match obs.verdict {
+            Verdict::Healthy => {
+                self.trace.n_healthy += 1;
+                if let Some(new_len) = self.controller.on_verdict(Verdict::Healthy) {
+                    self.trace.interventions.push(Intervention {
+                        at_step: step,
+                        override_len: new_len,
+                    });
+                }
+                self.steps_since_snapshot += 1;
+                if self.steps_since_snapshot >= self.policy.snapshot_every {
+                    self.ring.snapshot(state)?;
+                    self.steps_since_snapshot = 0;
+                    self.snapshots_since_rollback += 1;
+                }
+                Ok(Outcome::Proceed)
+            }
+            Verdict::Warning => {
+                self.trace.n_warning += 1;
+                self.controller.on_verdict(Verdict::Warning);
+                Ok(Outcome::Proceed)
+            }
+            Verdict::Diverged => {
+                self.trace.n_diverged += 1;
+                if self.controller.exhausted() {
+                    self.trace.gave_up = true;
+                    return Ok(Outcome::GaveUp);
+                }
+                // no snapshot since the last rollback means the newest slot
+                // led straight back here — roll one snapshot deeper
+                if self.snapshots_since_rollback == 0 {
+                    self.ring.drop_latest();
+                }
+                let (to_step, to_tokens) = match self.ring.latest() {
+                    Some(snap) => {
+                        snap.restore_into(state);
+                        (snap.step, snap.tokens)
+                    }
+                    None => {
+                        self.trace.gave_up = true;
+                        return Ok(Outcome::GaveUp);
+                    }
+                };
+                let (reentry, lr_scale) = self.controller.on_rollback();
+                self.sentinel.reset();
+                self.steps_since_snapshot = 0;
+                self.snapshots_since_rollback = 0;
+                self.trace.rollbacks.push(RollbackEvent {
+                    at_step: step,
+                    restored_step: to_step,
+                    wasted_steps: step.saturating_sub(to_step as usize) + 1,
+                    loss_ratio: obs.loss_ratio,
+                    var_ratio: obs.var_ratio,
+                    lr_scale_after: lr_scale,
+                    reentry_seqlen: reentry,
+                });
+                self.trace.interventions.push(Intervention {
+                    at_step: step,
+                    override_len: Some(reentry),
+                });
+                Ok(Outcome::RolledBack { to_step, to_tokens })
+            }
+        }
+    }
+
+    pub fn trace(&self) -> &StabilityTrace {
+        &self.trace
+    }
+
+    pub fn into_trace(self) -> StabilityTrace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> StabilityPolicy {
+        StabilityPolicy::default()
+    }
+
+    #[test]
+    fn default_policy_validates() {
+        policy().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let mut p = policy();
+        p.ewma_alpha = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = policy();
+        p.warn_ratio = 5.0; // above diverge_ratio
+        assert!(p.validate().is_err());
+        let mut p = policy();
+        p.reentry_seqlen = 4;
+        assert!(p.validate().is_err());
+        let mut p = policy();
+        p.lr_decay = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = policy();
+        p.ring = 0;
+        assert!(p.validate().is_err());
+        let mut p = policy();
+        p.max_rollbacks = 0;
+        assert!(p.validate().is_err());
+    }
+}

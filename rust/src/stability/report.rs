@@ -1,0 +1,220 @@
+//! Per-run stability record: what the sentinel saw and what the control
+//! loop did about it.
+//!
+//! The trace rides on `RunHistory` (None for open-loop runs), so it lands
+//! in the experiment tables and — via the JSON codec here — in the
+//! coordinator's persistent run-cache entries.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{self, Json};
+
+/// One rollback: where the sentinel fired, where the state was restored
+/// to, and the control response.
+#[derive(Clone, Copy, Debug)]
+pub struct RollbackEvent {
+    /// loop step whose reading triggered the rollback
+    pub at_step: usize,
+    /// completed-step count the state was restored to
+    pub restored_step: u64,
+    /// executed steps discarded by the rewind (incl. the trigger step)
+    pub wasted_steps: usize,
+    /// sentinel loss ratio at the trigger (+inf = NaN guard)
+    pub loss_ratio: f64,
+    /// sentinel variance ratio at the trigger (+inf = NaN guard)
+    pub var_ratio: f64,
+    /// cumulative LR multiplier after this rollback's decay
+    pub lr_scale_after: f64,
+    /// sequence length the pacing ramp was re-entered at
+    pub reentry_seqlen: usize,
+}
+
+/// One schedule intervention: the controller moved the seqlen cap.
+#[derive(Clone, Copy, Debug)]
+pub struct Intervention {
+    pub at_step: usize,
+    /// new cap (None = cap lifted, back on the nominal schedule)
+    pub override_len: Option<usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct StabilityTrace {
+    pub n_healthy: usize,
+    pub n_warning: usize,
+    pub n_diverged: usize,
+    pub rollbacks: Vec<RollbackEvent>,
+    pub interventions: Vec<Intervention>,
+    /// the rollback budget ran out and the run stopped diverged
+    pub gave_up: bool,
+}
+
+impl StabilityTrace {
+    pub fn n_rollbacks(&self) -> usize {
+        self.rollbacks.len()
+    }
+
+    /// Total executed steps the rollbacks threw away (the recovery cost).
+    pub fn wasted_steps(&self) -> usize {
+        self.rollbacks.iter().map(|r| r.wasted_steps).sum()
+    }
+
+    /// One-line summary for tables and the train CLI.
+    pub fn summary(&self) -> String {
+        let outcome = if self.gave_up {
+            "gave up"
+        } else if self.rollbacks.is_empty() {
+            "clean"
+        } else {
+            "recovered"
+        };
+        format!(
+            "{}h/{}w/{}d; {} rollback(s), {} wasted step(s); {outcome}",
+            self.n_healthy,
+            self.n_warning,
+            self.n_diverged,
+            self.rollbacks.len(),
+            self.wasted_steps()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rollbacks = self
+            .rollbacks
+            .iter()
+            .map(|r| {
+                Json::Arr(vec![
+                    json::num(r.at_step as f64),
+                    json::num(r.restored_step as f64),
+                    json::num(r.wasted_steps as f64),
+                    json::num_nf(r.loss_ratio),
+                    json::num_nf(r.var_ratio),
+                    json::num(r.lr_scale_after),
+                    json::num(r.reentry_seqlen as f64),
+                ])
+            })
+            .collect();
+        let interventions = self
+            .interventions
+            .iter()
+            .map(|i| {
+                Json::Arr(vec![
+                    json::num(i.at_step as f64),
+                    // 0 encodes "cap lifted" (a real cap is always ≥ 8)
+                    json::num(i.override_len.unwrap_or(0) as f64),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("n_healthy", json::num(self.n_healthy as f64)),
+            ("n_warning", json::num(self.n_warning as f64)),
+            ("n_diverged", json::num(self.n_diverged as f64)),
+            ("rollbacks", Json::Arr(rollbacks)),
+            ("interventions", Json::Arr(interventions)),
+            ("gave_up", Json::Bool(self.gave_up)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut t = StabilityTrace {
+            n_healthy: j.get("n_healthy")?.usize()?,
+            n_warning: j.get("n_warning")?.usize()?,
+            n_diverged: j.get("n_diverged")?.usize()?,
+            gave_up: j.get("gave_up")?.bool()?,
+            ..Default::default()
+        };
+        for row in j.get("rollbacks")?.arr()? {
+            let c = row.arr()?;
+            if c.len() != 7 {
+                bail!("rollback row has {} columns, expected 7", c.len());
+            }
+            t.rollbacks.push(RollbackEvent {
+                at_step: c[0].usize()?,
+                restored_step: c[1].num()? as u64,
+                wasted_steps: c[2].usize()?,
+                loss_ratio: json::get_nf(&c[3])?,
+                var_ratio: json::get_nf(&c[4])?,
+                lr_scale_after: c[5].num()?,
+                reentry_seqlen: c[6].usize()?,
+            });
+        }
+        for row in j.get("interventions")?.arr()? {
+            let c = row.arr()?;
+            if c.len() != 2 {
+                bail!("intervention row has {} columns, expected 2", c.len());
+            }
+            let len = c[1].usize()?;
+            t.interventions.push(Intervention {
+                at_step: c[0].usize()?,
+                override_len: if len == 0 { None } else { Some(len) },
+            });
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> StabilityTrace {
+        StabilityTrace {
+            n_healthy: 40,
+            n_warning: 3,
+            n_diverged: 2,
+            rollbacks: vec![
+                RollbackEvent {
+                    at_step: 12,
+                    restored_step: 10,
+                    wasted_steps: 3,
+                    loss_ratio: f64::INFINITY, // NaN guard path
+                    var_ratio: 22.5,
+                    lr_scale_after: 0.5,
+                    reentry_seqlen: 8,
+                },
+                RollbackEvent {
+                    at_step: 20,
+                    restored_step: 15,
+                    wasted_steps: 6,
+                    loss_ratio: 3.75,
+                    var_ratio: 1.5,
+                    lr_scale_after: 0.25,
+                    reentry_seqlen: 8,
+                },
+            ],
+            interventions: vec![
+                Intervention { at_step: 12, override_len: Some(8) },
+                Intervention { at_step: 30, override_len: Some(16) },
+                Intervention { at_step: 38, override_len: None },
+            ],
+            gave_up: false,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = trace();
+        let enc = t.to_json().to_string();
+        let dec = StabilityTrace::from_json(&Json::parse(&enc).unwrap()).unwrap();
+        assert_eq!(dec.n_healthy, 40);
+        assert_eq!(dec.n_warning, 3);
+        assert_eq!(dec.n_diverged, 2);
+        assert_eq!(dec.rollbacks.len(), 2);
+        assert!(dec.rollbacks[0].loss_ratio.is_infinite());
+        assert_eq!(dec.rollbacks[1].loss_ratio, 3.75);
+        assert_eq!(dec.rollbacks[1].lr_scale_after, 0.25);
+        assert_eq!(dec.interventions.len(), 3);
+        assert_eq!(dec.interventions[1].override_len, Some(16));
+        assert_eq!(dec.interventions[2].override_len, None);
+        assert!(!dec.gave_up);
+    }
+
+    #[test]
+    fn summary_reads_like_a_sentence() {
+        let s = trace().summary();
+        assert!(s.contains("2 rollback(s)"), "{s}");
+        assert!(s.contains("recovered"), "{s}");
+        assert!(s.contains("9 wasted step(s)"), "{s}");
+        let clean = StabilityTrace::default().summary();
+        assert!(clean.contains("clean"), "{clean}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Checkpoint ring: periodic snapshots of the full training state so a
+//! `Diverged` verdict restores the last healthy point instead of ending
+//! the run.
+//!
+//! Snapshots live in host memory as plain `Vec<f32>`s (xla `Literal`s wrap
+//! runtime handles and are rebuilt on restore); with a spill directory set,
+//! every snapshot is also written through `train::checkpoint` as
+//! `ring_<slot>.ckpt` so a crashed process can resume from disk.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::TrainState;
+use crate::train::checkpoint;
+
+/// Host-side copy of a [`TrainState`] at one step.
+#[derive(Clone)]
+pub struct Snapshot {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    pub tokens: u64,
+}
+
+impl Snapshot {
+    pub fn capture(state: &TrainState) -> Result<Self> {
+        Ok(Self {
+            params: state.params.to_vec::<f32>()?,
+            m: state.m.to_vec::<f32>()?,
+            v: state.v.to_vec::<f32>()?,
+            step: state.step,
+            tokens: state.tokens,
+        })
+    }
+
+    /// Overwrite `state` with this snapshot. The decay mask is constant
+    /// over a run, so only params/moments/counters are restored.
+    pub fn restore_into(&self, state: &mut TrainState) {
+        state.params = Literal::vec1(&self.params);
+        state.m = Literal::vec1(&self.m);
+        state.v = Literal::vec1(&self.v);
+        state.step = self.step;
+        state.tokens = self.tokens;
+    }
+}
+
+pub struct CheckpointRing {
+    keep: usize,
+    slots: VecDeque<Snapshot>,
+    /// disk slot index of each in-memory snapshot (aligned with `slots`)
+    disk_slots: VecDeque<usize>,
+    spill: Option<PathBuf>,
+    /// total snapshots ever taken (disk slot index = n mod keep)
+    n_snapshots: usize,
+}
+
+impl CheckpointRing {
+    pub fn new(keep: usize) -> Self {
+        Self {
+            keep: keep.max(1),
+            slots: VecDeque::new(),
+            disk_slots: VecDeque::new(),
+            spill: None,
+            n_snapshots: 0,
+        }
+    }
+
+    /// Also persist every snapshot under `dir` (crash recovery).
+    pub fn with_spill(mut self, dir: PathBuf) -> Self {
+        self.spill = Some(dir);
+        self
+    }
+
+    pub fn snapshot(&mut self, state: &TrainState) -> Result<()> {
+        let snap = Snapshot::capture(state)?;
+        let slot = self.n_snapshots % self.keep;
+        if let Some(dir) = &self.spill {
+            checkpoint::save(state, &dir.join(format!("ring_{slot}.ckpt")))?;
+        }
+        if self.slots.len() == self.keep {
+            self.slots.pop_front();
+            self.disk_slots.pop_front();
+        }
+        self.slots.push_back(snap);
+        self.disk_slots.push_back(slot);
+        self.n_snapshots += 1;
+        Ok(())
+    }
+
+    /// Newest snapshot (the rollback target).
+    pub fn latest(&self) -> Option<&Snapshot> {
+        self.slots.back()
+    }
+
+    /// Discard the newest snapshot so the next rollback lands one slot
+    /// deeper — used when restoring the newest led straight back to a
+    /// divergence. Its spilled checkpoint is deleted too, so a crash can
+    /// never resume from a snapshot the autopilot already judged poisoned.
+    /// The oldest snapshot is never dropped (there must always be a floor
+    /// to return to). Returns whether a slot was dropped.
+    pub fn drop_latest(&mut self) -> bool {
+        if self.slots.len() > 1 {
+            self.slots.pop_back();
+            if let (Some(slot), Some(dir)) = (self.disk_slots.pop_back(), &self.spill) {
+                std::fs::remove_file(dir.join(format!("ring_{slot}.ckpt"))).ok();
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn n_snapshots(&self) -> usize {
+        self.n_snapshots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn state(seed: u64) -> (Manifest, TrainState) {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        let st = TrainState::init(&man, seed);
+        (man, st)
+    }
+
+    #[test]
+    fn snapshot_restores_exact_state() {
+        let (_, mut st) = state(3);
+        st.step = 7;
+        st.tokens = 700;
+        let snap = Snapshot::capture(&st).unwrap();
+        // wreck the live state, then restore
+        let (_, other) = state(99);
+        st.params = Literal::vec1(&other.params.to_vec::<f32>().unwrap());
+        st.step = 123;
+        st.tokens = 9999;
+        snap.restore_into(&mut st);
+        assert_eq!(st.step, 7);
+        assert_eq!(st.tokens, 700);
+        assert_eq!(st.params_vec().unwrap(), snap.params);
+        assert_eq!(st.m.to_vec::<f32>().unwrap(), snap.m);
+        assert_eq!(st.v.to_vec::<f32>().unwrap(), snap.v);
+    }
+
+    #[test]
+    fn ring_rotates_and_keeps_a_floor() {
+        let (_, mut st) = state(0);
+        let mut ring = CheckpointRing::new(2);
+        assert!(ring.is_empty());
+        for step in 1..=3u64 {
+            st.step = step;
+            ring.snapshot(&st).unwrap();
+        }
+        // keep=2: steps 2 and 3 survive, step 1 rotated out
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.latest().unwrap().step, 3);
+        assert!(ring.drop_latest());
+        assert_eq!(ring.latest().unwrap().step, 2);
+        // the last slot is the floor — never dropped
+        assert!(!ring.drop_latest());
+        assert_eq!(ring.latest().unwrap().step, 2);
+        assert_eq!(ring.n_snapshots(), 3);
+    }
+
+    #[test]
+    fn spill_writes_loadable_checkpoints() {
+        let (man, mut st) = state(5);
+        st.step = 11;
+        st.tokens = 1100;
+        let dir = std::env::temp_dir()
+            .join(format!("slw_ring_spill_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ring = CheckpointRing::new(2).with_spill(dir.clone());
+        ring.snapshot(&st).unwrap();
+        let loaded = checkpoint::load(&man, &dir.join("ring_0.ckpt")).unwrap();
+        assert_eq!(loaded.step, 11);
+        assert_eq!(loaded.tokens, 1100);
+        assert_eq!(loaded.params_vec().unwrap(), st.params_vec().unwrap());
+        // dropping a poisoned newest slot must delete its spill file too,
+        // so crash recovery can never resume from it
+        st.step = 12;
+        ring.snapshot(&st).unwrap();
+        assert!(dir.join("ring_1.ckpt").exists());
+        assert!(ring.drop_latest());
+        assert!(!dir.join("ring_1.ckpt").exists());
+        assert!(dir.join("ring_0.ckpt").exists(), "the floor's spill survives");
+        assert_eq!(ring.latest().unwrap().step, 11);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,223 @@
+//! Online divergence detector over the per-step training statistics.
+//!
+//! §3 of the paper correlates loss-ratio spikes with the Adam
+//! variance-state extremes (Table 3: loss ratio ~ `var_max`, r ≈ 0.9 on the
+//! unstable cases) and observes that the variance spike *precedes* the
+//! unrecoverable NaN. The sentinel watches both series online against EWMA
+//! references, plus two absolute guards that need no warmup: the NaN/inf
+//! guard and a loss ceiling calibrated off the first observed loss (the
+//! init loss ≈ ln(vocab) is the random-prediction baseline — training that
+//! lands far above it has blown up, however smoothly it got there).
+
+use crate::runtime::StepStats;
+
+use super::StabilityPolicy;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Healthy,
+    Warning,
+    Diverged,
+}
+
+/// One sentinel reading: the verdict plus the ratios that produced it
+/// (recorded in the [`super::StabilityTrace`] on rollback).
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    pub verdict: Verdict,
+    /// step loss / EWMA(loss); +inf for non-finite stats
+    pub loss_ratio: f64,
+    /// step var_max / EWMA(var_max); +inf for non-finite stats
+    pub var_ratio: f64,
+}
+
+pub struct Sentinel {
+    policy: StabilityPolicy,
+    loss_ewma: f64,
+    var_ewma: f64,
+    n_seen: usize,
+    /// first finite loss ever observed — survives [`Sentinel::reset`] so
+    /// the absolute ceiling stays calibrated across rollbacks
+    first_loss: Option<f64>,
+}
+
+impl Sentinel {
+    pub fn new(policy: &StabilityPolicy) -> Self {
+        Self {
+            policy: policy.clone(),
+            loss_ewma: 0.0,
+            var_ewma: 0.0,
+            n_seen: 0,
+            first_loss: None,
+        }
+    }
+
+    /// Classify one executed step and (unless it diverged) fold it into the
+    /// EWMA references.
+    pub fn observe(&mut self, stats: &StepStats) -> Observation {
+        let loss = stats.loss as f64;
+        let var = stats.var_max as f64;
+        // NaN/inf guard — always active
+        if !stats.is_finite() || !loss.is_finite() || !var.is_finite() {
+            return Observation {
+                verdict: Verdict::Diverged,
+                loss_ratio: f64::INFINITY,
+                var_ratio: f64::INFINITY,
+            };
+        }
+        if self.first_loss.is_none() {
+            self.first_loss = Some(loss);
+        }
+        let loss_ratio = if self.n_seen > 0 && self.loss_ewma > 0.0 {
+            loss / self.loss_ewma
+        } else {
+            1.0
+        };
+        let var_ratio = if self.n_seen > 0 && self.var_ewma > 1e-12 {
+            var / self.var_ewma
+        } else {
+            1.0
+        };
+        // absolute ceiling — always active (catches a blow-up that happens
+        // during EWMA warmup, when the ratio tests are still blind)
+        let ceiling =
+            self.first_loss.map_or(f64::INFINITY, |f| f * self.policy.loss_ceiling_factor);
+        let warm = self.n_seen >= self.policy.warmup_steps;
+        let verdict = if loss >= ceiling
+            || (warm
+                && (loss_ratio >= self.policy.diverge_ratio
+                    || var_ratio >= self.policy.var_spike_factor))
+        {
+            Verdict::Diverged
+        } else if warm
+            && (loss_ratio >= self.policy.warn_ratio
+                || var_ratio >= 0.5 * self.policy.var_spike_factor)
+        {
+            Verdict::Warning
+        } else {
+            Verdict::Healthy
+        };
+        if verdict != Verdict::Diverged {
+            // diverged readings never poison the references — the step is
+            // about to be rolled back
+            let a = self.policy.ewma_alpha;
+            if self.n_seen == 0 {
+                self.loss_ewma = loss;
+                self.var_ewma = var;
+            } else {
+                self.loss_ewma = a * loss + (1.0 - a) * self.loss_ewma;
+                self.var_ewma = a * var + (1.0 - a) * self.var_ewma;
+            }
+            self.n_seen += 1;
+        }
+        Observation { verdict, loss_ratio, var_ratio }
+    }
+
+    /// Forget the EWMA references (after a rollback restored older state);
+    /// the absolute loss ceiling keeps its calibration.
+    pub fn reset(&mut self) {
+        self.loss_ewma = 0.0;
+        self.var_ewma = 0.0;
+        self.n_seen = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(loss: f32, var_max: f32) -> StepStats {
+        StepStats {
+            loss,
+            grad_l2: 1.0,
+            var_l1: 10.0 * var_max,
+            var_max,
+            mom_l1: 1.0,
+            clip_coef: 1.0,
+        }
+    }
+
+    fn sentinel() -> Sentinel {
+        Sentinel::new(&StabilityPolicy::default())
+    }
+
+    #[test]
+    fn healthy_run_stays_healthy() {
+        let mut s = sentinel();
+        let mut loss = 6.0f32;
+        for _ in 0..100 {
+            let o = s.observe(&stats(loss, 0.1));
+            assert_eq!(o.verdict, Verdict::Healthy);
+            loss *= 0.99;
+        }
+    }
+
+    #[test]
+    fn nan_is_instantly_diverged() {
+        let mut s = sentinel();
+        let o = s.observe(&stats(f32::NAN, 0.1));
+        assert_eq!(o.verdict, Verdict::Diverged);
+        assert!(o.loss_ratio.is_infinite());
+        // inf var too, even with finite loss
+        let o = s.observe(&stats(5.0, f32::INFINITY));
+        assert_eq!(o.verdict, Verdict::Diverged);
+    }
+
+    #[test]
+    fn loss_spike_warns_then_diverges() {
+        let mut s = sentinel();
+        for _ in 0..10 {
+            assert_eq!(s.observe(&stats(5.0, 0.1)).verdict, Verdict::Healthy);
+        }
+        // 1.6x the EWMA: warning (warn 1.5, diverge 3.0)
+        assert_eq!(s.observe(&stats(8.0, 0.1)).verdict, Verdict::Warning);
+        // 2.5x first loss = 12.5: absolute ceiling kicks in
+        assert_eq!(s.observe(&stats(13.0, 0.1)).verdict, Verdict::Diverged);
+    }
+
+    #[test]
+    fn ceiling_fires_even_during_warmup() {
+        let mut s = sentinel();
+        assert_eq!(s.observe(&stats(6.0, 0.1)).verdict, Verdict::Healthy);
+        // EWMA warmup is 5 steps, but 2.5 × 6.0 = 15 is breached at step 1
+        assert_eq!(s.observe(&stats(20.0, 0.1)).verdict, Verdict::Diverged);
+    }
+
+    #[test]
+    fn variance_spike_preempts() {
+        let mut s = sentinel();
+        for _ in 0..10 {
+            s.observe(&stats(5.0, 0.1));
+        }
+        // 8x the var EWMA (half of 16): warning, loss still fine
+        assert_eq!(s.observe(&stats(5.0, 0.85)).verdict, Verdict::Warning);
+        // ≥ 16x: diverged before the loss ever moved
+        let o = s.observe(&stats(5.0, 5.0));
+        assert_eq!(o.verdict, Verdict::Diverged);
+        assert!(o.var_ratio > 16.0);
+    }
+
+    #[test]
+    fn reset_clears_references_but_keeps_ceiling() {
+        let mut s = sentinel();
+        for _ in 0..10 {
+            s.observe(&stats(5.0, 0.1));
+        }
+        s.reset();
+        // post-reset warmup: relative tests are blind again...
+        assert_eq!(s.observe(&stats(7.0, 0.5)).verdict, Verdict::Healthy);
+        // ...but the absolute ceiling (2.5 × 5.0 = 12.5) still fires
+        assert_eq!(s.observe(&stats(13.0, 0.1)).verdict, Verdict::Diverged);
+    }
+
+    #[test]
+    fn diverged_reading_does_not_poison_ewma() {
+        let mut s = sentinel();
+        for _ in 0..10 {
+            s.observe(&stats(5.0, 0.1));
+        }
+        let before = s.loss_ewma;
+        s.observe(&stats(100.0, 0.1)); // diverged
+        assert_eq!(s.loss_ewma, before);
+    }
+}

@@ -7,6 +7,7 @@
 //! norm / max-element series — all computed here from the per-step records.
 
 use crate::runtime::StepStats;
+use crate::stability::report::StabilityTrace;
 use crate::util::stats::{pearson, pearson_p_value};
 
 #[derive(Clone, Copy, Debug)]
@@ -36,6 +37,8 @@ pub struct RunHistory {
     pub evals: Vec<EvalRecord>,
     /// first step whose loss went non-finite (unrecoverable divergence)
     pub diverged_at: Option<usize>,
+    /// the stability autopilot's per-run record (None for open-loop runs)
+    pub stability: Option<StabilityTrace>,
 }
 
 impl RunHistory {
@@ -48,6 +51,18 @@ impl RunHistory {
             self.diverged_at = Some(rec.step);
         }
         self.steps.push(rec);
+    }
+
+    /// Undo everything recorded at or past executed step `n_steps` (the
+    /// autopilot's rollback path): the step trace is truncated, eval
+    /// records past the restore point are dropped, and a divergence mark
+    /// the rewind has undone is cleared.
+    pub fn rewind(&mut self, n_steps: usize) {
+        self.steps.truncate(n_steps);
+        self.evals.retain(|e| e.step < n_steps);
+        if self.diverged_at.is_some_and(|s| s >= n_steps) {
+            self.diverged_at = None;
+        }
     }
 
     pub fn losses(&self) -> Vec<f64> {
@@ -277,6 +292,28 @@ mod tests {
         assert!(c.r_max > 0.5, "r_max = {}", c.r_max);
         assert!(c.p_max < 1e-6);
         assert_eq!(c.n, 300);
+    }
+
+    #[test]
+    fn rewind_undoes_steps_evals_and_divergence() {
+        let mut h = RunHistory::new("t");
+        for (i, l) in [5.0, 4.5, 4.0, f32::NAN].iter().enumerate() {
+            h.record(rec(i, *l, 0.1));
+        }
+        h.evals.push(EvalRecord { step: 1, tokens_after: 1024, val_ppl: 40.0, sim_hours: 0.1 });
+        h.evals.push(EvalRecord { step: 3, tokens_after: 2048, val_ppl: 90.0, sim_hours: 0.2 });
+        assert_eq!(h.diverged_at, Some(3));
+        h.rewind(2);
+        assert_eq!(h.steps.len(), 2);
+        assert_eq!(h.evals.len(), 1, "eval past the restore point must drop");
+        assert_eq!(h.diverged_at, None, "the rewound divergence never happened");
+        assert!(!h.diverged());
+        // a divergence before the restore point survives a rewind
+        let mut d = RunHistory::new("d");
+        d.record(rec(0, f32::NAN, 0.1));
+        d.record(rec(1, 5.0, 0.1));
+        d.rewind(1);
+        assert_eq!(d.diverged_at, Some(0));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! * **synchronous**: the adaptive pacing function needs the step-t loss to
 //!   pick seqlen_{t+1}, so it runs through the `SlwBatcher` directly.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -26,6 +27,7 @@ use crate::pipeline::prefetch::Prefetcher;
 use crate::runtime::{Engine, TrainState};
 use crate::schedule::lr::{Horizon, LrSchedule};
 use crate::sim::cluster::{ClusterConfig, ClusterSim, ModelDims};
+use crate::stability::{Autopilot, Outcome};
 use crate::train::metrics::{EvalRecord, RunHistory, StepRecord};
 
 /// Stop after this many consecutive non-finite losses (the paper's
@@ -36,6 +38,46 @@ pub struct RunResult {
     pub history: RunHistory,
     pub state: TrainState,
     pub plan_steps: usize,
+}
+
+/// Worker-level corpus cache: generated `TokenStore`s keyed by
+/// (data recipe, vocab, seed). Sweeps schedule dozens of runs over the
+/// same diet; sharing the store stops every trainer from regenerating an
+/// identical synthetic corpus (ROADMAP "corpus sharing across runs").
+/// Generation is deterministic in the key, so a cache hit is
+/// observationally identical to a rebuild.
+#[derive(Default)]
+pub struct StoreCache {
+    stores: BTreeMap<String, Arc<TokenStore>>,
+}
+
+impl StoreCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.stores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stores.is_empty()
+    }
+
+    pub fn get_or_build(
+        &mut self,
+        recipe: &DataRecipe,
+        vocab: usize,
+        seed: u64,
+    ) -> Result<Arc<TokenStore>> {
+        let key = format!("{recipe:?}|v{vocab}|s{seed}");
+        if let Some(store) = self.stores.get(&key) {
+            return Ok(store.clone());
+        }
+        let store = Arc::new(build_data(recipe, vocab, seed)?);
+        self.stores.insert(key, store.clone());
+        Ok(store)
+    }
 }
 
 pub struct Trainer {
@@ -71,6 +113,18 @@ impl Trainer {
         engine: Engine,
         config: RunConfig,
     ) -> std::result::Result<Self, (Engine, anyhow::Error)> {
+        Self::with_engine_recoverable_cached(engine, config, None)
+    }
+
+    /// [`Trainer::with_engine_recoverable`] with a shared [`StoreCache`]:
+    /// the corpus is fetched from (or inserted into) the cache instead of
+    /// being regenerated per run. The coordinator's workers pass their
+    /// per-worker cache here.
+    pub fn with_engine_recoverable_cached(
+        engine: Engine,
+        config: RunConfig,
+        stores: Option<&mut StoreCache>,
+    ) -> std::result::Result<Self, (Engine, anyhow::Error)> {
         // every fallible step only reads the engine; it is consumed at the end
         let parts = (|| -> Result<(Arc<TokenStore>, SequenceIndex, ClusterSim)> {
             config.validate()?;
@@ -83,7 +137,10 @@ impl Trainer {
             }
             let vocab = engine.model().vocab;
             let full = engine.model().max_seqlen;
-            let store = Arc::new(build_data(&config.data, vocab, config.seed)?);
+            let store = match stores {
+                Some(cache) => cache.get_or_build(&config.data, vocab, config.seed)?,
+                None => Arc::new(build_data(&config.data, vocab, config.seed)?),
+            };
             let index = store.index(full, config.val_frac)?;
             let dims = ModelDims {
                 n_params: engine.manifest_for_batch(config.batch)?.n_params as u64,
@@ -147,7 +204,10 @@ impl Trainer {
 
     /// Run to the token budget. Returns the full history + final state.
     pub fn run(&mut self) -> Result<RunResult> {
-        if matches!(self.config.pacing, Pacing::Adaptive { .. }) {
+        // adaptive pacing needs the step-t loss; the autopilot can rewrite
+        // the schedule mid-run — neither can be pre-planned
+        if matches!(self.config.pacing, Pacing::Adaptive { .. }) || self.config.stability.is_some()
+        {
             return self.run_sync();
         }
         let pacing = self.bucketed_pacing()?;
@@ -213,17 +273,69 @@ impl Trainer {
             self.engine.manifest_for_batch(self.config.batch)?,
             self.config.seed,
         );
+        // the stability autopilot: sentinel over every executed step, a
+        // checkpoint ring to roll back to, and the closed-loop schedule
+        // response (ramp re-entry + LR decay)
+        let mut pilot = match &self.config.stability {
+            Some(policy) => {
+                let mut p = Autopilot::new(policy.clone(), self.index.full_seqlen());
+                p.bootstrap(&state)?;
+                Some(p)
+            }
+            None => None,
+        };
         let mut tokens = 0u64;
         let mut step = 0usize;
         let mut bad_streak = 0usize;
         while tokens < self.config.token_budget && step < max_steps {
             let bsz = bszw.bsz_at(tokens);
             let batch = batcher.next_batch(step, bsz, &mut sampler, &self.store)?;
-            let lr_t = lr.lr_at(step, tokens);
+            let mut lr_t = lr.lr_at(step, tokens);
+            if let Some(p) = &pilot {
+                lr_t *= p.lr_scale();
+            }
             let stats = self
                 .engine
                 .train_step(&mut state, &batch.tokens, batch.bsz, batch.seqlen, lr_t,
                             self.config.clip_norm)?;
+            if let Some(p) = &mut pilot {
+                match p.observe(step, &stats, &mut state)? {
+                    Outcome::RolledBack { to_step, to_tokens } => {
+                        // the poisoned steps never happened: rewind the
+                        // bookkeeping to the restored snapshot and replay
+                        // from there on the patched schedule
+                        crate::info!(
+                            "{}: autopilot rollback at step {step} -> step {to_step} \
+                             (seqlen cap {:?}, lr scale {:.4})",
+                            self.config.name,
+                            p.override_len(),
+                            p.lr_scale()
+                        );
+                        history.rewind(to_step as usize);
+                        step = to_step as usize;
+                        tokens = to_tokens;
+                        bad_streak = 0;
+                        batcher.override_seqlen(p.override_len());
+                        continue;
+                    }
+                    Outcome::GaveUp => {
+                        crate::info!(
+                            "{}: autopilot out of rollbacks at step {step}, stopping",
+                            self.config.name
+                        );
+                        tokens += batch.train_tokens;
+                        let spec = StepSpec {
+                            step,
+                            seqlen: batch.seqlen,
+                            bsz: batch.bsz,
+                            tokens_before: tokens - batch.train_tokens,
+                        };
+                        self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak);
+                        break;
+                    }
+                    Outcome::Proceed => batcher.override_seqlen(p.override_len()),
+                }
+            }
             if stats.loss.is_finite() {
                 batcher.observe_loss(stats.loss as f64);
             }
@@ -239,6 +351,9 @@ impl Trainer {
             }
             self.maybe_eval(&mut history, &state, &spec)?;
             step += 1;
+        }
+        if let Some(p) = pilot {
+            history.stability = Some(p.into_trace());
         }
         Ok(RunResult { history, state, plan_steps: step })
     }
@@ -354,7 +469,7 @@ mod tests {
         assert_eq!(out.history.steps.len(), 80);
         assert!(!out.history.diverged());
         let losses = out.history.losses();
-        assert!(losses.last().unwrap() < &(losses[0] - 0.25),
+        assert!(*losses.last().unwrap() < losses[0] - 0.25,
                 "loss {} -> {}", losses[0], losses.last().unwrap());
         assert_eq!(out.history.evals.len(), 4);
         assert!(out.history.sim_hours() > 0.0);
@@ -445,5 +560,100 @@ mod tests {
         let (_, max_ratio) = out.history.instability(1.2);
         assert!(out.history.diverged() || max_ratio > 2.0,
                 "LR 3.0 must destabilize (max ratio {max_ratio})");
+    }
+
+    #[test]
+    fn autopilot_is_a_noop_on_a_stable_run() {
+        // a healthy run under the autopilot must produce the exact same
+        // trajectory as the open loop (lr scale 1.0, no override) plus a
+        // clean trace — the sentinel only watches
+        let mut cfg = micro_cfg();
+        cfg.eval_every = 0;
+        cfg.token_budget = 4 * 32 * 40;
+        let open = Trainer::new(&root(), cfg.clone()).unwrap().run_sync().unwrap();
+        cfg.stability = Some(crate::stability::StabilityPolicy::default());
+        let auto = Trainer::new(&root(), cfg).unwrap().run_sync().unwrap();
+        assert_eq!(open.history.losses(), auto.history.losses());
+        let trace = auto.history.stability.expect("autopilot must attach a trace");
+        assert_eq!(trace.n_rollbacks(), 0);
+        assert!(!trace.gave_up);
+        assert!(trace.n_healthy > 0);
+        assert!(open.history.stability.is_none());
+    }
+
+    #[test]
+    fn autopilot_recovers_a_divergent_run() {
+        // the headline contrast at micro scale: an LR three orders of
+        // magnitude over base blows the open loop up; the autopilot
+        // detects it online, rolls back, shrinks the schedule, decays the
+        // LR, and finishes the budget with finite loss
+        let mut cfg = micro_cfg();
+        cfg.lr.peak = 1.0;
+        cfg.lr.min_lr = 0.1;
+        // no warmup: full absurd LR from step 1, so the sentinel's ceiling
+        // (calibrated off the healthy step-0 loss) sees the blow-up at once
+        cfg.lr.horizon = crate::schedule::lr::Horizon::Steps { warmup: 1, total: 0 };
+        cfg.eval_every = 0;
+        cfg.token_budget = 4 * 32 * 60;
+        cfg.stability = Some(crate::stability::StabilityPolicy {
+            warmup_steps: 3,
+            snapshot_every: 3,
+            regrow_after: 5,
+            max_rollbacks: 20,
+            ..Default::default()
+        });
+        let mut t = Trainer::new(&root(), cfg).unwrap();
+        let out = t.run().unwrap();
+        let h = &out.history;
+        assert!(!h.diverged(), "autopilot must not record a divergence");
+        let last = h.losses().last().copied().unwrap();
+        assert!(last.is_finite(), "final loss must be finite, got {last}");
+        assert!(h.losses().iter().all(|l| l.is_finite()),
+                "rolled-back steps must never reach the history");
+        let trace = h.stability.as_ref().expect("trace must be attached");
+        assert!(trace.n_rollbacks() >= 1, "LR 1.0 must trigger ≥ 1 rollback");
+        assert!(!trace.gave_up, "the LR decay ladder must reach stability");
+        assert!(!trace.interventions.is_empty());
+        // the ramp was re-entered: some recorded step ran at a short length
+        assert!(h.steps.iter().any(|r| r.seqlen < 32),
+                "re-entry must shorten some steps");
+        // and the budget was completed despite the recovery detours
+        assert!(h.total_tokens() >= 4 * 32 * 60);
+    }
+
+    #[test]
+    fn store_cache_shares_corpora_across_runs() {
+        let cfg1 = micro_cfg().with_name("sc-1");
+        let mut cfg2 = micro_cfg().with_name("sc-2");
+        cfg2.lr.peak = 1.5e-3; // different run, same (recipe, seed) diet
+        let mut stores = StoreCache::new();
+        assert!(stores.is_empty());
+        let engine = Engine::load(&root(), "micro").unwrap();
+        let t1 = Trainer::with_engine_recoverable_cached(engine, cfg1, Some(&mut stores))
+            .map_err(|(_, e)| e)
+            .unwrap();
+        assert_eq!(stores.len(), 1);
+        let s1 = t1.store.clone();
+        let t2 = Trainer::with_engine_recoverable_cached(
+            t1.into_engine(),
+            cfg2,
+            Some(&mut stores),
+        )
+        .map_err(|(_, e)| e)
+        .unwrap();
+        assert_eq!(stores.len(), 1, "same diet must not regenerate");
+        assert!(Arc::ptr_eq(&s1, &t2.store), "the corpus must be shared, not rebuilt");
+        // a different seed is a different corpus
+        let mut cfg3 = micro_cfg().with_name("sc-3");
+        cfg3.seed = 777;
+        let t3 = Trainer::with_engine_recoverable_cached(
+            t2.into_engine(),
+            cfg3,
+            Some(&mut stores),
+        )
+        .map_err(|(_, e)| e)
+        .unwrap();
+        assert_eq!(stores.len(), 2);
+        assert!(!Arc::ptr_eq(&s1, &t3.store));
     }
 }

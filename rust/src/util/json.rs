@@ -140,6 +140,34 @@ pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }
 
+/// Encode a possibly non-finite f64 (JSON has no NaN/Infinity): non-finite
+/// values become the strings "nan"/"inf"/"-inf". Decode with [`get_nf`].
+pub fn num_nf(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+/// Decode a number written by [`num_nf`].
+pub fn get_nf(v: &Json) -> Result<f64> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => bail!("not an encoded number: '{other}'"),
+        },
+        other => bail!("not an encoded number: {other:?}"),
+    }
+}
+
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -364,6 +392,21 @@ mod tests {
     fn unicode_strings() {
         let j = Json::parse(r#""héllo é""#).unwrap();
         assert_eq!(j.str().unwrap(), "héllo é");
+    }
+
+    #[test]
+    fn nonfinite_numbers_roundtrip() {
+        for x in [1.5, 0.0, -3.25, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let enc = num_nf(x).to_string();
+            let dec = get_nf(&Json::parse(&enc).unwrap()).unwrap();
+            if x.is_nan() {
+                assert!(dec.is_nan());
+            } else {
+                assert_eq!(dec, x);
+            }
+        }
+        assert!(get_nf(&Json::Str("bogus".into())).is_err());
+        assert!(get_nf(&Json::Bool(true)).is_err());
     }
 
     #[test]
