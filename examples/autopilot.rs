@@ -82,6 +82,16 @@ fn main() -> anyhow::Result<()> {
             None => println!("    schedule @ step {:>4}: cap lifted (nominal ramp)", i.at_step),
         }
     }
+    // the unified loop keeps the recovery on the threaded prefetcher: every
+    // rollback re-publishes the plan tail instead of serializing the run
+    let p = &auto.pipeline;
+    println!(
+        "  pipeline: {} workers, hit rate {:.1}%, {} re-plans, {} stale batches dropped",
+        p.n_workers,
+        100.0 * p.hit_rate(),
+        p.republished,
+        p.stale_dropped
+    );
 
     println!(
         "\nExpected shape: the open loop ends diverged (or hopelessly spiked); the \

@@ -52,17 +52,48 @@ fn main() {
     });
 
     // threaded prefetch end-to-end: drain 200 prefetched batches
-    let plan = Arc::new(
-        plan_run(&pacing(), &BszWarmup::constant(64), Budget::Steps(200)).unwrap(),
-    );
+    let plan = plan_run(&pacing(), &BszWarmup::constant(64), Budget::Steps(200)).unwrap();
     let b2 = Bench::new("fig4_prefetch").with_budget(1200, 100);
     b2.case("drain_200_batches_2workers", (200 * 64 * 65) as f64, || {
-        let mut pf =
-            Prefetcher::spawn(store.clone(), index.clone(), plan.clone(), 2, 4, 0).unwrap();
+        let mut pf = Prefetcher::spawn(
+            store.clone(),
+            index.clone(),
+            plan.clone(),
+            2,
+            4,
+            0,
+            TruncationMode::Drop,
+        )
+        .unwrap();
         let mut n = 0;
-        while pf.next_batch().is_some() {
+        while pf.next_batch().unwrap().is_some() {
             n += 1;
         }
         assert_eq!(n, 200);
+    });
+
+    // mid-stream re-plan: consume half, publish a patched tail, drain —
+    // the invalidation path the autopilot exercises on every rollback
+    let b3 = Bench::new("fig4_replan").with_budget(1200, 100);
+    b3.case("replan_at_100_of_200", (200 * 64 * 65) as f64, || {
+        let mut pf = Prefetcher::spawn(
+            store.clone(),
+            index.clone(),
+            plan.clone(),
+            2,
+            4,
+            0,
+            TruncationMode::Drop,
+        )
+        .unwrap();
+        for _ in 0..100 {
+            pf.next_batch().unwrap().unwrap();
+        }
+        pf.publish(plan[100..].to_vec());
+        let mut n = 0;
+        while pf.next_batch().unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 100);
     });
 }

@@ -1,8 +1,37 @@
 //! Embeds the git revision as SLW_BUILD_REV so the coordinator's persistent
 //! run cache can fold the code version into its keys — a rebuilt binary must
 //! not serve result histories computed by older training code.
+//!
+//! Also embeds SLW_XLA_REV: the *resolved* xla-rs revision, extracted from
+//! Cargo.lock (which cargo materializes before build scripts run). The
+//! backend does the numerics, so its revision belongs in the cache key the
+//! same way this repo's does — an upstream xla-rs change must invalidate
+//! cached run histories even while the Cargo.toml pin is a branch ref.
 
 use std::path::Path;
+
+/// The `source = "git+https://…#<rev>"` fragment of the `xla` package in
+/// Cargo.lock, or None when the lockfile (or the entry) is absent.
+fn xla_rev_from_lock(lock: &str) -> Option<String> {
+    let mut in_xla = false;
+    for line in lock.lines() {
+        let line = line.trim();
+        if line == "[[package]]" {
+            in_xla = false;
+        } else if line == "name = \"xla\"" {
+            in_xla = true;
+        } else if in_xla && line.starts_with("source = ") {
+            // git sources carry the resolved rev after '#'
+            let (_, frag) = line.split_once('#')?;
+            let rev = frag.trim_matches('"');
+            if rev.is_empty() {
+                return None;
+            }
+            return Some(rev.chars().take(12).collect());
+        }
+    }
+    None
+}
 
 fn main() {
     let git_dir = Path::new("../.git");
@@ -25,4 +54,12 @@ fn main() {
         .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
         .unwrap_or_else(|| "unknown".into());
     println!("cargo:rustc-env=SLW_BUILD_REV={rev}");
+
+    // resolved backend revision → cache key (see module docs)
+    println!("cargo:rerun-if-changed=Cargo.lock");
+    let xla_rev = std::fs::read_to_string("Cargo.lock")
+        .ok()
+        .and_then(|lock| xla_rev_from_lock(&lock))
+        .unwrap_or_else(|| "unpinned".into());
+    println!("cargo:rustc-env=SLW_XLA_REV={xla_rev}");
 }

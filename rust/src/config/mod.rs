@@ -55,11 +55,15 @@ pub struct RunConfig {
     /// Number of eval batches per validation pass.
     pub eval_batches: usize,
     pub seed: u64,
-    /// Prefetch workers (simulated data-parallel shards).
+    /// Prefetch worker threads. `0` is the degenerate inline mode of the
+    /// same reactive loop (batch assembly on the training thread) — the
+    /// batch stream and trajectory are bit-identical either way under Drop
+    /// truncation.
     pub n_workers: usize,
     pub prefetch_depth: usize,
     /// Stability autopilot (sentinel + rollback + closed-loop pacing/LR);
-    /// None = open loop. Autopilot runs take the synchronous trainer path.
+    /// None = open loop. Autopilot interventions are plan patches, so these
+    /// runs stay on the threaded prefetch pipeline.
     pub stability: Option<StabilityPolicy>,
 }
 
@@ -71,9 +75,8 @@ impl RunConfig {
         if !(0.0..1.0).contains(&self.val_frac) {
             bail!("val_frac must be in [0, 1)");
         }
-        if self.n_workers == 0 {
-            bail!("need at least one worker");
-        }
+        // n_workers = 0 is valid: the inline degenerate mode of the
+        // reactive loop (no prefetch threads)
         if let Some(w) = &self.bsz_warmup {
             if w.start > self.batch {
                 bail!("bsz warmup start {} > target batch {}", w.start, self.batch);

@@ -54,10 +54,24 @@ pub fn family_text(artifacts_root: &Path, model: &str) -> Result<String> {
 }
 
 /// Key from an already-fetched family text (see [`family_text`]). Folds in
-/// the build's git revision (build.rs): a binary rebuilt from changed
-/// training code must not serve histories the old code computed.
+/// the build's git revision AND the resolved xla-rs revision (build.rs): a
+/// binary rebuilt from changed training code — or against a moved backend,
+/// whose kernels do the numerics — must not serve histories the old build
+/// computed.
 pub fn run_key_with(cfg: &RunConfig, family_text: &str) -> String {
-    let text = format!("{}|{cfg:?}|seed={}{family_text}", env!("SLW_BUILD_REV"), cfg.seed);
+    // n_workers / prefetch_depth are execution-shape knobs: the unified
+    // reactive loop produces bit-identical trajectories for any worker
+    // count (enforced by the trainer's determinism tests), so they are
+    // normalized out of the key and equivalent runs share a cache entry.
+    let mut keyed = cfg.clone();
+    keyed.n_workers = 0;
+    keyed.prefetch_depth = 0;
+    let text = format!(
+        "{}+xla:{}|{keyed:?}|seed={}{family_text}",
+        env!("SLW_BUILD_REV"),
+        env!("SLW_XLA_REV"),
+        cfg.seed
+    );
     format!("{:016x}", fnv1a64(text.as_bytes()))
 }
 
@@ -342,6 +356,16 @@ mod tests {
         assert_ne!(k1, run_key(&root(), &budget).unwrap());
         let seeded = cfg.clone().with_seed(cfg.seed + 1);
         assert_ne!(k1, run_key(&root(), &seeded).unwrap());
+        // execution-shape knobs are normalized out: the trajectory is
+        // bit-identical across worker counts, so the entry is shared
+        let mut workers = cfg.clone();
+        workers.n_workers = 7;
+        workers.prefetch_depth = 99;
+        assert_eq!(k1, run_key(&root(), &workers).unwrap());
+        // ...but anything data-affecting still re-keys
+        let mut recycle = cfg.clone();
+        recycle.truncation = crate::pipeline::batcher::TruncationMode::Recycle;
+        assert_ne!(k1, run_key(&root(), &recycle).unwrap());
     }
 
     #[test]

@@ -154,6 +154,50 @@ impl Sampler {
     }
 }
 
+/// Random-access view of the [`Sampler`] stream: `window_at(r)` returns the
+/// exact sequence a `Sampler` with the same seed would produce as its r-th
+/// draw, without consuming anything.
+///
+/// This is what lets the reactive prefetcher parallelize and *re-plan*
+/// batch assembly: a step's data is addressed by its absolute row offset
+/// (`StepSpec::rows_before`), so any worker can build any step, and after a
+/// schedule patch or an autopilot rollback the pipeline resumes from an
+/// arbitrary row with no shared sampler state to rewind. The per-epoch
+/// permutation is cached; seeking within an epoch is O(1), crossing into
+/// another epoch costs one reshuffle.
+pub struct RowCursor {
+    index: SequenceIndex,
+    seed: u64,
+    order: Vec<u32>,
+    cached_epoch: Option<u64>,
+}
+
+impl RowCursor {
+    pub fn new(index: SequenceIndex, seed: u64) -> Self {
+        Self { index, seed, order: Vec::new(), cached_epoch: None }
+    }
+
+    fn order_for(&mut self, epoch: u64) {
+        if self.cached_epoch == Some(epoch) {
+            return;
+        }
+        self.order = (0..self.index.n_train() as u32).collect();
+        // identical formula to Sampler::reshuffle, so the streams agree
+        let mut rng = Pcg64::new(self.seed ^ epoch.wrapping_mul(0x9e3779b97f4a7c15));
+        rng.shuffle(&mut self.order);
+        self.cached_epoch = Some(epoch);
+    }
+
+    /// The full-length window a same-seed [`Sampler`] would yield on its
+    /// `row`-th call to `next_sequence` (0-based, wraps epochs).
+    pub fn window_at(&mut self, store: &TokenStore, row: u64) -> Vec<i32> {
+        let n = self.index.n_train() as u64;
+        self.order_for(row / n);
+        let idx = self.order[(row % n) as usize] as usize;
+        self.index.window(store, idx)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +273,30 @@ mod tests {
         let sa: Vec<_> = (0..5).map(|_| a.next_sequence(&st)).collect();
         let sb: Vec<_> = (0..5).map(|_| b.next_sequence(&st)).collect();
         assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn row_cursor_matches_sampler_stream() {
+        let st = store(64 * 30 + 1);
+        let idx = st.index(64, 0.1).unwrap();
+        let n = idx.n_train();
+        let mut s = Sampler::new(idx.clone(), 9);
+        let mut c = RowCursor::new(idx.clone(), 9);
+        // sequential agreement across an epoch boundary
+        let rows = (n * 2 + 3) as u64;
+        for r in 0..rows {
+            assert_eq!(c.window_at(&st, r), s.next_sequence(&st), "row {r}");
+        }
+        // random access: revisiting an earlier row reproduces it exactly
+        let w5 = c.window_at(&st, 5);
+        c.window_at(&st, rows - 1); // jump far ahead (different epoch)
+        assert_eq!(c.window_at(&st, 5), w5);
+        // a different seed is a different stream
+        let mut other = RowCursor::new(idx, 10);
+        let differs = (0..n as u64).any(|r| {
+            other.window_at(&st, r) != RowCursor::new(st.index(64, 0.1).unwrap(), 9).window_at(&st, r)
+        });
+        assert!(differs);
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //! it keeps the contrast robust) — the §3 "raise the LR until the run
 //! blows up" probe as a first-class experiment. All runs go through the
 //! coordinator, so the ladder executes in parallel and re-invocations are
-//! cache hits.
+//! cache hits. Since the unified reactive loop, the autopilot twin runs on
+//! the threaded prefetcher like every other case — rollbacks re-publish
+//! the plan tail instead of demoting the run to synchronous batching (the
+//! `pipeline_utilization` bench gates that property).
 
 use anyhow::Result;
 

@@ -126,6 +126,18 @@ fn cmd_train(mut args: Args) -> Result<()> {
     if let Some(t) = &h.stability {
         println!("  autopilot: {}", t.summary());
     }
+    let p = &out.pipeline;
+    if p.n_workers > 0 {
+        println!(
+            "  pipeline: {} workers, hit rate {:.1}%, {} re-plans, {} stale batches dropped",
+            p.n_workers,
+            100.0 * p.hit_rate(),
+            p.republished,
+            p.stale_dropped
+        );
+    } else {
+        println!("  pipeline: inline (0 workers), {} re-plans", p.republished);
+    }
     println!(
         "  var corr: r_norm={:.3} (p={:.2e})  r_max={:.3} (p={:.2e})  var_max_peak={:.4}",
         corr.r_norm, corr.p_norm, corr.r_max, corr.p_max, h.var_max_peak()
@@ -254,6 +266,8 @@ fn print_help() {
                    [--shortformer --switch N] [--bsz-warmup] [--tokens N]\n\
                    [--eval-every N] [--seed N] [--save ckpt] [--recycle]\n\
                    [--autopilot]  (online sentinel + rollback + closed-loop pacing)\n\
+                   [--workers N]  (prefetch threads; 0 = inline, same trajectory —\n\
+                   adaptive and autopilot runs stay threaded via plan re-publication)\n\
            tune    --model tiny [--probe-steps N] [--durations a,b,c] [--starts a,b]\n\
            probes  --model tiny [--ckpt file] [--shots K] [--batches N]\n\
            data    --kind mixture|markov|induction --tokens N --out file\n\

@@ -1,7 +1,14 @@
 //! The paper's system contribution as a first-class pipeline stage: pacing
 //! functions, the truncation-based SLW batcher, the batch-size-warmup
-//! baseline, step planning, data-parallel sharding, and threaded prefetch
-//! with backpressure.
+//! baseline, incremental step planning (`plan::Planner`), and the
+//! re-plannable threaded prefetcher (`prefetch`) whose generation-based
+//! invalidation keeps adaptive-pacing and autopilot runs on the threaded
+//! data path through mid-run schedule changes. Prefetch workers no longer
+//! own data shards — batch assembly is spec-addressed (`batcher::Assembler`
+//! over `data::dataset::RowCursor`), which is what makes re-planning and
+//! the `n_workers = 0` degenerate mode bit-identical; `shard` survives as a
+//! standalone exactly-once partitioning/rebalancing utility for the
+//! ROADMAP's cross-machine sharding direction.
 
 pub mod batcher;
 pub mod bsz_warmup;

@@ -1,12 +1,23 @@
-//! Step planner: resolves (pacing × batch-size warmup × budget) into the
-//! concrete per-step `(seqlen, bsz)` schedule before the run starts.
+//! Incremental step planner: resolves (pacing × batch-size warmup × budget)
+//! into per-step `(seqlen, bsz, tokens, rows)` specs — from any resume
+//! point, not just step 0.
 //!
-//! Everything downstream — the prefetch workers, the cluster time model,
-//! the token-budget termination rule ("all cases stop when reaching the
-//! same 157B training tokens", §5.1) — consumes this plan, so the whole run
-//! is deterministic and workers need no shared mutable state. The adaptive
-//! pacing function cannot be pre-planned and runs through the synchronous
-//! path in `train::Trainer` instead.
+//! The [`Planner`] owns a cursor `(step, tokens, rows)` and two operations:
+//! `tail()` projects the remaining schedule to the budget under the
+//! *current* pacing state (the speculative plan the reactive prefetcher
+//! assembles ahead of compute), and `commit()` advances the cursor over an
+//! executed step. Schedule churn — an adaptive grow decision that only
+//! exists once the step-t loss arrives, an autopilot rollback that rewinds
+//! the run, a re-entry cap change — is handled by mutating the pacing state
+//! (`observe_loss` / `set_cap` / `seek`) and re-projecting the tail; the
+//! prefetcher invalidates the superseded projection by generation. Because
+//! every spec carries its absolute data offset (`rows_before`), a projected
+//! step's batch is a pure function of `(spec, seed)` and any worker can
+//! build any step of any generation.
+//!
+//! [`plan_run`] keeps the original one-shot interface for static schedules
+//! (benches, the cluster simulator); the adaptive pacing function has no
+//! static plan and is served incrementally by the `Planner` alone.
 
 use anyhow::{bail, Result};
 
@@ -20,6 +31,10 @@ pub struct StepSpec {
     pub bsz: usize,
     /// tokens consumed by all previous steps
     pub tokens_before: u64,
+    /// full-length data rows consumed by all previous steps — the absolute
+    /// offset into the deterministic sample stream (`data::RowCursor`) at
+    /// which this step's batch starts
+    pub rows_before: u64,
 }
 
 impl StepSpec {
@@ -34,29 +49,153 @@ pub enum Budget {
     Tokens(u64),
 }
 
-pub fn plan_run(pacing: &BucketedPacing, bszw: &BszWarmup, budget: Budget) -> Result<Vec<StepSpec>> {
-    if matches!(pacing.pacing(), Pacing::Adaptive { .. }) {
-        bail!("adaptive pacing cannot be pre-planned; use the synchronous trainer path");
+/// The planner's resume point: everything needed to re-emit the schedule
+/// from an arbitrary mid-run position (autopilot rollback, re-plan).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCursor {
+    pub step: usize,
+    pub tokens: u64,
+    pub rows: u64,
+}
+
+/// Incremental (re)planner — see the module docs.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    pacing: BucketedPacing,
+    bszw: BszWarmup,
+    budget: Budget,
+    cursor: PlanCursor,
+}
+
+impl Planner {
+    pub fn new(pacing: BucketedPacing, bszw: BszWarmup, budget: Budget) -> Self {
+        Self { pacing, bszw, budget, cursor: PlanCursor::default() }
     }
-    let mut plan = Vec::new();
-    let mut tokens = 0u64;
-    let mut step = 0usize;
-    loop {
-        match budget {
-            Budget::Steps(n) if step >= n => break,
-            Budget::Tokens(t) if tokens >= t => break,
-            _ => {}
+
+    pub fn cursor(&self) -> PlanCursor {
+        self.cursor
+    }
+
+    /// Rewind (or fast-forward) to a previously-observed cursor — the
+    /// autopilot rollback path. The pacing state (adaptive length, cap) is
+    /// deliberately NOT rewound: the schedule response to a rollback is the
+    /// controller's to decide via [`Planner::set_cap`].
+    pub fn seek(&mut self, cursor: PlanCursor) {
+        self.cursor = cursor;
+    }
+
+    /// Apply a schedule patch: cap every projected step's seqlen at `cap`
+    /// (the autopilot's ramp re-entry), or lift the cap with `None`.
+    pub fn set_cap(&mut self, cap: Option<usize>) {
+        self.pacing.override_seqlen(cap);
+    }
+
+    pub fn cap(&self) -> Option<usize> {
+        self.pacing.override_len()
+    }
+
+    /// Feed a finite executed-step loss to the adaptive pacing state.
+    /// Returns `true` when the decision changed the upcoming schedule (the
+    /// current projection is stale and the tail must be republished); always
+    /// `false` for non-adaptive pacing functions.
+    pub fn observe_loss(&mut self, loss: f64) -> bool {
+        let before = self.pacing.seqlen_at(self.cursor.step);
+        self.pacing.observe_loss(loss);
+        self.pacing.seqlen_at(self.cursor.step) != before
+    }
+
+    fn done(&self, c: &PlanCursor) -> bool {
+        match self.budget {
+            Budget::Steps(n) => c.step >= n,
+            Budget::Tokens(t) => c.tokens >= t,
         }
-        let bsz = bszw.bsz_at(tokens);
-        let seqlen = pacing.seqlen_at(step);
-        plan.push(StepSpec { step, seqlen, bsz, tokens_before: tokens });
-        tokens += (seqlen * bsz) as u64;
-        step += 1;
-        if step > 50_000_000 {
+    }
+
+    /// The spec at the cursor (`None` once the budget is exhausted).
+    pub fn peek(&self) -> Option<StepSpec> {
+        if self.done(&self.cursor) {
+            return None;
+        }
+        Some(self.spec_at(&self.cursor))
+    }
+
+    fn spec_at(&self, c: &PlanCursor) -> StepSpec {
+        StepSpec {
+            step: c.step,
+            seqlen: self.pacing.seqlen_at(c.step),
+            bsz: self.bszw.bsz_at(c.tokens),
+            tokens_before: c.tokens,
+            rows_before: c.rows,
+        }
+    }
+
+    /// Advance the cursor over an executed step. `fresh_rows` is the number
+    /// of sample-stream rows the batch actually consumed (`spec.bsz` under
+    /// Drop truncation; fewer when the Recycle queue served leftovers).
+    pub fn commit(&mut self, spec: &StepSpec, fresh_rows: usize) {
+        debug_assert_eq!(spec.step, self.cursor.step, "commit out of order");
+        self.cursor = PlanCursor {
+            step: self.cursor.step + 1,
+            tokens: self.cursor.tokens + spec.train_tokens(),
+            rows: self.cursor.rows + fresh_rows as u64,
+        };
+    }
+
+    /// Project the remaining schedule from the cursor to the budget under
+    /// the current pacing state. For adaptive pacing this is a speculative
+    /// hold-current-length projection — the prefetcher assembles it ahead
+    /// of compute and drops the stale generation if a grow decision lands.
+    pub fn tail(&self) -> Result<Vec<StepSpec>> {
+        let out = self.tail_window(50_000_001);
+        if out.len() > 50_000_000 {
             bail!("budget produced an implausibly long plan (> 5e7 steps)");
         }
+        Ok(out)
     }
-    Ok(plan)
+
+    /// The first `max_len` specs of [`Planner::tail`] — the bounded window
+    /// the trainer publishes to the prefetcher (and republishes as
+    /// consumption reaches its end), keeping every re-plan O(window)
+    /// instead of O(remaining schedule).
+    pub fn tail_window(&self, max_len: usize) -> Vec<StepSpec> {
+        let mut out = Vec::new();
+        let mut c = self.cursor;
+        while out.len() < max_len && !self.done(&c) {
+            let spec = self.spec_at(&c);
+            c.step += 1;
+            c.tokens += spec.train_tokens();
+            c.rows += spec.bsz as u64;
+            out.push(spec);
+        }
+        out
+    }
+
+    /// Steps remaining to the budget under the current pacing state —
+    /// [`Planner::tail`]'s length without materializing the specs.
+    pub fn projected_steps(&self) -> Result<usize> {
+        let mut c = self.cursor;
+        let mut n = 0usize;
+        while !self.done(&c) {
+            let spec = self.spec_at(&c);
+            c.step += 1;
+            c.tokens += spec.train_tokens();
+            c.rows += spec.bsz as u64;
+            n += 1;
+            if n > 50_000_000 {
+                bail!("budget produced an implausibly long plan (> 5e7 steps)");
+            }
+        }
+        Ok(n)
+    }
+}
+
+/// One-shot plan for a static schedule (compatibility surface over
+/// [`Planner`]). Adaptive pacing has no static plan and is rejected.
+pub fn plan_run(pacing: &BucketedPacing, bszw: &BszWarmup, budget: Budget) -> Result<Vec<StepSpec>> {
+    if matches!(pacing.pacing(), Pacing::Adaptive { .. }) {
+        bail!("adaptive pacing cannot be pre-planned; use the incremental Planner");
+    }
+    Planner::new(pacing.clone(), bszw.clone(), budget).tail()
 }
 
 /// Total trained tokens in a plan.
@@ -84,6 +223,10 @@ mod tests {
         assert_eq!(plan[19].seqlen, 64);
         assert_eq!(plan[0].tokens_before, 0);
         assert_eq!(plan[1].tokens_before, 32);
+        // rows advance by bsz per step under the Drop projection
+        assert_eq!(plan[0].rows_before, 0);
+        assert_eq!(plan[1].rows_before, 4);
+        assert_eq!(plan[19].rows_before, 19 * 4);
     }
 
     #[test]
@@ -120,12 +263,103 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_rejected() {
+    fn adaptive_rejected_by_one_shot_plan() {
         let p = BucketedPacing::new(
             Pacing::Adaptive { start: 8, end: 64, grow: 8, patience: 2 },
             vec![8, 16, 64],
         )
         .unwrap();
         assert!(plan_run(&p, &BszWarmup::constant(4), Budget::Steps(10)).is_err());
+    }
+
+    #[test]
+    fn tail_window_bounds_without_changing_the_schedule() {
+        let mut pl = Planner::new(pacing(8, 10), BszWarmup::constant(4), Budget::Steps(100));
+        let full = pl.tail().unwrap();
+        assert_eq!(pl.projected_steps().unwrap(), full.len());
+        let window = pl.tail_window(10);
+        assert_eq!(window.len(), 10);
+        assert_eq!(window[..], full[..10]);
+        // a window larger than the remaining schedule is just the tail
+        assert_eq!(pl.tail_window(1_000), full);
+        // consuming the window then re-projecting continues seamlessly
+        for spec in &window {
+            pl.commit(spec, spec.bsz);
+        }
+        assert_eq!(pl.tail_window(10)[..], full[10..20]);
+        assert_eq!(pl.projected_steps().unwrap(), full.len() - 10);
+    }
+
+    #[test]
+    fn commit_tail_equivalence() {
+        // committing through the schedule step by step reproduces exactly
+        // the one-shot tail — the invariant the prefetcher's speculative
+        // projection rests on
+        let mut pl = Planner::new(pacing(8, 10), BszWarmup::constant(4), Budget::Tokens(5000));
+        let full = pl.tail().unwrap();
+        let mut walked = Vec::new();
+        while let Some(spec) = pl.peek() {
+            walked.push(spec);
+            pl.commit(&spec, spec.bsz);
+        }
+        assert_eq!(walked, full);
+        assert!(pl.peek().is_none());
+        assert!(pl.tail().unwrap().is_empty());
+    }
+
+    #[test]
+    fn seek_replays_identical_tail() {
+        let mut pl = Planner::new(pacing(8, 20), BszWarmup::constant(4), Budget::Steps(30));
+        let mut cursors = vec![pl.cursor()];
+        for _ in 0..10 {
+            let spec = pl.peek().unwrap();
+            pl.commit(&spec, spec.bsz);
+            cursors.push(pl.cursor());
+        }
+        let tail_at_10 = pl.tail().unwrap();
+        // rewind to step 4 and walk forward again: the same tail re-emerges
+        pl.seek(cursors[4]);
+        assert_eq!(pl.cursor().step, 4);
+        for _ in 4..10 {
+            let spec = pl.peek().unwrap();
+            pl.commit(&spec, spec.bsz);
+        }
+        assert_eq!(pl.tail().unwrap(), tail_at_10);
+    }
+
+    #[test]
+    fn cap_patches_the_projection() {
+        let mut pl = Planner::new(pacing(8, 10), BszWarmup::constant(4), Budget::Steps(40));
+        let nominal = pl.tail().unwrap();
+        assert_eq!(nominal.last().unwrap().seqlen, 64);
+        pl.set_cap(Some(16));
+        assert_eq!(pl.cap(), Some(16));
+        let capped = pl.tail().unwrap();
+        assert!(capped.iter().all(|s| s.seqlen <= 16), "cap must bound every step");
+        // capped steps consume fewer tokens, so a token budget takes longer;
+        // with a step budget the count is identical
+        assert_eq!(capped.len(), nominal.len());
+        pl.set_cap(None);
+        assert_eq!(pl.tail().unwrap(), nominal);
+    }
+
+    #[test]
+    fn adaptive_grow_invalidates_projection() {
+        let p = BucketedPacing::new(
+            Pacing::Adaptive { start: 8, end: 64, grow: 8, patience: 2 },
+            vec![8, 16, 24, 32, 48, 64],
+        )
+        .unwrap();
+        let mut pl = Planner::new(p, BszWarmup::constant(4), Budget::Tokens(10_000));
+        let hold = pl.tail().unwrap();
+        assert!(hold.iter().all(|s| s.seqlen == 8), "speculative tail holds current len");
+        // first finite loss is a new best (stall 1); an equal loss is not
+        assert!(!pl.observe_loss(10.0));
+        assert!(!pl.observe_loss(10.0));
+        // second new best reaches patience 2: grow -> projection stale
+        assert!(pl.observe_loss(9.0), "grow decision must report staleness");
+        let grown = pl.tail().unwrap();
+        assert!(grown.iter().all(|s| s.seqlen == 16));
+        assert!(grown.len() < hold.len(), "longer steps reach the budget sooner");
     }
 }

@@ -1,141 +1,365 @@
-//! Threaded batch prefetcher with bounded backpressure.
+//! Re-plannable threaded batch prefetcher with generation-based
+//! invalidation and bounded backpressure.
 //!
-//! The coordinator must never wait on the data pipeline (the paper's whole
-//! point is that the *model* step dominates), so batch assembly — window
-//! fetch, SLW truncation — runs on worker threads ahead of the training
-//! loop. tokio is not in the offline vendor set; std threads + a bounded
-//! `sync_channel` give the same backpressure semantics: workers block once
-//! `depth` batches are queued, so prefetch memory is O(depth · batch).
+//! The trainer must never wait on the data pipeline (the paper's whole
+//! point is that the *model* step dominates) — including across the
+//! schedule churn the paper's method exists to exploit: adaptive pacing
+//! decisions that only exist once the step-t loss arrives, autopilot
+//! rollbacks, re-entry cap changes. Workers assemble batches ahead of
+//! compute from a shared *plan tail* published by the trainer; when the
+//! schedule changes, the trainer publishes a patched tail under a bumped
+//! **generation**, workers switch to it at their next claim, and batches
+//! from superseded generations are dropped on arrival — no thread is ever
+//! respawned and the pipeline keeps running ahead through re-plans.
 //!
-//! Work assignment is by plan index (worker w builds steps ≡ w mod W) over
-//! per-worker data shards, and the coordinator reorders arrivals with a
-//! small pending map so batches are consumed strictly in step order.
+//! Correctness rests on spec-addressed assembly (`batcher::Assembler`):
+//! under Drop truncation a step's batch is a pure function of
+//! `(StepSpec, seed)`, so it does not matter which worker builds a step,
+//! in which order, or how often a step is rebuilt across generations —
+//! and `n_workers = 0` degenerates to assembling the same specs inline on
+//! the training thread with a bit-identical result. tokio is not in the
+//! offline vendor set; std threads + a bounded `sync_channel` give the
+//! backpressure (workers block once `depth · W` batches are in flight, so
+//! prefetch memory is O(depth · batch)), and a `Condvar` parks workers
+//! when the current tail is fully claimed.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
 use crate::data::dataset::{SequenceIndex, TokenStore};
-use crate::pipeline::batcher::Batch;
+use crate::pipeline::batcher::{Assembler, Batch, TruncationMode};
 use crate::pipeline::plan::StepSpec;
-use crate::pipeline::shard::{make_shards, ShardSampler};
 
-pub struct Prefetcher {
-    rx: Receiver<(usize, Batch)>,
+/// Pipeline counters, reported per run (`RunResult::pipeline`) and by the
+/// `pipeline_utilization` bench.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefetchStats {
+    /// batches handed to the trainer
+    pub served: usize,
+    /// batches already assembled when the trainer asked (no blocking wait)
+    pub hits: usize,
+    /// assembled batches discarded because their generation was superseded
+    pub stale_dropped: usize,
+    /// plan tails published after the initial one because the *schedule
+    /// changed* (adaptive grow, autopilot rollback / cap patch) — these
+    /// bump the generation and invalidate in-flight work
+    pub republished: u64,
+    /// bounded-window extensions (same generation, nothing invalidated) —
+    /// bookkeeping of long runs, not schedule churn
+    pub extended: u64,
+    /// worker threads (0 = inline degenerate mode)
+    pub n_workers: usize,
+}
+
+impl PrefetchStats {
+    /// Fraction of served batches that were ready before the trainer asked
+    /// — batch assembly off the critical path. Inline mode (`n_workers =
+    /// 0`) assembles on demand and counts every serve as a hit; the
+    /// `pipeline_utilization` bench gates on the threaded path, where a
+    /// miss means the trainer actually blocked on assembly.
+    pub fn hit_rate(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.served as f64
+        }
+    }
+}
+
+/// Work queue shared with the workers: the current generation's tail and a
+/// claim cursor. Workers claim specs in order, assemble outside the lock,
+/// and tag each batch with the generation they claimed under.
+struct WorkQueue {
+    generation: u64,
+    tail: Arc<Vec<StepSpec>>,
+    next_claim: usize,
+    stop: bool,
+}
+
+struct SharedState {
+    queue: Mutex<WorkQueue>,
+    work_ready: Condvar,
+}
+
+struct Threaded {
+    shared: Arc<SharedState>,
+    rx: Receiver<(u64, usize, Batch)>,
+    /// arrivals of the current generation, keyed by step, awaiting in-order
+    /// consumption
     pending: BTreeMap<usize, Batch>,
-    next: usize,
-    total: usize,
-    stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
 }
 
+enum Mode {
+    Inline(Assembler),
+    Threaded(Threaded),
+}
+
+pub struct Prefetcher {
+    mode: Mode,
+    store: Arc<TokenStore>,
+    tail: Arc<Vec<StepSpec>>,
+    generation: u64,
+    next_idx: usize,
+    stats: PrefetchStats,
+}
+
 impl Prefetcher {
-    /// Spawn `n_workers` threads building the batches of `plan` from
-    /// disjoint shards of `store`. `depth` bounds the per-worker queue.
+    /// Start the pipeline over the initial plan `tail`. `n_workers = 0` (or
+    /// Recycle truncation, which is inherently sequential) assembles inline
+    /// on the calling thread — the degenerate case of the same loop, with a
+    /// bit-identical batch stream under Drop truncation.
     pub fn spawn(
         store: Arc<TokenStore>,
         index: SequenceIndex,
-        plan: Arc<Vec<StepSpec>>,
+        tail: Vec<StepSpec>,
         n_workers: usize,
         depth: usize,
         seed: u64,
+        truncation: TruncationMode,
     ) -> Result<Self> {
-        if plan.is_empty() {
-            bail!("empty plan");
-        }
-        let shards = make_shards(&index, n_workers, seed)?;
-        let (tx, rx): (SyncSender<(usize, Batch)>, _) = sync_channel(depth.max(1) * n_workers);
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut handles = Vec::new();
-        for shard in shards {
-            let tx = tx.clone();
-            let store = store.clone();
-            let index = index.clone();
-            let plan = plan.clone();
-            let stop = stop.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(shard, store, index, plan, tx, stop, n_workers);
-            }));
-        }
-        Ok(Self { rx, pending: BTreeMap::new(), next: 0, total: plan.len(), stop, handles })
+        let n_workers = if truncation == TruncationMode::Recycle && n_workers > 0 {
+            crate::info!(
+                "prefetch: Recycle truncation carries sequential state; \
+                 assembling inline (n_workers 0)"
+            );
+            0
+        } else {
+            n_workers
+        };
+        let tail = Arc::new(tail);
+        let mode = if n_workers == 0 {
+            Mode::Inline(Assembler::new(index, seed, truncation))
+        } else {
+            let shared = Arc::new(SharedState {
+                queue: Mutex::new(WorkQueue {
+                    generation: 0,
+                    tail: tail.clone(),
+                    next_claim: 0,
+                    stop: false,
+                }),
+                work_ready: Condvar::new(),
+            });
+            let (tx, rx): (SyncSender<(u64, usize, Batch)>, _) =
+                sync_channel(depth.max(1) * n_workers);
+            let mut handles = Vec::new();
+            for _ in 0..n_workers {
+                let shared = shared.clone();
+                let tx = tx.clone();
+                let store = store.clone();
+                let index = index.clone();
+                handles.push(std::thread::spawn(move || {
+                    worker_loop(shared, tx, store, index, seed);
+                }));
+            }
+            Mode::Threaded(Threaded { shared, rx, pending: BTreeMap::new(), handles })
+        };
+        Ok(Self {
+            mode,
+            store,
+            tail,
+            generation: 0,
+            next_idx: 0,
+            stats: PrefetchStats { n_workers, ..Default::default() },
+        })
     }
 
-    /// Next batch in strict step order (blocks on the pipeline if needed).
-    pub fn next_batch(&mut self) -> Option<Batch> {
-        if self.next >= self.total {
-            return None;
-        }
-        loop {
-            if let Some(b) = self.pending.remove(&self.next) {
-                self.next += 1;
-                return Some(b);
+    /// Publish a re-planned tail (adaptive grow, autopilot rollback or cap
+    /// change). The generation is bumped: workers move to the new tail at
+    /// their next claim, in-flight batches of older generations are dropped
+    /// on arrival, and consumption restarts at the tail's head — without
+    /// respawning a single thread.
+    pub fn publish(&mut self, tail: Vec<StepSpec>) {
+        self.generation += 1;
+        self.stats.republished += 1;
+        self.tail = Arc::new(tail);
+        self.next_idx = 0;
+        match &mut self.mode {
+            Mode::Inline(asm) => {
+                let resume = self.tail.first().map(|s| s.rows_before).unwrap_or(0);
+                asm.invalidate(resume);
             }
-            match self.rx.recv() {
-                Ok((step, batch)) => {
-                    self.pending.insert(step, batch);
+            Mode::Threaded(t) => {
+                {
+                    let mut q = t.shared.queue.lock().unwrap();
+                    q.generation = self.generation;
+                    q.tail = self.tail.clone();
+                    q.next_claim = 0;
                 }
-                Err(_) => return None, // all workers gone
+                t.shared.work_ready.notify_all();
+                // everything assembled so far belongs to an older generation
+                self.stats.stale_dropped += t.pending.len();
+                t.pending.clear();
+                // drain without blocking so senders parked on a full channel
+                // move on to the new tail promptly
+                loop {
+                    match t.rx.try_recv() {
+                        Ok((g, s, b)) if g == self.generation => {
+                            t.pending.insert(s, b);
+                        }
+                        Ok(_) => self.stats.stale_dropped += 1,
+                        Err(_) => break,
+                    }
+                }
             }
         }
+    }
+
+    /// Append `more` specs to the *current* generation's tail — the
+    /// bounded-window continuation of an unchanged schedule. Nothing is
+    /// invalidated: outstanding worker claims index a shared prefix, the
+    /// consumer's position stands, and (unlike [`Prefetcher::publish`]) the
+    /// inline assembler keeps its Recycle queue.
+    pub fn extend(&mut self, more: Vec<StepSpec>) {
+        if more.is_empty() {
+            return;
+        }
+        self.stats.extended += 1;
+        let mut tail = (*self.tail).clone();
+        tail.extend(more);
+        self.tail = Arc::new(tail);
+        if let Mode::Threaded(t) = &mut self.mode {
+            {
+                let mut q = t.shared.queue.lock().unwrap();
+                q.tail = self.tail.clone();
+            }
+            t.shared.work_ready.notify_all();
+        }
+    }
+
+    /// Next `(spec, batch)` in strict plan order for the current
+    /// generation; `None` once the published tail is exhausted (budget
+    /// reached). Blocks on the pipeline only when the batch is not yet
+    /// assembled (counted as a miss).
+    pub fn next_batch(&mut self) -> Result<Option<(StepSpec, Batch)>> {
+        if self.next_idx >= self.tail.len() {
+            return Ok(None);
+        }
+        let spec = self.tail[self.next_idx];
+        let batch = match &mut self.mode {
+            Mode::Inline(asm) => {
+                self.stats.hits += 1; // on-demand assembly: nothing to wait on
+                asm.assemble(&spec, &self.store)
+            }
+            Mode::Threaded(t) => {
+                let mut waited = false;
+                loop {
+                    if let Some(b) = t.pending.remove(&spec.step) {
+                        if !waited {
+                            self.stats.hits += 1;
+                        }
+                        break b;
+                    }
+                    // opportunistically drain ready arrivals before blocking
+                    match t.rx.try_recv() {
+                        Ok((g, s, b)) => {
+                            if g == self.generation {
+                                t.pending.insert(s, b);
+                            } else {
+                                self.stats.stale_dropped += 1;
+                            }
+                            continue;
+                        }
+                        Err(TryRecvError::Empty) => {}
+                        Err(TryRecvError::Disconnected) => {
+                            bail!(
+                                "prefetch workers exited early at step {} \
+                                 (generation {})",
+                                spec.step,
+                                self.generation
+                            );
+                        }
+                    }
+                    waited = true;
+                    match t.rx.recv() {
+                        Ok((g, s, b)) => {
+                            if g == self.generation {
+                                t.pending.insert(s, b);
+                            } else {
+                                self.stats.stale_dropped += 1;
+                            }
+                        }
+                        Err(_) => bail!(
+                            "prefetch workers exited early at step {} (generation {})",
+                            spec.step,
+                            self.generation
+                        ),
+                    }
+                }
+            }
+        };
+        self.stats.served += 1;
+        self.next_idx += 1;
+        Ok(Some((spec, batch)))
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        self.stats
     }
 
     pub fn produced(&self) -> usize {
-        self.next
+        self.stats.served
     }
 }
 
 impl Drop for Prefetcher {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        // drain so blocked senders wake up
-        while self.rx.try_recv().is_ok() {}
-        for h in self.handles.drain(..) {
-            // keep draining while joining to release senders blocked on a
-            // full channel
-            while !h.is_finished() {
-                let _ = self.rx.recv_timeout(std::time::Duration::from_millis(10));
+        if let Mode::Threaded(t) = &mut self.mode {
+            {
+                // a panicked worker must not turn teardown into a double
+                // panic: recover the queue from poisoning
+                let mut q = t
+                    .shared
+                    .queue
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+                q.stop = true;
             }
-            let _ = h.join();
+            t.shared.work_ready.notify_all();
+            // drain so blocked senders wake up and observe the stop flag
+            while t.rx.try_recv().is_ok() {}
+            for h in t.handles.drain(..) {
+                while !h.is_finished() {
+                    let _ = t.rx.recv_timeout(std::time::Duration::from_millis(10));
+                }
+                let _ = h.join();
+            }
         }
     }
 }
 
 fn worker_loop(
-    mut shard: ShardSampler,
+    shared: Arc<SharedState>,
+    tx: SyncSender<(u64, usize, Batch)>,
     store: Arc<TokenStore>,
     index: SequenceIndex,
-    plan: Arc<Vec<StepSpec>>,
-    tx: SyncSender<(usize, Batch)>,
-    stop: Arc<AtomicBool>,
-    n_workers: usize,
+    seed: u64,
 ) {
-    let full = index.full_seqlen();
-    let me = shard.worker;
-    for spec in plan.iter().skip(me).step_by(n_workers) {
-        if stop.load(Ordering::Relaxed) {
-            return;
-        }
-        let width = spec.seqlen + 1;
-        let mut tokens = Vec::with_capacity(spec.bsz * width);
-        let mut dropped = 0u64;
-        for _ in 0..spec.bsz {
-            let row = shard.next_sequence(&store, &index);
-            tokens.extend(&row[..width]);
-            dropped += (full - spec.seqlen) as u64;
-        }
-        let batch = Batch {
-            tokens,
-            bsz: spec.bsz,
-            seqlen: spec.seqlen,
-            train_tokens: spec.train_tokens(),
-            dropped_tokens: dropped,
+    // workers only serve Drop-mode plans (Recycle runs inline), so assembly
+    // is spec-pure and this per-worker assembler carries no schedule state
+    let mut asm = Assembler::new(index, seed, TruncationMode::Drop);
+    loop {
+        let (generation, spec) = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.stop {
+                    return;
+                }
+                if q.next_claim < q.tail.len() {
+                    let spec = q.tail[q.next_claim];
+                    q.next_claim += 1;
+                    break (q.generation, spec);
+                }
+                q = shared.work_ready.wait(q).unwrap();
+            }
         };
-        if tx.send((spec.step, batch)).is_err() {
-            return; // coordinator dropped
+        let batch = asm.assemble(&spec, &store);
+        if tx.send((generation, spec.step, batch)).is_err() {
+            return; // consumer dropped
         }
     }
 }
@@ -146,9 +370,9 @@ mod tests {
     use crate::data::corpus::{Corpus, MarkovCorpus};
     use crate::pipeline::bsz_warmup::BszWarmup;
     use crate::pipeline::pacing::{BucketedPacing, Pacing};
-    use crate::pipeline::plan::{plan_run, Budget};
+    use crate::pipeline::plan::{plan_run, Budget, Planner};
 
-    fn setup(n_steps: usize) -> (Arc<TokenStore>, SequenceIndex, Arc<Vec<StepSpec>>) {
+    fn setup(n_steps: usize) -> (Arc<TokenStore>, SequenceIndex, Vec<StepSpec>) {
         let toks = MarkovCorpus::new(512, 0).generate(64 * 200 + 1);
         let store = Arc::new(TokenStore::new(toks, 512).unwrap());
         let index = store.index(64, 0.1).unwrap();
@@ -158,38 +382,173 @@ mod tests {
         )
         .unwrap();
         let plan = plan_run(&pacing, &BszWarmup::constant(4), Budget::Steps(n_steps)).unwrap();
-        (store, index, Arc::new(plan))
+        (store, index, plan)
+    }
+
+    fn drain(pf: &mut Prefetcher) -> Vec<(StepSpec, Batch)> {
+        let mut out = Vec::new();
+        while let Some(x) = pf.next_batch().unwrap() {
+            out.push(x);
+        }
+        out
     }
 
     #[test]
     fn delivers_in_step_order_with_right_shapes() {
         let (store, index, plan) = setup(40);
-        let mut pf = Prefetcher::spawn(store, index, plan.clone(), 3, 2, 0).unwrap();
-        for spec in plan.iter() {
-            let b = pf.next_batch().expect("batch");
+        let mut pf = Prefetcher::spawn(
+            store, index, plan.clone(), 3, 2, 0, TruncationMode::Drop,
+        )
+        .unwrap();
+        for spec in &plan {
+            let (served, b) = pf.next_batch().unwrap().expect("batch");
+            assert_eq!(served, *spec);
             assert_eq!(b.seqlen, spec.seqlen, "step {}", spec.step);
             assert_eq!(b.bsz, spec.bsz);
             assert_eq!(b.tokens.len(), spec.bsz * (spec.seqlen + 1));
         }
-        assert!(pf.next_batch().is_none());
+        assert!(pf.next_batch().unwrap().is_none());
+        assert_eq!(pf.stats().served, plan.len());
     }
 
     #[test]
-    fn single_worker_matches_plan() {
-        let (store, index, plan) = setup(10);
-        let mut pf = Prefetcher::spawn(store, index, plan.clone(), 1, 4, 1).unwrap();
-        let mut n = 0;
-        while pf.next_batch().is_some() {
-            n += 1;
+    fn threaded_and_inline_streams_are_bit_identical() {
+        let (store, index, plan) = setup(30);
+        let mut threaded = Prefetcher::spawn(
+            store.clone(), index.clone(), plan.clone(), 3, 2, 7, TruncationMode::Drop,
+        )
+        .unwrap();
+        let mut inline = Prefetcher::spawn(
+            store, index, plan, 0, 2, 7, TruncationMode::Drop,
+        )
+        .unwrap();
+        let a = drain(&mut threaded);
+        let b = drain(&mut inline);
+        assert_eq!(a.len(), b.len());
+        for ((sa, ba), (sb, bb)) in a.iter().zip(&b) {
+            assert_eq!(sa, sb);
+            assert_eq!(ba.tokens, bb.tokens, "step {}", sa.step);
         }
-        assert_eq!(n, plan.len());
+        assert_eq!(inline.stats().n_workers, 0);
+        assert_eq!(threaded.stats().n_workers, 3);
+    }
+
+    #[test]
+    fn publish_invalidates_and_resumes_without_respawn() {
+        let (store, index, plan) = setup(60);
+        let mut pf = Prefetcher::spawn(
+            store.clone(), index.clone(), plan.clone(), 2, 4, 0, TruncationMode::Drop,
+        )
+        .unwrap();
+        // consume a prefix of the original generation
+        for spec in plan.iter().take(10) {
+            let (served, _) = pf.next_batch().unwrap().unwrap();
+            assert_eq!(served.step, spec.step);
+        }
+        // patched tail: resume from step 5 under a shorter cap, as an
+        // autopilot rollback would publish
+        let patched: Vec<StepSpec> = plan[5..25]
+            .iter()
+            .map(|s| StepSpec { seqlen: 8, ..*s })
+            .collect();
+        pf.publish(patched.clone());
+        let rest = drain(&mut pf);
+        assert_eq!(rest.len(), patched.len());
+        for ((served, batch), want) in rest.iter().zip(&patched) {
+            assert_eq!(served, want);
+            assert_eq!(batch.seqlen, 8);
+            assert_eq!(batch.tokens.len(), want.bsz * 9);
+        }
+        let stats = pf.stats();
+        assert_eq!(stats.republished, 1);
+        assert_eq!(stats.served, 10 + patched.len());
+        // replayed steps must carry the data their spec addresses, not
+        // whatever the old generation had: compare against inline truth
+        let mut truth = Prefetcher::spawn(
+            store, index, patched, 0, 1, 0, TruncationMode::Drop,
+        )
+        .unwrap();
+        let want = drain(&mut truth);
+        for ((_, got), (_, w)) in rest.iter().zip(&want) {
+            assert_eq!(got.tokens, w.tokens);
+        }
+    }
+
+    #[test]
+    fn stale_generations_are_dropped_not_served() {
+        let (store, index, plan) = setup(400);
+        let mut pf = Prefetcher::spawn(
+            store, index, plan.clone(), 2, 8, 1, TruncationMode::Drop,
+        )
+        .unwrap();
+        let _ = pf.next_batch().unwrap().unwrap();
+        // give workers time to run far ahead, then invalidate everything
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let patched: Vec<StepSpec> = plan[..40].to_vec();
+        pf.publish(patched.clone());
+        let rest = drain(&mut pf);
+        // served steps are exactly the patched tail, in order
+        let steps: Vec<usize> = rest.iter().map(|(s, _)| s.step).collect();
+        let want: Vec<usize> = patched.iter().map(|s| s.step).collect();
+        assert_eq!(steps, want);
+        assert!(pf.stats().stale_dropped > 0, "the old generation must be discarded");
+    }
+
+    #[test]
+    fn extend_appends_without_invalidating() {
+        let (store, index, plan) = setup(40);
+        let (head, rest) = plan.split_at(15);
+        let mut pf = Prefetcher::spawn(
+            store, index, head.to_vec(), 2, 4, 0, TruncationMode::Drop,
+        )
+        .unwrap();
+        for spec in head.iter().take(10) {
+            assert_eq!(pf.next_batch().unwrap().unwrap().0.step, spec.step);
+        }
+        // extend mid-window: same generation, nothing dropped
+        pf.extend(rest.to_vec());
+        let served: Vec<usize> = drain(&mut pf).iter().map(|(s, _)| s.step).collect();
+        let want: Vec<usize> = plan[10..].iter().map(|s| s.step).collect();
+        assert_eq!(served, want, "consumption must continue seamlessly across the seam");
+        let stats = pf.stats();
+        assert_eq!(stats.extended, 1);
+        assert_eq!(stats.republished, 0, "an extension is not a re-plan");
+        assert_eq!(stats.stale_dropped, 0, "an extension invalidates nothing");
+        assert_eq!(stats.served, plan.len());
+        // an empty extension is a no-op
+        pf.extend(vec![]);
+        assert_eq!(pf.stats().extended, 1);
+        assert!(pf.next_batch().unwrap().is_none());
+    }
+
+    #[test]
+    fn recycle_mode_forces_inline() {
+        let (store, index, plan) = setup(10);
+        let pf = Prefetcher::spawn(
+            store, index, plan, 3, 2, 0, TruncationMode::Recycle,
+        )
+        .unwrap();
+        assert_eq!(pf.stats().n_workers, 0);
+    }
+
+    #[test]
+    fn empty_tail_is_exhausted_not_an_error() {
+        let (store, index, _) = setup(4);
+        let mut pf = Prefetcher::spawn(
+            store, index, vec![], 2, 2, 0, TruncationMode::Drop,
+        )
+        .unwrap();
+        assert!(pf.next_batch().unwrap().is_none());
     }
 
     #[test]
     fn early_drop_terminates_workers() {
         let (store, index, plan) = setup(1000);
-        let mut pf = Prefetcher::spawn(store, index, plan, 2, 2, 2).unwrap();
-        let _ = pf.next_batch();
+        let mut pf = Prefetcher::spawn(
+            store, index, plan, 2, 2, 2, TruncationMode::Drop,
+        )
+        .unwrap();
+        let _ = pf.next_batch().unwrap();
         drop(pf); // must not hang on blocked senders
     }
 
@@ -198,14 +557,32 @@ mod tests {
         // workers can produce at most depth*W batches ahead; give them time
         // and verify the channel didn't balloon (indirect: Drop drains fast)
         let (store, index, plan) = setup(500);
-        let pf = Prefetcher::spawn(store, index, plan, 2, 1, 3).unwrap();
+        let pf = Prefetcher::spawn(
+            store, index, plan, 2, 1, 3, TruncationMode::Drop,
+        )
+        .unwrap();
         std::thread::sleep(std::time::Duration::from_millis(100));
         drop(pf);
     }
 
     #[test]
-    fn empty_plan_rejected() {
+    fn adaptive_tail_from_planner_is_servable() {
+        // the planner's speculative hold-current-length projection streams
+        // through the same pipeline as a static plan
         let (store, index, _) = setup(4);
-        assert!(Prefetcher::spawn(store, index, Arc::new(vec![]), 1, 1, 0).is_err());
+        let pacing = BucketedPacing::new(
+            Pacing::Adaptive { start: 8, end: 64, grow: 8, patience: 2 },
+            vec![8, 16, 24, 32, 48, 64],
+        )
+        .unwrap();
+        let planner =
+            Planner::new(pacing, BszWarmup::constant(4), Budget::Steps(12));
+        let tail = planner.tail().unwrap();
+        assert!(tail.iter().all(|s| s.seqlen == 8));
+        let mut pf = Prefetcher::spawn(
+            store, index, tail, 2, 2, 0, TruncationMode::Drop,
+        )
+        .unwrap();
+        assert_eq!(drain(&mut pf).len(), 12);
     }
 }

@@ -6,6 +6,13 @@
 //! the streaming-orchestrator half: when one worker lags (slow node, skewed
 //! document lengths after recycling), unvisited windows migrate from the
 //! most- to the least-loaded shard, preserving the exactly-once invariant.
+//!
+//! NOTE: since the unified reactive loop, the *prefetcher* no longer
+//! consumes shards — its workers build batches spec-addressed from the
+//! shared sample stream (`data::dataset::RowCursor`), which is what makes
+//! generation-based re-planning deterministic. This module is kept as the
+//! exactly-once partitioning/rebalancing substrate for distributing whole
+//! *runs or corpora* across machines (ROADMAP "cross-machine sharding").
 
 use anyhow::{bail, Result};
 

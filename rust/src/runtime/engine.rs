@@ -33,8 +33,18 @@ pub struct StepStats {
 }
 
 impl StepStats {
+    /// True when *every* stat is finite. The Adam-variance extremes
+    /// (`var_max`), momentum norm, and clip coefficient are exactly where
+    /// the paper says pathology shows first — a NaN that debuts there must
+    /// trip divergence patience and the sentinel like a NaN loss would, not
+    /// slip past a loss-only check.
     pub fn is_finite(&self) -> bool {
-        self.loss.is_finite() && self.grad_l2.is_finite() && self.var_l1.is_finite()
+        self.loss.is_finite()
+            && self.grad_l2.is_finite()
+            && self.var_l1.is_finite()
+            && self.var_max.is_finite()
+            && self.mom_l1.is_finite()
+            && self.clip_coef.is_finite()
     }
 }
 
@@ -382,6 +392,30 @@ mod tests {
         assert!(correct.iter().all(|&c| c == 0.0 || c == 1.0));
         // mean nll near ln(V) at init
         assert!((sum_nll / (b * s) as f32 - (man.model.vocab as f32).ln()).abs() < 0.7);
+    }
+
+    #[test]
+    fn is_finite_covers_every_stat() {
+        // regression: is_finite used to check only loss/grad_l2/var_l1, so
+        // a NaN debuting in the Adam-variance stats never tripped the
+        // divergence patience or the sentinel
+        let healthy = StepStats {
+            loss: 5.0, grad_l2: 1.0, var_l1: 1.0, var_max: 0.1, mom_l1: 1.0, clip_coef: 1.0,
+        };
+        assert!(healthy.is_finite());
+        let wrecks: [fn(&mut StepStats); 6] = [
+            |s| s.loss = f32::NAN,
+            |s| s.grad_l2 = f32::INFINITY,
+            |s| s.var_l1 = f32::NAN,
+            |s| s.var_max = f32::NAN,
+            |s| s.mom_l1 = f32::NEG_INFINITY,
+            |s| s.clip_coef = f32::NAN,
+        ];
+        for wreck in wrecks {
+            let mut s = healthy;
+            wreck(&mut s);
+            assert!(!s.is_finite(), "{s:?} must be non-finite");
+        }
     }
 
     #[test]

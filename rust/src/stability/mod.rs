@@ -142,8 +142,18 @@ impl StabilityPolicy {
 pub enum Outcome {
     /// Step is fine (or merely a warning) — record it and carry on.
     Proceed,
+    /// Step is fine AND the controller changed the schedule: the seqlen cap
+    /// re-grew (or cleared) after a healthy streak. Record the step, apply
+    /// the patch to the planner, and republish the plan tail — the
+    /// prefetcher's current projection is stale.
+    Patched {
+        /// the new cap (`None` = cap lifted, nominal schedule resumes)
+        cap: Option<usize>,
+    },
     /// The state was restored to an earlier snapshot; rewind the loop's
-    /// bookkeeping to `to_step` / `to_tokens` and do not record the step.
+    /// bookkeeping to `to_step` / `to_tokens`, re-plan from there under the
+    /// re-entry cap ([`Autopilot::override_len`]), and do not record the
+    /// step.
     RolledBack { to_step: u64, to_tokens: u64 },
     /// Out of rollbacks — record the divergence and stop the run.
     GaveUp,
@@ -209,7 +219,8 @@ impl Autopilot {
         match obs.verdict {
             Verdict::Healthy => {
                 self.trace.n_healthy += 1;
-                if let Some(new_len) = self.controller.on_verdict(Verdict::Healthy) {
+                let patch = self.controller.on_verdict(Verdict::Healthy);
+                if let Some(new_len) = patch {
                     self.trace.interventions.push(Intervention {
                         at_step: step,
                         override_len: new_len,
@@ -221,7 +232,13 @@ impl Autopilot {
                     self.steps_since_snapshot = 0;
                     self.snapshots_since_rollback += 1;
                 }
-                Ok(Outcome::Proceed)
+                // a re-grow (or cap lift) is a schedule patch the planner
+                // must consume — surface it instead of relying on the
+                // trainer to poll override_len() every step
+                Ok(match patch {
+                    Some(cap) => Outcome::Patched { cap },
+                    None => Outcome::Proceed,
+                })
             }
             Verdict::Warning => {
                 self.trace.n_warning += 1;

@@ -164,6 +164,22 @@ mod tests {
     }
 
     #[test]
+    fn nan_in_adam_variance_stats_alone_is_diverged() {
+        // regression for the tightened StepStats::is_finite: a NaN that
+        // first appears in var_max / mom_l1 / clip_coef — loss still finite
+        // — must be flagged by the always-on guard
+        let mut s = sentinel();
+        for _ in 0..3 {
+            assert_eq!(s.observe(&stats(5.0, 0.1)).verdict, Verdict::Healthy);
+        }
+        assert_eq!(s.observe(&stats(5.0, f32::NAN)).verdict, Verdict::Diverged);
+        let bad_mom = StepStats { mom_l1: f32::NAN, ..stats(5.0, 0.1) };
+        assert_eq!(s.observe(&bad_mom).verdict, Verdict::Diverged);
+        let bad_clip = StepStats { clip_coef: f32::INFINITY, ..stats(5.0, 0.1) };
+        assert_eq!(s.observe(&bad_clip).verdict, Verdict::Diverged);
+    }
+
+    #[test]
     fn loss_spike_warns_then_diverges() {
         let mut s = sentinel();
         for _ in 0..10 {

@@ -295,6 +295,21 @@ mod tests {
     }
 
     #[test]
+    fn variance_nan_marks_divergence_like_a_loss_nan() {
+        // regression companion to StepStats::is_finite: a run whose loss
+        // (and every other stat) stays finite while var_max alone goes NaN
+        // is still a divergence — the patience counter in the trainer keys
+        // off the same predicate
+        let mut h = RunHistory::new("t");
+        h.record(rec(0, 5.0, 0.1));
+        let mut bad = rec(1, 4.9, 0.1);
+        bad.stats.var_max = f32::NAN; // var_l1 etc. stay finite
+        h.record(bad);
+        assert_eq!(h.diverged_at, Some(1));
+        assert!(h.diverged());
+    }
+
+    #[test]
     fn rewind_undoes_steps_evals_and_divergence() {
         let mut h = RunHistory::new("t");
         for (i, l) in [5.0, 4.5, 4.0, f32::NAN].iter().enumerate() {

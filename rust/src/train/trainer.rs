@@ -1,13 +1,20 @@
-//! The training driver: config → data → plan → prefetch → PJRT steps,
-//! with the paper's full instrumentation recorded per step.
+//! The training driver: config → data → incremental plan → reactive
+//! prefetch → PJRT steps, with the paper's full instrumentation recorded
+//! per step.
 //!
-//! Two execution paths:
-//! * **planned** (default): the (pacing × bsz-warmup × budget) schedule is
-//!   resolved up front (`pipeline::plan`), batches stream from the threaded
-//!   prefetcher, and the loop is a single `engine.train_step` per batch —
-//!   Python never appears, and the data pipeline runs ahead of compute.
-//! * **synchronous**: the adaptive pacing function needs the step-t loss to
-//!   pick seqlen_{t+1}, so it runs through the `SlwBatcher` directly.
+//! **One loop for every schedule.** The planner (`pipeline::plan::Planner`)
+//! emits the (pacing × bsz-warmup × budget) schedule incrementally from any
+//! resume point, and the reactive prefetcher (`pipeline::prefetch`)
+//! assembles its projected tail on worker threads ahead of compute. Runs
+//! that rewrite their own schedule mid-flight — adaptive pacing (the next
+//! spec is committed only once the step-t loss arrives) and the stability
+//! autopilot (rollbacks and re-entry cap changes) — stay on the threaded
+//! pipeline: the trainer applies the patch to the planner, republishes the
+//! tail under a bumped generation, and the workers drop the stale
+//! projection and keep running ahead. Because a step's batch is a pure
+//! function of its `StepSpec` (Drop truncation), `n_workers = 0` is the
+//! degenerate case of the *same* loop with inline assembly and a
+//! bit-identical trajectory — there is no separate synchronous path.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -16,14 +23,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{DataRecipe, RunConfig};
 use crate::data::corpus::{Corpus, InductionCorpus, MarkovCorpus, MixtureCorpus};
-use crate::data::dataset::{Sampler, SequenceIndex, TokenStore};
+use crate::data::dataset::{SequenceIndex, TokenStore};
 use crate::data::tokenizer::Tokenizer;
 use crate::eval::perplexity::validation_ppl;
-use crate::pipeline::batcher::SlwBatcher;
-use crate::pipeline::bsz_warmup::BszWarmup;
 use crate::pipeline::pacing::{BucketedPacing, Pacing};
-use crate::pipeline::plan::{plan_run, Budget, StepSpec};
-use crate::pipeline::prefetch::Prefetcher;
+use crate::pipeline::plan::{Budget, PlanCursor, Planner, StepSpec};
+use crate::pipeline::prefetch::{PrefetchStats, Prefetcher};
+use crate::pipeline::bsz_warmup::BszWarmup;
 use crate::runtime::{Engine, TrainState};
 use crate::schedule::lr::{Horizon, LrSchedule};
 use crate::sim::cluster::{ClusterConfig, ClusterSim, ModelDims};
@@ -34,10 +40,21 @@ use crate::train::metrics::{EvalRecord, RunHistory, StepRecord};
 /// "unrecoverable divergence ... cannot continue to train due to NaN").
 const DIVERGENCE_PATIENCE: usize = 5;
 
+/// Upper bound on the plan window published to the prefetcher at a time.
+/// The window is republished (from the live cursor) as consumption reaches
+/// its end, so re-plan cost and pipeline memory stay O(window) even for
+/// paper-scale token budgets whose full schedule would be tens of millions
+/// of steps.
+const TAIL_WINDOW: usize = 65_536;
+
 pub struct RunResult {
     pub history: RunHistory,
     pub state: TrainState,
+    /// static schedules: the exact planned step count; adaptive pacing:
+    /// the executed step count (its plan only exists in hindsight)
     pub plan_steps: usize,
+    /// data-pipeline counters (prefetch hit rate, re-plans, stale drops)
+    pub pipeline: PrefetchStats,
 }
 
 /// Worker-level corpus cache: generated `TokenStore`s keyed by
@@ -202,71 +219,60 @@ impl Trainer {
         LrSchedule::new(lr.peak, lr.min_lr, horizon)
     }
 
-    /// Run to the token budget. Returns the full history + final state.
+    /// Run to the token budget through the reactive pipeline
+    /// (`config.n_workers` threads; 0 = inline assembly, same loop).
     pub fn run(&mut self) -> Result<RunResult> {
-        // adaptive pacing needs the step-t loss; the autopilot can rewrite
-        // the schedule mid-run — neither can be pre-planned
-        if matches!(self.config.pacing, Pacing::Adaptive { .. }) || self.config.stability.is_some()
-        {
-            return self.run_sync();
-        }
+        self.run_reactive(usize::MAX, self.config.n_workers)
+    }
+
+    /// [`Trainer::run`] additionally capped at `max_steps` step indices.
+    pub fn run_steps(&mut self, max_steps: usize) -> Result<RunResult> {
+        self.run_reactive(max_steps, self.config.n_workers)
+    }
+
+    /// The `n_workers = 0` degenerate case of [`Trainer::run`]: identical
+    /// loop, identical trajectory, batch assembly inline on the training
+    /// thread. Kept for callers that must not spawn threads (tuner probes,
+    /// overhead benches).
+    pub fn run_sync(&mut self) -> Result<RunResult> {
+        self.run_reactive(usize::MAX, 0)
+    }
+
+    /// [`Trainer::run_sync`] capped at `max_steps` steps.
+    pub fn run_sync_steps(&mut self, max_steps: usize) -> Result<RunResult> {
+        self.run_reactive(max_steps, 0)
+    }
+
+    /// The unified reactive loop: one step-recording, eval,
+    /// divergence-patience, and rollback path for constant baselines, SLW
+    /// ramps, bsz-warmup, adaptive pacing, and autopilot recovery alike.
+    fn run_reactive(&mut self, max_steps: usize, n_workers: usize) -> Result<RunResult> {
         let pacing = self.bucketed_pacing()?;
         let bszw = self.bsz_warmup()?;
-        let plan = Arc::new(plan_run(&pacing, &bszw, Budget::Tokens(self.config.token_budget))?);
-        let lr = self.resolve_lr(plan.len())?;
-        let mut prefetch = Prefetcher::spawn(
+        let mut planner =
+            Planner::new(pacing, bszw, Budget::Tokens(self.config.token_budget));
+        // LR horizon: static schedules resolve against the exact plan
+        // length; adaptive estimates from the constant-seqlen equivalent
+        // (its plan length only exists in hindsight, so RunResult reports
+        // the executed step count for it instead).
+        let static_plan_steps = match self.config.pacing {
+            Pacing::Adaptive { .. } => None,
+            _ => Some(planner.projected_steps()?),
+        };
+        let plan_len = static_plan_steps.unwrap_or(
+            (self.config.token_budget
+                / (self.config.batch * self.index.full_seqlen()) as u64) as usize,
+        );
+        let lr = self.resolve_lr(plan_len.max(2))?;
+        let mut pipe = Prefetcher::spawn(
             self.store.clone(),
             self.index.clone(),
-            plan.clone(),
-            self.config.n_workers,
+            planner.tail_window(TAIL_WINDOW),
+            n_workers,
             self.config.prefetch_depth,
             self.config.seed,
-        )?;
-
-        let mut history = RunHistory::new(&self.config.name);
-        let mut state = TrainState::init(
-            self.engine.manifest_for_batch(self.config.batch)?,
-            self.config.seed,
-        );
-        let mut bad_streak = 0usize;
-        for spec in plan.iter() {
-            let Some(batch) = prefetch.next_batch() else {
-                bail!("prefetcher ended early at step {}", spec.step);
-            };
-            let lr_t = lr.lr_at(spec.step, spec.tokens_before);
-            let stats = self
-                .engine
-                .train_step(&mut state, &batch.tokens, batch.bsz, batch.seqlen, lr_t,
-                            self.config.clip_norm)?;
-            if self.record_step(&mut history, spec, lr_t, stats, &mut bad_streak) {
-                break;
-            }
-            self.maybe_eval(&mut history, &state, spec)?;
-        }
-        let plan_steps = plan.len();
-        Ok(RunResult { history, state, plan_steps })
-    }
-
-    /// Synchronous path (adaptive pacing; also used by the tuner's probes).
-    pub fn run_sync(&mut self) -> Result<RunResult> {
-        self.run_sync_steps(usize::MAX)
-    }
-
-    /// Synchronous run additionally capped at `max_steps` steps.
-    pub fn run_sync_steps(&mut self, max_steps: usize) -> Result<RunResult> {
-        let pacing = self.bucketed_pacing()?;
-        let bszw = self.bsz_warmup()?;
-        let mut batcher = SlwBatcher::new(
-            pacing,
             self.config.truncation,
-            self.index.full_seqlen(),
-        );
-        let mut sampler = Sampler::new(self.index.clone(), self.config.seed);
-        // LR horizon: token-wise resolves exactly; step-wise estimates the
-        // step count from the constant-seqlen equivalent.
-        let est_steps = (self.config.token_budget
-            / (self.config.batch * self.index.full_seqlen()) as u64) as usize;
-        let lr = self.resolve_lr(est_steps.max(2))?;
+        )?;
 
         let mut history = RunHistory::new(&self.config.name);
         let mut state = TrainState::init(
@@ -275,7 +281,7 @@ impl Trainer {
         );
         // the stability autopilot: sentinel over every executed step, a
         // checkpoint ring to roll back to, and the closed-loop schedule
-        // response (ramp re-entry + LR decay)
+        // response (ramp re-entry + LR decay) delivered as plan patches
         let mut pilot = match &self.config.stability {
             Some(policy) => {
                 let mut p = Autopilot::new(policy.clone(), self.index.full_seqlen());
@@ -284,84 +290,121 @@ impl Trainer {
             }
             None => None,
         };
-        let mut tokens = 0u64;
-        let mut step = 0usize;
+        // planner cursor *before* each executed step, indexed by step — the
+        // resume points a rollback re-plans from
+        let mut cursors: Vec<PlanCursor> = Vec::new();
         let mut bad_streak = 0usize;
-        while tokens < self.config.token_budget && step < max_steps {
-            let bsz = bszw.bsz_at(tokens);
-            let batch = batcher.next_batch(step, bsz, &mut sampler, &self.store)?;
-            let mut lr_t = lr.lr_at(step, tokens);
+        loop {
+            if planner.cursor().step >= max_steps {
+                break;
+            }
+            let Some((spec, batch)) = pipe.next_batch().with_context(|| {
+                format!(
+                    "prefetch pipeline died at step {} — partial history: {} recorded \
+                     steps, {} tokens accumulated",
+                    planner.cursor().step,
+                    history.steps.len(),
+                    history.total_tokens()
+                )
+            })?
+            else {
+                // window exhausted: append the next window to the same
+                // generation if the budget has more steps (an extension,
+                // not a schedule change — nothing is invalidated)
+                let more = planner.tail_window(TAIL_WINDOW);
+                if more.is_empty() {
+                    break; // budget reached
+                }
+                pipe.extend(more);
+                continue;
+            };
+            debug_assert_eq!(spec.step, planner.cursor().step);
+            let mut lr_t = lr.lr_at(spec.step, spec.tokens_before);
             if let Some(p) = &pilot {
                 lr_t *= p.lr_scale();
             }
-            let stats = self
-                .engine
-                .train_step(&mut state, &batch.tokens, batch.bsz, batch.seqlen, lr_t,
-                            self.config.clip_norm)?;
+            let stats = self.engine.train_step(
+                &mut state,
+                &batch.tokens,
+                batch.bsz,
+                batch.seqlen,
+                lr_t,
+                self.config.clip_norm,
+            )?;
+            let mut republish = false;
             if let Some(p) = &mut pilot {
-                match p.observe(step, &stats, &mut state)? {
+                match p.observe(spec.step, &stats, &mut state)? {
                     Outcome::RolledBack { to_step, to_tokens } => {
                         // the poisoned steps never happened: rewind the
-                        // bookkeeping to the restored snapshot and replay
-                        // from there on the patched schedule
+                        // bookkeeping to the restored snapshot, re-plan from
+                        // there under the re-entry cap, and let the pipeline
+                        // drop the stale generation
                         crate::info!(
-                            "{}: autopilot rollback at step {step} -> step {to_step} \
+                            "{}: autopilot rollback at step {} -> step {to_step} \
                              (seqlen cap {:?}, lr scale {:.4})",
                             self.config.name,
+                            spec.step,
                             p.override_len(),
                             p.lr_scale()
                         );
-                        history.rewind(to_step as usize);
-                        step = to_step as usize;
-                        tokens = to_tokens;
+                        let to = to_step as usize;
+                        // the diverged step itself was never committed, so
+                        // rolling back to it resumes from the live cursor
+                        let resume =
+                            if to == cursors.len() { planner.cursor() } else { cursors[to] };
+                        debug_assert_eq!(resume.step, to);
+                        debug_assert_eq!(resume.tokens, to_tokens);
+                        history.rewind(to);
+                        cursors.truncate(to);
+                        planner.seek(resume);
+                        planner.set_cap(p.override_len());
+                        pipe.publish(planner.tail_window(TAIL_WINDOW));
                         bad_streak = 0;
-                        batcher.override_seqlen(p.override_len());
                         continue;
                     }
                     Outcome::GaveUp => {
                         crate::info!(
-                            "{}: autopilot out of rollbacks at step {step}, stopping",
-                            self.config.name
+                            "{}: autopilot out of rollbacks at step {}, stopping",
+                            self.config.name,
+                            spec.step
                         );
-                        tokens += batch.train_tokens;
-                        let spec = StepSpec {
-                            step,
-                            seqlen: batch.seqlen,
-                            bsz: batch.bsz,
-                            tokens_before: tokens - batch.train_tokens,
-                        };
                         self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak);
                         break;
                     }
-                    Outcome::Proceed => batcher.override_seqlen(p.override_len()),
+                    Outcome::Patched { cap } => {
+                        planner.set_cap(cap);
+                        republish = true;
+                    }
+                    Outcome::Proceed => {}
                 }
             }
-            if stats.loss.is_finite() {
-                batcher.observe_loss(stats.loss as f64);
+            // adaptive pacing feedback: only surviving finite steps feed the
+            // growth heuristic (a rolled-back loss never existed)
+            if stats.loss.is_finite() && planner.observe_loss(stats.loss as f64) {
+                republish = true;
             }
-            tokens += batch.train_tokens;
-            let spec = StepSpec {
-                step,
-                seqlen: batch.seqlen,
-                bsz: batch.bsz,
-                tokens_before: tokens - batch.train_tokens,
-            };
+            cursors.push(planner.cursor());
+            planner.commit(&spec, batch.fresh_rows);
+            if republish {
+                // commit first: the patched tail starts after this step
+                pipe.publish(planner.tail_window(TAIL_WINDOW));
+            }
             if self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak) {
                 break;
             }
             self.maybe_eval(&mut history, &state, &spec)?;
-            step += 1;
         }
         if let Some(p) = pilot {
             history.stability = Some(p.into_trace());
         }
-        Ok(RunResult { history, state, plan_steps: step })
+        let plan_steps = static_plan_steps.unwrap_or(history.steps.len());
+        Ok(RunResult { history, state, plan_steps, pipeline: pipe.stats() })
     }
 
     /// Record one executed step and advance the divergence-patience
-    /// counter — the single bookkeeping path shared by the planned and
-    /// synchronous loops (and therefore by coordinator-driven runs).
-    /// Returns `true` when the run must stop (unrecoverable divergence).
+    /// counter — the single bookkeeping path for every run shape (and
+    /// therefore for coordinator-driven runs). Returns `true` when the run
+    /// must stop (unrecoverable divergence).
     fn record_step(
         &self,
         history: &mut RunHistory,
@@ -462,6 +505,35 @@ mod tests {
         cfg
     }
 
+    /// The divergent-recipe autopilot config shared by the recovery and
+    /// determinism tests (and mirrored by the pipeline_utilization bench).
+    fn divergent_autopilot_cfg() -> RunConfig {
+        let mut cfg = micro_cfg();
+        cfg.lr.peak = 1.0;
+        cfg.lr.min_lr = 0.1;
+        // no warmup: full absurd LR from step 1, so the sentinel's ceiling
+        // (calibrated off the healthy step-0 loss) sees the blow-up at once
+        cfg.lr.horizon = crate::schedule::lr::Horizon::Steps { warmup: 1, total: 0 };
+        cfg.eval_every = 0;
+        cfg.token_budget = 4 * 32 * 60;
+        cfg.stability = Some(crate::stability::StabilityPolicy {
+            warmup_steps: 3,
+            snapshot_every: 3,
+            regrow_after: 5,
+            max_rollbacks: 20,
+            ..Default::default()
+        });
+        cfg
+    }
+
+    fn trajectory(out: &RunResult) -> Vec<(usize, usize, usize, u64, u32)> {
+        out.history
+            .steps
+            .iter()
+            .map(|r| (r.step, r.bsz, r.seqlen, r.tokens_after, r.stats.loss.to_bits()))
+            .collect()
+    }
+
     #[test]
     fn baseline_run_learns() {
         let mut t = Trainer::new(&root(), micro_cfg()).unwrap();
@@ -475,6 +547,9 @@ mod tests {
         assert!(out.history.sim_hours() > 0.0);
         // all steps at full length for the constant baseline
         assert!(out.history.steps.iter().all(|r| r.seqlen == 32));
+        // a static schedule never re-plans
+        assert_eq!(out.pipeline.republished, 0);
+        assert_eq!(out.pipeline.served, 80);
     }
 
     #[test]
@@ -492,7 +567,7 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_runs_sync() {
+    fn adaptive_runs_through_the_reactive_pipeline() {
         let mut cfg = micro_cfg();
         cfg.pacing = Pacing::Adaptive { start: 8, end: 32, grow: 8, patience: 3 };
         cfg.eval_every = 0;
@@ -503,24 +578,68 @@ mod tests {
         assert_eq!(out.history.steps[0].seqlen, 8);
         // adaptive must have grown given steadily-falling loss
         assert!(out.history.steps.last().unwrap().seqlen > 8);
+        // each grow decision re-planned the tail (threaded, not sync)
+        assert_eq!(out.pipeline.n_workers, 2);
+        assert!(out.pipeline.republished >= 1, "grow decisions must re-plan");
     }
 
     #[test]
-    fn planned_and_sync_paths_share_schedule() {
-        // the coordinator's determinism contract: for the same config/seed
-        // the pre-planned prefetch path and the synchronous path must step
-        // through the identical (bsz, seqlen) schedule
+    fn threaded_and_inline_loops_share_the_trajectory() {
+        // the unified-loop determinism contract: for the same config/seed
+        // the threaded pipeline and the n_workers = 0 degenerate loop must
+        // produce bit-identical step/loss trajectories
         let mut cfg = micro_cfg();
         cfg = presets::with_slw(cfg, 8, 20).unwrap();
         cfg.eval_every = 0;
         cfg.token_budget = 4 * 32 * 30;
-        let planned = Trainer::new(&root(), cfg.clone()).unwrap().run().unwrap();
-        let sync = Trainer::new(&root(), cfg).unwrap().run_sync().unwrap();
-        let schedule = |out: &RunResult| -> Vec<(usize, usize, u64)> {
-            out.history.steps.iter().map(|r| (r.bsz, r.seqlen, r.tokens_after)).collect()
-        };
-        assert!(!planned.history.steps.is_empty());
-        assert_eq!(schedule(&planned), schedule(&sync));
+        let threaded = Trainer::new(&root(), cfg.clone()).unwrap().run().unwrap();
+        let inline = Trainer::new(&root(), cfg).unwrap().run_sync().unwrap();
+        assert!(!threaded.history.steps.is_empty());
+        assert_eq!(trajectory(&threaded), trajectory(&inline));
+    }
+
+    #[test]
+    fn autopilot_trajectory_is_identical_across_worker_counts() {
+        // cross-path determinism under intervention: an autopilot run with
+        // real rollbacks through the threaded loop must reproduce the
+        // n_workers = 0 trajectory bit for bit — including the rollback
+        // points — while staying at exactly 2 host transfers per executed
+        // step through every re-plan
+        let cfg = divergent_autopilot_cfg();
+        let mut threaded_cfg = cfg.clone();
+        threaded_cfg.n_workers = 3;
+        let mut t = Trainer::new(&root(), threaded_cfg).unwrap();
+        let base_transfers = t.engine.n_host_transfers();
+        let threaded = t.run().unwrap();
+        let threaded_transfers = t.engine.n_host_transfers() - base_transfers;
+
+        let mut s = Trainer::new(&root(), cfg).unwrap();
+        let inline = s.run_sync().unwrap();
+
+        assert_eq!(trajectory(&threaded), trajectory(&inline));
+        let tt = threaded.history.stability.as_ref().expect("trace");
+        let it = inline.history.stability.as_ref().expect("trace");
+        assert!(tt.n_rollbacks() >= 1, "the contrast needs a real rollback");
+        assert_eq!(
+            tt.rollbacks.iter().map(|r| (r.at_step, r.restored_step)).collect::<Vec<_>>(),
+            it.rollbacks.iter().map(|r| (r.at_step, r.restored_step)).collect::<Vec<_>>(),
+            "rollback points must match"
+        );
+        assert_eq!(
+            tt.interventions.iter().map(|i| (i.at_step, i.override_len)).collect::<Vec<_>>(),
+            it.interventions.iter().map(|i| (i.at_step, i.override_len)).collect::<Vec<_>>(),
+        );
+        // transfer discipline: 2 per executed train step (recorded steps
+        // plus the rolled-back ones), with eval_every = 0
+        let wasted: usize = tt.rollbacks.iter().map(|r| r.wasted_steps).sum();
+        let executed = threaded.history.steps.len() + wasted;
+        assert_eq!(
+            threaded_transfers,
+            2 * executed,
+            "exactly 2 host transfers per executed step through re-plans"
+        );
+        assert!(threaded.pipeline.republished >= 1);
+        assert_eq!(threaded.pipeline.n_workers, 3);
     }
 
     #[test]
@@ -565,44 +684,32 @@ mod tests {
     #[test]
     fn autopilot_is_a_noop_on_a_stable_run() {
         // a healthy run under the autopilot must produce the exact same
-        // trajectory as the open loop (lr scale 1.0, no override) plus a
+        // trajectory as the open loop (lr scale 1.0, no patches) plus a
         // clean trace — the sentinel only watches
         let mut cfg = micro_cfg();
         cfg.eval_every = 0;
         cfg.token_budget = 4 * 32 * 40;
-        let open = Trainer::new(&root(), cfg.clone()).unwrap().run_sync().unwrap();
+        let open = Trainer::new(&root(), cfg.clone()).unwrap().run().unwrap();
         cfg.stability = Some(crate::stability::StabilityPolicy::default());
-        let auto = Trainer::new(&root(), cfg).unwrap().run_sync().unwrap();
+        let auto = Trainer::new(&root(), cfg).unwrap().run().unwrap();
         assert_eq!(open.history.losses(), auto.history.losses());
         let trace = auto.history.stability.expect("autopilot must attach a trace");
         assert_eq!(trace.n_rollbacks(), 0);
         assert!(!trace.gave_up);
         assert!(trace.n_healthy > 0);
         assert!(open.history.stability.is_none());
+        // no intervention, no re-plan
+        assert_eq!(auto.pipeline.republished, 0);
     }
 
     #[test]
-    fn autopilot_recovers_a_divergent_run() {
+    fn autopilot_recovers_a_divergent_run_on_the_threaded_pipeline() {
         // the headline contrast at micro scale: an LR three orders of
         // magnitude over base blows the open loop up; the autopilot
-        // detects it online, rolls back, shrinks the schedule, decays the
-        // LR, and finishes the budget with finite loss
-        let mut cfg = micro_cfg();
-        cfg.lr.peak = 1.0;
-        cfg.lr.min_lr = 0.1;
-        // no warmup: full absurd LR from step 1, so the sentinel's ceiling
-        // (calibrated off the healthy step-0 loss) sees the blow-up at once
-        cfg.lr.horizon = crate::schedule::lr::Horizon::Steps { warmup: 1, total: 0 };
-        cfg.eval_every = 0;
-        cfg.token_budget = 4 * 32 * 60;
-        cfg.stability = Some(crate::stability::StabilityPolicy {
-            warmup_steps: 3,
-            snapshot_every: 3,
-            regrow_after: 5,
-            max_rollbacks: 20,
-            ..Default::default()
-        });
-        let mut t = Trainer::new(&root(), cfg).unwrap();
+        // detects it online, rolls back, patches the plan (short re-entry
+        // cap, decayed LR), and finishes the budget with finite loss —
+        // without ever leaving the threaded prefetcher
+        let mut t = Trainer::new(&root(), divergent_autopilot_cfg()).unwrap();
         let out = t.run().unwrap();
         let h = &out.history;
         assert!(!h.diverged(), "autopilot must not record a divergence");
@@ -619,6 +726,10 @@ mod tests {
                 "re-entry must shorten some steps");
         // and the budget was completed despite the recovery detours
         assert!(h.total_tokens() >= 4 * 32 * 60);
+        // every rollback republished the plan; the threaded pipeline served
+        // the whole run (this config defaults to n_workers = 2)
+        assert!(out.pipeline.republished >= trace.n_rollbacks() as u64);
+        assert_eq!(out.pipeline.n_workers, 2);
     }
 
     #[test]
