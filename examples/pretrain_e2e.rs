@@ -88,16 +88,19 @@ fn main() -> anyhow::Result<()> {
         println!("  val ppl @ step {:>5}: {:.2}", e.step, e.val_ppl);
     }
 
-    // probe suite on the final model
+    // probe suite on the final model — materialize the device-resident
+    // state once, then upload it onto the scoring engine's own client
+    let host = out.state.materialize()?;
     let mut engine = Engine::load(&root, "mini")?;
-    let (scores, avg) = probes::score_suite(&mut engine, &out.state, 0, 2, 1)?;
+    let probe_state = engine.state_from_host(&host)?;
+    let (scores, avg) = probes::score_suite(&mut engine, &probe_state, 0, 2, 1)?;
     println!("probe suite (zero-shot): avg {:.1}%", 100.0 * avg);
     for s in scores.iter().take(4) {
         println!("  {:>14}: {:.1}%", s.name, 100.0 * s.accuracy);
     }
 
     let ckpt = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results/e2e_final.ckpt");
-    checkpoint::save(&out.state, &ckpt)?;
+    checkpoint::save(&host, &ckpt)?;
     println!("checkpoint: {}  curve: {}", ckpt.display(), out_path.display());
     Ok(())
 }

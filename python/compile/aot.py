@@ -31,11 +31,18 @@ from .configs import ARTIFACT_SETS, DEFAULT_SETS, ArtifactSet
 
 
 def to_hlo_text(lowered) -> str:
-    """stablehlo → XlaComputation → HLO text (return_tuple so the Rust side
-    unwraps one tuple literal per execute)."""
+    """stablehlo → XlaComputation → HLO text.
+
+    ``return_tuple=False``: the step's outputs stay *separate results* (not
+    one wrapped tuple), so the Rust side receives one `PjRtBuffer` per
+    output from `execute_b` and can keep the params/m/v state buffers
+    device-resident across steps, reading back only the small stats tensor.
+    (The legacy output layout 1 wrapped everything in a tuple that had to be
+    materialized on the host wholesale every step.)
+    """
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
     )
     return comp.as_hlo_text()
 
@@ -50,9 +57,7 @@ def lower_train(aset: ArtifactSet, seqlen: int) -> str:
         spec((n,), f32),                                  # adam m
         spec((n,), f32),                                  # adam v
         spec((n,), f32),                                  # decay mask
-        spec((), f32),                                    # step (1-based)
-        spec((), f32),                                    # lr
-        spec((), f32),                                    # clip_norm
+        spec((3,), f32),                                  # knobs [step, lr, clip_norm]
         spec((aset.batch_size, seqlen + 1), jnp.int32),   # tokens
     )
     return to_hlo_text(lowered)
@@ -96,9 +101,14 @@ def manifest(aset: ArtifactSet) -> dict:
         "full_only": aset.full_only,
         "train_artifacts": {str(s): f"train_s{s}.hlo.txt" for s in aset.seqlen_buckets},
         "eval_artifact": f"eval_s{cfg.max_seqlen}.hlo.txt",
-        "train_inputs": ["params", "m", "v", "decay_mask", "step", "lr", "clip_norm", "tokens"],
-        "train_outputs": ["params", "m", "v", "loss", "grad_l2", "var_l1",
-                          "var_max", "mom_l1", "clip_coef"],
+        # Output layout 2: untupled results; state stays device-resident on
+        # the Rust side and only the packed stats tensor is read back.
+        # Engine::load rejects layout-1 (tuple-resident) artifacts.
+        "output_layout": 2,
+        "train_inputs": ["params", "m", "v", "decay_mask", "knobs", "tokens"],
+        "knob_fields": ["step", "lr", "clip_norm"],
+        "train_outputs": ["params", "m", "v", "stats"],
+        "stats_fields": list(M.STATS_FIELDS),
         "eval_outputs": ["sum_nll", "per_pos_nll", "correct"],
         "params": [
             {

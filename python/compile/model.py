@@ -189,16 +189,26 @@ def loss_fn(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
 # AOT entry points (pure functions of their tensor args)
 # ---------------------------------------------------------------------------
 
-def train_step(flat, m, v, dmask, step, lr, clip_norm, tokens, cfg: ModelConfig):
+# Order of the packed per-step scalar outputs (manifest "stats_fields" —
+# mirrored by rust/src/runtime/engine.rs::StepStats).
+STATS_FIELDS = ("loss", "grad_l2", "var_l1", "var_max", "mom_l1", "clip_coef")
+
+
+def train_step(flat, m, v, dmask, knobs, tokens, cfg: ModelConfig):
     """One fused pre-training step.
 
-    `clip_norm` is a runtime scalar (not baked into the HLO) so the gradient
-    -clipping ablation (paper Appendix A.3.2 / Fig 10) can sweep it without
-    re-lowering artifacts.
+    ``knobs`` is a packed f32[3] of the per-step runtime scalars
+    ``[step, lr, clip_norm]`` — one tiny host upload per step instead of
+    three (clip_norm stays a runtime knob so the gradient-clipping ablation,
+    paper Appendix A.3.2 / Fig 10, can sweep it without re-lowering).
 
-    Returns (flat', m', v', loss, grad_l2, var_l1, var_max, mom_l1, clip_coef)
-    — the scalar tail is the paper's full instrumentation set.
+    Returns ``(flat', m', v', stats)`` with ``stats`` a packed f32[6] in
+    ``STATS_FIELDS`` order — the paper's full instrumentation set. State
+    outputs and the stats tensor are *separate results* (not one tuple), so
+    the Rust engine keeps params/m/v device-resident across steps and reads
+    back only the 24-byte stats tensor.
     """
+    step, lr, clip_norm = knobs[0], knobs[1], knobs[2]
     loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
     if cfg.use_pallas:
         p_new, m_new, v_new, stats = adam_update(
@@ -215,7 +225,8 @@ def train_step(flat, m, v, dmask, step, lr, clip_norm, tokens, cfg: ModelConfig)
             decay_mask=dmask,
         )
     grad_l2, var_l1, var_max, mom_l1, clip_coef = stats
-    return (p_new, m_new, v_new, loss, grad_l2, var_l1, var_max, mom_l1, clip_coef)
+    packed = jnp.stack([loss, grad_l2, var_l1, var_max, mom_l1, clip_coef])
+    return (p_new, m_new, v_new, packed)
 
 
 def eval_step(flat, tokens, cfg: ModelConfig):

@@ -19,12 +19,17 @@ def train_hlo():
 def test_train_hlo_structure(train_hlo):
     assert "ENTRY" in train_hlo
     assert "HloModule" in train_hlo
-    # 8 inputs: params, m, v, decay_mask, step, lr, clip_norm, tokens
-    for i in range(8):
+    # 6 inputs: params, m, v, decay_mask, knobs f32[3], tokens
+    for i in range(6):
         assert f"parameter({i})" in train_hlo
+    assert "parameter(6)" not in train_hlo
     n = M.n_params(ASET.cfg())
     assert f"f32[{n}]" in train_hlo
+    assert "f32[3]" in train_hlo  # the packed step/lr/clip knob vector
     assert f"s32[{ASET.batch_size},9]" in train_hlo  # tokens at seqlen 8
+    # output layout 2: the root carries the three state tensors plus the
+    # packed f32[6] stats tensor as separate results
+    assert f"(f32[{n}]{{0}}, f32[{n}]{{0}}, f32[{n}]{{0}}, f32[6]{{0}})" in train_hlo
 
 
 def test_eval_hlo_structure():
@@ -40,8 +45,13 @@ def test_manifest_schema():
     assert js["n_params"] == M.n_params(ASET.cfg())
     assert js["seqlen_buckets"] == list(ASET.seqlen_buckets)
     assert len(js["params"]) == len(M.param_specs(ASET.cfg()))
-    assert js["train_outputs"][3] == "loss"
-    assert js["train_outputs"][6] == "var_max"
+    assert js["output_layout"] == 2
+    assert js["train_inputs"] == ["params", "m", "v", "decay_mask", "knobs", "tokens"]
+    assert js["knob_fields"] == ["step", "lr", "clip_norm"]
+    assert js["train_outputs"] == ["params", "m", "v", "stats"]
+    assert js["stats_fields"][0] == "loss"
+    assert js["stats_fields"][3] == "var_max"
+    assert len(js["stats_fields"]) == 6
     total = sum(p["size"] for p in js["params"])
     assert total == js["n_params"]
     # offsets are the running sum (Rust init relies on this)

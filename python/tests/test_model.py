@@ -129,6 +129,11 @@ def _state(cfg, seed=0):
     return flat, jnp.zeros_like(flat), jnp.zeros_like(flat), M.decay_mask(cfg)
 
 
+def _knobs(step, lr=1e-3, clip=1.0):
+    """Packed f32[3] per-step runtime scalars (see model.train_step)."""
+    return jnp.array([step, lr, clip], jnp.float32)
+
+
 def test_train_step_learns():
     """A few steps on a repetitive stream must reduce the loss."""
     cfg = CFG
@@ -141,10 +146,9 @@ def test_train_step_learns():
     for i in range(12):
         start = (i * 13) % (len(stream) - 4 * (cfg.max_seqlen + 1))
         batch = stream[start:start + 4 * (cfg.max_seqlen + 1)].reshape(4, -1)
-        out = f(flat, m, v, dm, jnp.float32(i + 1), jnp.float32(3e-3),
-                jnp.float32(1.0), jnp.array(batch, jnp.int32))
+        out = f(flat, m, v, dm, _knobs(i + 1, 3e-3), jnp.array(batch, jnp.int32))
         flat, m, v = out[0], out[1], out[2]
-        losses.append(float(out[3]))
+        losses.append(float(out[3][0]))
     assert losses[-1] < losses[0] - 1.0
 
 
@@ -152,11 +156,13 @@ def test_train_step_outputs():
     cfg = CFG
     flat, m, v, dm = _state(cfg)
     toks = rand_tokens(0, 4, cfg.max_seqlen + 1, cfg.vocab)
-    out = M.train_step(flat, m, v, dm, jnp.float32(1), jnp.float32(1e-3),
-                       jnp.float32(1.0), toks, cfg)
-    assert len(out) == 9
-    p_new, m_new, v_new, loss, grad_l2, var_l1, var_max, mom_l1, clip = out
+    out = M.train_step(flat, m, v, dm, _knobs(1), toks, cfg)
+    assert len(out) == 4, "state outputs + one packed stats tensor"
+    p_new, m_new, v_new, stats = out
+    assert stats.shape == (6,)
+    loss, grad_l2, var_l1, var_max, mom_l1, clip = stats
     assert p_new.shape == flat.shape
+    assert float(loss) > 0
     assert float(grad_l2) > 0
     assert float(var_max) > 0
     assert float(var_l1) >= float(var_max)
@@ -173,13 +179,16 @@ def test_train_step_pallas_ref_parity():
     outs = []
     for cfg in (cfg_p, cfg_r):
         flat, m, v, dm = _state(cfg, seed=4)
-        outs.append(M.train_step(flat, m, v, dm, jnp.float32(1), jnp.float32(1e-3),
-                                 jnp.float32(1.0), toks, cfg))
-    for a, b, name in zip(outs[0], outs[1],
-                          ["p", "m", "v", "loss", "g2", "v1", "vmax", "m1", "clip"]):
+        outs.append(M.train_step(flat, m, v, dm, _knobs(1), toks, cfg))
+    for a, b, name in zip(outs[0][:3], outs[1][:3], ["p", "m", "v"]):
         diff = float(jnp.max(jnp.abs(a - b)))
         scale = 1.0 + float(jnp.max(jnp.abs(b)))
         assert diff / scale < 2e-3, (name, diff)
+    # the packed stats compare per field — a shared scale would let the
+    # largest stat mask a regression in a small one (e.g. clip_coef)
+    for i, name in enumerate(M.STATS_FIELDS):
+        a, b = float(outs[0][3][i]), float(outs[1][3][i])
+        assert abs(a - b) / (1.0 + abs(b)) < 2e-3, (name, a, b)
 
 
 def test_variable_seqlen_buckets():
@@ -192,9 +201,8 @@ def test_variable_seqlen_buckets():
         flat, m, v, dm = _state(cfg)
         for s in aset.seqlen_buckets:
             toks = rand_tokens(0, aset.batch_size, s + 1, cfg.vocab)
-            out = M.train_step(flat, m, v, dm, jnp.float32(1), jnp.float32(1e-3),
-                       jnp.float32(1.0), toks, cfg)
-            assert np.isfinite(float(out[3]))
+            out = M.train_step(flat, m, v, dm, _knobs(1), toks, cfg)
+            assert np.all(np.isfinite(np.asarray(out[3])))
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +230,7 @@ def test_eval_step_detects_memorization():
                       .reshape(4, -1), jnp.int32)
     f = jax.jit(lambda *a: M.train_step(*a, cfg))
     for i in range(25):
-        out = f(flat, m, v, dm, jnp.float32(i + 1), jnp.float32(3e-3), jnp.float32(1.0), batch)
+        out = f(flat, m, v, dm, _knobs(i + 1, 3e-3), batch)
         flat, m, v = out[0], out[1], out[2]
     _, _, correct = M.eval_step(flat, batch, cfg)
     assert float(jnp.mean(correct)) > 0.8

@@ -3,7 +3,7 @@
 //! base and large batch — the quantity the stability-efficiency dilemma
 //! trades against. Uses the micro artifacts so `cargo bench` stays fast.
 
-use slw::runtime::{Engine, TrainState};
+use slw::runtime::Engine;
 use slw::util::bench::Bench;
 use slw::util::rng::Pcg64;
 
@@ -11,7 +11,7 @@ fn main() {
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut engine = Engine::load(&root, "micro").expect("run `make artifacts` first");
     let man = engine.manifest_for_batch(4).unwrap().clone();
-    let mut state = TrainState::init(&man, 0);
+    let mut state = engine.init_state(4, 0).unwrap();
     let mut rng = Pcg64::new(0);
 
     let b = Bench::new("fig1_step_stats").with_budget(1500, 300);

@@ -95,8 +95,7 @@ fn main() -> anyhow::Result<()> {
     // snapshot cost (the other autopilot component), amortized over the
     // default cadence — measured directly, free of XLA scheduling noise
     let policy = StabilityPolicy::default();
-    let man = engine.manifest_for_batch(4)?.clone();
-    let state = slw::runtime::TrainState::init(&man, 0);
+    let state = engine.init_state(4, 0)?;
     let mut ring = slw::stability::CheckpointRing::new(policy.ring);
     let snaps = 50usize;
     let t0 = Instant::now();

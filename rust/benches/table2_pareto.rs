@@ -5,7 +5,7 @@
 use slw::pipeline::bsz_warmup::BszWarmup;
 use slw::pipeline::pacing::{BucketedPacing, Pacing};
 use slw::pipeline::plan::{plan_run, Budget};
-use slw::runtime::{Engine, TrainState};
+use slw::runtime::Engine;
 use slw::sim::cluster::{gpt2_1_5b, ClusterConfig, ClusterSim};
 use slw::util::bench::Bench;
 use slw::util::rng::Pcg64;
@@ -14,7 +14,7 @@ fn main() {
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut engine = Engine::load(&root, "micro").expect("run `make artifacts` first");
     let man = engine.manifest_for_batch(4).unwrap().clone();
-    let mut state = TrainState::init(&man, 0);
+    let mut state = engine.init_state(4, 0).unwrap();
     let mut rng = Pcg64::new(0);
 
     let b = Bench::new("table2_pareto").with_budget(1200, 200);

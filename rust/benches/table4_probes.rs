@@ -3,7 +3,7 @@
 //! experiments.
 
 use slw::eval::probes;
-use slw::runtime::{Engine, TrainState};
+use slw::runtime::Engine;
 use slw::util::bench::Bench;
 use slw::util::rng::Pcg64;
 
@@ -11,7 +11,7 @@ fn main() {
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut engine = Engine::load(&root, "micro").expect("run `make artifacts` first");
     let man = engine.manifest_for_batch(4).unwrap().clone();
-    let state = TrainState::init(&man, 0);
+    let state = engine.init_state(4, 0).unwrap();
 
     let b = Bench::new("table4_probes").with_budget(600, 100);
 

@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! <name-slug>_<key>/entry.json   # history + metadata (util::json)
-//! <name-slug>_<key>/state.ckpt   # final TrainState (train::checkpoint)
+//! <name-slug>_<key>/state.ckpt   # final HostState (train::checkpoint)
 //! ```
 //!
 //! The key folds in the build's git revision (changed training code re-keys
@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::runtime::manifest::{family_sets, Manifest};
-use crate::runtime::{StepStats, TrainState};
+use crate::runtime::{HostState, StepStats};
 use crate::stability::report::StabilityTrace;
 use crate::train::checkpoint;
 use crate::train::metrics::{EvalRecord, RunHistory, StepRecord};
@@ -80,10 +80,11 @@ pub fn run_key(artifacts_root: &Path, cfg: &RunConfig) -> Result<String> {
     Ok(run_key_with(cfg, &family_text(artifacts_root, &cfg.model)?))
 }
 
-/// A run loaded back from disk.
+/// A run loaded back from disk. The state is the materialized host form —
+/// upload it onto an engine (`Engine::state_from_host`) to execute against.
 pub struct CacheEntry {
     pub history: RunHistory,
-    pub state: TrainState,
+    pub state: HostState,
     pub plan_steps: usize,
 }
 
@@ -177,9 +178,17 @@ impl RunCache {
         artifacts_root: &Path,
         cfg: &RunConfig,
         history: &RunHistory,
-        state: &TrainState,
+        state: &HostState,
         plan_steps: usize,
     ) -> Result<()> {
+        let man = self.manifest_for(artifacts_root, cfg)?;
+        if state.n_params() != man.n_params {
+            bail!(
+                "run state has {} params, manifest expects {}",
+                state.n_params(),
+                man.n_params
+            );
+        }
         let key = self.key_for(artifacts_root, cfg)?;
         let dir = self.entry_dir(cfg, &key);
         std::fs::create_dir_all(&dir)?;
@@ -369,6 +378,26 @@ mod tests {
     }
 
     #[test]
+    fn key_folds_in_the_artifact_output_layout() {
+        // the device-resident re-lowering changed the step's result layout;
+        // entries keyed against tuple-era (layout 1) manifests must never be
+        // served for the new numerics — the raw manifest text (which now
+        // carries "output_layout": 2) is part of every key
+        let cfg = presets::base("micro").unwrap().with_name("k-layout");
+        let t2 = family_text(&root(), "micro").unwrap();
+        assert!(
+            t2.contains("\"output_layout\": 2"),
+            "manifest text must carry the layout version"
+        );
+        let t1 = t2.replace("\"output_layout\": 2", "\"output_layout\": 1");
+        assert_ne!(
+            run_key_with(&cfg, &t2),
+            run_key_with(&cfg, &t1),
+            "a layout change must re-key cached runs"
+        );
+    }
+
+    #[test]
     fn entry_roundtrip_preserves_history_and_state() {
         let man = Manifest::load(&root().join("micro_b4")).unwrap();
         let cfg = presets::base("micro").unwrap().with_name("cache-rt");
@@ -396,7 +425,7 @@ mod tests {
             }],
             gave_up: false,
         });
-        let state = TrainState::init(&man, 3);
+        let state = HostState::init(&man, 3);
 
         let dir = temp_dir("rt");
         let cache = RunCache::new(dir.clone());
@@ -425,7 +454,7 @@ mod tests {
             }
             assert_eq!(a.sim_seconds, b.sim_seconds);
         }
-        assert_eq!(e.state.params_vec().unwrap(), state.params_vec().unwrap());
+        assert_eq!(e.state.params, state.params);
 
         // a different config must not see this entry
         let mut other = cfg.clone();

@@ -13,11 +13,15 @@
 //!   groups are dealt round-robin across workers, so the `tiny` and
 //!   `small` grids proceed concurrently; idle workers steal from the back
 //!   of the most-loaded queue (`queue::StealQueues`).
-//! * **Cache as transport.** Workers send back plain host vectors
-//!   ([`PortableState`]) and the `RunHistory`; the main thread rebuilds
-//!   `TrainState` literals and persists both under `results/cache/`
-//!   (`cache::RunCache`). Runs are keyed by a hash of
-//!   (RunConfig, artifact manifests, seed).
+//! * **Cache as transport.** Workers materialize the device-resident
+//!   `TrainState` once at run end ([`HostState`] — plain host vectors, the
+//!   thread-portable form) and send it back with the `RunHistory`; the
+//!   main thread persists both under `results/cache/` (`cache::RunCache`).
+//!   Consumers that need to *execute* against a completed run's state
+//!   upload it onto their own engine via `Engine::state_from_host`. Runs
+//!   are keyed by a hash of (RunConfig, artifact manifests, seed) — the
+//!   manifest text folds in the artifact output layout, so the
+//!   device-resident re-lowering invalidated every tuple-era entry.
 //! * **Determinism.** A run's result depends only on its config and seed —
 //!   data generation, init, and XLA CPU execution are all deterministic —
 //!   so parallel scheduling and cache hits produce byte-identical tables.
@@ -32,68 +36,29 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
-use xla::Literal;
 
 use crate::config::RunConfig;
-use crate::runtime::manifest::Manifest;
-use crate::runtime::{Engine, TrainState};
+use crate::runtime::{Engine, HostState};
 use crate::train::metrics::RunHistory;
 use crate::train::trainer::{StoreCache, Trainer};
 
 use cache::RunCache;
 use queue::StealQueues;
 
-/// Thread-portable final training state: plain host vectors. xla `Literal`s
-/// wrap raw runtime handles and stay confined to the thread that made them;
-/// the main thread rebuilds literals from these vectors.
-pub struct PortableState {
-    pub params: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    pub step: u64,
-    pub tokens: u64,
-}
-
-impl PortableState {
-    pub fn from_state(state: &TrainState) -> Result<Self> {
-        Ok(Self {
-            params: state.params.to_vec::<f32>()?,
-            m: state.m.to_vec::<f32>()?,
-            v: state.v.to_vec::<f32>()?,
-            step: state.step,
-            tokens: state.tokens,
-        })
-    }
-
-    pub fn into_state(self, man: &Manifest) -> Result<TrainState> {
-        if self.params.len() != man.n_params {
-            bail!("portable state has {} params, manifest expects {}",
-                  self.params.len(), man.n_params);
-        }
-        let n_params = self.params.len();
-        Ok(TrainState {
-            params: Literal::vec1(&self.params),
-            m: Literal::vec1(&self.m),
-            v: Literal::vec1(&self.v),
-            decay_mask: Literal::vec1(&man.decay_mask()),
-            step: self.step,
-            tokens: self.tokens,
-            n_params,
-        })
-    }
-}
-
 /// One finished run, whether freshly executed or loaded from the cache.
+/// The final state is carried in its materialized host form — device
+/// buffers are client-bound and thread-confined; a consumer that wants to
+/// score or resume it uploads via `Engine::state_from_host`.
 pub struct CompletedRun {
     pub history: RunHistory,
-    pub state: TrainState,
+    pub state: HostState,
     pub plan_steps: usize,
     pub from_cache: bool,
 }
 
 struct WorkerOut {
     history: RunHistory,
-    state: PortableState,
+    state: HostState,
     plan_steps: usize,
 }
 
@@ -169,13 +134,16 @@ impl Coordinator {
                 let stored = result
                     .with_context(|| format!("run '{}' failed", cfg.name))
                     .and_then(|wo| {
-                        let man = self.cache.manifest_for(&self.artifacts_root, &cfg)?;
-                        let state = wo.state.into_state(&man)?;
-                        self.cache
-                            .store(&self.artifacts_root, &cfg, &wo.history, &state, wo.plan_steps)?;
+                        self.cache.store(
+                            &self.artifacts_root,
+                            &cfg,
+                            &wo.history,
+                            &wo.state,
+                            wo.plan_steps,
+                        )?;
                         Ok(CompletedRun {
                             history: wo.history,
-                            state,
+                            state: wo.state,
                             plan_steps: wo.plan_steps,
                             from_cache: false,
                         })
@@ -266,7 +234,10 @@ fn worker_loop(
                 }
                 Ok(mut trainer) => {
                     let run = trainer.run().and_then(|out| {
-                        let state = PortableState::from_state(&out.state)?;
+                        // the run's one deliberate O(n_params) readback: the
+                        // final state crosses to the host for the cache and
+                        // the (thread-portable) result hand-off
+                        let state = out.state.materialize()?;
                         Ok(WorkerOut { history: out.history, state, plan_steps: out.plan_steps })
                     });
                     engines.insert(model.clone(), trainer.into_engine());
@@ -315,10 +286,7 @@ mod tests {
         let second = coord.run_one(micro_cfg("coord-a", 5)).unwrap();
         assert!(second.from_cache, "identical config must hit the cache");
         assert_eq!(first.history.losses(), second.history.losses());
-        assert_eq!(
-            first.state.params_vec().unwrap(),
-            second.state.params_vec().unwrap()
-        );
+        assert_eq!(first.state.params, second.state.params);
 
         // any config change re-keys the run
         let reseeded = coord.run_one(micro_cfg("coord-a", 6)).unwrap();

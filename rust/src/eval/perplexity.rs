@@ -46,8 +46,7 @@ mod tests {
     fn init_model_ppl_near_vocab() {
         let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         let mut engine = Engine::load(&root, "micro").unwrap();
-        let man = engine.manifest_for_batch(4).unwrap().clone();
-        let state = TrainState::init(&man, 0);
+        let state = engine.init_state(4, 0).unwrap();
         let toks = MarkovCorpus::new(256, 0).generate(32 * 200 + 1);
         let store = TokenStore::new(toks, 256).unwrap();
         let index = store.index(32, 0.2).unwrap();

@@ -267,8 +267,7 @@ mod tests {
     fn untrained_model_scores_near_chance() {
         let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         let mut engine = Engine::load(&root, "micro").unwrap();
-        let man = engine.manifest_for_batch(4).unwrap().clone();
-        let state = TrainState::init(&man, 0);
+        let state = engine.init_state(4, 0).unwrap();
         let (scores, avg) = score_suite(&mut engine, &state, 0, 1, 1).unwrap();
         assert_eq!(scores.len(), 11);
         // chance on V=256 exact match ≈ 0.4%; allow generous slack

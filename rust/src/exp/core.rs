@@ -226,7 +226,10 @@ pub fn table2(ctx: &mut ExpCtx) -> Result<()> {
 
         let cached = ctx.get(case.id);
         let engine = engines.get_mut(model).unwrap();
-        let (scores, _) = probes::score_suite(engine, &cached.state, 7, 2, 1)?;
+        // sync point: upload the run's materialized state onto the scoring
+        // engine's own client (device buffers are client-bound)
+        let state = engine.state_from_host(&cached.state)?;
+        let (scores, _) = probes::score_suite(engine, &state, 7, 2, 1)?;
         let lam = scores.iter().find(|s| s.name == "lambada").map(|s| s.accuracy).unwrap_or(0.0);
 
         let run = &cached.history;

@@ -120,7 +120,8 @@ pub fn table4(ctx: &mut ExpCtx) -> Result<()> {
         let batch = cfg.batch;
         let (scores, avg, tokens, hours) = {
             let run = ctx.run(cfg)?;
-            let (scores, avg) = probes::score_suite(&mut engine, &run.state, 11, 3, 1)?;
+            let state = engine.state_from_host(&run.state)?;
+            let (scores, avg) = probes::score_suite(&mut engine, &state, 11, 3, 1)?;
             (scores, avg, run.history.total_tokens(), run.history.sim_hours())
         };
         if label.starts_with("1:") {

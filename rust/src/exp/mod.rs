@@ -33,7 +33,7 @@ use anyhow::{bail, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::Coordinator;
-use crate::runtime::TrainState;
+use crate::runtime::HostState;
 use crate::train::metrics::RunHistory;
 use crate::util::cli::Args;
 use crate::util::tsv::TsvWriter;
@@ -43,9 +43,12 @@ use crate::util::tsv::TsvWriter;
 /// proportionally shallower, so tables report both 1.1 (headline) and 1.2.
 pub const SPIKE_THRESHOLD: f64 = 1.1;
 
+/// A completed run held for table assembly. The state is the materialized
+/// host form; probe/eval consumers upload it onto their scoring engine via
+/// `Engine::state_from_host`.
 pub struct CachedRun {
     pub history: RunHistory,
-    pub state: TrainState,
+    pub state: HostState,
 }
 
 /// Headline metrics of one seed replica, aggregated by the `--seeds`

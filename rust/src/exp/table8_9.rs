@@ -33,8 +33,9 @@ pub fn run(ctx: &mut ExpCtx) -> Result<()> {
         let cfg = case_config(ctx, id)?;
         let (zs, za, fs, fa) = {
             let run = ctx.run(cfg)?;
-            let (zs, za) = probes::score_suite(&mut engine, &run.state, 21, 3, 1)?;
-            let (fs, fa) = probes::score_suite(&mut engine, &run.state, 21, 3, 3)?;
+            let state = engine.state_from_host(&run.state)?;
+            let (zs, za) = probes::score_suite(&mut engine, &state, 21, 3, 1)?;
+            let (fs, fa) = probes::score_suite(&mut engine, &state, 21, 3, 3)?;
             (zs, za, fs, fa)
         };
         table.push((label.to_string(), zs, za, fs, fa));

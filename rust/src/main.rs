@@ -146,7 +146,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
         println!("  best val ppl: {p:.3}");
     }
     if let Some(path) = save {
-        checkpoint::save(&out.state, &PathBuf::from(&path))?;
+        // explicit sync point: materialize the device-resident state once
+        checkpoint::save(&out.state.materialize()?, &PathBuf::from(&path))?;
         println!("  checkpoint: {path}");
     }
     Ok(())
@@ -198,8 +199,8 @@ fn cmd_probes(mut args: Args) -> Result<()> {
     let mut engine = slw::runtime::Engine::load(&root, &model)?;
     let man = engine.manifest_for_batch(engine.batch_rungs()[0])?.clone();
     let state = match ckpt {
-        Some(p) => checkpoint::load(&man, &PathBuf::from(p))?,
-        None => slw::runtime::TrainState::init(&man, seed),
+        Some(p) => engine.state_from_host(&checkpoint::load(&man, &PathBuf::from(p))?)?,
+        None => engine.init_state(man.batch_size, seed)?,
     };
     let (scores, avg) =
         slw::eval::probes::score_suite(&mut engine, &state, seed, batches, shots)?;

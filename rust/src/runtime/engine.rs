@@ -1,27 +1,63 @@
 //! PJRT execution engine: loads HLO-text artifacts, compiles them on the
-//! CPU client, and runs train/eval steps against Literal-resident state.
+//! CPU client, and runs train/eval steps against **device-resident** state.
 //!
 //! This is the only module that touches the `xla` crate on the hot path.
 //! Executables are compiled lazily per (batch, seqlen) on first use and
 //! cached for the life of the engine — an SLW run touches each bucket once
 //! and then stays on it, so warm-path cost is a single BTreeMap lookup.
 //!
-//! Host-transfer discipline: a step performs exactly two host↔device
-//! crossings — the token batch is materialized as one shaped literal (no
-//! intermediate `vec1` + `reshape` copies), and the result tuple comes back
-//! in one readback that every stat scalar is then read from. The
-//! `n_host_transfers` counter asserts this in tests, next to `n_compiles`.
+//! # Host-transfer discipline
+//!
+//! Training state (params, Adam m/v, decay mask) lives on the device as
+//! `PjRtBuffer`s inside [`TrainState`]; steps run through buffer-argument
+//! execution (`execute_b`) and swap the output buffers back into the state,
+//! so per-step host traffic is independent of model size. What counts as a
+//! crossing is any host↔device copy, and a warm train step performs exactly
+//! **three**, all O(batch·seqlen) or constant:
+//!
+//! 1. the `[bsz, seqlen+1]` i32 token batch up (`4·bsz·(seqlen+1)` bytes);
+//! 2. the packed `f32[3]` step/lr/clip knob vector up ([`KNOB_BYTES`]);
+//! 3. the packed `f32[6]` stats tensor down ([`STATS_BYTES`]) — the six
+//!    [`StepStats`] scalars, and nothing else, come back.
+//!
+//! An eval step is one token upload plus three result readbacks (sum_nll,
+//! per-position nll, correctness) — four crossings, O(batch·seqlen).
+//!
+//! The O(n_params) state crosses the boundary only at explicit **sync
+//! points**, all routed through `runtime::state`'s materialization
+//! boundary: init / checkpoint resume (`TrainState::from_host`), stability
+//! ring snapshots and disk checkpoints (`TrainState::materialize`),
+//! rollback restore (`TrainState::upload`), and the coordinator's
+//! cross-thread result hand-off. `n_host_transfers`/`host_bytes` count the
+//! engine's per-step crossings and `TrainState::sync_transfers`/
+//! `sync_bytes` count the boundary's, so tests and the `engine_residency`
+//! bench can assert the warm path moves zero state bytes.
+//!
+//! This requires output-layout-2 artifacts (untupled results: params, m, v,
+//! stats as four separate buffers per execute — see `compile/aot.py`);
+//! [`Engine::load`] rejects legacy tuple-resident (layout 1) artifact sets.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
-use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{
+    ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
 
 use super::manifest::{family_sets, Manifest};
+use super::state::{HostState, TrainState};
 
-/// Per-step training statistics — the paper's full instrumentation set
-/// (train_outputs tail in the manifest).
+/// Bytes of the packed per-step knob upload (`f32[3]`: step, lr, clip).
+pub const KNOB_BYTES: u64 = 3 * 4;
+/// Bytes of the packed per-step stats readback (`f32[6]`).
+pub const STATS_BYTES: u64 = 6 * 4;
+
+/// Per-step training statistics — the paper's full instrumentation set,
+/// decoded from the packed `f32[6]` stats tensor (manifest `stats_fields`
+/// order).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepStats {
     pub loss: f32,
@@ -48,39 +84,6 @@ impl StepStats {
     }
 }
 
-/// Mutable training state: flat params + Adam moments as device literals,
-/// threaded through the pure-functional train step.
-pub struct TrainState {
-    pub params: Literal,
-    pub m: Literal,
-    pub v: Literal,
-    pub decay_mask: Literal,
-    /// 1-based Adam step (bias correction).
-    pub step: u64,
-    pub tokens: u64,
-    pub n_params: usize,
-}
-
-impl TrainState {
-    pub fn init(man: &Manifest, seed: u64) -> Self {
-        let flat = man.init_params(seed);
-        let zeros = vec![0f32; man.n_params];
-        Self {
-            params: Literal::vec1(&flat),
-            m: Literal::vec1(&zeros),
-            v: Literal::vec1(&zeros),
-            decay_mask: Literal::vec1(&man.decay_mask()),
-            step: 0,
-            tokens: 0,
-            n_params: man.n_params,
-        }
-    }
-
-    pub fn params_vec(&self) -> Result<Vec<f32>> {
-        Ok(self.params.to_vec::<f32>()?)
-    }
-}
-
 struct LazyExe {
     path: PathBuf,
     exe: Option<PjRtLoadedExecutable>,
@@ -102,15 +105,17 @@ impl LazyExe {
 /// (batch, seqlen bucket) across the family's artifact sets, plus one eval
 /// executable (full seqlen, eval batch).
 pub struct Engine {
-    client: PjRtClient,
+    client: Rc<PjRtClient>,
     /// primary manifest (the set matching the run's target batch)
     manifests: Vec<Manifest>,
     train: BTreeMap<(usize, usize), LazyExe>,
     eval: LazyExe,
     eval_batch: usize,
     compiles: std::cell::Cell<usize>,
-    /// host<->device crossings (token uploads + result readbacks)
+    /// host<->device crossings on the per-step path (uploads + readbacks)
     transfers: std::cell::Cell<usize>,
+    /// bytes crossed on the per-step path
+    bytes: std::cell::Cell<u64>,
 }
 
 impl Engine {
@@ -123,7 +128,18 @@ impl Engine {
         let Some(man0) = manifests.first() else {
             bail!("model '{model}' has no artifact sets under {root:?}");
         };
-        let client = PjRtClient::cpu()?;
+        for man in &manifests {
+            if man.output_layout != 2 {
+                bail!(
+                    "artifact set '{}' uses output layout {} (tuple-resident); the \
+                     device-resident engine needs layout 2 — re-run `make artifacts` \
+                     (python -m compile.aot --force)",
+                    man.set,
+                    man.output_layout
+                );
+            }
+        }
+        let client = Rc::new(PjRtClient::cpu()?);
         let mut train = BTreeMap::new();
         for man in &manifests {
             for (&seqlen, file) in &man.train_artifacts {
@@ -145,7 +161,26 @@ impl Engine {
             eval_batch,
             compiles: std::cell::Cell::new(0),
             transfers: std::cell::Cell::new(0),
+            bytes: std::cell::Cell::new(0),
         })
+    }
+
+    /// The engine's PJRT client. Device buffers are client-bound: a
+    /// [`TrainState`] may only be executed by the engine whose client
+    /// created its buffers.
+    pub fn client(&self) -> &Rc<PjRtClient> {
+        &self.client
+    }
+
+    /// Fresh device-resident state for a run at `batch` (one init upload).
+    pub fn init_state(&self, batch: usize, seed: u64) -> Result<TrainState> {
+        TrainState::init(self.client.clone(), self.manifest_for_batch(batch)?, seed)
+    }
+
+    /// Device-resident state from a host snapshot (checkpoint resume, cache
+    /// hand-off). Uses the family's shared flat-parameter layout.
+    pub fn state_from_host(&self, host: &HostState) -> Result<TrainState> {
+        TrainState::from_host(self.client.clone(), &self.manifests[0], host)
     }
 
     pub fn manifest_for_batch(&self, batch: usize) -> Result<&Manifest> {
@@ -180,35 +215,56 @@ impl Engine {
         self.compiles.get()
     }
 
-    /// Host↔device transfers performed so far: exactly 2 per train/eval
-    /// step — one token-literal upload and one result-tuple readback.
+    /// Host↔device crossings on the per-step path so far: exactly 3 per
+    /// train step (tokens up, knobs up, stats down) and 4 per eval step
+    /// (tokens up, three result readbacks). State sync points are counted
+    /// on [`TrainState`] instead.
     pub fn n_host_transfers(&self) -> usize {
         self.transfers.get()
     }
 
-    /// Build the `[bsz, width]` i32 token literal in a single staging copy:
-    /// the token slice is viewed as raw bytes and materialized directly at
-    /// its final shape — no intermediate `vec1` literal, no `reshape` copy.
-    fn token_literal(&self, tokens: &[i32], bsz: usize, width: usize) -> Result<Literal> {
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(
-                tokens.as_ptr() as *const u8,
-                std::mem::size_of_val(tokens),
-            )
-        };
+    /// Bytes crossed on the per-step path so far. Per warm train step this
+    /// is `4·bsz·(seqlen+1) + KNOB_BYTES + STATS_BYTES` — no n_params term
+    /// (gated by the `engine_residency` bench).
+    pub fn host_bytes(&self) -> u64 {
+        self.bytes.get()
+    }
+
+    fn count(&self, bytes: u64) {
+        self.transfers.set(self.transfers.get() + 1);
+        self.bytes.set(self.bytes.get() + bytes);
+    }
+
+    /// Upload the `[bsz, width]` i32 token batch: one safe staging copy to
+    /// bytes, one shaped literal, one device buffer — no `unsafe` view, no
+    /// intermediate `vec1` + `reshape`.
+    fn token_buffer(&self, tokens: &[i32], bsz: usize, width: usize) -> Result<PjRtBuffer> {
         let lit = Literal::create_from_shape_and_untyped_data(
             ElementType::S32,
             &[bsz, width],
-            bytes,
+            &crate::util::bytes::ne_bytes_i32(tokens),
         )?;
-        self.transfers.set(self.transfers.get() + 1);
-        Ok(lit)
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        self.count(tokens.len() as u64 * 4);
+        Ok(buf)
     }
 
-    /// Execute one training step in place. `tokens` is the flattened
-    /// `[bsz, seqlen+1]` batch; `lr` the resolved learning rate; `clip_norm`
-    /// the global gradient-clipping threshold (runtime scalar — Fig 10
-    /// ablation sweeps it without re-lowering).
+    /// Upload the packed per-step knob vector `f32[3] = [step, lr, clip]` —
+    /// one small transfer where the tuple-resident engine made three
+    /// scalar uploads.
+    fn knob_buffer(&self, step: f32, lr: f32, clip_norm: f32) -> Result<PjRtBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &Literal::vec1(&[step, lr, clip_norm]))?;
+        self.count(KNOB_BYTES);
+        Ok(buf)
+    }
+
+    /// Execute one training step in place against the device-resident
+    /// state. `tokens` is the flattened `[bsz, seqlen+1]` batch; `lr` the
+    /// resolved learning rate; `clip_norm` the global gradient-clipping
+    /// threshold (runtime knob — Fig 10 ablation sweeps it without
+    /// re-lowering).
     pub fn train_step(
         &mut self,
         state: &mut TrainState,
@@ -226,10 +282,8 @@ impl Engine {
             bail!("no train executable for batch {bsz} seqlen {seqlen} \
                    (lowered buckets: {:?})", self.train.keys().collect::<Vec<_>>());
         }
-        let step_lit = Literal::scalar((state.step + 1) as f32);
-        let lr_lit = Literal::scalar(lr as f32);
-        let clip_lit = Literal::scalar(clip_norm as f32);
-        let tok_lit = self.token_literal(tokens, bsz, seqlen + 1)?;
+        let knobs = self.knob_buffer((state.step + 1) as f32, lr as f32, clip_norm as f32)?;
+        let toks = self.token_buffer(tokens, bsz, seqlen + 1)?;
 
         let lazy = self.train.get_mut(&key).expect("presence checked above");
         if lazy.exe.is_none() {
@@ -237,38 +291,45 @@ impl Engine {
         }
         let exe = lazy.get(&self.client)?;
 
-        // one readback for the whole step: the 9-tuple comes back as a
-        // single host literal and every scalar below is an element read on
-        // it, not its own device round-trip
-        let result = exe.execute::<&Literal>(&[
+        // buffer-argument execution: state goes in (and comes back) as
+        // device buffers; the only readback below is the f32[6] stats tensor
+        let mut results = exe.execute_b::<&PjRtBuffer>(&[
             &state.params,
             &state.m,
             &state.v,
             &state.decay_mask,
-            &step_lit,
-            &lr_lit,
-            &clip_lit,
-            &tok_lit,
-        ])?[0][0]
-            .to_literal_sync()?;
-        self.transfers.set(self.transfers.get() + 1);
-        let mut parts = result.to_tuple()?;
-        if parts.len() != 9 {
-            bail!("train step returned {} outputs, expected 9", parts.len());
+            &knobs,
+            &toks,
+        ])?;
+        if results.is_empty() {
+            bail!("train step produced no per-device results");
         }
-        // outputs: params, m, v, loss, grad_l2, var_l1, var_max, mom_l1, clip
-        let scalar = |l: &Literal| -> Result<f32> { Ok(l.get_first_element::<f32>()?) };
+        let mut outs = results.swap_remove(0);
+        if outs.len() != 4 {
+            bail!(
+                "train step returned {} results, expected 4 (params, m, v, stats) — \
+                 stale artifact layout? re-run `make artifacts`",
+                outs.len()
+            );
+        }
+        let s = outs[3].to_literal_sync()?.to_vec::<f32>()?;
+        self.count(STATS_BYTES);
+        if s.len() != 6 {
+            bail!("stats tensor has {} elements, expected 6", s.len());
+        }
         let stats = StepStats {
-            loss: scalar(&parts[3])?,
-            grad_l2: scalar(&parts[4])?,
-            var_l1: scalar(&parts[5])?,
-            var_max: scalar(&parts[6])?,
-            mom_l1: scalar(&parts[7])?,
-            clip_coef: scalar(&parts[8])?,
+            loss: s[0],
+            grad_l2: s[1],
+            var_l1: s[2],
+            var_max: s[3],
+            mom_l1: s[4],
+            clip_coef: s[5],
         };
-        state.v = parts.remove(2);
-        state.m = parts.remove(1);
-        state.params = parts.remove(0);
+        // commit the updated state buffers — no host crossing
+        outs.truncate(3);
+        state.v = outs.pop().expect("3 state outputs");
+        state.m = outs.pop().expect("3 state outputs");
+        state.params = outs.pop().expect("3 state outputs");
         state.step += 1;
         state.tokens += (bsz * seqlen) as u64;
         Ok(stats)
@@ -290,20 +351,23 @@ impl Engine {
         if self.eval.exe.is_none() {
             self.compiles.set(self.compiles.get() + 1);
         }
-        let tok_lit = self.token_literal(tokens, b, s + 1)?;
+        let toks = self.token_buffer(tokens, b, s + 1)?;
         let exe = self.eval.get(&self.client)?;
-        let result = exe.execute::<&Literal>(&[&state.params, &tok_lit])?[0][0]
-            .to_literal_sync()?;
-        self.transfers.set(self.transfers.get() + 1);
-        let parts = result.to_tuple()?;
-        if parts.len() != 3 {
-            bail!("eval step returned {} outputs, expected 3", parts.len());
+        let mut results = exe.execute_b::<&PjRtBuffer>(&[&state.params, &toks])?;
+        if results.is_empty() {
+            bail!("eval step produced no per-device results");
         }
-        Ok((
-            parts[0].get_first_element::<f32>()?,
-            parts[1].to_vec::<f32>()?,
-            parts[2].to_vec::<f32>()?,
-        ))
+        let outs = results.swap_remove(0);
+        if outs.len() != 3 {
+            bail!("eval step returned {} results, expected 3", outs.len());
+        }
+        let sum_nll = outs[0].to_literal_sync()?.get_first_element::<f32>()?;
+        self.count(4);
+        let nll = outs[1].to_literal_sync()?.to_vec::<f32>()?;
+        self.count(nll.len() as u64 * 4);
+        let correct = outs[2].to_literal_sync()?.to_vec::<f32>()?;
+        self.count(correct.len() as u64 * 4);
+        Ok((sum_nll, nll, correct))
     }
 }
 
@@ -336,7 +400,7 @@ mod tests {
     fn train_step_runs_and_updates_state() {
         let mut e = engine();
         let man = e.manifest_for_batch(4).unwrap().clone();
-        let mut st = TrainState::init(&man, 0);
+        let mut st = e.init_state(4, 0).unwrap();
         let toks = rand_tokens(4 * 9, man.model.vocab, 1);
         let stats = e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
         assert!(stats.is_finite());
@@ -359,8 +423,7 @@ mod tests {
     #[test]
     fn train_step_learns_repetitive_batch() {
         let mut e = engine();
-        let man = e.manifest_for_batch(4).unwrap().clone();
-        let mut st = TrainState::init(&man, 0);
+        let mut st = e.init_state(4, 0).unwrap();
         // fixed repetitive batch at seqlen 32
         let base: Vec<i32> = (0..11).map(|i| (i * 17 + 3) % 256).collect();
         let toks: Vec<i32> = (0..4 * 33).map(|i| base[i % 11]).collect();
@@ -380,7 +443,7 @@ mod tests {
     fn eval_step_shapes_and_consistency() {
         let mut e = engine();
         let man = e.manifest_for_batch(4).unwrap().clone();
-        let st = TrainState::init(&man, 3);
+        let st = e.init_state(4, 3).unwrap();
         let b = e.eval_batch();
         let s = man.model.max_seqlen;
         let toks = rand_tokens(b * (s + 1), man.model.vocab, 4);
@@ -419,35 +482,73 @@ mod tests {
     }
 
     #[test]
-    fn train_step_costs_exactly_two_host_transfers() {
+    fn train_step_costs_exactly_three_small_host_transfers() {
         let mut e = engine();
-        let man = e.manifest_for_batch(4).unwrap().clone();
-        let mut st = TrainState::init(&man, 0);
+        let mut st = e.init_state(4, 0).unwrap();
+        let n_params = st.n_params;
+        // init is a sync point on the state, not an engine crossing
         assert_eq!(e.n_host_transfers(), 0);
+        assert_eq!(st.sync_transfers(), 4, "init uploads params/m/v/decay_mask");
+        let man = e.manifest_for_batch(4).unwrap().clone();
         let toks = rand_tokens(4 * 9, man.model.vocab, 1);
         e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
-        assert_eq!(e.n_host_transfers(), 2, "one token upload + one tuple readback");
-        // warm path (no compile) costs the same two transfers
+        assert_eq!(e.n_host_transfers(), 3, "tokens up + knobs up + stats down");
+        // warm path (no compile) costs the same three transfers and the
+        // same O(batch·seqlen) bytes — and never touches the state boundary
+        let bytes_before = e.host_bytes();
+        let sync_before = st.sync_transfers();
         let toks2 = rand_tokens(4 * 9, man.model.vocab, 2);
         e.train_step(&mut st, &toks2, 4, 8, 1e-3, 1.0).unwrap();
-        assert_eq!(e.n_host_transfers(), 4);
+        assert_eq!(e.n_host_transfers(), 6);
         assert_eq!(e.n_compiles(), 1);
+        let step_bytes = e.host_bytes() - bytes_before;
+        assert_eq!(step_bytes, 4 * 9 * 4 + KNOB_BYTES + STATS_BYTES);
+        assert!(
+            step_bytes < n_params as u64,
+            "warm-step bytes {step_bytes} must carry no n_params ({n_params}) term"
+        );
+        assert_eq!(st.sync_transfers(), sync_before, "warm path must not materialize state");
         // a rejected call must not move the counter
         assert!(e.train_step(&mut st, &[0i32; 3], 4, 8, 1e-3, 1.0).is_err());
-        assert_eq!(e.n_host_transfers(), 4);
-        // eval follows the same 2-transfer discipline
+        assert_eq!(e.n_host_transfers(), 6);
+        // eval: one token upload + three result readbacks, O(batch·seqlen)
         let b = e.eval_batch();
         let s = man.model.max_seqlen;
         let etoks = rand_tokens(b * (s + 1), man.model.vocab, 3);
         e.eval_step(&st, &etoks).unwrap();
-        assert_eq!(e.n_host_transfers(), 6);
+        assert_eq!(e.n_host_transfers(), 10);
+    }
+
+    #[test]
+    fn state_round_trips_through_the_materialization_boundary() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let mut st = e.init_state(4, 7).unwrap();
+        let toks = rand_tokens(4 * 9, man.model.vocab, 5);
+        e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        let host = st.materialize().unwrap();
+        assert_eq!(host.n_params(), man.n_params);
+        assert!(host.m.iter().any(|&x| x != 0.0), "moments must be live after a step");
+        // upload → materialize is bit-exact
+        let mut st2 = e.init_state(4, 99).unwrap();
+        st2.upload(&host).unwrap();
+        let host2 = st2.materialize().unwrap();
+        assert_eq!(host.params, host2.params);
+        assert_eq!(host.m, host2.m);
+        assert_eq!(host.v, host2.v);
+        assert_eq!(host2.step, st.step);
+        // and the restored state trains identically to the original
+        let toks2 = rand_tokens(4 * 9, man.model.vocab, 6);
+        let s1 = e.train_step(&mut st, &toks2, 4, 8, 1e-3, 1.0).unwrap();
+        let s2 = e.train_step(&mut st2, &toks2, 4, 8, 1e-3, 1.0).unwrap();
+        assert_eq!(s1.loss.to_bits(), s2.loss.to_bits());
+        assert_eq!(st.params_vec().unwrap(), st2.params_vec().unwrap());
     }
 
     #[test]
     fn wrong_shapes_rejected() {
         let mut e = engine();
-        let man = e.manifest_for_batch(4).unwrap().clone();
-        let mut st = TrainState::init(&man, 0);
+        let mut st = e.init_state(4, 0).unwrap();
         assert!(e.train_step(&mut st, &[0i32; 10], 4, 8, 1e-3, 1.0).is_err());
         assert!(e.train_step(&mut st, &vec![0i32; 4 * 13], 4, 12, 1e-3, 1.0).is_err());
     }

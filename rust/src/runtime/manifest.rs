@@ -46,6 +46,12 @@ pub struct Manifest {
     pub full_only: bool,
     pub train_artifacts: BTreeMap<usize, String>,
     pub eval_artifact: String,
+    /// Result-layout version of the lowered steps. Layout 1 (legacy):
+    /// everything wrapped in one tuple the host must materialize per step;
+    /// layout 2: untupled results (params, m, v, stats) so state stays
+    /// device-resident. Manifests without the key read as 1 and are
+    /// rejected by `Engine::load`.
+    pub output_layout: usize,
     pub params: Vec<ParamSpec>,
     pub dir: PathBuf,
 }
@@ -114,6 +120,10 @@ impl Manifest {
             full_only: j.get("full_only")?.bool()?,
             train_artifacts,
             eval_artifact: j.get("eval_artifact")?.str()?.to_string(),
+            output_layout: match j.opt("output_layout") {
+                Some(v) => v.usize()?,
+                None => 1,
+            },
             params,
             dir: dir.to_path_buf(),
         };
@@ -208,6 +218,7 @@ mod tests {
         assert_eq!(man.model.vocab, 256);
         assert_eq!(man.batch_size, 4);
         assert_eq!(man.seqlen_buckets, vec![8, 16, 24, 32]);
+        assert_eq!(man.output_layout, 2, "committed artifacts are device-resident (v2)");
         assert_eq!(man.params.len(), 2 + 12 * man.model.n_layer + 2);
         assert!(man.train_path(8).unwrap().exists());
         assert!(man.eval_path().exists());

@@ -1,8 +1,12 @@
-//! PJRT runtime: manifest parsing + the execution engine that runs the AOT
-//! artifacts (see /opt/xla-example/load_hlo for the interchange pattern).
+//! PJRT runtime: manifest parsing, the device-resident training state and
+//! its host materialization boundary (`state`), and the execution engine
+//! that runs the AOT artifacts (see /opt/xla-example/load_hlo for the
+//! interchange pattern).
 
 pub mod engine;
 pub mod manifest;
+pub mod state;
 
-pub use engine::{Engine, StepStats, TrainState};
+pub use engine::{Engine, StepStats, KNOB_BYTES, STATS_BYTES};
 pub use manifest::Manifest;
+pub use state::{HostState, TrainState};

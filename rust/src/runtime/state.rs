@@ -1,0 +1,194 @@
+//! Training state as device-resident PJRT buffers, with one explicit
+//! host-materialization boundary.
+//!
+//! [`TrainState`] owns the flat params and Adam moments as `PjRtBuffer`s on
+//! the engine's PJRT client. The train step executes against these buffers
+//! (`PjRtLoadedExecutable::execute_b`) and swaps in the step's output
+//! buffers, so the O(n_params) state never crosses the host boundary on the
+//! warm path — per step, only the token batch and the packed knob vector go
+//! up and the six stat scalars come back (see `engine.rs`).
+//!
+//! Every host-side consumer goes through the explicit boundary instead:
+//!
+//! * [`TrainState::materialize`] — read params/m/v back into a plain
+//!   [`HostState`] (rollback-ring snapshots, disk checkpoints, the
+//!   coordinator's cross-thread hand-off);
+//! * [`TrainState::upload`] — overwrite the device buffers from a
+//!   [`HostState`] (rollback restore);
+//! * [`TrainState::from_host`] — build a fresh device state from a
+//!   [`HostState`] (checkpoint resume, cache hand-off, init).
+//!
+//! These are the *only* O(n_params) crossings, and each one bumps the
+//! state's `sync_transfers`/`sync_bytes` counters so tests and the
+//! `engine_residency` bench can assert the warm path performs none.
+//!
+//! `HostState` is plain `Vec<f32>`s and therefore `Send` — it is the
+//! thread-portable form (PJRT buffers and clients stay confined to the
+//! thread that made them).
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient};
+
+use super::manifest::Manifest;
+
+/// Host-side copy of the mutable training state: the single portable /
+/// serializable form of a run's progress. Produced by
+/// [`TrainState::materialize`], consumed by [`TrainState::upload`] /
+/// [`TrainState::from_host`], `train::checkpoint`, the stability
+/// checkpoint ring, and the coordinator's run cache.
+#[derive(Clone)]
+pub struct HostState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based Adam step (bias correction).
+    pub step: u64,
+    pub tokens: u64,
+}
+
+impl HostState {
+    /// Fresh-run state: manifest-layout init params, zero moments.
+    pub fn init(man: &Manifest, seed: u64) -> Self {
+        Self {
+            params: man.init_params(seed),
+            m: vec![0f32; man.n_params],
+            v: vec![0f32; man.n_params],
+            step: 0,
+            tokens: 0,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    fn validate(&self, n_params: usize) -> Result<()> {
+        if self.params.len() != n_params || self.m.len() != n_params || self.v.len() != n_params {
+            bail!(
+                "host state arrays have {}/{}/{} elements, expected {n_params}",
+                self.params.len(),
+                self.m.len(),
+                self.v.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Mutable training state resident on the PJRT device: flat params, Adam
+/// moments, and the constant weight-decay mask as buffers, threaded through
+/// the pure-functional train step without host round-trips.
+pub struct TrainState {
+    pub(crate) params: PjRtBuffer,
+    pub(crate) m: PjRtBuffer,
+    pub(crate) v: PjRtBuffer,
+    pub(crate) decay_mask: PjRtBuffer,
+    /// 1-based Adam step (bias correction).
+    pub step: u64,
+    pub tokens: u64,
+    pub n_params: usize,
+    client: Rc<PjRtClient>,
+    sync_transfers: Cell<usize>,
+    sync_bytes: Cell<u64>,
+}
+
+impl TrainState {
+    /// Fresh-run device state ([`HostState::init`] uploaded once).
+    pub fn init(client: Rc<PjRtClient>, man: &Manifest, seed: u64) -> Result<Self> {
+        Self::from_host(client, man, &HostState::init(man, seed))
+    }
+
+    /// The one shared host→device reconstruction primitive: every state
+    /// upload (init, checkpoint resume, warm-cache hand-off, rollback
+    /// restore) goes through here.
+    fn upload_vec(client: &PjRtClient, xs: &[f32]) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_literal(None, &Literal::vec1(xs))?)
+    }
+
+    /// Upload a [`HostState`] as a new device state (checkpoint resume,
+    /// cache hand-off). One sync point: 3×n_params f32 up, plus the
+    /// run-constant decay mask.
+    pub fn from_host(client: Rc<PjRtClient>, man: &Manifest, host: &HostState) -> Result<Self> {
+        host.validate(man.n_params)?;
+        let params = Self::upload_vec(&client, &host.params)?;
+        let m = Self::upload_vec(&client, &host.m)?;
+        let v = Self::upload_vec(&client, &host.v)?;
+        let decay_mask = Self::upload_vec(&client, &man.decay_mask())?;
+        let state = Self {
+            params,
+            m,
+            v,
+            decay_mask,
+            step: host.step,
+            tokens: host.tokens,
+            n_params: man.n_params,
+            client,
+            sync_transfers: Cell::new(0),
+            sync_bytes: Cell::new(0),
+        };
+        state.count_sync(4, 4 * man.n_params as u64 * 4);
+        Ok(state)
+    }
+
+    /// Read the full state back to the host — THE materialization boundary.
+    /// Only sync points (snapshots, disk checkpoints, rollback, cross-thread
+    /// hand-off) may call this; the warm train path never does.
+    pub fn materialize(&self) -> Result<HostState> {
+        let down = |buf: &PjRtBuffer| -> Result<Vec<f32>> {
+            Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+        };
+        let host = HostState {
+            params: down(&self.params)?,
+            m: down(&self.m)?,
+            v: down(&self.v)?,
+            step: self.step,
+            tokens: self.tokens,
+        };
+        self.count_sync(3, 3 * self.n_params as u64 * 4);
+        Ok(host)
+    }
+
+    /// Overwrite the device state from a [`HostState`] in place (rollback
+    /// restore). The decay mask is constant over a run and is not re-sent;
+    /// the shared state-reconstruction path for the stability ring, the
+    /// warm-cache hand-off, and checkpoint resume.
+    pub fn upload(&mut self, host: &HostState) -> Result<()> {
+        host.validate(self.n_params)?;
+        let params = Self::upload_vec(&self.client, &host.params)?;
+        let m = Self::upload_vec(&self.client, &host.m)?;
+        let v = Self::upload_vec(&self.client, &host.v)?;
+        self.params = params;
+        self.m = m;
+        self.v = v;
+        self.step = host.step;
+        self.tokens = host.tokens;
+        self.count_sync(3, 3 * self.n_params as u64 * 4);
+        Ok(())
+    }
+
+    /// Current parameters on the host (one readback — a sync point).
+    pub fn params_vec(&self) -> Result<Vec<f32>> {
+        let v = self.params.to_literal_sync()?.to_vec::<f32>()?;
+        self.count_sync(1, self.n_params as u64 * 4);
+        Ok(v)
+    }
+
+    /// Host↔device crossings performed through the materialization boundary
+    /// (uploads + readbacks). The warm train path must not move this.
+    pub fn sync_transfers(&self) -> usize {
+        self.sync_transfers.get()
+    }
+
+    /// Bytes crossed through the materialization boundary.
+    pub fn sync_bytes(&self) -> u64 {
+        self.sync_bytes.get()
+    }
+
+    fn count_sync(&self, n: usize, bytes: u64) {
+        self.sync_transfers.set(self.sync_transfers.get() + n);
+        self.sync_bytes.set(self.sync_bytes.get() + bytes);
+    }
+}

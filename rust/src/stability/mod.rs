@@ -10,10 +10,11 @@
 //!   (EWMA of the Adam variance max-element, loss-spike ratio, an absolute
 //!   loss ceiling calibrated off the init loss, and a NaN/inf guard) that
 //!   classifies every step as `Healthy / Warning / Diverged`;
-//! * [`rollback`] — a ring of periodic in-memory snapshots of the full
-//!   `TrainState` (optionally spilled to disk via `train::checkpoint`), so
-//!   a `Diverged` verdict restores the last healthy state instead of
-//!   killing the run;
+//! * [`rollback`] — a ring of periodic in-memory `HostState` snapshots of
+//!   the device-resident `TrainState`, captured/restored through the
+//!   explicit materialization boundary (optionally spilled to disk via
+//!   `train::checkpoint`), so a `Diverged` verdict restores the last
+//!   healthy state instead of killing the run;
 //! * [`controller`] — the closed-loop policy: on rollback it re-enters the
 //!   pacing ramp at a short sequence length and decays the LR, then
 //!   cautiously re-grows the length after a healthy streak — the paper's
@@ -38,7 +39,7 @@ use crate::runtime::{StepStats, TrainState};
 
 pub use controller::Controller;
 pub use report::{Intervention, RollbackEvent, StabilityTrace};
-pub use rollback::{CheckpointRing, Snapshot};
+pub use rollback::CheckpointRing;
 pub use sentinel::{Observation, Sentinel, Verdict};
 
 /// Knobs of the closed loop. Part of `RunConfig`, so the coordinator's run
@@ -258,7 +259,10 @@ impl Autopilot {
                 }
                 let (to_step, to_tokens) = match self.ring.latest() {
                     Some(snap) => {
-                        snap.restore_into(state);
+                        // one explicit sync-point upload through the shared
+                        // TrainState::upload path — the only time a rollback
+                        // moves O(n_params) bytes to the device
+                        state.upload(snap)?;
                         (snap.step, snap.tokens)
                     }
                     None => {

@@ -2,55 +2,25 @@
 //! `Diverged` verdict restores the last healthy point instead of ending
 //! the run.
 //!
-//! Snapshots live in host memory as plain `Vec<f32>`s (xla `Literal`s wrap
-//! runtime handles and are rebuilt on restore); with a spill directory set,
-//! every snapshot is also written through `train::checkpoint` as
-//! `ring_<slot>.ckpt` so a crashed process can resume from disk.
+//! Snapshots are [`HostState`]s captured through the materialization
+//! boundary (`TrainState::materialize`) — the state's *only* scheduled
+//! O(n_params) host crossing on a healthy run — and restored with the one
+//! shared reconstruction path, `TrainState::upload`. With a spill directory
+//! set, every snapshot is also written through `train::checkpoint` as
+//! `ring_<slot>.ckpt` (straight from the already-materialized host copy —
+//! no second device readback) so a crashed process can resume from disk.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
 
 use anyhow::Result;
-use xla::Literal;
 
-use crate::runtime::TrainState;
+use crate::runtime::{HostState, TrainState};
 use crate::train::checkpoint;
-
-/// Host-side copy of a [`TrainState`] at one step.
-#[derive(Clone)]
-pub struct Snapshot {
-    pub params: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    pub step: u64,
-    pub tokens: u64,
-}
-
-impl Snapshot {
-    pub fn capture(state: &TrainState) -> Result<Self> {
-        Ok(Self {
-            params: state.params.to_vec::<f32>()?,
-            m: state.m.to_vec::<f32>()?,
-            v: state.v.to_vec::<f32>()?,
-            step: state.step,
-            tokens: state.tokens,
-        })
-    }
-
-    /// Overwrite `state` with this snapshot. The decay mask is constant
-    /// over a run, so only params/moments/counters are restored.
-    pub fn restore_into(&self, state: &mut TrainState) {
-        state.params = Literal::vec1(&self.params);
-        state.m = Literal::vec1(&self.m);
-        state.v = Literal::vec1(&self.v);
-        state.step = self.step;
-        state.tokens = self.tokens;
-    }
-}
 
 pub struct CheckpointRing {
     keep: usize,
-    slots: VecDeque<Snapshot>,
+    slots: VecDeque<HostState>,
     /// disk slot index of each in-memory snapshot (aligned with `slots`)
     disk_slots: VecDeque<usize>,
     spill: Option<PathBuf>,
@@ -76,10 +46,10 @@ impl CheckpointRing {
     }
 
     pub fn snapshot(&mut self, state: &TrainState) -> Result<()> {
-        let snap = Snapshot::capture(state)?;
+        let snap = state.materialize()?;
         let slot = self.n_snapshots % self.keep;
         if let Some(dir) = &self.spill {
-            checkpoint::save(state, &dir.join(format!("ring_{slot}.ckpt")))?;
+            checkpoint::save(&snap, &dir.join(format!("ring_{slot}.ckpt")))?;
         }
         if self.slots.len() == self.keep {
             self.slots.pop_front();
@@ -92,7 +62,7 @@ impl CheckpointRing {
     }
 
     /// Newest snapshot (the rollback target).
-    pub fn latest(&self) -> Option<&Snapshot> {
+    pub fn latest(&self) -> Option<&HostState> {
         self.slots.back()
     }
 
@@ -130,41 +100,42 @@ impl CheckpointRing {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
+    use crate::runtime::Engine;
     use std::path::PathBuf;
 
     fn root() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    fn state(seed: u64) -> (Manifest, TrainState) {
-        let man = Manifest::load(&root().join("micro_b4")).unwrap();
-        let st = TrainState::init(&man, seed);
-        (man, st)
+    fn engine_and_state(seed: u64) -> (Engine, TrainState) {
+        let engine = Engine::load(&root(), "micro").unwrap();
+        let st = engine.init_state(4, seed).unwrap();
+        (engine, st)
     }
 
     #[test]
     fn snapshot_restores_exact_state() {
-        let (_, mut st) = state(3);
+        let (engine, mut st) = engine_and_state(3);
         st.step = 7;
         st.tokens = 700;
-        let snap = Snapshot::capture(&st).unwrap();
-        // wreck the live state, then restore
-        let (_, other) = state(99);
-        st.params = Literal::vec1(&other.params.to_vec::<f32>().unwrap());
+        let snap = st.materialize().unwrap();
+        // wreck the live state, then restore through the shared upload path
+        let other = HostState::init(engine.manifest_for_batch(4).unwrap(), 99);
+        st.upload(&other).unwrap();
         st.step = 123;
         st.tokens = 9999;
-        snap.restore_into(&mut st);
+        st.upload(&snap).unwrap();
         assert_eq!(st.step, 7);
         assert_eq!(st.tokens, 700);
-        assert_eq!(st.params_vec().unwrap(), snap.params);
-        assert_eq!(st.m.to_vec::<f32>().unwrap(), snap.m);
-        assert_eq!(st.v.to_vec::<f32>().unwrap(), snap.v);
+        let restored = st.materialize().unwrap();
+        assert_eq!(restored.params, snap.params);
+        assert_eq!(restored.m, snap.m);
+        assert_eq!(restored.v, snap.v);
     }
 
     #[test]
     fn ring_rotates_and_keeps_a_floor() {
-        let (_, mut st) = state(0);
+        let (_engine, mut st) = engine_and_state(0);
         let mut ring = CheckpointRing::new(2);
         assert!(ring.is_empty());
         for step in 1..=3u64 {
@@ -184,7 +155,8 @@ mod tests {
 
     #[test]
     fn spill_writes_loadable_checkpoints() {
-        let (man, mut st) = state(5);
+        let (engine, mut st) = engine_and_state(5);
+        let man = engine.manifest_for_batch(4).unwrap().clone();
         st.step = 11;
         st.tokens = 1100;
         let dir = std::env::temp_dir()
@@ -195,7 +167,7 @@ mod tests {
         let loaded = checkpoint::load(&man, &dir.join("ring_0.ckpt")).unwrap();
         assert_eq!(loaded.step, 11);
         assert_eq!(loaded.tokens, 1100);
-        assert_eq!(loaded.params_vec().unwrap(), st.params_vec().unwrap());
+        assert_eq!(loaded.params, st.materialize().unwrap().params);
         // dropping a poisoned newest slot must delete its spill file too,
         // so crash recovery can never resume from it
         st.step = 12;

@@ -3,41 +3,50 @@
 //! Format (little-endian): magic "SLWCKPT1", n_params u64, step u64,
 //! tokens u64, then params/m/v as raw f32 arrays. The flat-vector state
 //! layout (model.py) makes this a straight dump — no pytree schema.
+//!
+//! Checkpoints operate on [`HostState`] — the materialized form of the
+//! device-resident `TrainState` — so saving costs no extra device readback
+//! when the caller already holds a host snapshot (the stability ring, the
+//! coordinator's result hand-off). Callers with a live device state go
+//! through `TrainState::materialize()` / `Engine::state_from_host()` at
+//! the boundary.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
-use xla::Literal;
 
 use crate::runtime::manifest::Manifest;
-use crate::runtime::TrainState;
+use crate::runtime::HostState;
+use crate::util::bytes::le_bytes_f32;
 
 const MAGIC: &[u8; 8] = b"SLWCKPT1";
 
-pub fn save(state: &TrainState, path: &Path) -> Result<()> {
+pub fn save(state: &HostState, path: &Path) -> Result<()> {
+    let n = state.n_params();
+    if state.m.len() != n || state.v.len() != n {
+        bail!(
+            "host state arrays disagree: {} params, {} m, {} v",
+            n,
+            state.m.len(),
+            state.v.len()
+        );
+    }
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
-    f.write_all(&(state.n_params as u64).to_le_bytes())?;
+    f.write_all(&(n as u64).to_le_bytes())?;
     f.write_all(&state.step.to_le_bytes())?;
     f.write_all(&state.tokens.to_le_bytes())?;
-    for lit in [&state.params, &state.m, &state.v] {
-        let v = lit.to_vec::<f32>()?;
-        if v.len() != state.n_params {
-            bail!("state literal has {} elements, expected {}", v.len(), state.n_params);
-        }
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-        };
-        f.write_all(bytes)?;
+    for arr in [&state.params, &state.m, &state.v] {
+        f.write_all(&le_bytes_f32(arr))?;
     }
     Ok(())
 }
 
-pub fn load(man: &Manifest, path: &Path) -> Result<TrainState> {
+pub fn load(man: &Manifest, path: &Path) -> Result<HostState> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
     );
@@ -68,15 +77,7 @@ pub fn load(man: &Manifest, path: &Path) -> Result<TrainState> {
     let params = read_arr()?;
     let m = read_arr()?;
     let v = read_arr()?;
-    Ok(TrainState {
-        params: Literal::vec1(&params),
-        m: Literal::vec1(&m),
-        v: Literal::vec1(&v),
-        decay_mask: Literal::vec1(&man.decay_mask()),
-        step,
-        tokens,
-        n_params: n,
-    })
+    Ok(HostState { params, m, v, step, tokens })
 }
 
 #[cfg(test)]
@@ -91,7 +92,7 @@ mod tests {
     #[test]
     fn roundtrip() {
         let man = Manifest::load(&root().join("micro_b4")).unwrap();
-        let mut state = TrainState::init(&man, 5);
+        let mut state = HostState::init(&man, 5);
         state.step = 42;
         state.tokens = 12345;
         let dir = std::env::temp_dir().join("slw_ckpt_test");
@@ -100,44 +101,43 @@ mod tests {
         let loaded = load(&man, &path).unwrap();
         assert_eq!(loaded.step, 42);
         assert_eq!(loaded.tokens, 12345);
-        assert_eq!(loaded.params_vec().unwrap(), state.params_vec().unwrap());
-        assert_eq!(loaded.m.to_vec::<f32>().unwrap(), state.m.to_vec::<f32>().unwrap());
+        assert_eq!(loaded.params, state.params);
+        assert_eq!(loaded.m, state.m);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn roundtrip_after_real_steps_preserves_moments() {
-        // the rollback path depends on save→load being byte-exact for a
-        // state with non-zero Adam moments — init-state roundtrips (zeros)
-        // don't exercise that
+        // the rollback path depends on materialize → save → load → upload
+        // being byte-exact for a state with non-zero Adam moments —
+        // init-state roundtrips (zeros) don't exercise that
         let mut engine = crate::runtime::Engine::load(&root(), "micro").unwrap();
         let man = engine.manifest_for_batch(4).unwrap().clone();
-        let mut state = TrainState::init(&man, 11);
+        let mut state = engine.init_state(4, 11).unwrap();
         let mut rng = crate::util::rng::Pcg64::new(7);
         for _ in 0..3 {
             let toks: Vec<i32> =
                 (0..4 * 9).map(|_| rng.below(man.model.vocab as u64) as i32).collect();
             engine.train_step(&mut state, &toks, 4, 8, 1e-3, 1.0).unwrap();
         }
-        let m = state.m.to_vec::<f32>().unwrap();
-        let v = state.v.to_vec::<f32>().unwrap();
-        assert!(m.iter().any(|&x| x != 0.0), "moments must be non-zero after steps");
-        assert!(v.iter().any(|&x| x != 0.0));
+        let host = state.materialize().unwrap();
+        assert!(host.m.iter().any(|&x| x != 0.0), "moments must be non-zero after steps");
+        assert!(host.v.iter().any(|&x| x != 0.0));
 
         let dir = std::env::temp_dir().join("slw_ckpt_moments");
         let path = dir.join("s3.ckpt");
-        save(&state, &path).unwrap();
+        save(&host, &path).unwrap();
         let loaded = load(&man, &path).unwrap();
         assert_eq!(loaded.step, state.step);
         assert_eq!(loaded.tokens, state.tokens);
-        assert_eq!(loaded.n_params, state.n_params);
-        assert_eq!(loaded.params_vec().unwrap(), state.params_vec().unwrap());
-        assert_eq!(loaded.m.to_vec::<f32>().unwrap(), m, "exact m moments");
-        assert_eq!(loaded.v.to_vec::<f32>().unwrap(), v, "exact v moments");
+        assert_eq!(loaded.n_params(), state.n_params);
+        assert_eq!(loaded.params, host.params);
+        assert_eq!(loaded.m, host.m, "exact m moments");
+        assert_eq!(loaded.v, host.v, "exact v moments");
         // a reloaded state trains on identically to the original
         let toks: Vec<i32> =
             (0..4 * 9).map(|_| rng.below(man.model.vocab as u64) as i32).collect();
-        let mut resumed = loaded;
+        let mut resumed = engine.state_from_host(&loaded).unwrap();
         let s1 = engine.train_step(&mut state, &toks, 4, 8, 1e-3, 1.0).unwrap();
         let s2 = engine.train_step(&mut resumed, &toks, 4, 8, 1e-3, 1.0).unwrap();
         assert_eq!(s1.loss, s2.loss);
@@ -153,6 +153,10 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&man, &path).is_err());
+        // mismatched array lengths are rejected before any bytes hit disk
+        let mut state = HostState::init(&man, 0);
+        state.m.pop();
+        assert!(save(&state, &dir.join("short.ckpt")).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

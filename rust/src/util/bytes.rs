@@ -1,0 +1,75 @@
+//! Safe scalar-slice → byte-buffer conversions for the host↔device and
+//! disk staging paths.
+//!
+//! These replace the `unsafe { slice::from_raw_parts(...) }` reinterpret
+//! views the engine's token upload and the checkpoint writer used to carry:
+//! one explicit staging copy, no aliasing or alignment reasoning required,
+//! and an endianness contract stated in the name. `ne_*` feeds XLA literal
+//! creation (`create_from_shape_and_untyped_data` expects the host's native
+//! layout); `le_*` is the on-disk checkpoint format (SLWCKPT1 is defined as
+//! little-endian regardless of host).
+
+/// Native-endian byte image of an `i32` slice (device-upload staging).
+pub fn ne_bytes_i32(xs: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_ne_bytes());
+    }
+    out
+}
+
+/// Little-endian byte image of an `f32` slice (checkpoint serialization).
+pub fn le_bytes_f32(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_slices_give_empty_buffers() {
+        assert!(ne_bytes_i32(&[]).is_empty());
+        assert!(le_bytes_f32(&[]).is_empty());
+    }
+
+    #[test]
+    fn odd_length_slices_convert_exactly() {
+        // lengths that don't divide any power-of-two staging granularity:
+        // every element must appear, 4 bytes each, in order
+        for len in [1usize, 3, 5, 7, 33] {
+            let ints: Vec<i32> = (0..len as i32).map(|i| i * -7 + 1).collect();
+            let b = ne_bytes_i32(&ints);
+            assert_eq!(b.len(), len * 4);
+            for (i, x) in ints.iter().enumerate() {
+                assert_eq!(&b[i * 4..i * 4 + 4], &x.to_ne_bytes());
+            }
+            let floats: Vec<f32> = (0..len).map(|i| i as f32 * 0.5 - 1.0).collect();
+            let b = le_bytes_f32(&floats);
+            assert_eq!(b.len(), len * 4);
+            for (i, x) in floats.iter().enumerate() {
+                assert_eq!(&b[i * 4..i * 4 + 4], &x.to_le_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn le_roundtrips_through_the_checkpoint_reader_decoding() {
+        // the checkpoint loader decodes with f32::from_le_bytes — the pair
+        // must be bit-exact including NaN payloads and negative zero
+        let xs = [0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE];
+        let b = le_bytes_f32(&xs);
+        let back: Vec<f32> = b
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! rand/serde/clap/criterion — see DESIGN.md §2 substitution table).
 
 pub mod bench;
+pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod log;

@@ -7,7 +7,7 @@ use std::path::PathBuf;
 use slw::config::{parse_config, presets, DataRecipe};
 use slw::eval::probes;
 use slw::pipeline::pacing::Pacing;
-use slw::runtime::{Engine, TrainState};
+use slw::runtime::Engine;
 use slw::train::checkpoint;
 use slw::train::trainer::Trainer;
 use slw::train::tuner::Tuner;
@@ -57,13 +57,16 @@ fn checkpoint_resume_continues_training() {
     let out = t.run().unwrap();
     let dir = std::env::temp_dir().join("slw_it_ckpt");
     let path = dir.join("state.ckpt");
-    checkpoint::save(&out.state, &path).unwrap();
+    // the device-resident state crosses to the host exactly once, at this
+    // explicit materialization boundary
+    checkpoint::save(&out.state.materialize().unwrap(), &path).unwrap();
 
-    let man = out.state.n_params;
+    let n = out.state.n_params;
     let engine_man = t.engine.manifest_for_batch(4).unwrap().clone();
-    let mut resumed = checkpoint::load(&engine_man, &path).unwrap();
-    assert_eq!(resumed.n_params, man);
-    assert_eq!(resumed.step, out.state.step);
+    let loaded = checkpoint::load(&engine_man, &path).unwrap();
+    assert_eq!(loaded.n_params(), n);
+    assert_eq!(loaded.step, out.state.step);
+    let mut resumed = t.engine.state_from_host(&loaded).unwrap();
 
     // one more step on the resumed state must work and keep learning
     let toks: Vec<i32> = (0..4 * 33).map(|i| (i % 250) as i32).collect();
@@ -82,14 +85,17 @@ fn trained_model_improves_eval_and_probes_run() {
     let out = t.run().unwrap();
     // validation PPL far below the untrained ≈vocab level
     let trained_ppl = t.eval_now(&out.state).unwrap();
+    // buffers are client-bound: hand the trained state to a second engine
+    // through the materialization boundary
+    let host = out.state.materialize().unwrap();
     let mut engine = Engine::load(&root(), "micro").unwrap();
-    let man = engine.manifest_for_batch(4).unwrap().clone();
-    let fresh = TrainState::init(&man, 99);
+    let trained = engine.state_from_host(&host).unwrap();
+    let fresh = engine.init_state(4, 99).unwrap();
     assert!(trained_ppl < 200.0, "trained ppl {trained_ppl}");
     // probe suite runs on both states; 120 micro steps are not enough to
     // grow induction heads, so require non-degradation only (the e2e
     // example and exp table4 exercise the real gains)
-    let (scores, trained_avg) = probes::score_suite(&mut engine, &out.state, 3, 2, 1).unwrap();
+    let (scores, trained_avg) = probes::score_suite(&mut engine, &trained, 3, 2, 1).unwrap();
     let (_, fresh_avg) = probes::score_suite(&mut engine, &fresh, 3, 2, 1).unwrap();
     assert_eq!(scores.len(), 11);
     assert!(
