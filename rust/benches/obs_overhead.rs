@@ -1,0 +1,156 @@
+//! Telemetry overhead: the same micro training loop run untraced and with a
+//! live span recorder attached, timed back to back on one warm engine. The
+//! loop-level wall contrast is XLA-noise-dominated, so it is *reported* but
+//! not gated on; the enforced bounds come from the noise-free span
+//! microbenches (ns per begin/end pair, measured for the `Obs::off()`
+//! handle, a disabled recorder, and an enabled recorder) scaled by the
+//! instrumented ops per step and compared against the measured step time:
+//! tracing disabled must cost < 2% of a step, enabled must stay bounded.
+//! Also asserts the traced and untraced trajectories are bit-identical —
+//! telemetry observes, it never steers. Emits `BENCH_obs.json`.
+//!
+//! `SLW_BENCH_SMOKE=1` shrinks the loop for CI.
+
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use slw::config::{presets, DataRecipe};
+use slw::obs::{Obs, ObsSink, Recorder};
+use slw::runtime::Engine;
+use slw::train::trainer::Trainer;
+use slw::util::json;
+
+/// Upper-bound count of span/counter ops the trainer records per step
+/// (claim + step + upload + execute + readback + sentinel spans = 12
+/// events, plus 4 counters and change).
+const OPS_PER_STEP: f64 = 20.0;
+
+fn span_ns(obs: &Obs, iters: usize) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let _g = obs.span(black_box("bench"), black_box(i as i64));
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let smoke = std::env::var("SLW_BENCH_SMOKE").is_ok();
+    let steps = if smoke { 40 } else { 120 };
+    let reps = 3usize;
+
+    let mut cfg = presets::base("micro")?;
+    cfg.token_budget = (steps * 4 * 32) as u64;
+    cfg.data = DataRecipe::Mixture { tokens: 40_000 };
+    cfg.eval_every = 0;
+
+    let mut engine = Engine::load(&root, "micro")?;
+    let mut plain_s: Vec<f64> = Vec::new();
+    let mut traced_s: Vec<f64> = Vec::new();
+    let mut traced_events = 0usize;
+    // rep 0 warms the engine (compiles) and is discarded
+    for rep in 0..=reps {
+        let mut plain_traj: Vec<(usize, usize, u32)> = Vec::new();
+        for traced in [false, true] {
+            let c = cfg.clone().with_name(&format!("bench_obs_r{rep}_{traced}"));
+            let mut t = Trainer::with_engine(engine, c)?;
+            let rec = if traced { Some(Recorder::new(1 << 16)) } else { None };
+            if let Some(r) = &rec {
+                // recorder only — no metrics file, no incident dir — so the
+                // contrast isolates span-recording cost
+                t.set_obs_sink(ObsSink {
+                    obs: Obs::new(r.clone()),
+                    ..Default::default()
+                });
+            }
+            let t0 = Instant::now();
+            let out = t.run_sync()?;
+            let dt = t0.elapsed().as_secs_f64();
+            engine = t.into_engine();
+            assert!(!out.history.diverged(), "bench run must stay healthy");
+            assert_eq!(out.history.steps.len(), steps);
+            let traj: Vec<(usize, usize, u32)> = out
+                .history
+                .steps
+                .iter()
+                .map(|r| (r.step, r.seqlen, r.stats.loss.to_bits()))
+                .collect();
+            if traced {
+                assert_eq!(traj, plain_traj, "tracing must not perturb the trajectory");
+                let r = rec.as_ref().unwrap();
+                traced_events = traced_events.max(r.snapshot().len());
+            } else {
+                plain_traj = traj;
+            }
+            if rep > 0 {
+                if traced {
+                    traced_s.push(dt);
+                } else {
+                    plain_s.push(dt);
+                }
+            }
+        }
+    }
+    assert!(traced_events > 0, "traced runs must record span events");
+    let median = |v: &mut Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let plain = median(&mut plain_s);
+    let traced = median(&mut traced_s);
+    let wall_overhead_pct = 100.0 * (traced - plain) / plain;
+
+    // span-site cost under the three states a call site can be in, isolated
+    // from XLA noise: the off handle (no recorder — the default for every
+    // untraced run), a recorder with tracing flipped off, and a live one
+    let off_ns = span_ns(&Obs::off(), 10_000_000);
+    let disabled_rec = Recorder::new(1 << 16);
+    disabled_rec.set_enabled(false);
+    let gated_ns = span_ns(&Obs::new(disabled_rec), 10_000_000);
+    let live_rec = Recorder::new(1 << 16);
+    let live_ns = span_ns(&Obs::new(live_rec.clone()), 1_000_000);
+    assert!(live_rec.snapshot().len() > 1_000, "live microbench must record");
+
+    // the gated metrics: per-step telemetry cost vs measured step time
+    let plain_step_ns = plain * 1e9 / steps as f64;
+    let disabled_overhead_pct =
+        100.0 * OPS_PER_STEP * off_ns.max(gated_ns) / plain_step_ns;
+    let enabled_overhead_pct = 100.0 * OPS_PER_STEP * live_ns / plain_step_ns;
+
+    println!(
+        "bench:\tobs_overhead\tsteps={steps}\tplain={plain:.3}s\ttraced={traced:.3}s\t\
+         wall_overhead={wall_overhead_pct:.2}%\toff={off_ns:.1}ns\tgated={gated_ns:.1}ns\t\
+         live={live_ns:.1}ns\tdisabled_overhead={disabled_overhead_pct:.4}%\t\
+         enabled_overhead={enabled_overhead_pct:.3}%\tevents={traced_events}"
+    );
+    let out = json::obj(vec![
+        ("bench", json::s("obs_overhead")),
+        ("steps", json::num(steps as f64)),
+        ("reps", json::num(reps as f64)),
+        ("plain_s", json::num(plain)),
+        ("traced_s", json::num(traced)),
+        // wall-clock contrast: informative, XLA-noise-dominated, not gated
+        ("wall_overhead_pct", json::num(wall_overhead_pct)),
+        ("span_off_ns", json::num(off_ns)),
+        ("span_gated_ns", json::num(gated_ns)),
+        ("span_live_ns", json::num(live_ns)),
+        ("ops_per_step", json::num(OPS_PER_STEP)),
+        // the enforced bounds
+        ("disabled_overhead_pct", json::num(disabled_overhead_pct)),
+        ("enabled_overhead_pct", json::num(enabled_overhead_pct)),
+        ("traced_events", json::num(traced_events as f64)),
+    ]);
+    std::fs::write("BENCH_obs.json", out.to_string())?;
+    println!("wrote BENCH_obs.json");
+    assert!(
+        disabled_overhead_pct < 2.0,
+        "tracing-disabled per-step overhead {disabled_overhead_pct:.4}% must stay < 2%"
+    );
+    assert!(
+        enabled_overhead_pct < 25.0,
+        "tracing-enabled per-step overhead {enabled_overhead_pct:.3}% must stay bounded (< 25%)"
+    );
+    Ok(())
+}

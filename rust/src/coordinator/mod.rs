@@ -38,9 +38,11 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::obs::{Obs, ObsSink};
 use crate::runtime::{Engine, HostState};
 use crate::train::metrics::RunHistory;
 use crate::train::trainer::{StoreCache, Trainer};
+use crate::util::slugify;
 
 use cache::RunCache;
 use queue::StealQueues;
@@ -70,6 +72,9 @@ pub struct Coordinator {
     cache: RunCache,
     jobs: usize,
     use_cache: bool,
+    obs: Obs,
+    metrics_root: Option<PathBuf>,
+    incident_root: Option<PathBuf>,
 }
 
 impl Coordinator {
@@ -77,7 +82,31 @@ impl Coordinator {
     /// reads (every run re-executes) but fresh results still refresh the
     /// cache on disk.
     pub fn new(artifacts_root: PathBuf, cache_dir: PathBuf, jobs: usize, use_cache: bool) -> Self {
-        Self { artifacts_root, cache: RunCache::new(cache_dir), jobs: jobs.max(1), use_cache }
+        Self {
+            artifacts_root,
+            cache: RunCache::new(cache_dir),
+            jobs: jobs.max(1),
+            use_cache,
+            obs: Obs::off(),
+            metrics_root: None,
+            incident_root: None,
+        }
+    }
+
+    /// Attach telemetry: workers share the event ring (per-run `run` spans,
+    /// engine/prefetch spans from inside each trainer), write per-step
+    /// metrics to `<metrics_root>/<slug>.metrics.jsonl`, and dump incidents
+    /// under `<incident_root>/<slug>/`. Cached runs don't execute, so they
+    /// produce neither; observability settings never enter the cache key.
+    pub fn set_obs_sink(
+        &mut self,
+        obs: Obs,
+        metrics_root: Option<PathBuf>,
+        incident_root: Option<PathBuf>,
+    ) {
+        self.obs = obs;
+        self.metrics_root = metrics_root;
+        self.incident_root = incident_root;
     }
 
     pub fn jobs(&self) -> usize {
@@ -100,6 +129,7 @@ impl Coordinator {
             if self.use_cache {
                 if let Some(e) = self.cache.load(&self.artifacts_root, &cfg)? {
                     crate::debug!("coordinator: cache hit for '{}'", cfg.name);
+                    self.obs.instant("cache_hit", i as i64);
                     out.push(Some(CompletedRun {
                         history: e.history,
                         state: e.state,
@@ -119,6 +149,7 @@ impl Coordinator {
                 "coordinator: {n_hits}/{total} cached, executing {} run(s) on {n_workers} worker(s)",
                 misses.len()
             );
+            self.obs.counter("queue_depth", misses.len() as i64);
             // results are persisted as they arrive off the channel, so an
             // interrupt mid-batch keeps every already-finished run, and a
             // failed case doesn't throw away its siblings' work — the retry
@@ -199,17 +230,26 @@ impl Coordinator {
             let queues = queues.clone();
             let tx = tx.clone();
             let root = self.artifacts_root.clone();
-            handles.push(std::thread::spawn(move || worker_loop(w, root, queues, tx)));
+            let obs = self.obs.clone();
+            let metrics_root = self.metrics_root.clone();
+            let incident_root = self.incident_root.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(w, root, queues, tx, obs, metrics_root, incident_root)
+            }));
         }
         (rx, handles)
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
     artifacts_root: PathBuf,
     queues: Arc<StealQueues<Job>>,
     tx: Sender<JobResult>,
+    obs: Obs,
+    metrics_root: Option<PathBuf>,
+    incident_root: Option<PathBuf>,
 ) {
     // one warm engine per model family, reused across this worker's runs,
     // plus a per-worker corpus cache so sweep runs sharing a (recipe, seed)
@@ -233,6 +273,15 @@ fn worker_loop(
                     Err(e)
                 }
                 Ok(mut trainer) => {
+                    trainer.set_obs_sink(ObsSink {
+                        obs: obs.clone(),
+                        metrics_path: metrics_root
+                            .as_ref()
+                            .map(|d| d.join(format!("{}.metrics.jsonl", slugify(&cfg.name)))),
+                        incident_root: incident_root.clone(),
+                        dump_warnings: false,
+                    });
+                    let _run_span = crate::span!(obs, "run", idx);
                     let run = trainer.run().and_then(|out| {
                         // the run's one deliberate O(n_params) readback: the
                         // final state crosses to the host for the cache and

@@ -33,6 +33,7 @@ use anyhow::{bail, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::Coordinator;
+use crate::obs::{Obs, Recorder};
 use crate::runtime::HostState;
 use crate::train::metrics::RunHistory;
 use crate::util::cli::Args;
@@ -113,6 +114,18 @@ impl ExpCtx {
     /// ([`ExpCtx::emit_seed_report`]). Tables keep rendering the base seed.
     pub fn set_seeds(&mut self, n: usize) {
         self.extra_seeds = n.saturating_sub(1);
+    }
+
+    /// Route telemetry through the coordinator: worker spans land in `obs`,
+    /// per-run JSONL metrics next to the step traces under
+    /// `<out>/runs/`, incident dumps under `<out>/incidents/`. Runs served
+    /// from the persistent cache produce neither (they never execute).
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.coord.set_obs_sink(
+            obs,
+            Some(self.out_dir.join("runs")),
+            Some(self.out_dir.join("incidents")),
+        );
     }
 
     pub fn budget(&self, tokens: u64) -> u64 {
@@ -317,6 +330,7 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
     let jobs = args.usize_or("jobs", default_jobs())?;
     let no_cache = args.flag("no-cache");
     let n_seeds = args.usize_or("seeds", 1)?;
+    let trace_path = args.opt_str("trace");
     args.finish()?;
     if jobs == 0 {
         bail!("--jobs must be >= 1");
@@ -326,6 +340,12 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
     }
     let mut ctx = ExpCtx::configured(root, out_dir, scale, jobs, !no_cache);
     ctx.set_seeds(n_seeds);
+    // --trace: record spans across the coordinator + every worker thread and
+    // export one Chrome/Perfetto trace for the whole invocation
+    let recorder = trace_path.as_ref().map(|_| Recorder::new(1 << 16));
+    if let Some(rec) = &recorder {
+        ctx.set_obs(Obs::new(rec.clone()));
+    }
 
     fn run_one(ctx: &mut ExpCtx, id: &str) -> Result<()> {
         match id {
@@ -348,7 +368,7 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
         }
     }
 
-    match id.as_str() {
+    let result = match id.as_str() {
         "all" => {
             let t0 = std::time::Instant::now();
             for id in ALL_IDS {
@@ -362,7 +382,7 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
             println!("experiments: {}", ALL_IDS.join(", "));
             println!(
                 "usage: slw exp <id|all> [--quick|--full|--scale X] [--jobs N] \
-                 [--seeds N] [--no-cache] [--out results/]"
+                 [--seeds N] [--no-cache] [--out results/] [--trace out.json]"
             );
             Ok(())
         }
@@ -370,5 +390,15 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
             run_one(&mut ctx, other)?;
             ctx.emit_seed_report(other)
         }
+    };
+    if let (Some(rec), Some(path)) = (&recorder, &trace_path) {
+        let events = rec.snapshot();
+        crate::obs::trace::export(&events, std::path::Path::new(path))?;
+        println!(
+            "trace: {} events ({} dropped) -> {path}  (open in chrome://tracing or ui.perfetto.dev)",
+            events.len(),
+            rec.dropped()
+        );
     }
+    result
 }

@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use slw::config::{presets, RunConfig};
 use slw::data::corpus::Corpus;
+use slw::obs::{Obs, ObsSink, Recorder};
 use slw::pipeline::batcher::TruncationMode;
 use slw::train::checkpoint;
 use slw::train::trainer::Trainer;
@@ -100,9 +101,24 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let root = artifacts_root(&mut args);
     let cfg = build_config(&mut args)?;
     let save = args.opt_str("save");
+    let trace_path = args.opt_str("trace");
     args.finish()?;
     let name = cfg.name.clone();
     let mut trainer = Trainer::new(&root, cfg)?;
+    // telemetry: span recording + per-step JSONL metrics only with --trace;
+    // the divergence flight recorder is always armed (dumps are rare and
+    // only written when the sentinel fires or the run diverges)
+    let recorder = trace_path.as_ref().map(|_| Recorder::new(1 << 16));
+    let metrics_path = trace_path.as_ref().map(|p| {
+        let stem = p.strip_suffix(".json").unwrap_or(p);
+        PathBuf::from(format!("{stem}.metrics.jsonl"))
+    });
+    trainer.set_obs_sink(ObsSink {
+        obs: recorder.as_ref().map(|r| Obs::new(r.clone())).unwrap_or_default(),
+        metrics_path: metrics_path.clone(),
+        incident_root: Some(PathBuf::from("results/incidents")),
+        dump_warnings: false,
+    });
     let t0 = std::time::Instant::now();
     let out = trainer.run()?;
     let wall = t0.elapsed().as_secs_f64();
@@ -138,6 +154,11 @@ fn cmd_train(mut args: Args) -> Result<()> {
     } else {
         println!("  pipeline: inline (0 workers), {} re-plans", p.republished);
     }
+    let (transfers, bytes) = (trainer.engine.n_host_transfers(), trainer.engine.host_bytes());
+    println!(
+        "  host transfers: {transfers} crossings, {bytes} B ({:.1} B/step avg)",
+        if h.steps.is_empty() { 0.0 } else { bytes as f64 / h.steps.len() as f64 }
+    );
     println!(
         "  var corr: r_norm={:.3} (p={:.2e})  r_max={:.3} (p={:.2e})  var_max_peak={:.4}",
         corr.r_norm, corr.p_norm, corr.r_max, corr.p_max, h.var_max_peak()
@@ -149,6 +170,18 @@ fn cmd_train(mut args: Args) -> Result<()> {
         // explicit sync point: materialize the device-resident state once
         checkpoint::save(&out.state.materialize()?, &PathBuf::from(&path))?;
         println!("  checkpoint: {path}");
+    }
+    if let (Some(rec), Some(path)) = (&recorder, &trace_path) {
+        let events = rec.snapshot();
+        slw::obs::trace::export(&events, std::path::Path::new(path))?;
+        println!(
+            "  trace: {} events ({} dropped) -> {path}  (chrome://tracing / ui.perfetto.dev)",
+            events.len(),
+            rec.dropped()
+        );
+        if let Some(m) = &metrics_path {
+            println!("  metrics: {}", m.display());
+        }
     }
     Ok(())
 }
@@ -238,21 +271,28 @@ fn cmd_info(mut args: Args) -> Result<()> {
         .context("artifacts/index.json missing — run `make artifacts`")?;
     let j = slw::util::json::Json::parse(&index)?;
     println!(
-        "{:<12} {:<8} {:>6} {:>9} {:>9}  buckets",
-        "set", "model", "batch", "params", "precision"
+        "{:<12} {:<8} {:>6} {:>9} {:>9} {:>11}  buckets",
+        "set", "model", "batch", "params", "precision", "warm_B/step"
     );
     for s in j.get("sets")?.arr()? {
         let man = slw::runtime::Manifest::load(&root.join(s.str()?))?;
+        // warm train-step host traffic: tokens up + knobs up + stats down
+        // (params/moments stay device-resident, so no n_params term)
+        let warm_bytes = 4 * man.batch_size as u64 * (man.model.max_seqlen as u64 + 1)
+            + slw::runtime::KNOB_BYTES
+            + slw::runtime::STATS_BYTES;
         println!(
-            "{:<12} {:<8} {:>6} {:>9} {:>9}  {:?}",
+            "{:<12} {:<8} {:>6} {:>9} {:>9} {:>11}  {:?}",
             man.set,
             man.model.name,
             man.batch_size,
             man.n_params,
             man.model.precision,
+            warm_bytes,
             man.seqlen_buckets
         );
     }
+    println!("warm_B/step = per-step host traffic at max seqlen; state never crosses back.");
     Ok(())
 }
 
@@ -269,14 +309,17 @@ fn print_help() {
                    [--autopilot]  (online sentinel + rollback + closed-loop pacing)\n\
                    [--workers N]  (prefetch threads; 0 = inline, same trajectory —\n\
                    adaptive and autopilot runs stay threaded via plan re-publication)\n\
+                   [--trace out.json]  (Chrome/Perfetto span trace + per-step\n\
+                   JSONL metrics; incident dumps land in results/incidents/)\n\
            tune    --model tiny [--probe-steps N] [--durations a,b,c] [--starts a,b]\n\
            probes  --model tiny [--ckpt file] [--shots K] [--batches N]\n\
            data    --kind mixture|markov|induction --tokens N --out file\n\
            exp     <fig1|table1|table2|table3|fig2|fig3|fig4|fig5_6|table4|table5|\n\
                     fig8|fig10|table8_9|stability|all> [--quick] [--jobs N]\n\
-                    [--seeds N] [--no-cache] [--out results/]\n\
+                    [--seeds N] [--no-cache] [--out results/] [--trace out.json]\n\
            info    list artifact sets\n\
          \n\
-         Run `make artifacts` first. SLW_LOG=debug for verbose logs."
+         Run `make artifacts` first. SLW_LOG=error|warn|info|debug|trace\n\
+         (strict: anything else warns and falls back to info)."
     );
 }

@@ -1,0 +1,181 @@
+//! Divergence flight recorder.
+//!
+//! When the sentinel fires (rollback, give-up, or terminal divergence) the
+//! interesting evidence is *around* the bad step: the ring events show what
+//! every thread was doing, and the trailing `StepRecord` window shows the
+//! loss/variance trajectory leading in. Each incident becomes one
+//! self-contained JSON artifact at `<root>/<run-slug>/<step>.json`; repeated
+//! interventions at the same step (the autopilot retrying under shorter
+//! caps) are deduplicated so a rollback storm produces one dump per step.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::StepStats;
+use crate::train::metrics::RunHistory;
+use crate::util::json::{self, Json};
+
+use super::metrics::{record_json, stats_json};
+use super::Obs;
+
+/// Incident-dump writer for one run.
+pub struct FlightRecorder {
+    dir: PathBuf,
+    run: String,
+    /// trailing `StepRecord`s included per dump
+    window: usize,
+    /// trailing ring events included per dump
+    max_events: usize,
+    dumped: BTreeSet<usize>,
+}
+
+impl FlightRecorder {
+    pub fn new<P: AsRef<Path>>(dir: P, run: &str) -> Self {
+        FlightRecorder {
+            dir: dir.as_ref().to_path_buf(),
+            run: run.to_string(),
+            window: 50,
+            max_events: 256,
+            dumped: BTreeSet::new(),
+        }
+    }
+
+    /// Dump an incident at `step`. `trigger` is the stats of the step that
+    /// fired the sentinel (it may never reach `RunHistory` — a rolled-back
+    /// step is rewound away, which is exactly why it is captured here);
+    /// `detail` carries reason-specific context (restore point, sentinel
+    /// ratios, LR scale). Returns the dump path, or `None` when this step
+    /// already has a dump.
+    pub fn incident(
+        &mut self,
+        step: usize,
+        reason: &str,
+        trigger: &StepStats,
+        detail: Vec<(&str, Json)>,
+        history: &RunHistory,
+        obs: &Obs,
+    ) -> Result<Option<PathBuf>> {
+        if !self.dumped.insert(step) {
+            return Ok(None);
+        }
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating incident dir {}", self.dir.display()))?;
+        let tail_start = history.steps.len().saturating_sub(self.window);
+        let steps: Vec<Json> = history.steps[tail_start..].iter().map(record_json).collect();
+        let window = json::obj(vec![
+            ("from", json::num(history.steps.get(tail_start).map(|r| r.step).unwrap_or(step) as f64)),
+            ("to", json::num(step as f64)),
+        ]);
+        let events: Vec<Json> = obs
+            .recorder()
+            .map(|r| {
+                let all = r.snapshot();
+                let start = all.len().saturating_sub(self.max_events);
+                all[start..].iter().map(|e| e.to_json()).collect()
+            })
+            .unwrap_or_default();
+        let doc = json::obj(vec![
+            ("run", json::s(&self.run)),
+            ("step", json::num(step as f64)),
+            ("reason", json::s(reason)),
+            ("trigger", stats_json(trigger)),
+            ("detail", json::obj(detail)),
+            ("window", window),
+            ("steps", Json::Arr(steps)),
+            ("events", Json::Arr(events)),
+        ]);
+        let path = self.dir.join(format!("{step}.json"));
+        std::fs::write(&path, doc.to_string())
+            .with_context(|| format!("writing incident {}", path.display()))?;
+        crate::info!("flight recorder: {} incident at step {} -> {}", reason, step, path.display());
+        Ok(Some(path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::metrics::StepRecord;
+
+    fn history(n: usize) -> RunHistory {
+        let mut h = RunHistory::new("t");
+        for step in 0..n {
+            h.record(StepRecord {
+                step,
+                seqlen: 32,
+                bsz: 4,
+                lr: 1e-3,
+                tokens_after: ((step + 1) * 128) as u64,
+                stats: StepStats {
+                    loss: 5.0 - 0.01 * step as f32,
+                    grad_l2: 1.0,
+                    var_l1: 1.0,
+                    var_max: 0.1,
+                    mom_l1: 1.0,
+                    clip_coef: 1.0,
+                },
+                sim_seconds: 1.0,
+            });
+        }
+        h
+    }
+
+    fn trigger() -> StepStats {
+        StepStats { loss: f32::NAN, grad_l2: 9.0, var_l1: 9.0, var_max: 9.0, mom_l1: 9.0, clip_coef: 0.1 }
+    }
+
+    #[test]
+    fn dump_contains_window_and_dedupes() {
+        let dir = std::env::temp_dir().join(format!("slw_obs_flight_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut fr = FlightRecorder::new(&dir, "demo");
+        let h = history(80);
+        let obs = Obs::off();
+        let detail = vec![("restored_step", json::num(70.0))];
+        let path = fr.incident(80, "rollback", &trigger(), detail, &h, &obs).unwrap().unwrap();
+        // second incident at the same step: no duplicate dump
+        assert!(fr.incident(80, "rollback", &trigger(), vec![], &h, &obs).unwrap().is_none());
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 1);
+
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("run").unwrap().str().unwrap(), "demo");
+        assert_eq!(doc.get("step").unwrap().usize().unwrap(), 80);
+        assert_eq!(doc.get("reason").unwrap().str().unwrap(), "rollback");
+        assert!(json::get_nf(doc.get("trigger").unwrap().get("loss").unwrap()).unwrap().is_nan());
+        assert_eq!(doc.get("detail").unwrap().get("restored_step").unwrap().usize().unwrap(), 70);
+        // 50-record window ending at the most recent recorded step
+        let steps = doc.get("steps").unwrap().arr().unwrap();
+        assert_eq!(steps.len(), 50);
+        assert_eq!(steps[0].get("step").unwrap().usize().unwrap(), 30);
+        assert_eq!(steps[49].get("step").unwrap().usize().unwrap(), 79);
+        assert_eq!(doc.get("window").unwrap().get("to").unwrap().usize().unwrap(), 80);
+        // no recorder attached: events present but empty
+        assert!(doc.get("events").unwrap().arr().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dump_includes_ring_events_when_recording() {
+        let dir = std::env::temp_dir().join(format!("slw_obs_flight_ev_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let rec = crate::obs::Recorder::new(1024);
+        let obs = Obs::new(rec);
+        for i in 0..10 {
+            obs.instant("step", i);
+        }
+        let mut fr = FlightRecorder::new(&dir, "demo");
+        let h = history(10);
+        let path = fr.incident(10, "divergence", &trigger(), vec![], &h, &obs).unwrap().unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.get("events").unwrap().arr().unwrap();
+        assert_eq!(events.len(), 10);
+        assert_eq!(events[0].get("name").unwrap().str().unwrap(), "step");
+        assert_eq!(events[0].get("ph").unwrap().str().unwrap(), "i");
+        // short history: the window is everything recorded
+        assert_eq!(doc.get("steps").unwrap().arr().unwrap().len(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,193 @@
+//! Per-step JSONL metrics stream.
+//!
+//! One flat JSON object per recorded training step, written next to the run
+//! results (`<run>.metrics.jsonl`). Rows carry the `StepRecord` fields, the
+//! engine's cumulative host-transfer counters, the prefetcher's cumulative
+//! stats, the sentinel verdict, and the controller's LR scale — enough to
+//! replot the paper's §3 forensics without re-running. Rolled-back steps
+//! never reach `RunHistory` and therefore never appear here; they live in
+//! the flight recorder's incident dumps instead.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::pipeline::prefetch::PrefetchStats;
+use crate::runtime::StepStats;
+use crate::train::metrics::StepRecord;
+use crate::util::json::{self, Json};
+
+/// Buffered line-per-row JSONL writer.
+pub struct MetricsWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+    n: usize,
+}
+
+impl MetricsWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let file = File::create(&path)
+            .with_context(|| format!("creating metrics file {}", path.display()))?;
+        Ok(MetricsWriter { out: BufWriter::new(file), path, n: 0 })
+    }
+
+    pub fn write_row(&mut self, row: &Json) -> Result<()> {
+        writeln!(self.out, "{}", row.to_string())
+            .with_context(|| format!("writing {}", self.path.display()))?;
+        self.n += 1;
+        Ok(())
+    }
+
+    pub fn finish(&mut self) -> Result<()> {
+        self.out.flush().with_context(|| format!("flushing {}", self.path.display()))
+    }
+
+    pub fn lines(&self) -> usize {
+        self.n
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// The six engine stats as a JSON object (`num_nf`: NaN/inf survive encoding).
+pub fn stats_json(s: &StepStats) -> Json {
+    json::obj(vec![
+        ("loss", json::num_nf(s.loss as f64)),
+        ("grad_l2", json::num_nf(s.grad_l2 as f64)),
+        ("var_l1", json::num_nf(s.var_l1 as f64)),
+        ("var_max", json::num_nf(s.var_max as f64)),
+        ("mom_l1", json::num_nf(s.mom_l1 as f64)),
+        ("clip_coef", json::num_nf(s.clip_coef as f64)),
+    ])
+}
+
+/// A `StepRecord` as a JSON object (used by incident dumps).
+pub fn record_json(r: &StepRecord) -> Json {
+    json::obj(vec![
+        ("step", json::num(r.step as f64)),
+        ("seqlen", json::num(r.seqlen as f64)),
+        ("bsz", json::num(r.bsz as f64)),
+        ("lr", json::num(r.lr)),
+        ("tokens", json::num(r.tokens_after as f64)),
+        ("stats", stats_json(&r.stats)),
+        ("sim_s", json::num(r.sim_seconds)),
+    ])
+}
+
+/// One flat metrics row for a recorded step.
+pub fn step_row(
+    rec: &StepRecord,
+    transfers: usize,
+    bytes: u64,
+    pf: &PrefetchStats,
+    verdict: Option<&str>,
+    lr_scale: f64,
+) -> Json {
+    json::obj(vec![
+        ("step", json::num(rec.step as f64)),
+        ("seqlen", json::num(rec.seqlen as f64)),
+        ("bsz", json::num(rec.bsz as f64)),
+        ("lr", json::num(rec.lr)),
+        ("tokens", json::num(rec.tokens_after as f64)),
+        ("loss", json::num_nf(rec.stats.loss as f64)),
+        ("grad_l2", json::num_nf(rec.stats.grad_l2 as f64)),
+        ("var_l1", json::num_nf(rec.stats.var_l1 as f64)),
+        ("var_max", json::num_nf(rec.stats.var_max as f64)),
+        ("mom_l1", json::num_nf(rec.stats.mom_l1 as f64)),
+        ("clip_coef", json::num_nf(rec.stats.clip_coef as f64)),
+        ("sim_s", json::num(rec.sim_seconds)),
+        ("host_transfers", json::num(transfers as f64)),
+        ("host_bytes", json::num(bytes as f64)),
+        ("pf_served", json::num(pf.served as f64)),
+        ("pf_hits", json::num(pf.hits as f64)),
+        ("pf_stale", json::num(pf.stale_dropped as f64)),
+        ("pf_replans", json::num(pf.republished as f64)),
+        ("lr_scale", json::num(lr_scale)),
+        ("verdict", verdict.map(json::s).unwrap_or(Json::Null)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record() -> StepRecord {
+        StepRecord {
+            step: 3,
+            seqlen: 64,
+            bsz: 8,
+            lr: 1e-3,
+            tokens_after: 2048,
+            stats: StepStats {
+                loss: 4.5,
+                grad_l2: 1.2,
+                var_l1: 10.0,
+                var_max: f32::NAN,
+                mom_l1: 0.5,
+                clip_coef: 1.0,
+            },
+            sim_seconds: 3.6,
+        }
+    }
+
+    #[test]
+    fn step_row_has_all_fields_and_survives_nan() {
+        let pf = PrefetchStats { n_workers: 2, served: 4, hits: 3, ..Default::default() };
+        let row = step_row(&sample_record(), 12, 4096, &pf, Some("healthy"), 0.5);
+        let text = row.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("step").unwrap().usize().unwrap(), 3);
+        assert_eq!(back.get("pf_hits").unwrap().usize().unwrap(), 3);
+        assert_eq!(back.get("host_transfers").unwrap().usize().unwrap(), 12);
+        assert_eq!(back.get("verdict").unwrap().str().unwrap(), "healthy");
+        assert_eq!(back.get("lr_scale").unwrap().num().unwrap(), 0.5);
+        assert!(json::get_nf(back.get("var_max").unwrap()).unwrap().is_nan());
+        // open-loop rows have a null verdict
+        let row = step_row(&sample_record(), 0, 0, &PrefetchStats::default(), None, 1.0);
+        assert_eq!(*row.get("verdict").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn record_json_nests_stats() {
+        let j = record_json(&sample_record());
+        assert_eq!(j.get("seqlen").unwrap().usize().unwrap(), 64);
+        assert_eq!(
+            j.get("stats").unwrap().get("loss").unwrap().num().unwrap(),
+            4.5
+        );
+    }
+
+    #[test]
+    fn jsonl_writer_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("slw_obs_metrics_{}", std::process::id()));
+        let path = dir.join("run.metrics.jsonl");
+        let mut w = MetricsWriter::create(&path).unwrap();
+        let pf = PrefetchStats::default();
+        for step in 0..3 {
+            let mut r = sample_record();
+            r.step = step;
+            w.write_row(&step_row(&r, 3 * (step + 1), 100, &pf, None, 1.0)).unwrap();
+        }
+        w.finish().unwrap();
+        assert_eq!(w.lines(), 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("step").unwrap().usize().unwrap(), i);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

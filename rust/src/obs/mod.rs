@@ -1,0 +1,416 @@
+//! Telemetry subsystem: structured spans, live metrics, and a divergence
+//! flight recorder.
+//!
+//! The paper's instability forensics (loss spikes vs. gradient-variance
+//! extremes, §3) are time-local: by the time `RunHistory` shows a spike the
+//! interesting context — what the prefetcher, planner cursor, and engine were
+//! doing in the preceding steps — is gone. This module records that context
+//! with near-zero cost when disabled and bounded cost when enabled:
+//!
+//! - [`Recorder`]: a bounded, mutex-sharded event ring buffer. Threads are
+//!   assigned small dense ids on first touch and hash to a shard, so the hot
+//!   path is one short critical section on an uncontended lock. When a shard
+//!   fills, the oldest events are overwritten (a dropped-event counter keeps
+//!   the loss visible); a ring overwrite can orphan one half of a Begin/End
+//!   pair, which trace viewers tolerate.
+//! - [`Obs`]: a cheap cloneable handle threaded through the trainer, engine,
+//!   prefetcher, autopilot, and coordinator. `Obs::off()` (the default) makes
+//!   every call a branch on `None` — instrumentation stays in the binary but
+//!   costs ~1 ns per site. The [`crate::span!`] macro records Begin/End pairs
+//!   via an RAII [`SpanGuard`].
+//! - Counters/gauges: `counter(name, value)` records a "C" event *and*
+//!   updates a last-value gauge registry (queue depth, prefetch hits/stale,
+//!   engine transfer totals) readable at any time.
+//! - Exporters ([`trace`], [`metrics`]): Chrome/Perfetto trace-event JSON
+//!   (`--trace out.json` on `slw train` / `slw exp`) and a per-step JSONL
+//!   metrics stream written alongside run results.
+//! - [`FlightRecorder`] ([`flight`]): on sentinel divergence and on every
+//!   rollback, dumps the last N ring events plus the surrounding
+//!   `StepRecord` window to `results/incidents/<run>/<step>.json` so each
+//!   instability is a self-contained artifact.
+//!
+//! Tracing only *observes* — no control-flow decision reads recorded data —
+//! so trajectories are bit-identical with tracing on or off. Observability
+//! settings live on [`ObsSink`] / `Trainer`, never in `RunConfig`, so the
+//! coordinator's persistent cache keys are unaffected.
+
+pub mod flight;
+pub mod metrics;
+pub mod trace;
+
+pub use flight::FlightRecorder;
+pub use metrics::MetricsWriter;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+const N_SHARDS: usize = 8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Begin,
+    End,
+    Instant,
+    Counter,
+}
+
+impl EventKind {
+    /// Chrome trace-event phase letter.
+    pub fn phase(self) -> &'static str {
+        match self {
+            EventKind::Begin => "B",
+            EventKind::End => "E",
+            EventKind::Instant => "i",
+            EventKind::Counter => "C",
+        }
+    }
+}
+
+/// One ring-buffer entry. `arg` is a span/instant step number (or -1 when
+/// absent) or a counter value; `t_ns` is nanoseconds since the recorder was
+/// created (monotonic).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub t_ns: u64,
+    pub tid: u32,
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub arg: i64,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("t_ns", json::num(self.t_ns as f64)),
+            ("tid", json::num(self.tid as f64)),
+            ("ph", json::s(self.kind.phase())),
+            ("name", json::s(self.name)),
+            ("arg", json::num(self.arg as f64)),
+        ])
+    }
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small dense id for the current thread, assigned on first touch.
+pub fn current_tid() -> u32 {
+    TID.with(|t| *t)
+}
+
+struct Shard {
+    cap: usize,
+    buf: Vec<Event>,
+    head: usize,
+    dropped: u64,
+}
+
+impl Shard {
+    fn new(cap: usize) -> Self {
+        Shard { cap, buf: Vec::with_capacity(cap), head: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest-first (the ring's logical order).
+    fn in_order(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+/// Bounded, mutex-sharded event ring plus a last-value gauge registry.
+pub struct Recorder {
+    enabled: AtomicBool,
+    t0: Instant,
+    shards: Vec<Mutex<Shard>>,
+    gauges: Mutex<BTreeMap<&'static str, i64>>,
+}
+
+impl Recorder {
+    /// `capacity` is the total ring size across shards.
+    pub fn new(capacity: usize) -> Arc<Self> {
+        let per_shard = (capacity / N_SHARDS).max(16);
+        Arc::new(Recorder {
+            enabled: AtomicBool::new(true),
+            t0: Instant::now(),
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::new(per_shard))).collect(),
+            gauges: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    fn push(&self, kind: EventKind, name: &'static str, arg: i64) {
+        let tid = current_tid();
+        let ev = Event { t_ns: self.t0.elapsed().as_nanos() as u64, tid, kind, name, arg };
+        let shard = &self.shards[tid as usize % N_SHARDS];
+        shard.lock().unwrap_or_else(|p| p.into_inner()).push(ev);
+    }
+
+    pub fn begin(&self, name: &'static str, arg: i64) {
+        if self.enabled() {
+            self.push(EventKind::Begin, name, arg);
+        }
+    }
+
+    pub fn end(&self, name: &'static str, arg: i64) {
+        if self.enabled() {
+            self.push(EventKind::End, name, arg);
+        }
+    }
+
+    pub fn instant(&self, name: &'static str, arg: i64) {
+        if self.enabled() {
+            self.push(EventKind::Instant, name, arg);
+        }
+    }
+
+    /// Record a counter sample and update the last-value gauge registry.
+    pub fn counter(&self, name: &'static str, value: i64) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(EventKind::Counter, name, value);
+        self.gauges.lock().unwrap_or_else(|p| p.into_inner()).insert(name, value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.lock().unwrap_or_else(|p| p.into_inner()).get(name).copied()
+    }
+
+    pub fn gauges(&self) -> BTreeMap<&'static str, i64> {
+        self.gauges.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// All retained events, globally time-ordered. The sort is stable and
+    /// per-shard order is insertion order, so same-timestamp events from one
+    /// thread keep their Begin-before-End ordering.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap_or_else(|p| p.into_inner()).in_order());
+        }
+        out.sort_by_key(|e| e.t_ns);
+        out
+    }
+
+    /// Total events overwritten by ring wraparound.
+    pub fn dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).dropped).sum()
+    }
+}
+
+/// Cheap cloneable handle. `Obs::off()` (the `Default`) is a `None` that makes
+/// every instrumentation site a single branch.
+#[derive(Clone, Default)]
+pub struct Obs(Option<Arc<Recorder>>);
+
+impl Obs {
+    pub fn off() -> Self {
+        Obs(None)
+    }
+
+    pub fn new(rec: Arc<Recorder>) -> Self {
+        Obs(Some(rec))
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.0.as_ref().is_some_and(|r| r.enabled())
+    }
+
+    pub fn recorder(&self) -> Option<&Arc<Recorder>> {
+        self.0.as_ref()
+    }
+
+    #[inline]
+    pub fn begin(&self, name: &'static str, arg: i64) {
+        if let Some(r) = &self.0 {
+            r.begin(name, arg);
+        }
+    }
+
+    #[inline]
+    pub fn end(&self, name: &'static str, arg: i64) {
+        if let Some(r) = &self.0 {
+            r.end(name, arg);
+        }
+    }
+
+    #[inline]
+    pub fn instant(&self, name: &'static str, arg: i64) {
+        if let Some(r) = &self.0 {
+            r.instant(name, arg);
+        }
+    }
+
+    #[inline]
+    pub fn counter(&self, name: &'static str, value: i64) {
+        if let Some(r) = &self.0 {
+            r.counter(name, value);
+        }
+    }
+
+    /// Begin a span; the returned guard records the End on drop.
+    pub fn span(&self, name: &'static str, arg: i64) -> SpanGuard<'_> {
+        self.begin(name, arg);
+        SpanGuard { obs: self, name, arg }
+    }
+}
+
+/// RAII guard for a Begin/End span pair.
+#[must_use]
+pub struct SpanGuard<'a> {
+    obs: &'a Obs,
+    name: &'static str,
+    arg: i64,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.obs.end(self.name, self.arg);
+    }
+}
+
+/// `span!(obs, "execute", step)` — Begin now, End when the guard drops.
+/// Bind it (`let _s = span!(..)`) so the span covers the intended scope.
+#[macro_export]
+macro_rules! span {
+    ($obs:expr, $name:expr) => {
+        $obs.span($name, -1i64)
+    };
+    ($obs:expr, $name:expr, $arg:expr) => {
+        $obs.span($name, ($arg) as i64)
+    };
+}
+
+/// Where a trainer should emit telemetry: the event ring, an optional
+/// per-step JSONL metrics file, and an optional incident-dump root. Lives
+/// outside `RunConfig` so coordinator cache keys are unaffected.
+#[derive(Clone, Default)]
+pub struct ObsSink {
+    pub obs: Obs,
+    pub metrics_path: Option<PathBuf>,
+    pub incident_root: Option<PathBuf>,
+    /// Also dump incidents on the Healthy->Warning edge (noisy; off by default).
+    pub dump_warnings: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let rec = Recorder::new(32); // 4 per shard min-clamped to 16
+        for i in 0..1000 {
+            rec.instant("tick", i);
+        }
+        let events = rec.snapshot();
+        assert!(events.len() <= 16 * N_SHARDS);
+        assert!(rec.dropped() > 0);
+        // Oldest-first within the surviving window.
+        let args: Vec<i64> = events.iter().map(|e| e.arg).collect();
+        let mut sorted = args.clone();
+        sorted.sort_unstable();
+        assert_eq!(args, sorted);
+        assert_eq!(*args.last().unwrap(), 999);
+    }
+
+    #[test]
+    fn span_records_begin_then_end() {
+        let rec = Recorder::new(64);
+        let obs = Obs::new(rec.clone());
+        {
+            let _s = crate::span!(obs, "work", 7usize);
+            obs.instant("inside", 7);
+        }
+        let events = rec.snapshot();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].kind, EventKind::Begin);
+        assert_eq!(events[0].name, "work");
+        assert_eq!(events[0].arg, 7);
+        assert_eq!(events[1].kind, EventKind::Instant);
+        assert_eq!(events[2].kind, EventKind::End);
+        assert!(events[0].t_ns <= events[2].t_ns);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Recorder::new(64);
+        rec.set_enabled(false);
+        let obs = Obs::new(rec.clone());
+        let _s = crate::span!(obs, "work");
+        obs.counter("depth", 3);
+        assert!(!obs.is_on());
+        assert!(rec.snapshot().is_empty());
+        assert_eq!(rec.gauge("depth"), None);
+    }
+
+    #[test]
+    fn off_handle_is_inert() {
+        let obs = Obs::off();
+        assert!(!obs.is_on());
+        let _s = crate::span!(obs, "work", 1usize);
+        obs.instant("x", 0);
+        obs.counter("y", 1);
+        assert!(obs.recorder().is_none());
+    }
+
+    #[test]
+    fn gauges_keep_last_value() {
+        let rec = Recorder::new(64);
+        rec.counter("queue_depth", 4);
+        rec.counter("queue_depth", 2);
+        rec.counter("hits", 10);
+        assert_eq!(rec.gauge("queue_depth"), Some(2));
+        let all = rec.gauges();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all["hits"], 10);
+    }
+
+    #[test]
+    fn threads_get_distinct_tids() {
+        let rec = Recorder::new(256);
+        let obs = Obs::new(rec.clone());
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let o = obs.clone();
+            handles.push(std::thread::spawn(move || {
+                o.instant("hello", i);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        obs.instant("main", -1);
+        let mut tids: Vec<u32> = rec.snapshot().iter().map(|e| e.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), 5);
+    }
+}

@@ -1,0 +1,118 @@
+//! Chrome/Perfetto trace-event exporter.
+//!
+//! Emits the legacy "JSON Array Format" that `chrome://tracing`, Perfetto,
+//! and speedscope all read: `{"traceEvents": [...], "displayTimeUnit": "ms"}`
+//! with one row per ring event. Timestamps are microseconds (fractional µs
+//! are allowed by the format and preserve our ns resolution).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::{Event, EventKind};
+
+/// Convert a recorder snapshot into a Chrome trace-event document.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut pairs = vec![
+                ("name", json::s(e.name)),
+                ("ph", json::s(e.kind.phase())),
+                ("ts", json::num(e.t_ns as f64 / 1000.0)),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(e.tid as f64)),
+            ];
+            match e.kind {
+                EventKind::Counter => {
+                    pairs.push(("args", json::obj(vec![("value", json::num(e.arg as f64))])));
+                }
+                EventKind::Instant => {
+                    // Thread-scoped instant marker.
+                    pairs.push(("s", json::s("t")));
+                    if e.arg >= 0 {
+                        pairs.push(("args", json::obj(vec![("step", json::num(e.arg as f64))])));
+                    }
+                }
+                EventKind::Begin | EventKind::End => {
+                    if e.arg >= 0 {
+                        pairs.push(("args", json::obj(vec![("step", json::num(e.arg as f64))])));
+                    }
+                }
+            }
+            json::obj(pairs)
+        })
+        .collect();
+    json::obj(vec![
+        ("traceEvents", Json::Arr(rows)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Write a recorder snapshot as Chrome trace JSON at `path`.
+pub fn export(events: &[Event], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, chrome_trace(events).to_string())
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Obs, Recorder};
+
+    #[test]
+    fn trace_rows_carry_phase_ts_and_args() {
+        let rec = Recorder::new(64);
+        let obs = Obs::new(rec.clone());
+        {
+            let _s = crate::span!(obs, "execute", 12usize);
+        }
+        obs.instant("rollback", 12);
+        obs.counter("queue_depth", 5);
+        let doc = chrome_trace(&rec.snapshot());
+        let rows = doc.get("traceEvents").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(doc.get("displayTimeUnit").unwrap().str().unwrap(), "ms");
+
+        assert_eq!(rows[0].get("ph").unwrap().str().unwrap(), "B");
+        assert_eq!(rows[0].get("name").unwrap().str().unwrap(), "execute");
+        assert_eq!(
+            rows[0].get("args").unwrap().get("step").unwrap().usize().unwrap(),
+            12
+        );
+        assert_eq!(rows[1].get("ph").unwrap().str().unwrap(), "E");
+        assert!(rows[1].get("ts").unwrap().num().unwrap() >= rows[0].get("ts").unwrap().num().unwrap());
+
+        assert_eq!(rows[2].get("ph").unwrap().str().unwrap(), "i");
+        assert_eq!(rows[2].get("s").unwrap().str().unwrap(), "t");
+
+        assert_eq!(rows[3].get("ph").unwrap().str().unwrap(), "C");
+        assert_eq!(
+            rows[3].get("args").unwrap().get("value").unwrap().num().unwrap(),
+            5.0
+        );
+    }
+
+    #[test]
+    fn export_writes_parseable_json() {
+        let rec = Recorder::new(64);
+        let obs = Obs::new(rec.clone());
+        let _s = crate::span!(obs, "step", 0usize);
+        drop(_s);
+        let dir = std::env::temp_dir().join(format!("slw_obs_trace_{}", std::process::id()));
+        let path = dir.join("out.json");
+        export(&rec.snapshot(), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("traceEvents").unwrap().arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -31,6 +31,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Result};
 
 use crate::data::dataset::{SequenceIndex, TokenStore};
+use crate::obs::Obs;
 use crate::pipeline::batcher::{Assembler, Batch, TruncationMode};
 use crate::pipeline::plan::StepSpec;
 
@@ -106,6 +107,7 @@ pub struct Prefetcher {
     generation: u64,
     next_idx: usize,
     stats: PrefetchStats,
+    obs: Obs,
 }
 
 impl Prefetcher {
@@ -121,6 +123,24 @@ impl Prefetcher {
         depth: usize,
         seed: u64,
         truncation: TruncationMode,
+    ) -> Result<Self> {
+        Self::spawn_obs(store, index, tail, n_workers, depth, seed, truncation, Obs::off())
+    }
+
+    /// [`Prefetcher::spawn`] with a telemetry handle: workers record
+    /// `assemble` spans, the consumer records re-plan instants and
+    /// stale-drop / pending-depth counters. Tracing only observes — the
+    /// batch stream is bit-identical with `Obs::off()`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_obs(
+        store: Arc<TokenStore>,
+        index: SequenceIndex,
+        tail: Vec<StepSpec>,
+        n_workers: usize,
+        depth: usize,
+        seed: u64,
+        truncation: TruncationMode,
+        obs: Obs,
     ) -> Result<Self> {
         let n_workers = if truncation == TruncationMode::Recycle && n_workers > 0 {
             crate::info!(
@@ -152,8 +172,9 @@ impl Prefetcher {
                 let tx = tx.clone();
                 let store = store.clone();
                 let index = index.clone();
+                let obs = obs.clone();
                 handles.push(std::thread::spawn(move || {
-                    worker_loop(shared, tx, store, index, seed);
+                    worker_loop(shared, tx, store, index, seed, obs);
                 }));
             }
             Mode::Threaded(Threaded { shared, rx, pending: BTreeMap::new(), handles })
@@ -165,6 +186,7 @@ impl Prefetcher {
             generation: 0,
             next_idx: 0,
             stats: PrefetchStats { n_workers, ..Default::default() },
+            obs,
         })
     }
 
@@ -176,6 +198,7 @@ impl Prefetcher {
     pub fn publish(&mut self, tail: Vec<StepSpec>) {
         self.generation += 1;
         self.stats.republished += 1;
+        self.obs.instant("replan", self.generation as i64);
         self.tail = Arc::new(tail);
         self.next_idx = 0;
         match &mut self.mode {
@@ -205,6 +228,7 @@ impl Prefetcher {
                         Err(_) => break,
                     }
                 }
+                self.obs.counter("stale_dropped", self.stats.stale_dropped as i64);
             }
         }
     }
@@ -247,7 +271,7 @@ impl Prefetcher {
             }
             Mode::Threaded(t) => {
                 let mut waited = false;
-                loop {
+                let batch = loop {
                     if let Some(b) = t.pending.remove(&spec.step) {
                         if !waited {
                             self.stats.hits += 1;
@@ -274,6 +298,9 @@ impl Prefetcher {
                             );
                         }
                     }
+                    if !waited {
+                        self.obs.instant("prefetch_miss", spec.step as i64);
+                    }
                     waited = true;
                     match t.rx.recv() {
                         Ok((g, s, b)) => {
@@ -289,7 +316,9 @@ impl Prefetcher {
                             self.generation
                         ),
                     }
-                }
+                };
+                self.obs.counter("pending_batches", t.pending.len() as i64);
+                batch
             }
         };
         self.stats.served += 1;
@@ -338,6 +367,7 @@ fn worker_loop(
     store: Arc<TokenStore>,
     index: SequenceIndex,
     seed: u64,
+    obs: Obs,
 ) {
     // workers only serve Drop-mode plans (Recycle runs inline), so assembly
     // is spec-pure and this per-worker assembler carries no schedule state
@@ -357,7 +387,10 @@ fn worker_loop(
                 q = shared.work_ready.wait(q).unwrap();
             }
         };
-        let batch = asm.assemble(&spec, &store);
+        let batch = {
+            let _s = crate::span!(obs, "assemble", spec.step);
+            asm.assemble(&spec, &store)
+        };
         if tx.send((generation, spec.step, batch)).is_err() {
             return; // consumer dropped
         }

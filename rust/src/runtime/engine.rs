@@ -49,6 +49,7 @@ use xla::{
 
 use super::manifest::{family_sets, Manifest};
 use super::state::{HostState, TrainState};
+use crate::obs::Obs;
 
 /// Bytes of the packed per-step knob upload (`f32[3]`: step, lr, clip).
 pub const KNOB_BYTES: u64 = 3 * 4;
@@ -116,6 +117,8 @@ pub struct Engine {
     transfers: std::cell::Cell<usize>,
     /// bytes crossed on the per-step path
     bytes: std::cell::Cell<u64>,
+    /// telemetry handle (off by default; spans for upload/execute/readback)
+    obs: Obs,
 }
 
 impl Engine {
@@ -162,7 +165,15 @@ impl Engine {
             compiles: std::cell::Cell::new(0),
             transfers: std::cell::Cell::new(0),
             bytes: std::cell::Cell::new(0),
+            obs: Obs::off(),
         })
+    }
+
+    /// Attach a telemetry handle: step phases (upload/execute/readback)
+    /// record spans through it. Tracing only observes — results are
+    /// bit-identical with the default `Obs::off()`.
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
     }
 
     /// The engine's PJRT client. Device buffers are client-bound: a
@@ -282,8 +293,13 @@ impl Engine {
             bail!("no train executable for batch {bsz} seqlen {seqlen} \
                    (lowered buckets: {:?})", self.train.keys().collect::<Vec<_>>());
         }
-        let knobs = self.knob_buffer((state.step + 1) as f32, lr as f32, clip_norm as f32)?;
-        let toks = self.token_buffer(tokens, bsz, seqlen + 1)?;
+        let (knobs, toks) = {
+            let _s = crate::span!(self.obs, "upload", state.step);
+            (
+                self.knob_buffer((state.step + 1) as f32, lr as f32, clip_norm as f32)?,
+                self.token_buffer(tokens, bsz, seqlen + 1)?,
+            )
+        };
 
         let lazy = self.train.get_mut(&key).expect("presence checked above");
         if lazy.exe.is_none() {
@@ -293,14 +309,17 @@ impl Engine {
 
         // buffer-argument execution: state goes in (and comes back) as
         // device buffers; the only readback below is the f32[6] stats tensor
-        let mut results = exe.execute_b::<&PjRtBuffer>(&[
-            &state.params,
-            &state.m,
-            &state.v,
-            &state.decay_mask,
-            &knobs,
-            &toks,
-        ])?;
+        let mut results = {
+            let _s = crate::span!(self.obs, "execute", state.step);
+            exe.execute_b::<&PjRtBuffer>(&[
+                &state.params,
+                &state.m,
+                &state.v,
+                &state.decay_mask,
+                &knobs,
+                &toks,
+            ])?
+        };
         if results.is_empty() {
             bail!("train step produced no per-device results");
         }
@@ -312,7 +331,10 @@ impl Engine {
                 outs.len()
             );
         }
-        let s = outs[3].to_literal_sync()?.to_vec::<f32>()?;
+        let s = {
+            let _s = crate::span!(self.obs, "readback", state.step);
+            outs[3].to_literal_sync()?.to_vec::<f32>()?
+        };
         self.count(STATS_BYTES);
         if s.len() != 6 {
             bail!("stats tensor has {} elements, expected 6", s.len());
@@ -342,6 +364,7 @@ impl Engine {
         state: &TrainState,
         tokens: &[i32],
     ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let _span = crate::span!(self.obs, "eval_step", state.step);
         let man = &self.manifests[0];
         let b = self.eval_batch;
         let s = man.model.max_seqlen;

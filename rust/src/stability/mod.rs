@@ -35,6 +35,7 @@ pub mod sentinel;
 
 use anyhow::{bail, Result};
 
+use crate::obs::Obs;
 use crate::runtime::{StepStats, TrainState};
 
 pub use controller::Controller;
@@ -169,6 +170,8 @@ pub struct Autopilot {
     trace: StabilityTrace,
     steps_since_snapshot: usize,
     snapshots_since_rollback: usize,
+    obs: Obs,
+    last_obs: Option<Observation>,
 }
 
 impl Autopilot {
@@ -186,12 +189,25 @@ impl Autopilot {
             trace: StabilityTrace::default(),
             steps_since_snapshot: 0,
             snapshots_since_rollback: 0,
+            obs: Obs::off(),
+            last_obs: None,
         }
+    }
+
+    /// Attach a telemetry handle (snapshot/rollback spans, warning markers).
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
+    }
+
+    /// The sentinel's most recent reading (None before the first observe).
+    pub fn last_observation(&self) -> Option<Observation> {
+        self.last_obs
     }
 
     /// Snapshot the pristine init state so a rollback always has a floor,
     /// even when the run diverges before the first periodic snapshot.
     pub fn bootstrap(&mut self, state: &TrainState) -> Result<()> {
+        let _s = crate::span!(self.obs, "snapshot");
         self.ring.snapshot(state)?;
         self.snapshots_since_rollback = 1;
         Ok(())
@@ -216,8 +232,9 @@ impl Autopilot {
         stats: &StepStats,
         state: &mut TrainState,
     ) -> Result<Outcome> {
-        let obs = self.sentinel.observe(stats);
-        match obs.verdict {
+        let reading = self.sentinel.observe(stats);
+        self.last_obs = Some(reading);
+        match reading.verdict {
             Verdict::Healthy => {
                 self.trace.n_healthy += 1;
                 let patch = self.controller.on_verdict(Verdict::Healthy);
@@ -229,6 +246,7 @@ impl Autopilot {
                 }
                 self.steps_since_snapshot += 1;
                 if self.steps_since_snapshot >= self.policy.snapshot_every {
+                    let _s = crate::span!(self.obs, "snapshot", step);
                     self.ring.snapshot(state)?;
                     self.steps_since_snapshot = 0;
                     self.snapshots_since_rollback += 1;
@@ -243,6 +261,7 @@ impl Autopilot {
             }
             Verdict::Warning => {
                 self.trace.n_warning += 1;
+                self.obs.instant("warning", step as i64);
                 self.controller.on_verdict(Verdict::Warning);
                 Ok(Outcome::Proceed)
             }
@@ -262,6 +281,7 @@ impl Autopilot {
                         // one explicit sync-point upload through the shared
                         // TrainState::upload path — the only time a rollback
                         // moves O(n_params) bytes to the device
+                        let _s = crate::span!(self.obs, "rollback_restore", step);
                         state.upload(snap)?;
                         (snap.step, snap.tokens)
                     }
@@ -278,8 +298,8 @@ impl Autopilot {
                     at_step: step,
                     restored_step: to_step,
                     wasted_steps: step.saturating_sub(to_step as usize) + 1,
-                    loss_ratio: obs.loss_ratio,
-                    var_ratio: obs.var_ratio,
+                    loss_ratio: reading.loss_ratio,
+                    var_ratio: reading.var_ratio,
                     lr_scale_after: lr_scale,
                     reentry_seqlen: reentry,
                 });

@@ -20,6 +20,17 @@ pub enum Verdict {
     Diverged,
 }
 
+impl Verdict {
+    /// Stable lowercase name (metrics rows, incident dumps).
+    pub fn name(self) -> &'static str {
+        match self {
+            Verdict::Healthy => "healthy",
+            Verdict::Warning => "warning",
+            Verdict::Diverged => "diverged",
+        }
+    }
+}
+
 /// One sentinel reading: the verdict plus the ratios that produced it
 /// (recorded in the [`super::StabilityTrace`] on rollback).
 #[derive(Clone, Copy, Debug)]

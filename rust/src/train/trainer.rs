@@ -26,6 +26,7 @@ use crate::data::corpus::{Corpus, InductionCorpus, MarkovCorpus, MixtureCorpus};
 use crate::data::dataset::{SequenceIndex, TokenStore};
 use crate::data::tokenizer::Tokenizer;
 use crate::eval::perplexity::validation_ppl;
+use crate::obs::{metrics as obs_metrics, FlightRecorder, MetricsWriter, ObsSink};
 use crate::pipeline::pacing::{BucketedPacing, Pacing};
 use crate::pipeline::plan::{Budget, PlanCursor, Planner, StepSpec};
 use crate::pipeline::prefetch::{PrefetchStats, Prefetcher};
@@ -33,8 +34,9 @@ use crate::pipeline::bsz_warmup::BszWarmup;
 use crate::runtime::{Engine, TrainState};
 use crate::schedule::lr::{Horizon, LrSchedule};
 use crate::sim::cluster::{ClusterConfig, ClusterSim, ModelDims};
-use crate::stability::{Autopilot, Outcome};
+use crate::stability::{Autopilot, Outcome, Verdict};
 use crate::train::metrics::{EvalRecord, RunHistory, StepRecord};
+use crate::util::json;
 
 /// Stop after this many consecutive non-finite losses (the paper's
 /// "unrecoverable divergence ... cannot continue to train due to NaN").
@@ -103,6 +105,8 @@ pub struct Trainer {
     pub store: Arc<TokenStore>,
     pub index: SequenceIndex,
     sim: ClusterSim,
+    /// telemetry destinations (off by default; see [`Trainer::set_obs_sink`])
+    sink: ObsSink,
 }
 
 impl Trainer {
@@ -171,9 +175,21 @@ impl Trainer {
             Ok((store, index, ClusterSim::new(cluster, dims)))
         })();
         match parts {
-            Ok((store, index, sim)) => Ok(Self { engine, config, store, index, sim }),
+            Ok((store, index, sim)) => {
+                Ok(Self { engine, config, store, index, sim, sink: ObsSink::default() })
+            }
             Err(e) => Err((engine, e)),
         }
+    }
+
+    /// Attach telemetry destinations: the shared event ring (spans from the
+    /// engine, prefetch workers, and autopilot), an optional per-step JSONL
+    /// metrics file, and an optional incident-dump root for the flight
+    /// recorder. The default sink is fully off. Tracing only observes —
+    /// trajectories are bit-identical with and without a sink.
+    pub fn set_obs_sink(&mut self, sink: ObsSink) {
+        self.engine.set_obs(sink.obs.clone());
+        self.sink = sink;
     }
 
     /// Recover the engine (and its compiled-executable cache) after a run.
@@ -264,7 +280,19 @@ impl Trainer {
                 / (self.config.batch * self.index.full_seqlen()) as u64) as usize,
         );
         let lr = self.resolve_lr(plan_len.max(2))?;
-        let mut pipe = Prefetcher::spawn(
+        let obs = self.sink.obs.clone();
+        let mut metrics = match &self.sink.metrics_path {
+            Some(path) => Some(MetricsWriter::create(path)?),
+            None => None,
+        };
+        let mut flight = self.sink.incident_root.as_ref().map(|root| {
+            FlightRecorder::new(
+                root.join(crate::util::slugify(&self.config.name)),
+                &self.config.name,
+            )
+        });
+        let mut was_warning = false;
+        let mut pipe = Prefetcher::spawn_obs(
             self.store.clone(),
             self.index.clone(),
             planner.tail_window(TAIL_WINDOW),
@@ -272,6 +300,7 @@ impl Trainer {
             self.config.prefetch_depth,
             self.config.seed,
             self.config.truncation,
+            obs.clone(),
         )?;
 
         let mut history = RunHistory::new(&self.config.name);
@@ -284,6 +313,7 @@ impl Trainer {
         let mut pilot = match &self.config.stability {
             Some(policy) => {
                 let mut p = Autopilot::new(policy.clone(), self.index.full_seqlen());
+                p.set_obs(obs.clone());
                 p.bootstrap(&state)?;
                 Some(p)
             }
@@ -297,16 +327,19 @@ impl Trainer {
             if planner.cursor().step >= max_steps {
                 break;
             }
-            let Some((spec, batch)) = pipe.next_batch().with_context(|| {
-                format!(
-                    "prefetch pipeline died at step {} — partial history: {} recorded \
-                     steps, {} tokens accumulated",
-                    planner.cursor().step,
-                    history.steps.len(),
-                    history.total_tokens()
-                )
-            })?
-            else {
+            let claimed = {
+                let _s = crate::span!(obs, "claim", planner.cursor().step);
+                pipe.next_batch().with_context(|| {
+                    format!(
+                        "prefetch pipeline died at step {} — partial history: {} recorded \
+                         steps, {} tokens accumulated",
+                        planner.cursor().step,
+                        history.steps.len(),
+                        history.total_tokens()
+                    )
+                })?
+            };
+            let Some((spec, batch)) = claimed else {
                 // window exhausted: append the next window to the same
                 // generation if the budget has more steps (an extension,
                 // not a schedule change — nothing is invalidated)
@@ -318,6 +351,7 @@ impl Trainer {
                 continue;
             };
             debug_assert_eq!(spec.step, planner.cursor().step);
+            let _step_span = obs.span("step", spec.step as i64);
             let mut lr_t = lr.lr_at(spec.step, spec.tokens_before);
             if let Some(p) = &pilot {
                 lr_t *= p.lr_scale();
@@ -331,8 +365,15 @@ impl Trainer {
                 self.config.clip_norm,
             )?;
             let mut republish = false;
+            let mut verdict_name: Option<&'static str> = None;
+            let mut lr_scale = 1.0f64;
             if let Some(p) = &mut pilot {
-                match p.observe(spec.step, &stats, &mut state)? {
+                let outcome = {
+                    let _s = crate::span!(obs, "sentinel", spec.step);
+                    p.observe(spec.step, &stats, &mut state)?
+                };
+                let reading = p.last_observation();
+                match outcome {
                     Outcome::RolledBack { to_step, to_tokens } => {
                         // the poisoned steps never happened: rewind the
                         // bookkeeping to the restored snapshot, re-plan from
@@ -346,6 +387,20 @@ impl Trainer {
                             p.override_len(),
                             p.lr_scale()
                         );
+                        obs.instant("rollback", spec.step as i64);
+                        // dump before the rewind: the trigger step and its
+                        // lead-in window are about to be erased from history
+                        if let Some(fr) = &mut flight {
+                            let mut detail = vec![
+                                ("restored_step", json::num(to_step as f64)),
+                                ("lr_scale", json::num(p.lr_scale())),
+                            ];
+                            if let Some(r) = reading {
+                                detail.push(("loss_ratio", json::num_nf(r.loss_ratio)));
+                                detail.push(("var_ratio", json::num_nf(r.var_ratio)));
+                            }
+                            fr.incident(spec.step, "rollback", &stats, detail, &history, &obs)?;
+                        }
                         let to = to_step as usize;
                         // the diverged step itself was never committed, so
                         // rolling back to it resumes from the live cursor
@@ -359,6 +414,7 @@ impl Trainer {
                         planner.set_cap(p.override_len());
                         pipe.publish(planner.tail_window(TAIL_WINDOW));
                         bad_streak = 0;
+                        was_warning = false;
                         continue;
                     }
                     Outcome::GaveUp => {
@@ -367,6 +423,9 @@ impl Trainer {
                             self.config.name,
                             spec.step
                         );
+                        if let Some(fr) = &mut flight {
+                            fr.incident(spec.step, "gave_up", &stats, vec![], &history, &obs)?;
+                        }
                         self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak);
                         break;
                     }
@@ -376,6 +435,17 @@ impl Trainer {
                     }
                     Outcome::Proceed => {}
                 }
+                verdict_name = reading.map(|r| r.verdict.name());
+                lr_scale = p.lr_scale();
+                // dump on the Healthy->Warning edge only (a warning streak
+                // is one incident, not one per step) — opt-in, it is noisy
+                let warn = reading.is_some_and(|r| r.verdict == Verdict::Warning);
+                if warn && !was_warning && self.sink.dump_warnings {
+                    if let Some(fr) = &mut flight {
+                        fr.incident(spec.step, "warning", &stats, vec![], &history, &obs)?;
+                    }
+                }
+                was_warning = warn;
             }
             // adaptive pacing feedback: only surviving finite steps feed the
             // growth heuristic (a rolled-back loss never existed)
@@ -388,10 +458,36 @@ impl Trainer {
                 // commit first: the patched tail starts after this step
                 pipe.publish(planner.tail_window(TAIL_WINDOW));
             }
-            if self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak) {
+            let stop = self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak);
+            if let Some(m) = &mut metrics {
+                let rec = history.steps.last().expect("record_step just pushed");
+                m.write_row(&obs_metrics::step_row(
+                    rec,
+                    self.engine.n_host_transfers(),
+                    self.engine.host_bytes(),
+                    &pipe.stats(),
+                    verdict_name,
+                    lr_scale,
+                ))?;
+            }
+            if obs.is_on() {
+                obs.counter("host_transfers", self.engine.n_host_transfers() as i64);
+                obs.counter("host_bytes", self.engine.host_bytes() as i64);
+                let pf = pipe.stats();
+                obs.counter("prefetch_hits", pf.hits as i64);
+                obs.counter("prefetch_stale", pf.stale_dropped as i64);
+            }
+            if stop {
+                // unrecoverable divergence: capture the terminal window
+                if let Some(fr) = &mut flight {
+                    fr.incident(spec.step, "divergence", &stats, vec![], &history, &obs)?;
+                }
                 break;
             }
             self.maybe_eval(&mut history, &state, &spec)?;
+        }
+        if let Some(m) = &mut metrics {
+            m.finish()?;
         }
         if let Some(p) = pilot {
             history.stability = Some(p.into_trace());

@@ -18,16 +18,46 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(2);
 static START: OnceLock<Instant> = OnceLock::new();
 
+/// Strict level-name parser: exactly the five documented names, nothing
+/// else. An unrecognized value returns `None` so callers can report it
+/// rather than silently falling back.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// Resolve an `SLW_LOG` value to a level. Unset → default info; a bad value
+/// → info plus the offending string so `init_from_env` can warn about it.
+fn resolve(var: Option<&str>) -> (Level, Option<String>) {
+    match var {
+        None => (Level::Info, None),
+        Some(v) => match parse_level(v) {
+            Some(lvl) => (lvl, None),
+            None => (Level::Info, Some(v.to_string())),
+        },
+    }
+}
+
 pub fn init_from_env() {
-    let lvl = match std::env::var("SLW_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    };
+    let var = std::env::var("SLW_LOG").ok();
+    let (lvl, bad) = resolve(var.as_deref());
     set_level(lvl);
     let _ = START.set(Instant::now());
+    if let Some(bad) = bad {
+        log(
+            Level::Warn,
+            format_args!(
+                "SLW_LOG='{bad}' is not a log level (error|warn|info|debug|trace); \
+                 defaulting to info"
+            ),
+        );
+    }
 }
 
 pub fn set_level(lvl: Level) {
@@ -72,12 +102,45 @@ macro_rules! debug {
 mod tests {
     use super::*;
 
+    // The one test allowed to touch the global LEVEL (cargo runs tests in
+    // parallel within one process; concurrent set_level calls would race).
     #[test]
     fn level_ordering() {
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        assert!(enabled(Level::Trace));
         set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn parse_level_accepts_exactly_the_documented_names() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        // no aliases, no case folding, no trimming — fail loudly instead
+        assert_eq!(parse_level("DEBUG"), None);
+        assert_eq!(parse_level("warning"), None);
+        assert_eq!(parse_level(" info"), None);
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level("2"), None);
+    }
+
+    #[test]
+    fn resolve_reports_bad_values_instead_of_swallowing_them() {
+        assert_eq!(resolve(None), (Level::Info, None));
+        assert_eq!(resolve(Some("debug")), (Level::Debug, None));
+        let (lvl, bad) = resolve(Some("verbose"));
+        assert_eq!(lvl, Level::Info);
+        assert_eq!(bad.as_deref(), Some("verbose"));
     }
 }

@@ -1,0 +1,192 @@
+//! End-to-end telemetry tests on the micro artifacts (real PJRT execution):
+//! a traced threaded autopilot run must produce a Chrome-viewable span trace
+//! from several threads, a per-step JSONL metrics stream, and one incident
+//! dump per distinct rollback step — while leaving the trajectory
+//! bit-identical to the untraced run. A forced (open-loop) divergence must
+//! produce exactly one incident whose event and step windows bracket the
+//! diverged step.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use slw::config::{presets, DataRecipe, RunConfig};
+use slw::obs::{trace, Obs, ObsSink, Recorder};
+use slw::train::metrics::RunHistory;
+use slw::train::trainer::Trainer;
+use slw::util::json::Json;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn micro(budget_steps: usize) -> RunConfig {
+    let mut cfg = presets::base("micro").unwrap();
+    cfg.token_budget = (budget_steps * 4 * 32) as u64;
+    cfg.data = DataRecipe::Mixture { tokens: 40_000 };
+    cfg.eval_every = 0;
+    // no LR warmup: the absurd peaks below hit from step 1
+    cfg.lr.horizon = slw::schedule::lr::Horizon::Steps { warmup: 1, total: 0 };
+    cfg
+}
+
+/// The divergent-recipe autopilot config (mirrors the trainer's recovery
+/// tests): LR 1.0 blows up fast, the sentinel rolls back, the decay ladder
+/// reaches stability, and the budget completes.
+fn divergent_cfg() -> RunConfig {
+    let mut cfg = micro(60);
+    cfg.lr.peak = 1.0;
+    cfg.lr.min_lr = 0.1;
+    cfg.stability = Some(slw::stability::StabilityPolicy {
+        warmup_steps: 3,
+        snapshot_every: 3,
+        regrow_after: 5,
+        max_rollbacks: 20,
+        ..Default::default()
+    });
+    cfg
+}
+
+/// Open-loop blow-up: no autopilot, so NaNs accumulate until the trainer's
+/// divergence patience stops the run.
+fn nan_cfg() -> RunConfig {
+    let mut cfg = micro(40);
+    cfg.lr.peak = 1000.0;
+    cfg.lr.min_lr = 100.0;
+    cfg
+}
+
+fn trajectory(h: &RunHistory) -> Vec<(usize, usize, u32)> {
+    h.steps.iter().map(|r| (r.step, r.seqlen, r.stats.loss.to_bits())).collect()
+}
+
+#[test]
+fn traced_autopilot_run_emits_trace_metrics_and_incidents() {
+    let tmp = std::env::temp_dir().join(format!("slw_obs_e2e_{}", std::process::id()));
+    std::fs::remove_dir_all(&tmp).ok();
+    let mut cfg = divergent_cfg().with_name("obs-traced");
+    cfg.n_workers = 3;
+    let rec = Recorder::new(1 << 16);
+    let mut t = Trainer::new(&root(), cfg).unwrap();
+    let metrics_path = tmp.join("obs_traced.metrics.jsonl");
+    t.set_obs_sink(ObsSink {
+        obs: Obs::new(rec.clone()),
+        metrics_path: Some(metrics_path.clone()),
+        incident_root: Some(tmp.join("incidents")),
+        dump_warnings: false,
+    });
+    let out = t.run().unwrap();
+    let h = &out.history;
+    assert!(!h.diverged(), "the autopilot must recover");
+    let st = h.stability.as_ref().expect("autopilot trace attached");
+    assert!(st.n_rollbacks() >= 1, "the divergent recipe must roll back");
+    assert!(!st.gave_up);
+
+    // one incident dump per *distinct* rollback step — a rollback storm
+    // retrying the same step must not produce duplicates
+    let dir = tmp.join("incidents").join("obs_traced");
+    let mut files: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    files.sort();
+    let distinct: BTreeSet<usize> = st.rollbacks.iter().map(|r| r.at_step).collect();
+    let mut expected: Vec<String> = distinct.iter().map(|s| format!("{s}.json")).collect();
+    expected.sort();
+    assert_eq!(files, expected, "exactly one dump per distinct rollback step");
+    let first = *distinct.iter().next().unwrap();
+    let doc =
+        Json::parse(&std::fs::read_to_string(dir.join(format!("{first}.json"))).unwrap())
+            .unwrap();
+    assert_eq!(doc.get("reason").unwrap().str().unwrap(), "rollback");
+    assert_eq!(doc.get("run").unwrap().str().unwrap(), "obs-traced");
+    assert!(doc.get("detail").unwrap().get("restored_step").is_ok());
+    assert!(!doc.get("events").unwrap().arr().unwrap().is_empty());
+
+    // spans were recorded from the training thread AND the worker threads
+    let events = rec.snapshot();
+    let tids: BTreeSet<u32> = events.iter().map(|e| e.tid).collect();
+    assert!(tids.len() >= 3, "expected spans from >= 3 threads, got {}", tids.len());
+
+    // the Chrome export round-trips: one trace event per ring event, and
+    // every instrumented phase shows up by name
+    let trace_path = tmp.join("trace.json");
+    trace::export(&events, &trace_path).unwrap();
+    let tr = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let te = tr.get("traceEvents").unwrap().arr().unwrap();
+    assert_eq!(te.len(), events.len());
+    let names: BTreeSet<&str> =
+        te.iter().map(|e| e.get("name").unwrap().str().unwrap()).collect();
+    for required in
+        ["step", "claim", "upload", "execute", "readback", "sentinel", "snapshot",
+         "assemble", "rollback", "host_transfers"]
+    {
+        assert!(names.contains(required), "trace is missing '{required}' events");
+    }
+
+    // per-step JSONL metrics: one row per committed step — the final
+    // history plus the committed-then-rewound steps (the rollback trigger
+    // itself is never committed, hence the n_rollbacks() correction)
+    let mtext = std::fs::read_to_string(&metrics_path).unwrap();
+    let lines: Vec<&str> = mtext.lines().collect();
+    assert_eq!(lines.len(), h.steps.len() + st.wasted_steps() - st.n_rollbacks());
+    let row = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(row.get("step").unwrap().usize().unwrap(), h.steps.last().unwrap().step);
+    assert!(row.get("host_transfers").unwrap().usize().unwrap() > 0);
+    assert!(row.get("host_bytes").unwrap().num().unwrap() > 0.0);
+    assert!(row.get("verdict").unwrap().str().is_ok());
+    assert!(row.get("loss").unwrap().num().unwrap().is_finite());
+
+    // telemetry observes, it never steers: an untraced run of the same
+    // config reproduces the trajectory bit for bit, rollbacks included
+    let mut plain_cfg = divergent_cfg().with_name("obs-plain");
+    plain_cfg.n_workers = 3;
+    let mut plain = Trainer::new(&root(), plain_cfg).unwrap();
+    let plain_out = plain.run().unwrap();
+    assert_eq!(trajectory(&plain_out.history), trajectory(h));
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn forced_divergence_dumps_exactly_one_incident() {
+    let tmp = std::env::temp_dir().join(format!("slw_obs_div_{}", std::process::id()));
+    std::fs::remove_dir_all(&tmp).ok();
+    let rec = Recorder::new(1 << 16);
+    let mut t = Trainer::new(&root(), nan_cfg().with_name("obs-nan")).unwrap();
+    t.set_obs_sink(ObsSink {
+        obs: Obs::new(rec.clone()),
+        metrics_path: None,
+        incident_root: Some(tmp.join("incidents")),
+        dump_warnings: false,
+    });
+    let out = t.run().unwrap();
+    let h = &out.history;
+    assert!(h.diverged(), "LR 1000 without autopilot must diverge");
+
+    let dir = tmp.join("incidents").join("obs_nan");
+    let files: Vec<PathBuf> =
+        std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    assert_eq!(files.len(), 1, "terminal divergence must dump exactly once");
+    let doc = Json::parse(&std::fs::read_to_string(&files[0]).unwrap()).unwrap();
+    assert_eq!(doc.get("reason").unwrap().str().unwrap(), "divergence");
+    let at = doc.get("step").unwrap().usize().unwrap();
+    assert_eq!(at, h.steps.last().unwrap().step, "dump lands on the stopping step");
+
+    // the step-record window brackets the diverged step (the stopping step
+    // is recorded before the dump on the divergence path)
+    let steps = doc.get("steps").unwrap().arr().unwrap();
+    assert!(!steps.is_empty());
+    assert_eq!(steps.last().unwrap().get("step").unwrap().usize().unwrap(), at);
+
+    // the ring-event window brackets it too: "step" spans at the diverged
+    // step are present, and no event is from the (never-executed) future
+    let evs = doc.get("events").unwrap().arr().unwrap();
+    assert!(!evs.is_empty());
+    let step_args: Vec<i64> = evs
+        .iter()
+        .filter(|e| e.get("name").unwrap().str().unwrap() == "step")
+        .map(|e| e.get("arg").unwrap().num().unwrap() as i64)
+        .collect();
+    assert!(step_args.contains(&(at as i64)), "event window must cover step {at}");
+    assert!(step_args.iter().all(|&s| s <= at as i64));
+    std::fs::remove_dir_all(&tmp).ok();
+}
