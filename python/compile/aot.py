@@ -101,10 +101,12 @@ def manifest(aset: ArtifactSet) -> dict:
         "full_only": aset.full_only,
         "train_artifacts": {str(s): f"train_s{s}.hlo.txt" for s in aset.seqlen_buckets},
         "eval_artifact": f"eval_s{cfg.max_seqlen}.hlo.txt",
-        # Output layout 2: untupled results; state stays device-resident on
-        # the Rust side and only the packed stats tensor is read back.
-        # Engine::load rejects layout-1 (tuple-resident) artifacts.
-        "output_layout": 2,
+        # Output layout 3: untupled results (state stays device-resident on
+        # the Rust side, only the packed stats tensor is read back — layout
+        # 2's contract) with the stats vector widened to f32[10] by the four
+        # per-layer-group update-RMS sentinel channels. Engine::load rejects
+        # older layouts.
+        "output_layout": 3,
         "train_inputs": ["params", "m", "v", "decay_mask", "knobs", "tokens"],
         "knob_fields": ["step", "lr", "clip_norm"],
         "train_outputs": ["params", "m", "v", "stats"],

@@ -190,8 +190,37 @@ def loss_fn(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 # Order of the packed per-step scalar outputs (manifest "stats_fields" —
-# mirrored by rust/src/runtime/engine.rs::StepStats).
-STATS_FIELDS = ("loss", "grad_l2", "var_l1", "var_max", "mom_l1", "clip_coef")
+# mirrored by rust/src/runtime/engine.rs::StepStats). The four urms_* channels
+# are the per-layer-group RMS of the bias-corrected Adam update ("A Theory on
+# Adam Instability" localizes blow-ups per layer group; Kosson et al. argue
+# warmup chiefly bounds early update size) — the sentinel's early-warning
+# channels since output layout 3.
+STATS_FIELDS = (
+    "loss", "grad_l2", "var_l1", "var_max", "mom_l1", "clip_coef",
+    "urms_embed", "urms_early", "urms_late", "urms_final",
+)
+
+# Layer-group names for the update-RMS channels, in packed order.
+URMS_GROUPS = ("embed", "early", "late", "final")
+
+
+def urms_group_bounds(cfg: ModelConfig) -> list[tuple[str, int, int]]:
+    """Contiguous flat-vector spans for the update-RMS layer groups:
+    embeddings (wte + wpe), the first half of the transformer stack, the
+    second half, and the final LayerNorm. Bounds are python ints so the
+    per-group reductions lower to static slices."""
+    specs = param_specs(cfg)
+    by = {sp.name: sp for sp in specs}
+    embed_end = by["wpe"].offset + by["wpe"].size
+    lnf = by["lnf.g"].offset
+    half = max(cfg.n_layer // 2, 1)
+    late_start = by[f"h{half}.ln1.g"].offset if half < cfg.n_layer else lnf
+    return [
+        ("embed", 0, embed_end),
+        ("early", embed_end, late_start),
+        ("late", late_start, lnf),
+        ("final", lnf, n_params(cfg)),
+    ]
 
 
 def train_step(flat, m, v, dmask, knobs, tokens, cfg: ModelConfig):
@@ -202,11 +231,16 @@ def train_step(flat, m, v, dmask, knobs, tokens, cfg: ModelConfig):
     three (clip_norm stays a runtime knob so the gradient-clipping ablation,
     paper Appendix A.3.2 / Fig 10, can sweep it without re-lowering).
 
-    Returns ``(flat', m', v', stats)`` with ``stats`` a packed f32[6] in
-    ``STATS_FIELDS`` order — the paper's full instrumentation set. State
-    outputs and the stats tensor are *separate results* (not one tuple), so
-    the Rust engine keeps params/m/v device-resident across steps and reads
-    back only the 24-byte stats tensor.
+    Returns ``(flat', m', v', stats)`` with ``stats`` a packed f32[10] in
+    ``STATS_FIELDS`` order — the paper's full instrumentation set plus the
+    per-layer-group update-RMS channels (computed from the *new* moments
+    with bias correction, i.e. the RMS of the Adam update the step just
+    applied, per ``urms_group_bounds`` span). The extra outputs read
+    existing intermediates only: the parameter trajectory is unchanged
+    from output layout 2. State outputs and the stats tensor are
+    *separate results* (not one tuple), so the Rust engine keeps
+    params/m/v device-resident across steps and reads back only the
+    40-byte stats tensor.
     """
     step, lr, clip_norm = knobs[0], knobs[1], knobs[2]
     loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
@@ -225,7 +259,16 @@ def train_step(flat, m, v, dmask, knobs, tokens, cfg: ModelConfig):
             decay_mask=dmask,
         )
     grad_l2, var_l1, var_max, mom_l1, clip_coef = stats
-    packed = jnp.stack([loss, grad_l2, var_l1, var_max, mom_l1, clip_coef])
+    # per-layer-group RMS of the bias-corrected update just applied
+    bc1 = 1.0 - cfg.adam_beta1 ** step
+    bc2 = 1.0 - cfg.adam_beta2 ** step
+    upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.adam_eps)
+    urms = [
+        jnp.sqrt(jnp.mean(jax.lax.slice(upd, (a,), (b,)) ** 2))
+        if b > a else jnp.float32(0.0)
+        for _, a, b in urms_group_bounds(cfg)
+    ]
+    packed = jnp.stack([loss, grad_l2, var_l1, var_max, mom_l1, clip_coef, *urms])
     return (p_new, m_new, v_new, packed)
 
 

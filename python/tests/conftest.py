@@ -4,8 +4,15 @@ import sys
 # Tests run from python/ (see Makefile); make `compile` importable regardless.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from hypothesis import settings
-
-# Single-core CI box: keep sweeps small but meaningful.
-settings.register_profile("slw", max_examples=12, deadline=None, derandomize=True)
-settings.load_profile("slw")
+# Single-core CI box: keep sweeps small but meaningful. hypothesis is only
+# needed by the property-based kernel tests; environments without it can
+# still run the plain pytest files.
+try:
+    from hypothesis import settings
+except ImportError:
+    # The property-based modules import hypothesis at the top level, so
+    # skip collecting them entirely rather than erroring out.
+    collect_ignore = ["test_adam.py", "test_attention.py", "test_layernorm.py"]
+else:
+    settings.register_profile("slw", max_examples=12, deadline=None, derandomize=True)
+    settings.load_profile("slw")

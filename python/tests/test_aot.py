@@ -27,9 +27,9 @@ def test_train_hlo_structure(train_hlo):
     assert f"f32[{n}]" in train_hlo
     assert "f32[3]" in train_hlo  # the packed step/lr/clip knob vector
     assert f"s32[{ASET.batch_size},9]" in train_hlo  # tokens at seqlen 8
-    # output layout 2: the root carries the three state tensors plus the
-    # packed f32[6] stats tensor as separate results
-    assert f"(f32[{n}]{{0}}, f32[{n}]{{0}}, f32[{n}]{{0}}, f32[6]{{0}})" in train_hlo
+    # output layout 3: the root carries the three state tensors plus the
+    # packed f32[10] stats tensor as separate results
+    assert f"(f32[{n}]{{0}}, f32[{n}]{{0}}, f32[{n}]{{0}}, f32[10]{{0}})" in train_hlo
 
 
 def test_eval_hlo_structure():
@@ -45,13 +45,14 @@ def test_manifest_schema():
     assert js["n_params"] == M.n_params(ASET.cfg())
     assert js["seqlen_buckets"] == list(ASET.seqlen_buckets)
     assert len(js["params"]) == len(M.param_specs(ASET.cfg()))
-    assert js["output_layout"] == 2
+    assert js["output_layout"] == 3
     assert js["train_inputs"] == ["params", "m", "v", "decay_mask", "knobs", "tokens"]
     assert js["knob_fields"] == ["step", "lr", "clip_norm"]
     assert js["train_outputs"] == ["params", "m", "v", "stats"]
     assert js["stats_fields"][0] == "loss"
     assert js["stats_fields"][3] == "var_max"
-    assert len(js["stats_fields"]) == 6
+    assert js["stats_fields"][6:] == [f"urms_{g}" for g in M.URMS_GROUPS]
+    assert len(js["stats_fields"]) == 10
     total = sum(p["size"] for p in js["params"])
     assert total == js["n_params"]
     # offsets are the running sum (Rust init relies on this)

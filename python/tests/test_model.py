@@ -159,8 +159,8 @@ def test_train_step_outputs():
     out = M.train_step(flat, m, v, dm, _knobs(1), toks, cfg)
     assert len(out) == 4, "state outputs + one packed stats tensor"
     p_new, m_new, v_new, stats = out
-    assert stats.shape == (6,)
-    loss, grad_l2, var_l1, var_max, mom_l1, clip = stats
+    assert stats.shape == (len(M.STATS_FIELDS),) == (10,)
+    loss, grad_l2, var_l1, var_max, mom_l1, clip = stats[:6]
     assert p_new.shape == flat.shape
     assert float(loss) > 0
     assert float(grad_l2) > 0
@@ -169,6 +169,41 @@ def test_train_step_outputs():
     assert 0 < float(clip) <= 1.0
     # step 1, zero state: m = 0.1*g_clipped, v small
     assert float(mom_l1) > 0
+    # the four per-layer-group update-RMS channels: finite and positive
+    # (every group sees a nonzero update at step 1)
+    for name, value in zip(M.STATS_FIELDS[6:], np.asarray(stats[6:])):
+        assert np.isfinite(value) and value > 0, (name, value)
+
+
+def test_urms_group_bounds_partition():
+    """Groups tile the flat vector exactly, in order, for every preset."""
+    for cfg in MODELS.values():
+        bounds = M.urms_group_bounds(cfg)
+        assert [g for g, _, _ in bounds] == list(M.URMS_GROUPS)
+        assert bounds[0][1] == 0
+        assert bounds[-1][2] == M.n_params(cfg)
+        for (_, _, e), (_, a, _) in zip(bounds, bounds[1:]):
+            assert e == a, "spans must be contiguous"
+        specs = {sp.name: sp for sp in M.param_specs(cfg)}
+        wpe_end = specs["wpe"].offset + specs["wpe"].size
+        assert bounds[0][2] == wpe_end, "embed group is wte+wpe"
+        assert bounds[3][1] == specs["lnf.g"].offset, "final group is lnf"
+
+
+def test_urms_matches_flat_update_rms():
+    """The packed urms channels equal a direct recomputation of the
+    bias-corrected update RMS over each group's span."""
+    cfg = CFG
+    flat, m, v, dm = _state(cfg, seed=6)
+    toks = rand_tokens(7, 4, cfg.max_seqlen + 1, cfg.vocab)
+    p_new, m_new, v_new, stats = M.train_step(flat, m, v, dm, _knobs(1), toks, cfg)
+    upd = (m_new / (1 - cfg.adam_beta1)) / (
+        jnp.sqrt(v_new / (1 - cfg.adam_beta2)) + cfg.adam_eps
+    )
+    for i, (_, a, b) in enumerate(M.urms_group_bounds(cfg)):
+        want = float(jnp.sqrt(jnp.mean(upd[a:b] ** 2)))
+        got = float(stats[6 + i])
+        assert abs(got - want) / (1.0 + abs(want)) < 1e-5
 
 
 def test_train_step_pallas_ref_parity():

@@ -1,0 +1,127 @@
+//! The scenario lab's acceptance gate: run the destructive (gated) fault
+//! families of `exp::scenarios::MATRIX` open-loop and under the autopilot,
+//! multi-seed, on one warm micro engine — and enforce that the autopilot's
+//! recovery rate is *strictly* above open-loop survival on every gated
+//! family (>= 3 of them). Also enforces the harness's determinism
+//! contract: a run with `inject: Some(none())` is bit-identical to one
+//! with no injection config at all. Emits `BENCH_scenarios.json`.
+//!
+//! `SLW_BENCH_SMOKE=1` shrinks seeds and budgets for CI.
+
+use std::path::PathBuf;
+
+use slw::config::presets;
+use slw::exp::scenarios::{self, ScenarioCase, MATRIX, SEEDS};
+use slw::inject::InjectionSpec;
+use slw::runtime::Engine;
+use slw::train::metrics::RunHistory;
+use slw::train::trainer::{RunResult, Trainer};
+use slw::util::json::{self, Json};
+
+fn trajectory(out: &RunResult) -> Vec<(usize, usize, usize, u64, u32)> {
+    out.history
+        .steps
+        .iter()
+        .map(|r| (r.step, r.bsz, r.seqlen, r.tokens_after, r.stats.loss.to_bits()))
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let smoke = std::env::var("SLW_BENCH_SMOKE").is_ok();
+    let seeds: &[u64] = if smoke { &SEEDS[..1] } else { SEEDS };
+    let budget: u64 = if smoke { 12_000 } else { 25_000 };
+
+    let mut engine = Engine::load(&root, "micro")?;
+
+    // --- determinism gate: Some(none()) == None, bit for bit -------------
+    let mut cfg = presets::base("micro")?;
+    cfg.token_budget = 4 * 32 * 20;
+    cfg.eval_every = 0;
+    let mut bare_cfg = cfg.clone().with_name("lab_det_bare");
+    bare_cfg.inject = None;
+    let mut armed_cfg = cfg.with_name("lab_det_armed");
+    armed_cfg.inject = Some(InjectionSpec::none());
+    let mut t = Trainer::with_engine(engine, bare_cfg)?;
+    let bare = t.run()?;
+    engine = t.into_engine();
+    let mut t = Trainer::with_engine(engine, armed_cfg)?;
+    let armed = t.run()?;
+    engine = t.into_engine();
+    let identical = trajectory(&bare) == trajectory(&armed);
+    println!(
+        "bench:\tscenario_lab\tdeterminism\tsteps={}\tbit_identical={identical}",
+        bare.history.steps.len()
+    );
+
+    // --- recovery gate: every destructive family, both arms -------------
+    let gated: Vec<&ScenarioCase> = MATRIX.iter().filter(|c| c.gated).collect();
+    assert!(gated.len() >= 3, "the gate needs >= 3 destructive families");
+    let mut fam_objs: Vec<Json> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for case in &gated {
+        assert_eq!(case.model, "micro", "gated families share the warm micro engine");
+        let mut arms: Vec<Vec<RunHistory>> = Vec::new();
+        for autopilot in [false, true] {
+            let mut runs = Vec::new();
+            for &seed in seeds {
+                let cfg = scenarios::scenario_cfg(case, budget, seed, autopilot, None)?;
+                let mut t = Trainer::with_engine(engine, cfg)?;
+                let out = t.run()?;
+                engine = t.into_engine();
+                runs.push(out.history);
+            }
+            arms.push(runs);
+        }
+        let summarize = |arm: &str, runs: &[RunHistory]| {
+            let refs: Vec<&RunHistory> = runs.iter().collect();
+            scenarios::summarize(case, arm, &refs)
+        };
+        let open = summarize("open", &arms[0]);
+        let auto = summarize("auto", &arms[1]);
+        println!(
+            "bench:\tscenario_lab\t{}\topen={}/{}\tauto={}/{}\trollbacks={:.1}\twasted={:.1}",
+            case.family, open.survived, open.seeds, auto.survived, auto.seeds,
+            auto.rollbacks, auto.wasted_steps
+        );
+        if auto.survived <= open.survived {
+            failures.push(format!(
+                "{}: auto {}/{} !> open {}/{}",
+                case.family, auto.survived, auto.seeds, open.survived, open.seeds
+            ));
+        }
+        fam_objs.push(json::obj(vec![
+            ("family", json::s(case.family)),
+            ("spec", json::s(case.spec)),
+            ("seeds", json::num(open.seeds as f64)),
+            ("open_survived", json::num(open.survived as f64)),
+            ("auto_survived", json::num(auto.survived as f64)),
+            ("auto_rollbacks", json::num(auto.rollbacks)),
+            ("auto_wasted_steps", json::num(auto.wasted_steps)),
+            ("open_final_loss", json::num_nf(open.final_loss.unwrap_or(f64::NAN))),
+            ("auto_final_loss", json::num_nf(auto.final_loss.unwrap_or(f64::NAN))),
+        ]));
+    }
+
+    // write the report before asserting so CI uploads the numbers even
+    // when a gate trips
+    let out = json::obj(vec![
+        ("bench", json::s("scenario_lab")),
+        ("smoke", Json::Bool(smoke)),
+        ("seeds_per_family", json::num(seeds.len() as f64)),
+        ("budget_tokens", json::num(budget as f64)),
+        ("none_spec_bit_identical", Json::Bool(identical)),
+        ("families", Json::Arr(fam_objs)),
+    ]);
+    std::fs::write("BENCH_scenarios.json", out.to_string())?;
+    println!("wrote BENCH_scenarios.json");
+
+    assert!(identical, "a none() injection spec must be bit-identical to no harness");
+    assert!(
+        failures.is_empty(),
+        "autopilot recovery must strictly beat open-loop survival on every gated \
+         family; violations: {failures:?}"
+    );
+    Ok(())
+}

@@ -80,6 +80,10 @@ fn main() -> anyhow::Result<()> {
         var_max: 0.1,
         mom_l1: 1.0,
         clip_coef: 1.0,
+        urms_embed: 0.02,
+        urms_early: 0.02,
+        urms_late: 0.02,
+        urms_final: 0.02,
     };
     let n = 1_000_000usize;
     let t0 = Instant::now();

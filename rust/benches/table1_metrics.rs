@@ -28,6 +28,7 @@ fn synth_history(n: usize) -> RunHistory {
                 var_max: if spike { 0.9 } else { 0.1 },
                 mom_l1: 10.0,
                 clip_coef: 1.0,
+                ..Default::default()
             },
             sim_seconds: 1.0,
         });

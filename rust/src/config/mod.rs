@@ -10,6 +10,7 @@ pub mod presets;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+use crate::inject::InjectionSpec;
 use crate::pipeline::batcher::TruncationMode;
 use crate::pipeline::pacing::Pacing;
 use crate::schedule::lr::{Horizon, LrSchedule};
@@ -65,6 +66,10 @@ pub struct RunConfig {
     /// None = open loop. Autopilot interventions are plan patches, so these
     /// runs stay on the threaded prefetch pipeline.
     pub stability: Option<StabilityPolicy>,
+    /// Deterministic fault injection (scenario lab); None = no harness.
+    /// Part of the config's `Debug` output, so scenarios get distinct
+    /// coordinator run-cache keys.
+    pub inject: Option<InjectionSpec>,
 }
 
 impl RunConfig {
@@ -84,6 +89,9 @@ impl RunConfig {
         }
         if let Some(p) = &self.stability {
             p.validate()?;
+        }
+        if let Some(i) = &self.inject {
+            i.validate()?;
         }
         Ok(())
     }
@@ -208,6 +216,10 @@ fn apply_key(cfg: &mut RunConfig, key: &str, v: &str) -> Result<()> {
                 other => bail!("autopilot must be true/false, got '{other}'"),
             }
         }
+        "inject" => {
+            let spec = InjectionSpec::parse(v)?;
+            cfg.inject = if spec.is_none() { None } else { Some(spec) };
+        }
         other => bail!("unknown key '{other}'"),
     }
     Ok(())
@@ -264,6 +276,19 @@ mod tests {
         let mut cfg = presets::base("tiny").unwrap();
         cfg.stability = Some(StabilityPolicy { lr_decay: 0.0, ..Default::default() });
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn inject_key_parses_scenario_specs() {
+        let cfg = parse_config("model = micro\ninject = \"lr_shock:at=5,steps=2,mult=50\"\n")
+            .unwrap();
+        let inj = cfg.inject.expect("spec present");
+        assert_eq!(inj.label(), "lr_shock");
+        assert_eq!(inj.lr_mult(6), 50.0);
+        // 'none' normalizes to the absent harness, not Some(none())
+        let cfg = parse_config("model = micro\ninject = none\n").unwrap();
+        assert!(cfg.inject.is_none());
+        assert!(parse_config("inject = \"lr_shock:at=5,steps=0,mult=50\"\n").is_err());
     }
 
     #[test]

@@ -79,6 +79,7 @@ pub fn base(model: &str) -> Result<RunConfig> {
         n_workers: 2,
         prefetch_depth: 4,
         stability: None,
+        inject: None,
     })
 }
 

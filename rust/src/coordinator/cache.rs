@@ -233,6 +233,10 @@ fn history_to_json(cfg: &RunConfig, key: &str, h: &RunHistory, plan_steps: usize
                 jnum(r.stats.var_max as f64),
                 jnum(r.stats.mom_l1 as f64),
                 jnum(r.stats.clip_coef as f64),
+                jnum(r.stats.urms_embed as f64),
+                jnum(r.stats.urms_early as f64),
+                jnum(r.stats.urms_late as f64),
+                jnum(r.stats.urms_final as f64),
                 jnum(r.sim_seconds),
             ])
         })
@@ -273,8 +277,11 @@ fn history_from_json(j: &Json, name: &str) -> Result<RunHistory> {
     let mut h = RunHistory::new(name);
     for row in j.get("steps")?.arr()? {
         let c = row.arr()?;
-        if c.len() != 12 {
-            bail!("step row has {} columns, expected 12", c.len());
+        // 16 columns since the f32[10] stats widening (layout-3 artifacts);
+        // older 12-column entries can't be served anyway — the manifest text
+        // in the key re-keyed them — so a short row is plain corruption
+        if c.len() != 16 {
+            bail!("step row has {} columns, expected 16", c.len());
         }
         h.record(StepRecord {
             step: jget(&c[0])? as usize,
@@ -289,8 +296,12 @@ fn history_from_json(j: &Json, name: &str) -> Result<RunHistory> {
                 var_max: jget(&c[8])? as f32,
                 mom_l1: jget(&c[9])? as f32,
                 clip_coef: jget(&c[10])? as f32,
+                urms_embed: jget(&c[11])? as f32,
+                urms_early: jget(&c[12])? as f32,
+                urms_late: jget(&c[13])? as f32,
+                urms_final: jget(&c[14])? as f32,
             },
-            sim_seconds: jget(&c[11])?,
+            sim_seconds: jget(&c[15])?,
         });
     }
     for row in j.get("evals")?.arr()? {
@@ -342,6 +353,10 @@ mod tests {
                 var_max: 0.125,
                 mom_l1: 2.0,
                 clip_coef: 1.0,
+                urms_embed: 0.011,
+                urms_early: 0.022,
+                urms_late: 0.033,
+                urms_final: 0.044,
             },
             sim_seconds: 0.75,
         }
@@ -379,20 +394,20 @@ mod tests {
 
     #[test]
     fn key_folds_in_the_artifact_output_layout() {
-        // the device-resident re-lowering changed the step's result layout;
-        // entries keyed against tuple-era (layout 1) manifests must never be
-        // served for the new numerics — the raw manifest text (which now
-        // carries "output_layout": 2) is part of every key
+        // each re-lowering bumps the step's result layout; entries keyed
+        // against older manifests must never be served for the new numerics
+        // — the raw manifest text (which now carries "output_layout": 3) is
+        // part of every key
         let cfg = presets::base("micro").unwrap().with_name("k-layout");
-        let t2 = family_text(&root(), "micro").unwrap();
+        let t3 = family_text(&root(), "micro").unwrap();
         assert!(
-            t2.contains("\"output_layout\": 2"),
+            t3.contains("\"output_layout\": 3"),
             "manifest text must carry the layout version"
         );
-        let t1 = t2.replace("\"output_layout\": 2", "\"output_layout\": 1");
+        let t2 = t3.replace("\"output_layout\": 3", "\"output_layout\": 2");
         assert_ne!(
+            run_key_with(&cfg, &t3),
             run_key_with(&cfg, &t2),
-            run_key_with(&cfg, &t1),
             "a layout change must re-key cached runs"
         );
     }
@@ -452,6 +467,8 @@ mod tests {
             } else {
                 assert_eq!(a.stats.loss, b.stats.loss);
             }
+            assert_eq!(a.stats.urms_embed, b.stats.urms_embed);
+            assert_eq!(a.stats.urms_final, b.stats.urms_final);
             assert_eq!(a.sim_seconds, b.sim_seconds);
         }
         assert_eq!(e.state.params, state.params);

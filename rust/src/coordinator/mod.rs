@@ -65,7 +65,10 @@ struct WorkerOut {
 }
 
 type Job = (usize, RunConfig);
-type JobResult = (usize, RunConfig, Result<WorkerOut>);
+/// (input index, config, outcome, panic retries taken) — `retries > 0`
+/// means the first attempt panicked and the job was re-run on a rebuilt
+/// engine; a failure after a retry reports as "failed(retried)".
+type JobResult = (usize, RunConfig, Result<WorkerOut>, usize);
 
 pub struct Coordinator {
     artifacts_root: PathBuf,
@@ -159,11 +162,17 @@ impl Coordinator {
             let n_jobs = misses.len();
             let (rx, handles) = self.spawn_workers(misses, n_workers);
             let mut n_done = 0usize;
+            let mut n_retried = 0usize;
             let mut first_err: Option<(usize, anyhow::Error)> = None;
-            for (i, cfg, result) in rx.iter() {
+            for (i, cfg, result, retries) in rx.iter() {
                 n_done += 1;
+                if retries > 0 {
+                    n_retried += 1;
+                    self.obs.instant("worker_retry", i as i64);
+                }
+                let tag = if retries > 0 { "failed(retried)" } else { "failed" };
                 let stored = result
-                    .with_context(|| format!("run '{}' failed", cfg.name))
+                    .with_context(|| format!("run '{}' {tag}", cfg.name))
                     .and_then(|wo| {
                         self.cache.store(
                             &self.artifacts_root,
@@ -190,6 +199,11 @@ impl Coordinator {
             }
             for h in handles {
                 let _ = h.join();
+            }
+            if n_retried > 0 {
+                crate::info!(
+                    "coordinator: {n_retried} run(s) hit a worker panic and were retried once"
+                );
             }
             if let Some((_, e)) = first_err {
                 return Err(e);
@@ -241,6 +255,101 @@ impl Coordinator {
     }
 }
 
+/// Backoff before re-running a job whose first attempt panicked.
+const RETRY_BACKOFF: std::time::Duration = std::time::Duration::from_millis(250);
+
+/// Best-effort text of a panic payload (the `&str`/`String` forms cover
+/// `panic!`, `unwrap`, `expect`, and slice-index panics).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f`, converting a panic into an error instead of killing the worker
+/// thread (which would strand every job still in its queue and trip the
+/// coordinator's lost-run check). The first panic earns exactly one retry
+/// after a short backoff; a second is reported as the job's error. Returns
+/// the outcome plus the number of retries taken.
+fn catch_and_retry<T>(
+    label: &str,
+    backoff: std::time::Duration,
+    mut f: impl FnMut() -> Result<T>,
+) -> (Result<T>, usize) {
+    let mut retries = 0usize;
+    loop {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(&mut f)) {
+            Ok(r) => return (r, retries),
+            Err(p) => {
+                let msg = panic_message(p.as_ref());
+                if retries == 0 {
+                    crate::info!("{label}: panicked ({msg}); retrying once after backoff");
+                    retries = 1;
+                    std::thread::sleep(backoff);
+                } else {
+                    return (Err(anyhow::anyhow!("{label}: panicked twice: {msg}")), retries);
+                }
+            }
+        }
+    }
+}
+
+/// One job attempt: acquire (or build) the model's warm engine, train, and
+/// hand the engine back. A panic mid-run consumes the engine it removed
+/// from the map, so a retry after a panic starts from a freshly loaded
+/// engine rather than possibly-poisoned warm state.
+#[allow(clippy::too_many_arguments)]
+fn execute_job(
+    artifacts_root: &std::path::Path,
+    engines: &mut BTreeMap<String, Engine>,
+    stores: &mut StoreCache,
+    idx: usize,
+    cfg: &RunConfig,
+    obs: &Obs,
+    metrics_root: Option<&PathBuf>,
+    incident_root: Option<&PathBuf>,
+) -> Result<WorkerOut> {
+    let model = cfg.model.clone();
+    let engine = match engines.remove(&model) {
+        Some(e) => Ok(e),
+        None => Engine::load(artifacts_root, &model),
+    };
+    // keep the warm engine whether the run succeeds, construction fails,
+    // or training fails: one bad config must not cost the family's
+    // compiled executables
+    engine.and_then(|engine| {
+        match Trainer::with_engine_recoverable_cached(engine, cfg.clone(), Some(stores)) {
+            Err((engine, e)) => {
+                engines.insert(model, engine);
+                Err(e)
+            }
+            Ok(mut trainer) => {
+                trainer.set_obs_sink(ObsSink {
+                    obs: obs.clone(),
+                    metrics_path: metrics_root
+                        .map(|d| d.join(format!("{}.metrics.jsonl", slugify(&cfg.name)))),
+                    incident_root: incident_root.cloned(),
+                    dump_warnings: false,
+                });
+                let _run_span = crate::span!(obs, "run", idx);
+                let run = trainer.run().and_then(|out| {
+                    // the run's one deliberate O(n_params) readback: the
+                    // final state crosses to the host for the cache and
+                    // the (thread-portable) result hand-off
+                    let state = out.state.materialize()?;
+                    Ok(WorkerOut { history: out.history, state, plan_steps: out.plan_steps })
+                });
+                engines.insert(model, trainer.into_engine());
+                run
+            }
+        }
+    })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
@@ -258,43 +367,20 @@ fn worker_loop(
     let mut stores = StoreCache::new();
     while let Some((idx, cfg)) = queues.take(w) {
         crate::info!("coordinator[w{w}]: running '{}'", cfg.name);
-        let model = cfg.model.clone();
-        let engine = match engines.remove(&model) {
-            Some(e) => Ok(e),
-            None => Engine::load(&artifacts_root, &model),
-        };
-        // keep the warm engine whether the run succeeds, construction fails,
-        // or training fails: one bad config must not cost the family's
-        // compiled executables
-        let result = engine.and_then(|engine| {
-            match Trainer::with_engine_recoverable_cached(engine, cfg.clone(), Some(&mut stores)) {
-                Err((engine, e)) => {
-                    engines.insert(model.clone(), engine);
-                    Err(e)
-                }
-                Ok(mut trainer) => {
-                    trainer.set_obs_sink(ObsSink {
-                        obs: obs.clone(),
-                        metrics_path: metrics_root
-                            .as_ref()
-                            .map(|d| d.join(format!("{}.metrics.jsonl", slugify(&cfg.name)))),
-                        incident_root: incident_root.clone(),
-                        dump_warnings: false,
-                    });
-                    let _run_span = crate::span!(obs, "run", idx);
-                    let run = trainer.run().and_then(|out| {
-                        // the run's one deliberate O(n_params) readback: the
-                        // final state crosses to the host for the cache and
-                        // the (thread-portable) result hand-off
-                        let state = out.state.materialize()?;
-                        Ok(WorkerOut { history: out.history, state, plan_steps: out.plan_steps })
-                    });
-                    engines.insert(model.clone(), trainer.into_engine());
-                    run
-                }
-            }
+        let label = format!("coordinator[w{w}] run '{}'", cfg.name);
+        let (result, retries) = catch_and_retry(&label, RETRY_BACKOFF, || {
+            execute_job(
+                &artifacts_root,
+                &mut engines,
+                &mut stores,
+                idx,
+                &cfg,
+                &obs,
+                metrics_root.as_ref(),
+                incident_root.as_ref(),
+            )
         });
-        if tx.send((idx, cfg, result)).is_err() {
+        if tx.send((idx, cfg, result, retries)).is_err() {
             return; // coordinator dropped the receiver
         }
     }
@@ -368,6 +454,49 @@ mod tests {
         for d in [d1, d2] {
             std::fs::remove_dir_all(&d).ok();
         }
+    }
+
+    #[test]
+    fn a_panicking_job_is_retried_exactly_once() {
+        // first attempt panics, the retry succeeds: the job completes and
+        // reports one retry
+        let mut calls = 0;
+        let (r, retries) = catch_and_retry("t1", std::time::Duration::ZERO, || {
+            calls += 1;
+            if calls == 1 {
+                panic!("simulated worker crash");
+            }
+            Ok(42)
+        });
+        assert_eq!(r.unwrap(), 42);
+        assert_eq!(retries, 1);
+        assert_eq!(calls, 2);
+
+        // a persistent panic becomes the job's error after one retry — the
+        // worker thread survives to drain the rest of its queue
+        let mut calls = 0;
+        let (r, retries) = catch_and_retry("t2", std::time::Duration::ZERO, || -> Result<()> {
+            calls += 1;
+            panic!("still broken");
+        });
+        let err = r.unwrap_err().to_string();
+        assert!(err.contains("panicked twice") && err.contains("still broken"), "got: {err}");
+        assert_eq!(retries, 1);
+        assert_eq!(calls, 2);
+
+        // a clean run never pays the machinery
+        let (r, retries) = catch_and_retry("t3", std::time::Duration::ZERO, || Ok("fine"));
+        assert_eq!(r.unwrap(), "fine");
+        assert_eq!(retries, 0);
+
+        // an ordinary error is not a panic: no retry
+        let mut calls = 0;
+        let (r, retries) = catch_and_retry("t4", std::time::Duration::ZERO, || -> Result<()> {
+            calls += 1;
+            anyhow::bail!("plain failure")
+        });
+        assert!(r.is_err());
+        assert_eq!((retries, calls), (0, 1));
     }
 
     #[test]

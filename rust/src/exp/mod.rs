@@ -22,6 +22,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig8;
 pub mod gpt3;
+pub mod scenarios;
 pub mod stability;
 pub mod table5;
 pub mod table8_9;
@@ -313,7 +314,7 @@ pub use crate::util::slugify;
 
 pub const ALL_IDS: &[&str] = &[
     "fig1", "table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5_6", "table4",
-    "table5", "fig8", "fig10", "table8_9", "stability",
+    "table5", "fig8", "fig10", "table8_9", "stability", "scenarios",
 ];
 
 pub fn cmd_exp(mut args: Args) -> Result<()> {
@@ -364,6 +365,7 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
             "fig10" => fig10::run(ctx),
             "table8_9" => table8_9::run(ctx),
             "stability" => stability::run(ctx),
+            "scenarios" => scenarios::run(ctx),
             other => bail!("unknown experiment '{other}'; known: {ALL_IDS:?} or 'all'"),
         }
     }

@@ -1,0 +1,430 @@
+//! The instability scenario lab: sweep the deterministic fault matrix
+//! (`crate::inject`) across open-loop and autopilot arms, multi-seed,
+//! through the coordinator — and report who survives what, at what cost.
+//!
+//! Each [`ScenarioCase`] is one fault family riding a healthy SLW recipe;
+//! both arms of a family run the *identical* config except for
+//! `stability`, so any survival gap is attributable to the autopilot.
+//! Faults are pure functions of (spec, seed), so every cell of the matrix
+//! is reproducible and cache-keyed like any other run. The `gated`
+//! families are the ones the `scenario_lab` bench enforces the
+//! autopilot-beats-open-loop contrast on (`BENCH_scenarios.json`); this
+//! experiment renders the full observational table
+//! (`results/scenarios.tsv`, parse-back via [`parse_report`]).
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{presets, RunConfig};
+use crate::inject::InjectionSpec;
+use crate::stability::StabilityPolicy;
+use crate::train::metrics::RunHistory;
+use crate::util::tsv::{f3, TsvWriter};
+
+use super::ExpCtx;
+
+/// One family of the lab's matrix.
+pub struct ScenarioCase {
+    pub family: &'static str,
+    /// model preset the family runs on (micro except where the fault needs
+    /// hardware the micro set lacks — batch_shock needs a second batch rung)
+    pub model: &'static str,
+    /// fault DSL (see `InjectionSpec::parse`)
+    pub spec: &'static str,
+    /// peak-LR factor over the model's base LR (the recipe the fault hits)
+    pub lr_factor: f64,
+    /// true = the scenario_lab bench gates recovery > open-loop survival
+    pub gated: bool,
+}
+
+/// The sweep matrix. Three families are destructive enough to kill the
+/// open loop deterministically (NaN in the stats stream, a 400x LR shock,
+/// and a corrupted-token burst under an LR shock) — those carry the gate.
+/// The rest probe schedule-level sabotage (long-tail init lengths, cap
+/// oscillation, a batch shock, mild corruption, a poisoned spill slot)
+/// where the interesting output is the cost column, not survival.
+pub const MATRIX: &[ScenarioCase] = &[
+    ScenarioCase {
+        family: "longtail",
+        model: "micro",
+        spec: "longtail:steps=10,len=32",
+        lr_factor: 2.0,
+        gated: false,
+    },
+    ScenarioCase {
+        family: "cap_osc",
+        model: "micro",
+        spec: "cap_osc:from=20,period=5,len=8",
+        lr_factor: 2.0,
+        gated: false,
+    },
+    ScenarioCase {
+        family: "batch_shock",
+        model: "tiny",
+        spec: "batch_shock:at=15,steps=5,bsz=64",
+        lr_factor: 1.0,
+        gated: false,
+    },
+    ScenarioCase {
+        family: "data_burst",
+        model: "micro",
+        spec: "data_burst:at=15,steps=5,frac=0.5",
+        lr_factor: 2.0,
+        gated: false,
+    },
+    ScenarioCase {
+        family: "stats_nan",
+        model: "micro",
+        spec: "stats_nan:at=12,channel=0",
+        lr_factor: 2.0,
+        gated: true,
+    },
+    ScenarioCase {
+        family: "lr_shock",
+        model: "micro",
+        spec: "lr_shock:at=10,steps=4,mult=400",
+        lr_factor: 2.0,
+        gated: true,
+    },
+    ScenarioCase {
+        family: "burst_shock",
+        model: "micro",
+        spec: "data_burst:at=10,steps=6,frac=0.8;lr_shock:at=10,steps=6,mult=300",
+        lr_factor: 2.0,
+        gated: true,
+    },
+    ScenarioCase {
+        family: "spill_corrupt",
+        model: "micro",
+        spec: "spill:nth=1,mode=corrupt",
+        lr_factor: 2.0,
+        gated: false,
+    },
+];
+
+/// Seeds every cell of the matrix runs under.
+pub const SEEDS: &[u64] = &[1234, 2025];
+
+const BUDGET: u64 = 25_000;
+
+/// Tight autopilot cadence for the short scenario runs (same shape as the
+/// `stability` experiment's policy).
+pub fn autopilot_policy() -> StabilityPolicy {
+    StabilityPolicy {
+        warmup_steps: 3,
+        snapshot_every: 3,
+        regrow_after: 5,
+        max_rollbacks: 20,
+        ..StabilityPolicy::default()
+    }
+}
+
+pub fn case_name(family: &str, autopilot: bool, seed: u64) -> String {
+    let arm = if autopilot { "auto" } else { "open" };
+    format!("scn_{family}_{arm}_s{seed}")
+}
+
+/// Build one cell of the matrix: the family's recipe + fault spec, with
+/// (`autopilot`) or without the stability loop. The spill-fault family
+/// needs a disk spill directory on the autopilot arm, rooted at
+/// `spill_root` when given.
+pub fn scenario_cfg(
+    case: &ScenarioCase,
+    budget: u64,
+    seed: u64,
+    autopilot: bool,
+    spill_root: Option<&std::path::Path>,
+) -> Result<RunConfig> {
+    let spec = InjectionSpec::parse(case.spec)
+        .with_context(|| format!("scenario family '{}'", case.family))?;
+    let name = case_name(case.family, autopilot, seed);
+    let mut c = presets::base(case.model)?;
+    c.lr.peak = presets::base_lr(case.model) * case.lr_factor;
+    c.lr.min_lr = c.lr.peak / 15.0;
+    c.token_budget = budget;
+    c.eval_every = 0;
+    c.seed = seed;
+    // every family rides the paper's SLW ramp so the schedule-level faults
+    // (long-tail init, cap oscillation) have a ramp to sabotage
+    c = presets::with_slw(c, 8, 30)?;
+    if autopilot {
+        let mut policy = autopilot_policy();
+        if spec.spill_fault.is_some() {
+            if let Some(root) = spill_root {
+                policy.spill_dir = Some(root.join(&name).to_string_lossy().into_owned());
+            }
+        }
+        c.stability = Some(policy);
+    }
+    c.inject = Some(spec);
+    Ok(c.with_name(&name))
+}
+
+/// A run "survived" its scenario if it never recorded a non-finite step,
+/// finished with finite loss, and (autopilot arm) never ran out of
+/// rollbacks. Open-loop runs that log even one NaN step fail this — which
+/// is exactly the asymmetry the gate measures, since a rolled-back NaN
+/// never reaches the history.
+pub fn survived(h: &RunHistory) -> bool {
+    !h.diverged()
+        && h.losses().iter().all(|l| l.is_finite())
+        && h.losses().last().is_some_and(|l| l.is_finite())
+        && h.stability.as_ref().map_or(true, |t| !t.gave_up)
+}
+
+/// One row of `results/scenarios.tsv` (and of `BENCH_scenarios.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportRow {
+    pub family: String,
+    pub arm: String,
+    pub seeds: usize,
+    pub survived: usize,
+    /// mean finite final loss across seeds (None if every seed died)
+    pub final_loss: Option<f64>,
+    /// mean rollbacks per seed (0 for the open arm)
+    pub rollbacks: f64,
+    /// mean rolled-back (wasted) steps per seed — the recovery cost
+    pub wasted_steps: f64,
+    pub gated: bool,
+}
+
+pub fn summarize(case: &ScenarioCase, arm: &str, runs: &[&RunHistory]) -> ReportRow {
+    let n_surv = runs.iter().filter(|h| survived(h)).count();
+    let finals: Vec<f64> = runs
+        .iter()
+        .filter_map(|h| h.losses().last().copied())
+        .filter(|l| l.is_finite())
+        .collect();
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    let rollbacks: Vec<f64> = runs
+        .iter()
+        .map(|h| h.stability.as_ref().map_or(0.0, |t| t.n_rollbacks() as f64))
+        .collect();
+    let wasted: Vec<f64> = runs
+        .iter()
+        .map(|h| {
+            h.stability
+                .as_ref()
+                .map_or(0.0, |t| t.rollbacks.iter().map(|r| r.wasted_steps).sum::<usize>() as f64)
+        })
+        .collect();
+    ReportRow {
+        family: case.family.to_string(),
+        arm: arm.to_string(),
+        seeds: runs.len(),
+        survived: n_surv,
+        final_loss: if finals.is_empty() { None } else { Some(mean(&finals)) },
+        rollbacks: mean(&rollbacks),
+        wasted_steps: mean(&wasted),
+        gated: case.gated,
+    }
+}
+
+const COLUMNS: &[&str] =
+    &["family", "arm", "survived", "final_loss", "rollbacks", "wasted_steps", "gated"];
+
+pub fn render_report(rows: &[ReportRow]) -> TsvWriter {
+    let mut w = TsvWriter::new(COLUMNS);
+    for r in rows {
+        w.row(&[
+            r.family.clone(),
+            r.arm.clone(),
+            format!("{}/{}", r.survived, r.seeds),
+            r.final_loss.map(f3).unwrap_or_else(|| "-".into()),
+            f3(r.rollbacks),
+            f3(r.wasted_steps),
+            r.gated.to_string(),
+        ]);
+    }
+    w
+}
+
+/// Parse a rendered scenario report back into rows (round-trip inverse of
+/// [`render_report`]) — downstream tooling and the regression tests read
+/// `results/scenarios.tsv` through this.
+pub fn parse_report(text: &str) -> Result<Vec<ReportRow>> {
+    let mut lines = text.lines();
+    let header: Vec<&str> = lines.next().unwrap_or("").split('\t').collect();
+    if header != COLUMNS {
+        bail!("scenario report header {header:?} != expected {COLUMNS:?}");
+    }
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('\t').collect();
+        if cells.len() != COLUMNS.len() {
+            bail!("scenario report row {}: {} cells, expected {}", i + 2, cells.len(),
+                  COLUMNS.len());
+        }
+        let (surv, seeds) = cells[2]
+            .split_once('/')
+            .with_context(|| format!("row {}: survived cell '{}'", i + 2, cells[2]))?;
+        rows.push(ReportRow {
+            family: cells[0].to_string(),
+            arm: cells[1].to_string(),
+            survived: surv.parse()?,
+            seeds: seeds.parse()?,
+            final_loss: if cells[3] == "-" { None } else { Some(cells[3].parse()?) },
+            rollbacks: cells[4].parse()?,
+            wasted_steps: cells[5].parse()?,
+            gated: cells[6].parse()?,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run(ctx: &mut ExpCtx) -> Result<()> {
+    let budget = ctx.budget(BUDGET);
+    let spill_root = ctx.out_dir.join("spill");
+    let mut cfgs = Vec::new();
+    for case in MATRIX {
+        for autopilot in [false, true] {
+            for &seed in SEEDS {
+                cfgs.push(scenario_cfg(case, budget, seed, autopilot, Some(&spill_root))?);
+            }
+        }
+    }
+    // the whole matrix (families x arms x seeds) is one coordinator batch:
+    // independent cells parallelize across the worker pool, and repeat
+    // invocations are persistent-cache hits
+    ctx.run_all(cfgs)?;
+
+    let mut rows = Vec::new();
+    for case in MATRIX {
+        for (autopilot, arm) in [(false, "open"), (true, "auto")] {
+            let runs: Vec<&RunHistory> = SEEDS
+                .iter()
+                .map(|&s| &ctx.get(&case_name(case.family, autopilot, s)).history)
+                .collect();
+            rows.push(summarize(case, arm, &runs));
+        }
+    }
+
+    // the contrast the scenario_lab bench enforces, previewed loudly here
+    for case in MATRIX.iter().filter(|c| c.gated) {
+        let find = |arm: &str| {
+            rows.iter().find(|r| r.family == case.family && r.arm == arm).expect("row built")
+        };
+        let (open, auto) = (find("open"), find("auto"));
+        if auto.survived > open.survived {
+            crate::info!(
+                "scenarios: '{}' open loop {}/{} vs autopilot {}/{} (cost: {:.1} wasted \
+                 steps/seed over {:.1} rollbacks)",
+                case.family, open.survived, open.seeds, auto.survived, auto.seeds,
+                auto.wasted_steps, auto.rollbacks
+            );
+        } else {
+            crate::warn_!(
+                "scenarios: gated family '{}' shows no recovery margin (open {}/{}, auto \
+                 {}/{})",
+                case.family, open.survived, open.seeds, auto.survived, auto.seeds
+            );
+        }
+    }
+
+    ctx.emit(
+        "scenarios",
+        "instability scenario lab: open-loop survival vs autopilot recovery, per fault family",
+        &render_report(&rows),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_specs_parse_and_both_arms_validate() {
+        assert!(MATRIX.iter().filter(|c| c.gated).count() >= 3,
+                "the bench gate needs >= 3 destructive families");
+        for case in MATRIX {
+            let spec = InjectionSpec::parse(case.spec).unwrap();
+            assert!(!spec.is_none(), "family '{}' must inject something", case.family);
+            for autopilot in [false, true] {
+                let cfg = scenario_cfg(case, 25_000, 7, autopilot, None).unwrap();
+                cfg.validate().unwrap();
+                assert_eq!(cfg.stability.is_some(), autopilot);
+                assert_eq!(cfg.inject.as_ref().unwrap(), &spec);
+                assert!(cfg.name.starts_with(&format!("scn_{}_", case.family)));
+            }
+        }
+        // arms and seeds get distinct names (distinct cache keys)
+        let names: std::collections::BTreeSet<String> = MATRIX
+            .iter()
+            .flat_map(|c| {
+                [(false, SEEDS[0]), (true, SEEDS[0]), (true, SEEDS[1])]
+                    .map(|(a, s)| case_name(c.family, a, s))
+            })
+            .collect();
+        assert_eq!(names.len(), MATRIX.len() * 3);
+    }
+
+    #[test]
+    fn spill_family_gets_a_spill_dir_only_on_the_autopilot_arm() {
+        let case = MATRIX.iter().find(|c| c.family == "spill_corrupt").unwrap();
+        let root = std::path::Path::new("/tmp/scn_spill_root");
+        let auto = scenario_cfg(case, 25_000, 7, true, Some(root)).unwrap();
+        let dir = auto.stability.unwrap().spill_dir.expect("autopilot arm spills");
+        assert!(dir.contains("scn_spill_corrupt_auto_s7"));
+        let open = scenario_cfg(case, 25_000, 7, false, Some(root)).unwrap();
+        assert!(open.stability.is_none());
+        // a non-spill family never asks for the directory
+        let other = MATRIX.iter().find(|c| c.family == "lr_shock").unwrap();
+        let cfg = scenario_cfg(other, 25_000, 7, true, Some(root)).unwrap();
+        assert!(cfg.stability.unwrap().spill_dir.is_none());
+    }
+
+    #[test]
+    fn report_round_trips_through_tsv() {
+        let rows = vec![
+            ReportRow {
+                family: "lr_shock".into(),
+                arm: "open".into(),
+                seeds: 2,
+                survived: 0,
+                final_loss: None,
+                rollbacks: 0.0,
+                wasted_steps: 0.0,
+                gated: true,
+            },
+            ReportRow {
+                family: "lr_shock".into(),
+                arm: "auto".into(),
+                seeds: 2,
+                survived: 2,
+                final_loss: Some(4.125),
+                rollbacks: 3.5,
+                wasted_steps: 10.5,
+                gated: true,
+            },
+            ReportRow {
+                family: "cap_osc".into(),
+                arm: "open".into(),
+                seeds: 3,
+                survived: 3,
+                final_loss: Some(3.25),
+                rollbacks: 0.0,
+                wasted_steps: 0.0,
+                gated: false,
+            },
+        ];
+        let text = render_report(&rows).to_tsv();
+        let back = parse_report(&text).unwrap();
+        assert_eq!(back, rows);
+    }
+
+    #[test]
+    fn parse_report_rejects_malformed_tables() {
+        assert!(parse_report("wrong\theader\n").is_err());
+        let good = render_report(&[]).to_tsv();
+        assert_eq!(parse_report(&good).unwrap(), vec![]);
+        // a row with the wrong width
+        let bad = format!("{good}lr_shock\topen\n");
+        assert!(parse_report(&bad).is_err());
+        // a survived cell without the k/n shape
+        let header = good.trim_end();
+        let bad = format!("{header}\nx\topen\t2\t-\t0.0\t0.0\tfalse\n");
+        assert!(parse_report(&bad).is_err());
+    }
+}

@@ -1,0 +1,467 @@
+//! Deterministic fault-injection harness — the instability scenario lab.
+//!
+//! The paper (§3) characterizes *when* GPT training destabilizes: long
+//! sequences too early, learning-rate/batch shocks, corrupted data — all
+//! observable through the Adam-state and update-RMS statistics before the
+//! loss ever NaNs. Reproducing those failures on demand is how the
+//! stability autopilot earns its keep, so this module synthesizes them as
+//! **pure functions of (scenario config, seed)**:
+//!
+//! - [`LongTail`] — force full-length sequences for the first N steps
+//!   (the paper's §3 init-pathology: long-tail seqlen distribution at
+//!   init), overriding the pacing schedule.
+//! - [`LrShock`] / [`BatchShock`] — multiply the LR / override the batch
+//!   size for a step window mid-run.
+//! - [`CapOsc`] — oscillate a sequence-length cap on and off with a square
+//!   wave, thrashing the bucket ladder.
+//! - [`DataBurst`] — corrupt a fraction of batch tokens for a step window
+//!   (pure in `(seed, step)`, so every worker assembling the same step
+//!   wrecks the same slots).
+//! - [`StatsNan`] — force a NaN into one packed-stats channel on one step
+//!   (maps onto [`crate::runtime::StatsFault`] in the engine).
+//! - [`SpillFault`] — corrupt or fail the nth checkpoint-ring spill write
+//!   (exercises the rollback ring's deep-restore path).
+//!
+//! ## Determinism contract
+//!
+//! Injectors are *spec-pure*: every perturbation is a deterministic
+//! function of the [`InjectionSpec`] and the run seed — no wall clock, no
+//! ambient randomness, no cross-run state. An `InjectionSpec::none()` (or
+//! `inject: None`) run is **bit-identical** to a run without the harness
+//! compiled in at all, and the spec is part of `RunConfig`'s `Debug`
+//! output, so scenario configs fold into the coordinator's run-cache keys:
+//! two runs differing only in injection never share a cache entry.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg64;
+
+/// Force full-length (or any fixed-length) sequences for the first
+/// `steps` steps, regardless of the pacing schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LongTail {
+    /// number of initial steps affected
+    pub steps: usize,
+    /// forced sequence length (snapped onto the bucket ladder downstream)
+    pub seqlen: usize,
+}
+
+/// Multiply the learning rate by `mult` for steps `[at, at + steps)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LrShock {
+    pub at: usize,
+    pub steps: usize,
+    pub mult: f64,
+}
+
+/// Override the batch size for steps `[at, at + steps)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchShock {
+    pub at: usize,
+    pub steps: usize,
+    pub bsz: usize,
+}
+
+/// From step `from`, apply a seqlen cap of `len` on alternating
+/// `period`-step half-waves (off, on, off, on, …), thrashing the schedule
+/// up and down the bucket ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CapOsc {
+    pub from: usize,
+    pub period: usize,
+    pub len: usize,
+}
+
+/// Corrupt a uniform fraction of batch token slots for steps
+/// `[at, at + steps)` (see [`corrupt_tokens`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DataBurst {
+    pub at: usize,
+    pub steps: usize,
+    /// fraction of token slots replaced, in (0, 1]
+    pub fraction: f64,
+}
+
+/// Force `value = NaN` into one packed-stats channel on step `at` (relative
+/// to the run start). Channel indices follow the packed stats vector:
+/// 0=loss, 1=grad_l2, 2=var_l1, 3=var_max, 4=mom_l1, 5=clip_coef,
+/// 6..=9 = update-RMS groups (embed/early/late/final).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StatsNan {
+    pub at: usize,
+    pub channel: usize,
+}
+
+/// What the spill fault does to the targeted write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpillMode {
+    /// write succeeds but the bytes are corrupted (detected by checksum on
+    /// restore)
+    Corrupt,
+    /// write fails outright (I/O error)
+    Fail,
+}
+
+/// Sabotage the `nth` checkpoint-ring spill write of the run (0-based).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpillFault {
+    pub nth: usize,
+    pub mode: SpillMode,
+}
+
+/// One scenario: any combination of the injectors, all optional. The
+/// default / [`InjectionSpec::none`] spec perturbs nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct InjectionSpec {
+    pub longtail: Option<LongTail>,
+    pub lr_shock: Option<LrShock>,
+    pub batch_shock: Option<BatchShock>,
+    pub cap_osc: Option<CapOsc>,
+    pub data_burst: Option<DataBurst>,
+    pub stats_nan: Option<StatsNan>,
+    pub spill_fault: Option<SpillFault>,
+}
+
+impl InjectionSpec {
+    /// The no-op spec: injection-off runs must be bit-identical to runs
+    /// without the harness.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True when no injector is armed.
+    pub fn is_none(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Stable scenario label: active injector names joined with `+`
+    /// (`"none"` when empty). Used for incident-dump tags, TSV rows, and
+    /// run slugs.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<&str> = Vec::new();
+        if self.longtail.is_some() {
+            parts.push("longtail");
+        }
+        if self.lr_shock.is_some() {
+            parts.push("lr_shock");
+        }
+        if self.batch_shock.is_some() {
+            parts.push("batch_shock");
+        }
+        if self.cap_osc.is_some() {
+            parts.push("cap_osc");
+        }
+        if self.data_burst.is_some() {
+            parts.push("data_burst");
+        }
+        if self.stats_nan.is_some() {
+            parts.push("stats_nan");
+        }
+        if self.spill_fault.is_some() {
+            parts.push("spill");
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let Some(lt) = self.longtail {
+            if lt.steps == 0 || lt.seqlen < 8 {
+                bail!("longtail needs steps > 0 and seqlen >= 8 (got {lt:?})");
+            }
+        }
+        if let Some(s) = self.lr_shock {
+            if s.steps == 0 || !(s.mult > 0.0 && s.mult.is_finite()) {
+                bail!("lr_shock needs steps > 0 and a finite positive mult (got {s:?})");
+            }
+        }
+        if let Some(s) = self.batch_shock {
+            if s.steps == 0 || s.bsz == 0 {
+                bail!("batch_shock needs steps > 0 and bsz > 0 (got {s:?})");
+            }
+        }
+        if let Some(c) = self.cap_osc {
+            if c.period == 0 || c.len < 8 {
+                bail!("cap_osc needs period > 0 and len >= 8 (got {c:?})");
+            }
+        }
+        if let Some(d) = self.data_burst {
+            if d.steps == 0 || !(d.fraction > 0.0 && d.fraction <= 1.0) {
+                bail!("data_burst needs steps > 0 and fraction in (0, 1] (got {d:?})");
+            }
+        }
+        if let Some(n) = self.stats_nan {
+            if n.channel >= 10 {
+                bail!("stats_nan channel {} out of range (packed stats has 10)", n.channel);
+            }
+        }
+        Ok(())
+    }
+
+    /// Forced sequence length at `step` (pre-snap), if any. Replaces the
+    /// nominal pacing value; an autopilot cap still applies on top.
+    pub fn seqlen_override(&self, step: usize) -> Option<usize> {
+        let lt = self.longtail?;
+        (step < lt.steps).then_some(lt.seqlen)
+    }
+
+    /// Oscillating seqlen cap at `step` (pre-snap), if the square wave is
+    /// in its "on" half-period.
+    pub fn seqlen_cap(&self, step: usize) -> Option<usize> {
+        let c = self.cap_osc?;
+        if step < c.from {
+            return None;
+        }
+        (((step - c.from) / c.period) % 2 == 1).then_some(c.len)
+    }
+
+    /// Batch-size override at `step`, if any.
+    pub fn bsz_override(&self, step: usize) -> Option<usize> {
+        let s = self.batch_shock?;
+        (step >= s.at && step < s.at + s.steps).then_some(s.bsz)
+    }
+
+    /// LR multiplier at `step` (1.0 outside the shock window).
+    pub fn lr_mult(&self, step: usize) -> f64 {
+        match self.lr_shock {
+            Some(s) if step >= s.at && step < s.at + s.steps => s.mult,
+            _ => 1.0,
+        }
+    }
+
+    /// Fraction of token slots to corrupt at `step` (0.0 outside the
+    /// burst window).
+    pub fn corrupt_fraction(&self, step: usize) -> f64 {
+        match self.data_burst {
+            Some(d) if step >= d.at && step < d.at + d.steps => d.fraction,
+            _ => 0.0,
+        }
+    }
+
+    /// Parse the compact CLI/config syntax: semicolon-separated clauses,
+    /// each `name:key=val,key=val`. Example:
+    /// `longtail:steps=4,len=512;lr_shock:at=40,steps=4,mult=64`.
+    /// Clause names: `longtail`, `lr_shock`, `batch_shock`, `cap_osc`,
+    /// `data_burst`, `stats_nan`, `spill`. `none` (alone) is the empty spec.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut spec = Self::none();
+        let text = text.trim();
+        if text.is_empty() || text == "none" {
+            return Ok(spec);
+        }
+        for clause in text.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (name, body) = clause
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("injection clause '{clause}' missing ':'"))?;
+            let mut kv = std::collections::BTreeMap::new();
+            for pair in body.split(',') {
+                let (k, v) = pair
+                    .trim()
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("injection arg '{pair}' is not key=val"))?;
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+            let want = |k: &str| -> Result<String> {
+                kv.get(k)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("injection clause '{name}' missing '{k}='"))
+            };
+            let usz = |k: &str| -> Result<usize> {
+                want(k)?.parse().map_err(|_| anyhow::anyhow!("injection '{name}.{k}' not a usize"))
+            };
+            let flt = |k: &str| -> Result<f64> {
+                want(k)?.parse().map_err(|_| anyhow::anyhow!("injection '{name}.{k}' not a number"))
+            };
+            match name.trim() {
+                "longtail" => {
+                    spec.longtail = Some(LongTail { steps: usz("steps")?, seqlen: usz("len")? })
+                }
+                "lr_shock" => {
+                    spec.lr_shock =
+                        Some(LrShock { at: usz("at")?, steps: usz("steps")?, mult: flt("mult")? })
+                }
+                "batch_shock" => {
+                    spec.batch_shock =
+                        Some(BatchShock { at: usz("at")?, steps: usz("steps")?, bsz: usz("bsz")? })
+                }
+                "cap_osc" => {
+                    spec.cap_osc =
+                        Some(CapOsc { from: usz("from")?, period: usz("period")?, len: usz("len")? })
+                }
+                "data_burst" => {
+                    spec.data_burst = Some(DataBurst {
+                        at: usz("at")?,
+                        steps: usz("steps")?,
+                        fraction: flt("frac")?,
+                    })
+                }
+                "stats_nan" => {
+                    spec.stats_nan = Some(StatsNan { at: usz("at")?, channel: usz("channel")? })
+                }
+                "spill" => {
+                    let mode = match want("mode")?.as_str() {
+                        "corrupt" => SpillMode::Corrupt,
+                        "fail" => SpillMode::Fail,
+                        m => bail!("spill mode '{m}' is not 'corrupt' or 'fail'"),
+                    };
+                    spec.spill_fault = Some(SpillFault { nth: usz("nth")?, mode })
+                }
+                other => bail!("unknown injection clause '{other}'"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Deterministically corrupt `fraction` of the token slots in a batch:
+/// each slot is independently replaced with a uniform-random vocab id with
+/// probability `fraction`, from a PCG stream keyed by `(seed, step)` only.
+/// The same spec and seed always wreck the same slots with the same
+/// replacement tokens, independent of which worker assembles the batch —
+/// this is what keeps data-burst runs replayable and cacheable.
+pub fn corrupt_tokens(tokens: &mut [i32], vocab: usize, seed: u64, step: usize, fraction: f64) {
+    if fraction <= 0.0 || vocab == 0 {
+        return;
+    }
+    let mut rng = Pcg64::new(seed ^ (step as u64).wrapping_mul(0x9e3779b97f4a7c15) ^ 0xb4457);
+    for t in tokens.iter_mut() {
+        if rng.f64() < fraction {
+            *t = rng.usize_below(vocab) as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_spec_is_inert() {
+        let s = InjectionSpec::none();
+        assert!(s.is_none());
+        assert_eq!(s.label(), "none");
+        s.validate().unwrap();
+        for step in 0..100 {
+            assert_eq!(s.seqlen_override(step), None);
+            assert_eq!(s.seqlen_cap(step), None);
+            assert_eq!(s.bsz_override(step), None);
+            assert_eq!(s.lr_mult(step), 1.0);
+            assert_eq!(s.corrupt_fraction(step), 0.0);
+        }
+    }
+
+    #[test]
+    fn windows_are_half_open() {
+        let s = InjectionSpec {
+            longtail: Some(LongTail { steps: 3, seqlen: 512 }),
+            lr_shock: Some(LrShock { at: 10, steps: 2, mult: 64.0 }),
+            batch_shock: Some(BatchShock { at: 20, steps: 2, bsz: 256 }),
+            data_burst: Some(DataBurst { at: 30, steps: 1, fraction: 0.5 }),
+            ..InjectionSpec::none()
+        };
+        s.validate().unwrap();
+        assert_eq!(s.seqlen_override(0), Some(512));
+        assert_eq!(s.seqlen_override(2), Some(512));
+        assert_eq!(s.seqlen_override(3), None);
+        assert_eq!(s.lr_mult(9), 1.0);
+        assert_eq!(s.lr_mult(10), 64.0);
+        assert_eq!(s.lr_mult(11), 64.0);
+        assert_eq!(s.lr_mult(12), 1.0);
+        assert_eq!(s.bsz_override(19), None);
+        assert_eq!(s.bsz_override(21), Some(256));
+        assert_eq!(s.bsz_override(22), None);
+        assert_eq!(s.corrupt_fraction(29), 0.0);
+        assert_eq!(s.corrupt_fraction(30), 0.5);
+        assert_eq!(s.corrupt_fraction(31), 0.0);
+        assert_eq!(s.label(), "longtail+lr_shock+batch_shock+data_burst");
+    }
+
+    #[test]
+    fn cap_oscillates_as_a_square_wave() {
+        let s = InjectionSpec {
+            cap_osc: Some(CapOsc { from: 10, period: 5, len: 8 }),
+            ..InjectionSpec::none()
+        };
+        s.validate().unwrap();
+        // before `from`: never capped
+        assert_eq!(s.seqlen_cap(9), None);
+        // first half-wave [10, 15): off — the run proceeds at schedule
+        for step in 10..15 {
+            assert_eq!(s.seqlen_cap(step), None, "step {step}");
+        }
+        // second half-wave [15, 20): capped
+        for step in 15..20 {
+            assert_eq!(s.seqlen_cap(step), Some(8), "step {step}");
+        }
+        // and off again
+        assert_eq!(s.seqlen_cap(20), None);
+        assert_eq!(s.seqlen_cap(25), Some(8));
+    }
+
+    #[test]
+    fn parse_round_trips_the_full_matrix() {
+        let text = "longtail:steps=4,len=512;lr_shock:at=40,steps=4,mult=64;\
+                    batch_shock:at=50,steps=2,bsz=256;cap_osc:from=60,period=10,len=8;\
+                    data_burst:at=70,steps=3,frac=0.25;stats_nan:at=80,channel=7;\
+                    spill:nth=1,mode=corrupt";
+        let s = InjectionSpec::parse(text).unwrap();
+        assert_eq!(s.longtail, Some(LongTail { steps: 4, seqlen: 512 }));
+        assert_eq!(s.lr_shock, Some(LrShock { at: 40, steps: 4, mult: 64.0 }));
+        assert_eq!(s.batch_shock, Some(BatchShock { at: 50, steps: 2, bsz: 256 }));
+        assert_eq!(s.cap_osc, Some(CapOsc { from: 60, period: 10, len: 8 }));
+        assert_eq!(s.data_burst, Some(DataBurst { at: 70, steps: 3, fraction: 0.25 }));
+        assert_eq!(s.stats_nan, Some(StatsNan { at: 80, channel: 7 }));
+        assert_eq!(s.spill_fault, Some(SpillFault { nth: 1, mode: SpillMode::Corrupt }));
+        assert_eq!(InjectionSpec::parse("none").unwrap(), InjectionSpec::none());
+        assert_eq!(InjectionSpec::parse("  ").unwrap(), InjectionSpec::none());
+        assert_eq!(InjectionSpec::parse("spill:nth=0,mode=fail").unwrap().spill_fault,
+            Some(SpillFault { nth: 0, mode: SpillMode::Fail }));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(InjectionSpec::parse("bogus:x=1").is_err());
+        assert!(InjectionSpec::parse("lr_shock:at=40").is_err()); // missing keys
+        assert!(InjectionSpec::parse("lr_shock:at=40,steps=0,mult=2").is_err()); // validate
+        assert!(InjectionSpec::parse("data_burst:at=1,steps=1,frac=1.5").is_err());
+        assert!(InjectionSpec::parse("stats_nan:at=1,channel=10").is_err());
+        assert!(InjectionSpec::parse("spill:nth=1,mode=maybe").is_err());
+        assert!(InjectionSpec::parse("lr_shock").is_err()); // no ':'
+    }
+
+    #[test]
+    fn corrupt_tokens_is_pure_in_seed_and_step() {
+        let clean: Vec<i32> = (0..4096).map(|i| i % 97).collect();
+        let mut a = clean.clone();
+        let mut b = clean.clone();
+        corrupt_tokens(&mut a, 256, 42, 7, 0.3);
+        corrupt_tokens(&mut b, 256, 42, 7, 0.3);
+        assert_eq!(a, b, "same (seed, step, fraction): identical corruption");
+        assert!(a.iter().all(|&t| (0..256).contains(&t)));
+        let n_changed = a.iter().zip(&clean).filter(|(x, y)| x != y).count();
+        // ~30% of 4096 slots, minus collisions where the random token
+        // happens to equal the original
+        assert!(n_changed > 900 && n_changed < 1500, "changed {n_changed}");
+
+        // different step (or seed) => different slots
+        let mut c = clean.clone();
+        corrupt_tokens(&mut c, 256, 42, 8, 0.3);
+        assert_ne!(a, c);
+        let mut d = clean.clone();
+        corrupt_tokens(&mut d, 256, 43, 7, 0.3);
+        assert_ne!(a, d);
+
+        // zero fraction is a strict no-op
+        let mut e = clean.clone();
+        corrupt_tokens(&mut e, 256, 42, 7, 0.0);
+        assert_eq!(e, clean);
+    }
+}

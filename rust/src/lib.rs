@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod exp;
+pub mod inject;
 pub mod obs;
 pub mod pipeline;
 pub mod schedule;

@@ -87,6 +87,10 @@ fn build_config(args: &mut Args) -> Result<RunConfig> {
     if args.flag("autopilot") {
         cfg.stability = Some(slw::stability::StabilityPolicy::default());
     }
+    if let Some(spec) = args.opt_str("inject") {
+        let spec = slw::inject::InjectionSpec::parse(&spec)?;
+        cfg.inject = if spec.is_none() { None } else { Some(spec) };
+    }
     cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
     cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
@@ -307,6 +311,8 @@ fn print_help() {
                    [--shortformer --switch N] [--bsz-warmup] [--tokens N]\n\
                    [--eval-every N] [--seed N] [--save ckpt] [--recycle]\n\
                    [--autopilot]  (online sentinel + rollback + closed-loop pacing)\n\
+                   [--inject spec]  (deterministic fault injection, e.g.\n\
+                   \"lr_shock:at=40,steps=10,mult=30;stats_nan:at=60,channel=0\")\n\
                    [--workers N]  (prefetch threads; 0 = inline, same trajectory —\n\
                    adaptive and autopilot runs stay threaded via plan re-publication)\n\
                    [--trace out.json]  (Chrome/Perfetto span trace + per-step\n\
@@ -315,7 +321,7 @@ fn print_help() {
            probes  --model tiny [--ckpt file] [--shots K] [--batches N]\n\
            data    --kind mixture|markov|induction --tokens N --out file\n\
            exp     <fig1|table1|table2|table3|fig2|fig3|fig4|fig5_6|table4|table5|\n\
-                    fig8|fig10|table8_9|stability|all> [--quick] [--jobs N]\n\
+                    fig8|fig10|table8_9|stability|scenarios|all> [--quick] [--jobs N]\n\
                     [--seeds N] [--no-cache] [--out results/] [--trace out.json]\n\
            info    list artifact sets\n\
          \n\

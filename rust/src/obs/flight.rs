@@ -7,6 +7,12 @@
 //! self-contained JSON artifact at `<root>/<run-slug>/<step>.json`; repeated
 //! interventions at the same step (the autopilot retrying under shorter
 //! caps) are deduplicated so a rollback storm produces one dump per step.
+//!
+//! The per-run directory is **rotated**: after each dump, only the newest
+//! [`FlightRecorder::DEFAULT_MAX_DUMPS`] incident files (by the step number
+//! in the filename) are kept, so a scenario sweep that rolls back hundreds
+//! of times cannot fill the disk. Dumps from injection-harness runs carry
+//! the active scenario label under the `"scenario"` key (null otherwise).
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -28,18 +34,38 @@ pub struct FlightRecorder {
     window: usize,
     /// trailing ring events included per dump
     max_events: usize,
+    /// newest dumps kept in the run directory (older files are deleted)
+    max_dumps: usize,
+    /// active injection scenario, tagged into every dump (None = no harness)
+    scenario: Option<String>,
     dumped: BTreeSet<usize>,
 }
 
 impl FlightRecorder {
+    /// Default rotation cap: incident files kept per run directory.
+    pub const DEFAULT_MAX_DUMPS: usize = 32;
+
     pub fn new<P: AsRef<Path>>(dir: P, run: &str) -> Self {
         FlightRecorder {
             dir: dir.as_ref().to_path_buf(),
             run: run.to_string(),
             window: 50,
             max_events: 256,
+            max_dumps: Self::DEFAULT_MAX_DUMPS,
+            scenario: None,
             dumped: BTreeSet::new(),
         }
+    }
+
+    /// Override the rotation cap (≥ 1; mainly for tests).
+    pub fn with_max_dumps(mut self, n: usize) -> Self {
+        self.max_dumps = n.max(1);
+        self
+    }
+
+    /// Tag every subsequent dump with the active injection scenario.
+    pub fn set_scenario(&mut self, label: Option<String>) {
+        self.scenario = label;
     }
 
     /// Dump an incident at `step`. `trigger` is the stats of the step that
@@ -80,6 +106,7 @@ impl FlightRecorder {
             ("run", json::s(&self.run)),
             ("step", json::num(step as f64)),
             ("reason", json::s(reason)),
+            ("scenario", self.scenario.as_deref().map(json::s).unwrap_or(Json::Null)),
             ("trigger", stats_json(trigger)),
             ("detail", json::obj(detail)),
             ("window", window),
@@ -90,7 +117,36 @@ impl FlightRecorder {
         std::fs::write(&path, doc.to_string())
             .with_context(|| format!("writing incident {}", path.display()))?;
         crate::info!("flight recorder: {} incident at step {} -> {}", reason, step, path.display());
+        self.rotate();
         Ok(Some(path))
+    }
+
+    /// Keep only the newest `max_dumps` incident files (ordered by the step
+    /// number in the filename). Rotation is best-effort: an unreadable dir
+    /// or an undeletable file must never fail the dump that triggered it.
+    fn rotate(&self) {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        let mut steps: Vec<(usize, PathBuf)> = entries
+            .flatten()
+            .filter_map(|e| {
+                let p = e.path();
+                let step = p
+                    .file_name()?
+                    .to_str()?
+                    .strip_suffix(".json")?
+                    .parse::<usize>()
+                    .ok()?;
+                Some((step, p))
+            })
+            .collect();
+        if steps.len() <= self.max_dumps {
+            return;
+        }
+        steps.sort_unstable_by_key(|(s, _)| *s);
+        let n_drop = steps.len() - self.max_dumps;
+        for (_, p) in steps.into_iter().take(n_drop) {
+            std::fs::remove_file(p).ok();
+        }
     }
 }
 
@@ -115,6 +171,7 @@ mod tests {
                     var_max: 0.1,
                     mom_l1: 1.0,
                     clip_coef: 1.0,
+                    ..Default::default()
                 },
                 sim_seconds: 1.0,
             });
@@ -123,7 +180,10 @@ mod tests {
     }
 
     fn trigger() -> StepStats {
-        StepStats { loss: f32::NAN, grad_l2: 9.0, var_l1: 9.0, var_max: 9.0, mom_l1: 9.0, clip_coef: 0.1 }
+        StepStats {
+            loss: f32::NAN, grad_l2: 9.0, var_l1: 9.0, var_max: 9.0, mom_l1: 9.0, clip_coef: 0.1,
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -144,6 +204,7 @@ mod tests {
         assert_eq!(doc.get("run").unwrap().str().unwrap(), "demo");
         assert_eq!(doc.get("step").unwrap().usize().unwrap(), 80);
         assert_eq!(doc.get("reason").unwrap().str().unwrap(), "rollback");
+        assert_eq!(*doc.get("scenario").unwrap(), Json::Null, "no harness: null tag");
         assert!(json::get_nf(doc.get("trigger").unwrap().get("loss").unwrap()).unwrap().is_nan());
         assert_eq!(doc.get("detail").unwrap().get("restored_step").unwrap().usize().unwrap(), 70);
         // 50-record window ending at the most recent recorded step
@@ -176,6 +237,51 @@ mod tests {
         assert_eq!(events[0].get("ph").unwrap().str().unwrap(), "i");
         // short history: the window is everything recorded
         assert_eq!(doc.get("steps").unwrap().arr().unwrap().len(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_keeps_only_the_newest_dumps() {
+        let dir = std::env::temp_dir().join(format!("slw_obs_flight_rot_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut fr = FlightRecorder::new(&dir, "demo").with_max_dumps(3);
+        let h = history(5);
+        let obs = Obs::off();
+        // steps deliberately out of lexicographic order (9 > 10 as strings)
+        // to prove rotation sorts numerically by step
+        for step in [9usize, 10, 100, 2, 30] {
+            fr.incident(step, "rollback", &trigger(), vec![], &h, &obs).unwrap().unwrap();
+        }
+        let mut kept: Vec<usize> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter_map(|e| {
+                e.path().file_stem()?.to_str()?.parse().ok()
+            })
+            .collect();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![10, 30, 100], "newest 3 by step number survive");
+        // a stray non-incident file is left alone and doesn't break rotation
+        std::fs::write(dir.join("notes.txt"), b"x").unwrap();
+        fr.incident(200, "rollback", &trigger(), vec![], &h, &obs).unwrap().unwrap();
+        assert!(dir.join("notes.txt").exists());
+        assert!(!dir.join("10.json").exists());
+        assert!(dir.join("200.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scenario_tag_rides_every_dump() {
+        let dir = std::env::temp_dir().join(format!("slw_obs_flight_sc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut fr = FlightRecorder::new(&dir, "demo");
+        fr.set_scenario(Some("lr_shock".to_string()));
+        let h = history(5);
+        let path = fr.incident(5, "rollback", &trigger(), vec![], &h, &Obs::off())
+            .unwrap()
+            .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("scenario").unwrap().str().unwrap(), "lr_shock");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -60,7 +60,7 @@ impl MetricsWriter {
     }
 }
 
-/// The six engine stats as a JSON object (`num_nf`: NaN/inf survive encoding).
+/// The ten engine stats as a JSON object (`num_nf`: NaN/inf survive encoding).
 pub fn stats_json(s: &StepStats) -> Json {
     json::obj(vec![
         ("loss", json::num_nf(s.loss as f64)),
@@ -69,6 +69,10 @@ pub fn stats_json(s: &StepStats) -> Json {
         ("var_max", json::num_nf(s.var_max as f64)),
         ("mom_l1", json::num_nf(s.mom_l1 as f64)),
         ("clip_coef", json::num_nf(s.clip_coef as f64)),
+        ("urms_embed", json::num_nf(s.urms_embed as f64)),
+        ("urms_early", json::num_nf(s.urms_early as f64)),
+        ("urms_late", json::num_nf(s.urms_late as f64)),
+        ("urms_final", json::num_nf(s.urms_final as f64)),
     ])
 }
 
@@ -106,6 +110,10 @@ pub fn step_row(
         ("var_max", json::num_nf(rec.stats.var_max as f64)),
         ("mom_l1", json::num_nf(rec.stats.mom_l1 as f64)),
         ("clip_coef", json::num_nf(rec.stats.clip_coef as f64)),
+        ("urms_embed", json::num_nf(rec.stats.urms_embed as f64)),
+        ("urms_early", json::num_nf(rec.stats.urms_early as f64)),
+        ("urms_late", json::num_nf(rec.stats.urms_late as f64)),
+        ("urms_final", json::num_nf(rec.stats.urms_final as f64)),
         ("sim_s", json::num(rec.sim_seconds)),
         ("host_transfers", json::num(transfers as f64)),
         ("host_bytes", json::num(bytes as f64)),
@@ -136,6 +144,10 @@ mod tests {
                 var_max: f32::NAN,
                 mom_l1: 0.5,
                 clip_coef: 1.0,
+                urms_embed: 0.01,
+                urms_early: 0.02,
+                urms_late: 0.03,
+                urms_final: 0.04,
             },
             sim_seconds: 3.6,
         }
@@ -153,6 +165,7 @@ mod tests {
         assert_eq!(back.get("verdict").unwrap().str().unwrap(), "healthy");
         assert_eq!(back.get("lr_scale").unwrap().num().unwrap(), 0.5);
         assert!(json::get_nf(back.get("var_max").unwrap()).unwrap().is_nan());
+        assert_eq!(back.get("urms_late").unwrap().num().unwrap(), 0.03f32 as f64);
         // open-loop rows have a null verdict
         let row = step_row(&sample_record(), 0, 0, &PrefetchStats::default(), None, 1.0);
         assert_eq!(*row.get("verdict").unwrap(), Json::Null);

@@ -20,6 +20,7 @@
 use anyhow::Result;
 
 use crate::data::dataset::{RowCursor, Sampler, SequenceIndex, TokenStore};
+use crate::inject::{corrupt_tokens, InjectionSpec};
 use crate::pipeline::pacing::BucketedPacing;
 use crate::pipeline::plan::StepSpec;
 
@@ -113,6 +114,12 @@ pub struct Assembler {
     cursor: RowCursor,
     mode: TruncationMode,
     full_seqlen: usize,
+    /// run seed — also keys the data-burst corruption stream, so the fault
+    /// stays inside the `(spec, seed)` purity contract
+    seed: u64,
+    /// data-level fault injection (scenario lab); `None` leaves assembly
+    /// bit-identical to a build without the harness
+    inject: Option<InjectionSpec>,
     leftovers: Vec<i32>,
     /// Recycle mode's sequential row position. The planner's projected
     /// `rows_before` assumes `bsz` fresh rows per step (the Drop invariant);
@@ -133,10 +140,20 @@ impl Assembler {
             cursor: RowCursor::new(index, seed),
             mode,
             full_seqlen,
+            seed,
+            inject: None,
             leftovers: Vec::new(),
             next_row: 0,
             pending_dropped: 0,
         }
+    }
+
+    /// Arm the data-level injectors (corrupted-token bursts). Corruption is
+    /// applied after assembly as a pure function of `(seed, spec.step)`, so
+    /// every worker building the same step wrecks the same slots.
+    pub fn with_inject(mut self, inject: Option<InjectionSpec>) -> Self {
+        self.inject = inject;
+        self
     }
 
     /// Build the batch for `spec`. See the type docs for the determinism
@@ -149,7 +166,7 @@ impl Assembler {
             TruncationMode::Recycle => self.next_row,
         };
         let cursor = &mut self.cursor;
-        let (tokens, dropped, fresh_rows) = fill_batch(
+        let (mut tokens, dropped, fresh_rows) = fill_batch(
             self.mode,
             &mut self.leftovers,
             full_width,
@@ -158,6 +175,12 @@ impl Assembler {
             |i| cursor.window_at(store, base_row + i as u64),
         );
         self.next_row = base_row + fresh_rows as u64;
+        if let Some(inj) = &self.inject {
+            let frac = inj.corrupt_fraction(spec.step);
+            if frac > 0.0 {
+                corrupt_tokens(&mut tokens, store.vocab(), self.seed, spec.step, frac);
+            }
+        }
         Batch {
             bsz: spec.bsz,
             seqlen: spec.seqlen,
@@ -400,6 +423,44 @@ mod tests {
         assert_eq!(b3.fresh_rows, 4);
         assert_eq!(b3.tokens, b0.tokens, "replay after reseek is deterministic");
         assert!(b3.dropped_tokens > 0, "cleared leftovers must be counted as dropped");
+    }
+
+    #[test]
+    fn data_burst_corruption_is_deterministic_and_windowed() {
+        use crate::inject::{DataBurst, InjectionSpec};
+        let (store, _) = setup(64);
+        let idx = store.index(64, 0.1).unwrap();
+        let inj = InjectionSpec {
+            data_burst: Some(DataBurst { at: 1, steps: 1, fraction: 0.5 }),
+            ..InjectionSpec::none()
+        };
+        let mut plain = Assembler::new(idx.clone(), 3, TruncationMode::Drop);
+        let mut a = Assembler::new(idx.clone(), 3, TruncationMode::Drop).with_inject(Some(inj.clone()));
+        let mut b = Assembler::new(idx.clone(), 3, TruncationMode::Drop).with_inject(Some(inj));
+        // outside the burst window: byte-for-byte the clean batch
+        let s0 = spec(0, 16, 4, 0);
+        assert_eq!(a.assemble(&s0, &store).tokens, plain.assemble(&s0, &store).tokens);
+        // inside: corrupted, identically across independent workers
+        let s1 = spec(1, 16, 4, 4);
+        let clean = plain.assemble(&s1, &store);
+        let ba = a.assemble(&s1, &store);
+        let bb = b.assemble(&s1, &store);
+        assert_eq!(ba.tokens, bb.tokens, "corruption must be worker-independent");
+        assert_ne!(ba.tokens, clean.tokens);
+        let n_changed = ba.tokens.iter().zip(&clean.tokens).filter(|(x, y)| x != y).count();
+        assert!(n_changed > 10, "fraction 0.5 of {} slots, changed {n_changed}", ba.tokens.len());
+        assert!(ba.tokens.iter().all(|&t| (t as usize) < store.vocab()));
+        // window closed again
+        let s2 = spec(2, 16, 4, 8);
+        assert_eq!(a.assemble(&s2, &store).tokens, plain.assemble(&s2, &store).tokens);
+        // the no-op spec is bit-identical to no harness at all
+        let mut none = Assembler::new(idx.clone(), 3, TruncationMode::Drop)
+            .with_inject(Some(InjectionSpec::none()));
+        let mut plain2 = Assembler::new(idx, 3, TruncationMode::Drop);
+        for (step, rows) in [(0usize, 0u64), (1, 4), (2, 8)] {
+            let s = spec(step, 16, 4, rows);
+            assert_eq!(none.assemble(&s, &store).tokens, plain2.assemble(&s, &store).tokens);
+        }
     }
 
     #[test]

@@ -234,8 +234,16 @@ impl BucketedPacing {
         if let Some(cap) = self.state.override_len() {
             raw = raw.min(cap);
         }
-        let aligned = Pacing::align8(raw);
-        // round down to nearest bucket
+        self.snap(raw)
+    }
+
+    /// Snap an arbitrary requested length onto the ladder: multiple-of-8
+    /// alignment, then round *down* to the nearest lowered bucket (never
+    /// longer than asked). The injection harness routes its forced lengths
+    /// through this so a faulted schedule still only requests executables
+    /// that actually exist.
+    pub fn snap(&self, len: usize) -> usize {
+        let aligned = Pacing::align8(len);
         match self.buckets.binary_search(&aligned) {
             Ok(i) => self.buckets[i],
             Err(0) => self.buckets[0],

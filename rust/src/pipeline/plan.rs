@@ -21,6 +21,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::inject::InjectionSpec;
+
 use super::bsz_warmup::BszWarmup;
 use super::pacing::{BucketedPacing, Pacing};
 
@@ -65,11 +67,22 @@ pub struct Planner {
     bszw: BszWarmup,
     budget: Budget,
     cursor: PlanCursor,
+    /// schedule-level fault injection (scenario lab); `None` leaves the
+    /// planner bit-identical to a build without the harness
+    inject: Option<InjectionSpec>,
 }
 
 impl Planner {
     pub fn new(pacing: BucketedPacing, bszw: BszWarmup, budget: Budget) -> Self {
-        Self { pacing, bszw, budget, cursor: PlanCursor::default() }
+        Self { pacing, bszw, budget, cursor: PlanCursor::default(), inject: None }
+    }
+
+    /// Arm the schedule-level injectors (longtail / cap oscillation /
+    /// batch shock). The spec is consulted per step inside `spec_at`, so
+    /// projection, commit, and rollback-replay all see the same faults.
+    pub fn with_inject(mut self, inject: Option<InjectionSpec>) -> Self {
+        self.inject = inject;
+        self
     }
 
     pub fn cursor(&self) -> PlanCursor {
@@ -120,13 +133,27 @@ impl Planner {
     }
 
     fn spec_at(&self, c: &PlanCursor) -> StepSpec {
-        StepSpec {
-            step: c.step,
-            seqlen: self.pacing.seqlen_at(c.step),
-            bsz: self.bszw.bsz_at(c.tokens),
-            tokens_before: c.tokens,
-            rows_before: c.rows,
+        let mut seqlen = self.pacing.seqlen_at(c.step);
+        let mut bsz = self.bszw.bsz_at(c.tokens);
+        if let Some(inj) = &self.inject {
+            if let Some(forced) = inj.seqlen_override(c.step) {
+                // the long-tail fault replaces the nominal schedule, but an
+                // autopilot cap still wins — recovery must be able to
+                // shorten even a sabotaged schedule
+                let capped = match self.pacing.override_len() {
+                    Some(cap) => forced.min(cap),
+                    None => forced,
+                };
+                seqlen = self.pacing.snap(capped);
+            }
+            if let Some(cap) = inj.seqlen_cap(c.step) {
+                seqlen = seqlen.min(self.pacing.snap(cap));
+            }
+            if let Some(b) = inj.bsz_override(c.step) {
+                bsz = b;
+            }
         }
+        StepSpec { step: c.step, seqlen, bsz, tokens_before: c.tokens, rows_before: c.rows }
     }
 
     /// Advance the cursor over an executed step. `fresh_rows` is the number
@@ -341,6 +368,68 @@ mod tests {
         assert_eq!(capped.len(), nominal.len());
         pl.set_cap(None);
         assert_eq!(pl.tail().unwrap(), nominal);
+    }
+
+    #[test]
+    fn longtail_injection_forces_early_full_length() {
+        use crate::inject::{InjectionSpec, LongTail};
+        let spec = InjectionSpec {
+            longtail: Some(LongTail { steps: 3, seqlen: 64 }),
+            ..InjectionSpec::none()
+        };
+        let mut pl = Planner::new(pacing(8, 10), BszWarmup::constant(4), Budget::Steps(20))
+            .with_inject(Some(spec));
+        let plan = pl.tail().unwrap();
+        // the paper's init pathology: full-length batches while the
+        // schedule wanted the 8-token warmup
+        assert_eq!(plan[0].seqlen, 64);
+        assert_eq!(plan[2].seqlen, 64);
+        // step 3 falls back to the nominal ramp
+        assert!(plan[3].seqlen < 64);
+        // token accounting follows the faulted lengths
+        assert_eq!(plan[1].tokens_before, 64 * 4);
+        // an autopilot cap still beats the fault: recovery can shorten
+        // even a sabotaged schedule
+        pl.set_cap(Some(16));
+        let capped = pl.tail().unwrap();
+        assert_eq!(capped[0].seqlen, 16);
+        // a None injection is bit-identical to no harness at all
+        let plain = Planner::new(pacing(8, 10), BszWarmup::constant(4), Budget::Steps(20));
+        let with_none = plain.clone().with_inject(Some(InjectionSpec::none()));
+        assert_eq!(plain.tail().unwrap(), with_none.tail().unwrap());
+    }
+
+    #[test]
+    fn cap_oscillation_thrashes_the_ladder() {
+        use crate::inject::{CapOsc, InjectionSpec};
+        let spec = InjectionSpec {
+            cap_osc: Some(CapOsc { from: 0, period: 2, len: 8 }),
+            ..InjectionSpec::none()
+        };
+        let p = BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![8, 16, 24, 32, 48, 64])
+            .unwrap();
+        let pl = Planner::new(p, BszWarmup::constant(4), Budget::Steps(8))
+            .with_inject(Some(spec));
+        let lens: Vec<usize> = pl.tail().unwrap().iter().map(|s| s.seqlen).collect();
+        assert_eq!(lens, vec![64, 64, 8, 8, 64, 64, 8, 8]);
+    }
+
+    #[test]
+    fn batch_shock_overrides_bsz_and_token_accounting() {
+        use crate::inject::{BatchShock, InjectionSpec};
+        let spec = InjectionSpec {
+            batch_shock: Some(BatchShock { at: 2, steps: 2, bsz: 32 }),
+            ..InjectionSpec::none()
+        };
+        let p = BucketedPacing::new(Pacing::Constant { seqlen: 64 }, vec![8, 64]).unwrap();
+        let pl = Planner::new(p, BszWarmup::constant(4), Budget::Steps(6))
+            .with_inject(Some(spec));
+        let plan = pl.tail().unwrap();
+        assert_eq!(plan.iter().map(|s| s.bsz).collect::<Vec<_>>(), vec![4, 4, 32, 32, 4, 4]);
+        // tokens_before reflects the shocked steps' extra consumption
+        assert_eq!(plan[3].tokens_before, (2 * 4 + 32) as u64 * 64);
+        // rows advance by the shocked bsz under the Drop projection
+        assert_eq!(plan[3].rows_before, 2 * 4 + 32);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Result};
 
 use crate::data::dataset::{SequenceIndex, TokenStore};
+use crate::inject::InjectionSpec;
 use crate::obs::Obs;
 use crate::pipeline::batcher::{Assembler, Batch, TruncationMode};
 use crate::pipeline::plan::StepSpec;
@@ -124,13 +125,16 @@ impl Prefetcher {
         seed: u64,
         truncation: TruncationMode,
     ) -> Result<Self> {
-        Self::spawn_obs(store, index, tail, n_workers, depth, seed, truncation, Obs::off())
+        Self::spawn_obs(store, index, tail, n_workers, depth, seed, truncation, Obs::off(), None)
     }
 
-    /// [`Prefetcher::spawn`] with a telemetry handle: workers record
-    /// `assemble` spans, the consumer records re-plan instants and
-    /// stale-drop / pending-depth counters. Tracing only observes — the
-    /// batch stream is bit-identical with `Obs::off()`.
+    /// [`Prefetcher::spawn`] with a telemetry handle and an optional
+    /// fault-injection spec: workers record `assemble` spans, the consumer
+    /// records re-plan instants and stale-drop / pending-depth counters.
+    /// Tracing only observes — the batch stream is bit-identical with
+    /// `Obs::off()`. The injection spec is handed to every assembler
+    /// (worker or inline) so data-level faults stay spec-pure; `None`
+    /// leaves the stream bit-identical to a harness-free build.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn_obs(
         store: Arc<TokenStore>,
@@ -141,6 +145,7 @@ impl Prefetcher {
         seed: u64,
         truncation: TruncationMode,
         obs: Obs,
+        inject: Option<InjectionSpec>,
     ) -> Result<Self> {
         let n_workers = if truncation == TruncationMode::Recycle && n_workers > 0 {
             crate::info!(
@@ -153,7 +158,7 @@ impl Prefetcher {
         };
         let tail = Arc::new(tail);
         let mode = if n_workers == 0 {
-            Mode::Inline(Assembler::new(index, seed, truncation))
+            Mode::Inline(Assembler::new(index, seed, truncation).with_inject(inject.clone()))
         } else {
             let shared = Arc::new(SharedState {
                 queue: Mutex::new(WorkQueue {
@@ -173,8 +178,9 @@ impl Prefetcher {
                 let store = store.clone();
                 let index = index.clone();
                 let obs = obs.clone();
+                let inject = inject.clone();
                 handles.push(std::thread::spawn(move || {
-                    worker_loop(shared, tx, store, index, seed, obs);
+                    worker_loop(shared, tx, store, index, seed, obs, inject);
                 }));
             }
             Mode::Threaded(Threaded { shared, rx, pending: BTreeMap::new(), handles })
@@ -368,10 +374,11 @@ fn worker_loop(
     index: SequenceIndex,
     seed: u64,
     obs: Obs,
+    inject: Option<InjectionSpec>,
 ) {
     // workers only serve Drop-mode plans (Recycle runs inline), so assembly
     // is spec-pure and this per-worker assembler carries no schedule state
-    let mut asm = Assembler::new(index, seed, TruncationMode::Drop);
+    let mut asm = Assembler::new(index, seed, TruncationMode::Drop).with_inject(inject);
     loop {
         let (generation, spec) = {
             let mut q = shared.queue.lock().unwrap();
@@ -552,6 +559,40 @@ mod tests {
         pf.extend(vec![]);
         assert_eq!(pf.stats().extended, 1);
         assert!(pf.next_batch().unwrap().is_none());
+    }
+
+    #[test]
+    fn injected_streams_match_across_threading_modes() {
+        use crate::inject::{DataBurst, InjectionSpec};
+        let (store, index, plan) = setup(20);
+        let inj = Some(InjectionSpec {
+            data_burst: Some(DataBurst { at: 3, steps: 4, fraction: 0.5 }),
+            ..InjectionSpec::none()
+        });
+        let mut threaded = Prefetcher::spawn_obs(
+            store.clone(), index.clone(), plan.clone(), 3, 2, 7,
+            TruncationMode::Drop, Obs::off(), inj.clone(),
+        )
+        .unwrap();
+        let mut inline = Prefetcher::spawn_obs(
+            store.clone(), index.clone(), plan.clone(), 0, 2, 7,
+            TruncationMode::Drop, Obs::off(), inj,
+        )
+        .unwrap();
+        let a = drain(&mut threaded);
+        let b = drain(&mut inline);
+        assert_eq!(a.len(), b.len());
+        for ((sa, ba), (_, bb)) in a.iter().zip(&b) {
+            assert_eq!(ba.tokens, bb.tokens, "step {}", sa.step);
+        }
+        // and the burst actually fired: compare step 3 against a clean run
+        let mut clean = Prefetcher::spawn(
+            store, index, plan, 0, 2, 7, TruncationMode::Drop,
+        )
+        .unwrap();
+        let c = drain(&mut clean);
+        assert_ne!(a[3].1.tokens, c[3].1.tokens, "burst step must differ");
+        assert_eq!(a[0].1.tokens, c[0].1.tokens, "pre-burst step must not");
     }
 
     #[test]

@@ -17,8 +17,10 @@
 //!
 //! 1. the `[bsz, seqlen+1]` i32 token batch up (`4·bsz·(seqlen+1)` bytes);
 //! 2. the packed `f32[3]` step/lr/clip knob vector up ([`KNOB_BYTES`]);
-//! 3. the packed `f32[6]` stats tensor down ([`STATS_BYTES`]) — the six
-//!    [`StepStats`] scalars, and nothing else, come back.
+//! 3. the packed `f32[10]` stats tensor down ([`STATS_BYTES`]) — the ten
+//!    [`StepStats`] scalars (paper instrumentation + the four
+//!    per-layer-group update-RMS sentinel channels), and nothing else,
+//!    come back.
 //!
 //! An eval step is one token upload plus three result readbacks (sum_nll,
 //! per-position nll, correctness) — four crossings, O(batch·seqlen).
@@ -33,9 +35,16 @@
 //! `sync_bytes` count the boundary's, so tests and the `engine_residency`
 //! bench can assert the warm path moves zero state bytes.
 //!
-//! This requires output-layout-2 artifacts (untupled results: params, m, v,
-//! stats as four separate buffers per execute — see `compile/aot.py`);
-//! [`Engine::load`] rejects legacy tuple-resident (layout 1) artifact sets.
+//! This requires output-layout-3 artifacts (untupled results: params, m, v,
+//! stats as four separate buffers per execute, stats widened to `f32[10]` —
+//! see `compile/aot.py`); [`Engine::load`] rejects older layouts.
+//!
+//! The engine also hosts the fault-injection harness's **stats seam**
+//! ([`Engine::set_stats_fault`]): a configured [`StatsFault`] overwrites one
+//! decoded stats channel with NaN at exactly one executed call index. The
+//! fault is a pure function of the call counter, so a step replayed after a
+//! rollback (a later call) decodes clean, and an unset fault leaves the
+//! decode path untouched.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -53,12 +62,16 @@ use crate::obs::Obs;
 
 /// Bytes of the packed per-step knob upload (`f32[3]`: step, lr, clip).
 pub const KNOB_BYTES: u64 = 3 * 4;
-/// Bytes of the packed per-step stats readback (`f32[6]`).
-pub const STATS_BYTES: u64 = 6 * 4;
+/// Bytes of the packed per-step stats readback (`f32[10]`).
+pub const STATS_BYTES: u64 = 10 * 4;
 
-/// Per-step training statistics — the paper's full instrumentation set,
-/// decoded from the packed `f32[6]` stats tensor (manifest `stats_fields`
-/// order).
+/// Names of the per-layer-group update-RMS channels, in packed order
+/// (mirrors `compile.model.URMS_GROUPS`).
+pub const URMS_GROUPS: [&str; 4] = ["embed", "early", "late", "final"];
+
+/// Per-step training statistics — the paper's full instrumentation set plus
+/// the per-layer-group update-RMS sentinel channels, decoded from the packed
+/// `f32[10]` stats tensor (manifest `stats_fields` order).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepStats {
     pub loss: f32,
@@ -67,14 +80,22 @@ pub struct StepStats {
     pub var_max: f32,
     pub mom_l1: f32,
     pub clip_coef: f32,
+    /// RMS of the bias-corrected Adam update over the embedding tables.
+    pub urms_embed: f32,
+    /// ... over the first half of the transformer stack.
+    pub urms_early: f32,
+    /// ... over the second half of the transformer stack.
+    pub urms_late: f32,
+    /// ... over the final LayerNorm.
+    pub urms_final: f32,
 }
 
 impl StepStats {
     /// True when *every* stat is finite. The Adam-variance extremes
-    /// (`var_max`), momentum norm, and clip coefficient are exactly where
-    /// the paper says pathology shows first — a NaN that debuts there must
-    /// trip divergence patience and the sentinel like a NaN loss would, not
-    /// slip past a loss-only check.
+    /// (`var_max`), momentum norm, clip coefficient, and the per-group
+    /// update-RMS channels are exactly where pathology shows first — a NaN
+    /// that debuts in any of them must trip divergence patience and the
+    /// sentinel like a NaN loss would, not slip past a loss-only check.
     pub fn is_finite(&self) -> bool {
         self.loss.is_finite()
             && self.grad_l2.is_finite()
@@ -82,7 +103,54 @@ impl StepStats {
             && self.var_max.is_finite()
             && self.mom_l1.is_finite()
             && self.clip_coef.is_finite()
+            && self.urms_embed.is_finite()
+            && self.urms_early.is_finite()
+            && self.urms_late.is_finite()
+            && self.urms_final.is_finite()
     }
+
+    /// The update-RMS channels as `(group name, value)` pairs in packed
+    /// order — the sentinel and the metrics exporters iterate these.
+    pub fn urms(&self) -> [(&'static str, f32); 4] {
+        [
+            (URMS_GROUPS[0], self.urms_embed),
+            (URMS_GROUPS[1], self.urms_early),
+            (URMS_GROUPS[2], self.urms_late),
+            (URMS_GROUPS[3], self.urms_final),
+        ]
+    }
+
+    /// Overwrite one packed channel by index (manifest `stats_fields`
+    /// order). Out-of-range indices are ignored — the injection harness
+    /// validates them at config time.
+    pub fn set_channel(&mut self, idx: usize, value: f32) {
+        match idx {
+            0 => self.loss = value,
+            1 => self.grad_l2 = value,
+            2 => self.var_l1 = value,
+            3 => self.var_max = value,
+            4 => self.mom_l1 = value,
+            5 => self.clip_coef = value,
+            6 => self.urms_embed = value,
+            7 => self.urms_early = value,
+            8 => self.urms_late = value,
+            9 => self.urms_final = value,
+            _ => {}
+        }
+    }
+}
+
+/// Forced fault on the decoded stats vector — the injection harness's stats
+/// seam. At the `at_call`-th executed train-step call (0-based, counted over
+/// the engine's whole life with the run's offset handled by the trainer),
+/// stats channel `channel` is overwritten with `value` (typically NaN/inf).
+/// Exactly one call fires; replays after a rollback decode clean.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StatsFault {
+    pub at_call: usize,
+    /// Index into the packed stats vector (manifest `stats_fields` order).
+    pub channel: usize,
+    pub value: f32,
 }
 
 struct LazyExe {
@@ -119,6 +187,12 @@ pub struct Engine {
     bytes: std::cell::Cell<u64>,
     /// telemetry handle (off by default; spans for upload/execute/readback)
     obs: Obs,
+    /// injection-harness stats seam: at most one forced stats fault
+    stats_fault: Option<StatsFault>,
+    /// executed train-step calls over the engine's life (drives the fault's
+    /// one-shot trigger; distinct from `state.step`, which rewinds on
+    /// rollback)
+    train_calls: usize,
 }
 
 impl Engine {
@@ -132,10 +206,11 @@ impl Engine {
             bail!("model '{model}' has no artifact sets under {root:?}");
         };
         for man in &manifests {
-            if man.output_layout != 2 {
+            if man.output_layout != 3 {
                 bail!(
-                    "artifact set '{}' uses output layout {} (tuple-resident); the \
-                     device-resident engine needs layout 2 — re-run `make artifacts` \
+                    "artifact set '{}' uses output layout {}; the engine needs \
+                     layout 3 (untupled results, f32[10] stats with the update-RMS \
+                     channels) — re-run `make artifacts` \
                      (python -m compile.aot --force)",
                     man.set,
                     man.output_layout
@@ -166,7 +241,23 @@ impl Engine {
             transfers: std::cell::Cell::new(0),
             bytes: std::cell::Cell::new(0),
             obs: Obs::off(),
+            stats_fault: None,
+            train_calls: 0,
         })
+    }
+
+    /// Arm (or clear, with `None`) the injection harness's stats fault. The
+    /// fault fires on exactly one executed call (see [`StatsFault`]); with
+    /// `None` armed — the default — the decode path is untouched and runs
+    /// are bit-identical to an engine without the seam.
+    pub fn set_stats_fault(&mut self, fault: Option<StatsFault>) {
+        self.stats_fault = fault;
+    }
+
+    /// Executed train-step calls over this engine's life (rollback replays
+    /// included — unlike `state.step`, this never rewinds).
+    pub fn train_calls(&self) -> usize {
+        self.train_calls
     }
 
     /// Attach a telemetry handle: step phases (upload/execute/readback)
@@ -308,7 +399,7 @@ impl Engine {
         let exe = lazy.get(&self.client)?;
 
         // buffer-argument execution: state goes in (and comes back) as
-        // device buffers; the only readback below is the f32[6] stats tensor
+        // device buffers; the only readback below is the f32[10] stats tensor
         let mut results = {
             let _s = crate::span!(self.obs, "execute", state.step);
             exe.execute_b::<&PjRtBuffer>(&[
@@ -336,17 +427,29 @@ impl Engine {
             outs[3].to_literal_sync()?.to_vec::<f32>()?
         };
         self.count(STATS_BYTES);
-        if s.len() != 6 {
-            bail!("stats tensor has {} elements, expected 6", s.len());
+        if s.len() != 10 {
+            bail!("stats tensor has {} elements, expected 10", s.len());
         }
-        let stats = StepStats {
+        let mut stats = StepStats {
             loss: s[0],
             grad_l2: s[1],
             var_l1: s[2],
             var_max: s[3],
             mom_l1: s[4],
             clip_coef: s[5],
+            urms_embed: s[6],
+            urms_early: s[7],
+            urms_late: s[8],
+            urms_final: s[9],
         };
+        // injection stats seam: fire on exactly one executed call, keyed by
+        // the lifetime call counter so a post-rollback replay decodes clean
+        if let Some(f) = self.stats_fault {
+            if f.at_call == self.train_calls {
+                stats.set_channel(f.channel, f.value);
+            }
+        }
+        self.train_calls += 1;
         // commit the updated state buffers — no host crossing
         outs.truncate(3);
         state.v = outs.pop().expect("3 state outputs");
@@ -487,21 +590,64 @@ mod tests {
         // divergence patience or the sentinel
         let healthy = StepStats {
             loss: 5.0, grad_l2: 1.0, var_l1: 1.0, var_max: 0.1, mom_l1: 1.0, clip_coef: 1.0,
+            urms_embed: 0.01, urms_early: 0.01, urms_late: 0.01, urms_final: 0.01,
         };
         assert!(healthy.is_finite());
-        let wrecks: [fn(&mut StepStats); 6] = [
-            |s| s.loss = f32::NAN,
-            |s| s.grad_l2 = f32::INFINITY,
-            |s| s.var_l1 = f32::NAN,
-            |s| s.var_max = f32::NAN,
-            |s| s.mom_l1 = f32::NEG_INFINITY,
-            |s| s.clip_coef = f32::NAN,
-        ];
-        for wreck in wrecks {
+        // wreck every channel through the same indexed path the injection
+        // harness uses, so set_channel coverage and is_finite coverage are
+        // proven against each other
+        for idx in 0..10 {
             let mut s = healthy;
-            wreck(&mut s);
-            assert!(!s.is_finite(), "{s:?} must be non-finite");
+            s.set_channel(idx, if idx % 2 == 0 { f32::NAN } else { f32::INFINITY });
+            assert!(!s.is_finite(), "channel {idx}: {s:?} must be non-finite");
         }
+        // out-of-range channel is a no-op, never a panic
+        let mut s = healthy;
+        s.set_channel(10, f32::NAN);
+        assert!(s.is_finite());
+    }
+
+    #[test]
+    fn urms_pairs_mirror_fields() {
+        let mut s = StepStats::default();
+        s.urms_embed = 1.0;
+        s.urms_final = 4.0;
+        let pairs = s.urms();
+        assert_eq!(pairs[0], ("embed", 1.0));
+        assert_eq!(pairs[1], ("early", 0.0));
+        assert_eq!(pairs[3], ("final", 4.0));
+    }
+
+    #[test]
+    fn stats_fault_fires_on_exactly_one_call() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let mut st = e.init_state(4, 0).unwrap();
+        let toks = rand_tokens(4 * 9, man.model.vocab, 1);
+        e.set_stats_fault(Some(StatsFault { at_call: 1, channel: 3, value: f32::NAN }));
+        // call 0: clean
+        let s0 = e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        assert!(s0.is_finite());
+        assert_eq!(e.train_calls(), 1);
+        // call 1: faulted — only the targeted channel is touched
+        let s1 = e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        assert!(s1.var_max.is_nan());
+        assert!(s1.loss.is_finite(), "fault must not leak into other channels");
+        assert!(!s1.is_finite());
+        // call 2 (a replay after rollback would land here): clean again
+        let s2 = e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        assert!(s2.is_finite());
+        // the fault only wrecks the *decoded* stats, never the device state:
+        // the parameter trajectory is identical to an unfaulted engine
+        let mut e2 = engine();
+        let mut st2 = e2.init_state(4, 0).unwrap();
+        for _ in 0..3 {
+            e2.train_step(&mut st2, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        }
+        assert_eq!(st.params_vec().unwrap(), st2.params_vec().unwrap());
+        // clearing the fault restores the untouched decode path
+        e.set_stats_fault(None);
+        assert!(e.train_step(&mut st, &toks, 4, 8, 1e-3, 1.0).unwrap().is_finite());
     }
 
     #[test]

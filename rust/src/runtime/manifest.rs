@@ -49,8 +49,9 @@ pub struct Manifest {
     /// Result-layout version of the lowered steps. Layout 1 (legacy):
     /// everything wrapped in one tuple the host must materialize per step;
     /// layout 2: untupled results (params, m, v, stats) so state stays
-    /// device-resident. Manifests without the key read as 1 and are
-    /// rejected by `Engine::load`.
+    /// device-resident; layout 3: layout 2 with the stats tensor widened to
+    /// `f32[10]` by the four per-layer-group update-RMS channels. Manifests
+    /// without the key read as 1; `Engine::load` accepts only 3.
     pub output_layout: usize,
     pub params: Vec<ParamSpec>,
     pub dir: PathBuf,
@@ -218,7 +219,7 @@ mod tests {
         assert_eq!(man.model.vocab, 256);
         assert_eq!(man.batch_size, 4);
         assert_eq!(man.seqlen_buckets, vec![8, 16, 24, 32]);
-        assert_eq!(man.output_layout, 2, "committed artifacts are device-resident (v2)");
+        assert_eq!(man.output_layout, 3, "committed artifacts carry the f32[10] stats (v3)");
         assert_eq!(man.params.len(), 2 + 12 * man.model.n_layer + 2);
         assert!(man.train_path(8).unwrap().exists());
         assert!(man.eval_path().exists());

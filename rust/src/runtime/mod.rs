@@ -7,6 +7,6 @@ pub mod engine;
 pub mod manifest;
 pub mod state;
 
-pub use engine::{Engine, StepStats, KNOB_BYTES, STATS_BYTES};
+pub use engine::{Engine, StatsFault, StepStats, KNOB_BYTES, STATS_BYTES, URMS_GROUPS};
 pub use manifest::Manifest;
 pub use state::{HostState, TrainState};

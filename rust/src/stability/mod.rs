@@ -40,7 +40,7 @@ use crate::runtime::{StepStats, TrainState};
 
 pub use controller::Controller;
 pub use report::{Intervention, RollbackEvent, StabilityTrace};
-pub use rollback::CheckpointRing;
+pub use rollback::{recover_from_spill, CheckpointRing};
 pub use sentinel::{Observation, Sentinel, Verdict};
 
 /// Knobs of the closed loop. Part of `RunConfig`, so the coordinator's run
@@ -51,6 +51,12 @@ pub struct StabilityPolicy {
     pub ewma_alpha: f64,
     /// `var_max ≥ factor × EWMA(var_max)` ⇒ Diverged (half that ⇒ Warning).
     pub var_spike_factor: f64,
+    /// Any per-layer-group update-RMS channel ≥ factor × its own EWMA ⇒
+    /// Diverged (half that ⇒ Warning). Each of the four urms channels keeps
+    /// its own reference, so a spike localized in one layer group (the
+    /// paper's long-sequence pathology hits the embeddings and early layers
+    /// first) is not averaged away by the quiet ones.
+    pub urms_spike_factor: f64,
     /// `loss ≥ ratio × EWMA(loss)` ⇒ Warning.
     pub warn_ratio: f64,
     /// `loss ≥ ratio × EWMA(loss)` ⇒ Diverged.
@@ -86,6 +92,7 @@ impl Default for StabilityPolicy {
         Self {
             ewma_alpha: 0.25,
             var_spike_factor: 16.0,
+            urms_spike_factor: 8.0,
             warn_ratio: 1.5,
             diverge_ratio: 3.0,
             loss_ceiling_factor: 2.5,
@@ -109,6 +116,9 @@ impl StabilityPolicy {
         }
         if self.var_spike_factor <= 1.0 {
             bail!("var_spike_factor must be > 1, got {}", self.var_spike_factor);
+        }
+        if self.urms_spike_factor <= 1.0 {
+            bail!("urms_spike_factor must be > 1, got {}", self.urms_spike_factor);
         }
         if !(1.0 < self.warn_ratio && self.warn_ratio < self.diverge_ratio) {
             bail!(
@@ -197,6 +207,12 @@ impl Autopilot {
     /// Attach a telemetry handle (snapshot/rollback spans, warning markers).
     pub fn set_obs(&mut self, obs: Obs) {
         self.obs = obs;
+    }
+
+    /// Forward a scenario-lab spill fault to the checkpoint ring (see
+    /// [`CheckpointRing::set_spill_fault`]). A no-op without a spill dir.
+    pub fn set_spill_fault(&mut self, fault: Option<crate::inject::SpillFault>) {
+        self.ring.set_spill_fault(fault);
     }
 
     /// The sentinel's most recent reading (None before the first observe).
@@ -341,6 +357,9 @@ mod tests {
         assert!(p.validate().is_err());
         let mut p = policy();
         p.warn_ratio = 5.0; // above diverge_ratio
+        assert!(p.validate().is_err());
+        let mut p = policy();
+        p.urms_spike_factor = 1.0;
         assert!(p.validate().is_err());
         let mut p = policy();
         p.reentry_seqlen = 4;

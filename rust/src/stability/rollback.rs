@@ -9,12 +9,20 @@
 //! set, every snapshot is also written through `train::checkpoint` as
 //! `ring_<slot>.ckpt` (straight from the already-materialized host copy —
 //! no second device readback) so a crashed process can resume from disk.
+//!
+//! Spilled slots are checksummed (`train::checkpoint`'s trailing FNV-1a),
+//! and [`recover_from_spill`] rolls deeper past corrupt or truncated files
+//! to the newest slot that still loads — a torn write must cost one slot,
+//! not the recovery. The scenario lab's [`SpillFault`] injector sabotages
+//! the nth spill write on demand to prove exactly that.
 
 use std::collections::VecDeque;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
+use crate::inject::{SpillFault, SpillMode};
+use crate::runtime::manifest::Manifest;
 use crate::runtime::{HostState, TrainState};
 use crate::train::checkpoint;
 
@@ -26,6 +34,10 @@ pub struct CheckpointRing {
     spill: Option<PathBuf>,
     /// total snapshots ever taken (disk slot index = n mod keep)
     n_snapshots: usize,
+    /// scenario-lab sabotage of one spill write (None outside the harness)
+    spill_fault: Option<SpillFault>,
+    /// spill writes attempted so far (the fault's `nth` counts these)
+    n_spills: usize,
 }
 
 impl CheckpointRing {
@@ -36,6 +48,8 @@ impl CheckpointRing {
             disk_slots: VecDeque::new(),
             spill: None,
             n_snapshots: 0,
+            spill_fault: None,
+            n_spills: 0,
         }
     }
 
@@ -45,11 +59,40 @@ impl CheckpointRing {
         self
     }
 
+    /// Arm (or clear) the scenario lab's spill sabotage: the `nth` spill
+    /// write is corrupted on disk or fails outright, depending on the
+    /// fault's mode. In-memory snapshots are never touched — the fault
+    /// models a disk problem, not a state problem.
+    pub fn set_spill_fault(&mut self, fault: Option<SpillFault>) {
+        self.spill_fault = fault;
+    }
+
     pub fn snapshot(&mut self, state: &TrainState) -> Result<()> {
         let snap = state.materialize()?;
         let slot = self.n_snapshots % self.keep;
         if let Some(dir) = &self.spill {
-            checkpoint::save(&snap, &dir.join(format!("ring_{slot}.ckpt")))?;
+            let path = dir.join(format!("ring_{slot}.ckpt"));
+            let fault = self.spill_fault.filter(|f| f.nth == self.n_spills).map(|f| f.mode);
+            self.n_spills += 1;
+            match fault {
+                Some(SpillMode::Fail) => {
+                    // an I/O failure costs the disk copy of this slot, never
+                    // the run: the in-memory snapshot below stays intact
+                    crate::info!(
+                        "checkpoint ring: injected spill failure on slot {slot} \
+                         (write skipped; in-memory snapshot kept)"
+                    );
+                    // a stale file from a previous rotation must not pose as
+                    // this snapshot during crash recovery
+                    std::fs::remove_file(&path).ok();
+                }
+                Some(SpillMode::Corrupt) => {
+                    checkpoint::save(&snap, &path)?;
+                    corrupt_file(&path)?;
+                    crate::info!("checkpoint ring: injected spill corruption on slot {slot}");
+                }
+                None => checkpoint::save(&snap, &path)?,
+            }
         }
         if self.slots.len() == self.keep {
             self.slots.pop_front();
@@ -95,6 +138,52 @@ impl CheckpointRing {
     pub fn n_snapshots(&self) -> usize {
         self.n_snapshots
     }
+}
+
+/// Flip one bit in the middle of `path` — the injected "disk corrupted the
+/// spill" fault (and the corruption the regression tests apply by hand).
+fn corrupt_file(path: &Path) -> Result<()> {
+    let mut bytes = std::fs::read(path)?;
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Crash recovery over a spill directory: scan the `ring_<slot>.ckpt`
+/// files and return the newest snapshot (by its recorded step) that still
+/// loads, rolling deeper past corrupt or truncated slots — checksum
+/// validation happens inside `checkpoint::load`. Returns `None` when no
+/// slot survives. Skipped slots are logged, never fatal: recovery degrades
+/// one slot at a time, exactly like the in-memory ring's `drop_latest`.
+pub fn recover_from_spill(man: &Manifest, dir: &Path) -> Option<HostState> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut best: Option<HostState> = None;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let is_slot = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.starts_with("ring_") && n.ends_with(".ckpt"))
+            .unwrap_or(false);
+        if !is_slot {
+            continue;
+        }
+        match checkpoint::load(man, &path) {
+            Ok(snap) => {
+                if best.as_ref().map(|b| snap.step > b.step).unwrap_or(true) {
+                    best = Some(snap);
+                }
+            }
+            Err(e) => {
+                crate::info!(
+                    "spill recovery: skipping {} ({e:#}); rolling to a deeper slot",
+                    path.display()
+                );
+            }
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -177,6 +266,72 @@ mod tests {
         assert!(!dir.join("ring_1.ckpt").exists());
         assert!(dir.join("ring_0.ckpt").exists(), "the floor's spill survives");
         assert_eq!(ring.latest().unwrap().step, 11);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovery_rolls_deeper_past_corrupt_and_truncated_slots() {
+        let (engine, mut st) = engine_and_state(2);
+        let man = engine.manifest_for_batch(4).unwrap().clone();
+        let dir = std::env::temp_dir()
+            .join(format!("slw_ring_recover_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ring = CheckpointRing::new(3).with_spill(dir.clone());
+        for step in 1..=3u64 {
+            st.step = step;
+            st.tokens = step * 100;
+            ring.snapshot(&st).unwrap();
+        }
+        // pristine spills: recovery lands on the newest slot
+        assert_eq!(recover_from_spill(&man, &dir).unwrap().step, 3);
+        // regression: one flipped bit in the newest slot (step 3 lives in
+        // ring_2.ckpt) must cost exactly one slot, not the recovery
+        corrupt_file(&dir.join("ring_2.ckpt")).unwrap();
+        let got = recover_from_spill(&man, &dir).unwrap();
+        assert_eq!(got.step, 2, "recovery must roll deeper past the corrupt slot");
+        assert_eq!(got.tokens, 200);
+        // truncate the next one too (torn write): roll deeper again
+        let bytes = std::fs::read(dir.join("ring_1.ckpt")).unwrap();
+        std::fs::write(dir.join("ring_1.ckpt"), &bytes[..bytes.len() / 3]).unwrap();
+        assert_eq!(recover_from_spill(&man, &dir).unwrap().step, 1);
+        // every slot poisoned: recovery reports failure instead of garbage
+        corrupt_file(&dir.join("ring_0.ckpt")).unwrap();
+        assert!(recover_from_spill(&man, &dir).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_spill_faults_cost_the_disk_copy_never_the_run() {
+        use crate::inject::{SpillFault, SpillMode};
+        let (engine, mut st) = engine_and_state(4);
+        let man = engine.manifest_for_batch(4).unwrap().clone();
+        let dir = std::env::temp_dir()
+            .join(format!("slw_ring_fault_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ring = CheckpointRing::new(3).with_spill(dir.clone());
+        // the 3rd spill write (nth = 2, the step-3 snapshot) is corrupted
+        ring.set_spill_fault(Some(SpillFault { nth: 2, mode: SpillMode::Corrupt }));
+        for step in 1..=3u64 {
+            st.step = step;
+            ring.snapshot(&st).unwrap();
+        }
+        // the in-memory ring is untouched by the disk fault
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.latest().unwrap().step, 3);
+        // crash recovery detects the corruption and rolls one slot deeper
+        assert_eq!(recover_from_spill(&man, &dir).unwrap().step, 2);
+
+        // Fail mode: the write is skipped entirely, same in-memory story
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ring = CheckpointRing::new(3).with_spill(dir.clone());
+        ring.set_spill_fault(Some(SpillFault { nth: 1, mode: SpillMode::Fail }));
+        for step in 1..=2u64 {
+            st.step = step;
+            ring.snapshot(&st).unwrap();
+        }
+        assert_eq!(ring.latest().unwrap().step, 2);
+        assert!(!dir.join("ring_1.ckpt").exists(), "failed write leaves no file");
+        assert_eq!(recover_from_spill(&man, &dir).unwrap().step, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -40,12 +40,19 @@ pub struct Observation {
     pub loss_ratio: f64,
     /// step var_max / EWMA(var_max); +inf for non-finite stats
     pub var_ratio: f64,
+    /// worst per-layer-group update-RMS ratio: max over the four urms
+    /// channels of `urms / EWMA(urms)`; +inf for non-finite stats
+    pub urms_ratio: f64,
 }
 
 pub struct Sentinel {
     policy: StabilityPolicy,
     loss_ewma: f64,
     var_ewma: f64,
+    /// one EWMA reference per urms channel (embed/early/late/final) — a
+    /// spike localized in one layer group must not be averaged away by the
+    /// three quiet ones
+    urms_ewma: [f64; 4],
     n_seen: usize,
     /// first finite loss ever observed — survives [`Sentinel::reset`] so
     /// the absolute ceiling stays calibrated across rollbacks
@@ -58,6 +65,7 @@ impl Sentinel {
             policy: policy.clone(),
             loss_ewma: 0.0,
             var_ewma: 0.0,
+            urms_ewma: [0.0; 4],
             n_seen: 0,
             first_loss: None,
         }
@@ -74,6 +82,7 @@ impl Sentinel {
                 verdict: Verdict::Diverged,
                 loss_ratio: f64::INFINITY,
                 var_ratio: f64::INFINITY,
+                urms_ratio: f64::INFINITY,
             };
         }
         if self.first_loss.is_none() {
@@ -89,6 +98,15 @@ impl Sentinel {
         } else {
             1.0
         };
+        let urms = stats.urms();
+        let urms_ratio = if self.n_seen > 0 {
+            urms.iter()
+                .zip(&self.urms_ewma)
+                .map(|((_, u), &e)| if e > 1e-12 { *u as f64 / e } else { 1.0 })
+                .fold(1.0f64, f64::max)
+        } else {
+            1.0
+        };
         // absolute ceiling — always active (catches a blow-up that happens
         // during EWMA warmup, when the ratio tests are still blind)
         let ceiling =
@@ -97,12 +115,14 @@ impl Sentinel {
         let verdict = if loss >= ceiling
             || (warm
                 && (loss_ratio >= self.policy.diverge_ratio
-                    || var_ratio >= self.policy.var_spike_factor))
+                    || var_ratio >= self.policy.var_spike_factor
+                    || urms_ratio >= self.policy.urms_spike_factor))
         {
             Verdict::Diverged
         } else if warm
             && (loss_ratio >= self.policy.warn_ratio
-                || var_ratio >= 0.5 * self.policy.var_spike_factor)
+                || var_ratio >= 0.5 * self.policy.var_spike_factor
+                || urms_ratio >= 0.5 * self.policy.urms_spike_factor)
         {
             Verdict::Warning
         } else {
@@ -115,13 +135,19 @@ impl Sentinel {
             if self.n_seen == 0 {
                 self.loss_ewma = loss;
                 self.var_ewma = var;
+                for (e, (_, u)) in self.urms_ewma.iter_mut().zip(urms) {
+                    *e = u as f64;
+                }
             } else {
                 self.loss_ewma = a * loss + (1.0 - a) * self.loss_ewma;
                 self.var_ewma = a * var + (1.0 - a) * self.var_ewma;
+                for (e, (_, u)) in self.urms_ewma.iter_mut().zip(urms) {
+                    *e = a * u as f64 + (1.0 - a) * *e;
+                }
             }
             self.n_seen += 1;
         }
-        Observation { verdict, loss_ratio, var_ratio }
+        Observation { verdict, loss_ratio, var_ratio, urms_ratio }
     }
 
     /// Forget the EWMA references (after a rollback restored older state);
@@ -129,6 +155,7 @@ impl Sentinel {
     pub fn reset(&mut self) {
         self.loss_ewma = 0.0;
         self.var_ewma = 0.0;
+        self.urms_ewma = [0.0; 4];
         self.n_seen = 0;
     }
 }
@@ -145,6 +172,10 @@ mod tests {
             var_max,
             mom_l1: 1.0,
             clip_coef: 1.0,
+            urms_embed: 0.02,
+            urms_early: 0.02,
+            urms_late: 0.02,
+            urms_final: 0.02,
         }
     }
 
@@ -188,6 +219,42 @@ mod tests {
         assert_eq!(s.observe(&bad_mom).verdict, Verdict::Diverged);
         let bad_clip = StepStats { clip_coef: f32::INFINITY, ..stats(5.0, 0.1) };
         assert_eq!(s.observe(&bad_clip).verdict, Verdict::Diverged);
+    }
+
+    #[test]
+    fn nan_in_a_single_urms_channel_is_diverged() {
+        // the new channels ride the same always-on NaN/inf guard: a NaN
+        // that debuts in exactly one layer group — everything else finite —
+        // must still read as divergence
+        let mut s = sentinel();
+        for _ in 0..3 {
+            assert_eq!(s.observe(&stats(5.0, 0.1)).verdict, Verdict::Healthy);
+        }
+        let bad = StepStats { urms_late: f32::NAN, ..stats(5.0, 0.1) };
+        let o = s.observe(&bad);
+        assert_eq!(o.verdict, Verdict::Diverged);
+        assert!(o.urms_ratio.is_infinite());
+    }
+
+    #[test]
+    fn urms_spike_in_one_group_warns_then_diverges() {
+        // default urms_spike_factor is 8: ≥ 4x the channel's EWMA warns,
+        // ≥ 8x diverges — even when loss and var_max stay perfectly calm
+        let mut s = sentinel();
+        for _ in 0..10 {
+            assert_eq!(s.observe(&stats(5.0, 0.1)).verdict, Verdict::Healthy);
+        }
+        let warn = StepStats { urms_embed: 0.02 * 5.0, ..stats(5.0, 0.1) };
+        let o = s.observe(&warn);
+        assert_eq!(o.verdict, Verdict::Warning);
+        assert!(o.urms_ratio > 4.0 && o.urms_ratio < 8.0, "ratio {}", o.urms_ratio);
+        let spike = StepStats { urms_embed: 0.02 * 20.0, ..stats(5.0, 0.1) };
+        let o = s.observe(&spike);
+        assert_eq!(o.verdict, Verdict::Diverged);
+        assert!(o.urms_ratio >= 8.0);
+        // the spike channel is per-group: the same magnitude spread evenly
+        // would have moved every EWMA equally and read much smaller ratios
+        assert!(o.loss_ratio < 1.5, "loss must not be what fired");
     }
 
     #[test]

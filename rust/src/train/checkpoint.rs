@@ -1,8 +1,12 @@
 //! Binary checkpoints for the flat training state.
 //!
 //! Format (little-endian): magic "SLWCKPT1", n_params u64, step u64,
-//! tokens u64, then params/m/v as raw f32 arrays. The flat-vector state
-//! layout (model.py) makes this a straight dump — no pytree schema.
+//! tokens u64, params/m/v as raw f32 arrays, then an FNV-1a 64 checksum
+//! over everything after the magic. The flat-vector state layout
+//! (model.py) makes this a straight dump — no pytree schema; the trailing
+//! checksum turns silent disk corruption and truncation into load errors,
+//! which the stability ring's spill recovery uses to roll deeper past a
+//! poisoned slot instead of resuming from garbage.
 //!
 //! Checkpoints operate on [`HostState`] — the materialized form of the
 //! device-resident `TrainState` — so saving costs no extra device readback
@@ -22,6 +26,24 @@ use crate::util::bytes::le_bytes_f32;
 
 const MAGIC: &[u8; 8] = b"SLWCKPT1";
 
+/// Incremental FNV-1a 64 over the checkpoint byte stream — the same
+/// function as the coordinator's persistent cache keys, carried across
+/// chunks so neither save nor load buffers the whole file to hash it.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
 pub fn save(state: &HostState, path: &Path) -> Result<()> {
     let n = state.n_params();
     if state.m.len() != n || state.v.len() != n {
@@ -36,13 +58,19 @@ pub fn save(state: &HostState, path: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let mut sum = Fnv::new();
     f.write_all(MAGIC)?;
-    f.write_all(&(n as u64).to_le_bytes())?;
-    f.write_all(&state.step.to_le_bytes())?;
-    f.write_all(&state.tokens.to_le_bytes())?;
-    for arr in [&state.params, &state.m, &state.v] {
-        f.write_all(&le_bytes_f32(arr))?;
+    for header in [n as u64, state.step, state.tokens] {
+        let bytes = header.to_le_bytes();
+        sum.update(&bytes);
+        f.write_all(&bytes)?;
     }
+    for arr in [&state.params, &state.m, &state.v] {
+        let bytes = le_bytes_f32(arr);
+        sum.update(&bytes);
+        f.write_all(&bytes)?;
+    }
+    f.write_all(&sum.0.to_le_bytes())?;
     Ok(())
 }
 
@@ -55,28 +83,41 @@ pub fn load(man: &Manifest, path: &Path) -> Result<HostState> {
     if &magic != MAGIC {
         bail!("not an SLW checkpoint: {path:?}");
     }
+    let mut sum = Fnv::new();
     let mut u64buf = [0u8; 8];
     f.read_exact(&mut u64buf)?;
+    sum.update(&u64buf);
     let n = u64::from_le_bytes(u64buf) as usize;
     if n != man.n_params {
         bail!("checkpoint has {n} params, manifest expects {}", man.n_params);
     }
     f.read_exact(&mut u64buf)?;
+    sum.update(&u64buf);
     let step = u64::from_le_bytes(u64buf);
     f.read_exact(&mut u64buf)?;
+    sum.update(&u64buf);
     let tokens = u64::from_le_bytes(u64buf);
 
-    let mut read_arr = || -> Result<Vec<f32>> {
+    let mut read_arr = |sum: &mut Fnv| -> Result<Vec<f32>> {
         let mut bytes = vec![0u8; n * 4];
-        f.read_exact(&mut bytes)?;
+        f.read_exact(&mut bytes).context("checkpoint truncated mid-array")?;
+        sum.update(&bytes);
         Ok(bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     };
-    let params = read_arr()?;
-    let m = read_arr()?;
-    let v = read_arr()?;
+    let params = read_arr(&mut sum)?;
+    let m = read_arr(&mut sum)?;
+    let v = read_arr(&mut sum)?;
+    f.read_exact(&mut u64buf).context("checkpoint truncated before its checksum")?;
+    let want = u64::from_le_bytes(u64buf);
+    if sum.0 != want {
+        bail!(
+            "checkpoint {path:?} is corrupt: checksum {:016x} does not match stored {want:016x}",
+            sum.0
+        );
+    }
     Ok(HostState { params, m, v, step, tokens })
 }
 
@@ -142,6 +183,34 @@ mod tests {
         let s2 = engine.train_step(&mut resumed, &toks, 4, 8, 1e-3, 1.0).unwrap();
         assert_eq!(s1.loss, s2.loss);
         assert_eq!(state.params_vec().unwrap(), resumed.params_vec().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bit_flip_and_truncation_fail_the_checksum() {
+        let man = Manifest::load(&root().join("micro_b4")).unwrap();
+        let mut state = HostState::init(&man, 9);
+        state.step = 4;
+        state.tokens = 512;
+        let dir = std::env::temp_dir().join(format!("slw_ckpt_sum_{}", std::process::id()));
+        let path = dir.join("ok.ckpt");
+        save(&state, &path).unwrap();
+        load(&man, &path).unwrap();
+
+        // one flipped bit in the middle of an array must be detected
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let bad = dir.join("flipped.ckpt");
+        std::fs::write(&bad, &bytes).unwrap();
+        let err = load(&man, &bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "got: {err}");
+
+        // a truncated file (torn write / full disk) fails too
+        let clean = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.ckpt");
+        std::fs::write(&cut, &clean[..clean.len() - 12]).unwrap();
+        assert!(load(&man, &cut).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -193,7 +193,7 @@ mod tests {
             lr: 1e-3,
             tokens_after: ((step + 1) * 512) as u64,
             stats: StepStats { loss, grad_l2: 1.0, var_l1: 10.0 * var_max, var_max,
-                               mom_l1: 1.0, clip_coef: 1.0 },
+                               mom_l1: 1.0, clip_coef: 1.0, ..Default::default() },
             sim_seconds: 3.6,
         }
     }
@@ -243,7 +243,7 @@ mod tests {
                 lr: 1e-3,
                 tokens_after: ((step + 1) * 512) as u64,
                 stats: StepStats { loss, grad_l2: 1.0, var_l1: 1.0, var_max: 0.1,
-                                   mom_l1: 1.0, clip_coef: 1.0 },
+                                   mom_l1: 1.0, clip_coef: 1.0, ..Default::default() },
                 sim_seconds: 1.0,
             };
             r.seqlen = seqlen;

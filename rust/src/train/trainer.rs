@@ -265,8 +265,11 @@ impl Trainer {
     fn run_reactive(&mut self, max_steps: usize, n_workers: usize) -> Result<RunResult> {
         let pacing = self.bucketed_pacing()?;
         let bszw = self.bsz_warmup()?;
-        let mut planner =
-            Planner::new(pacing, bszw, Budget::Tokens(self.config.token_budget));
+        // the scenario lab's fault spec: None (and Some(none())) leave every
+        // seam below bit-identical to a harness-free run
+        let inject = self.config.inject.clone().filter(|i| !i.is_none());
+        let mut planner = Planner::new(pacing, bszw, Budget::Tokens(self.config.token_budget))
+            .with_inject(inject.clone());
         // LR horizon: static schedules resolve against the exact plan
         // length; adaptive estimates from the constant-seqlen equivalent
         // (its plan length only exists in hindsight, so RunResult reports
@@ -286,10 +289,12 @@ impl Trainer {
             None => None,
         };
         let mut flight = self.sink.incident_root.as_ref().map(|root| {
-            FlightRecorder::new(
+            let mut fr = FlightRecorder::new(
                 root.join(crate::util::slugify(&self.config.name)),
                 &self.config.name,
-            )
+            );
+            fr.set_scenario(inject.as_ref().map(|i| i.label()));
+            fr
         });
         let mut was_warning = false;
         let mut pipe = Prefetcher::spawn_obs(
@@ -301,7 +306,19 @@ impl Trainer {
             self.config.seed,
             self.config.truncation,
             obs.clone(),
+            inject.clone(),
         )?;
+        // stats fault: armed against the engine's *lifetime* train-call
+        // counter, so post-rollback replays of the same step index decode
+        // clean (the counter never rewinds) and a warm engine reused across
+        // coordinator runs never inherits a stale fault
+        self.engine.set_stats_fault(inject.as_ref().and_then(|i| i.stats_nan).map(|n| {
+            crate::runtime::StatsFault {
+                at_call: self.engine.train_calls() + n.at,
+                channel: n.channel,
+                value: f32::NAN,
+            }
+        }));
 
         let mut history = RunHistory::new(&self.config.name);
         // device-resident state: one init upload here, then params/m/v stay
@@ -314,6 +331,7 @@ impl Trainer {
             Some(policy) => {
                 let mut p = Autopilot::new(policy.clone(), self.index.full_seqlen());
                 p.set_obs(obs.clone());
+                p.set_spill_fault(inject.as_ref().and_then(|i| i.spill_fault));
                 p.bootstrap(&state)?;
                 Some(p)
             }
@@ -355,6 +373,12 @@ impl Trainer {
             let mut lr_t = lr.lr_at(spec.step, spec.tokens_before);
             if let Some(p) = &pilot {
                 lr_t *= p.lr_scale();
+            }
+            if let Some(inj) = &inject {
+                // the LR shock multiplies the *final* step LR, after the
+                // autopilot's decay — recovery fights the fault, not a
+                // pre-scaled version of it
+                lr_t *= inj.lr_mult(spec.step);
             }
             let stats = self.engine.train_step(
                 &mut state,
@@ -489,6 +513,9 @@ impl Trainer {
         if let Some(m) = &mut metrics {
             m.finish()?;
         }
+        // disarm the one-shot stats fault: the coordinator reuses warm
+        // engines across runs and the next run may not be a scenario
+        self.engine.set_stats_fault(None);
         if let Some(p) = pilot {
             history.stability = Some(p.into_trace());
         }
@@ -827,6 +854,83 @@ mod tests {
         // the whole run (this config defaults to n_workers = 2)
         assert!(out.pipeline.republished >= trace.n_rollbacks() as u64);
         assert_eq!(out.pipeline.n_workers, 2);
+    }
+
+    #[test]
+    fn a_none_injection_spec_is_bit_identical_to_no_harness() {
+        // the scenario lab's determinism contract: arming the harness with
+        // an empty spec must not perturb a single bit of the trajectory —
+        // while a real fault visibly must
+        let mut cfg = micro_cfg();
+        cfg.eval_every = 0;
+        cfg.token_budget = 4 * 32 * 25;
+        let bare = Trainer::new(&root(), cfg.clone()).unwrap().run().unwrap();
+        cfg.inject = Some(crate::inject::InjectionSpec::none());
+        let armed = Trainer::new(&root(), cfg.clone()).unwrap().run().unwrap();
+        assert_eq!(trajectory(&bare), trajectory(&armed));
+        cfg.inject = crate::inject::InjectionSpec::parse("data_burst:at=5,steps=3,frac=0.5")
+            .ok();
+        let burst = Trainer::new(&root(), cfg).unwrap().run().unwrap();
+        assert_eq!(trajectory(&bare)[..5], trajectory(&burst)[..5], "pre-burst identical");
+        assert_ne!(trajectory(&bare), trajectory(&burst), "the burst must bite");
+    }
+
+    #[test]
+    fn injected_nan_stat_trips_exactly_one_rollback() {
+        // the forced-NaN scenario end to end: the one-shot fault poisons a
+        // single decoded stats read, the sentinel's always-on guard fires,
+        // the autopilot rolls back — and the replay of the same step index
+        // decodes clean because the fault counts lifetime train calls
+        let mut cfg = micro_cfg();
+        cfg.eval_every = 0;
+        cfg.token_budget = 4 * 32 * 40;
+        cfg.stability = Some(crate::stability::StabilityPolicy {
+            warmup_steps: 3,
+            snapshot_every: 3,
+            ..Default::default()
+        });
+        cfg.inject = crate::inject::InjectionSpec::parse("stats_nan:at=12,channel=0").ok();
+        let mut t = Trainer::new(&root(), cfg).unwrap();
+        let out = t.run().unwrap();
+        let h = &out.history;
+        assert!(!h.diverged());
+        assert!(h.losses().iter().all(|l| l.is_finite()),
+                "the poisoned reading must never reach the history");
+        let trace = h.stability.as_ref().expect("trace");
+        assert_eq!(trace.n_rollbacks(), 1, "a one-shot fault is one rollback");
+        assert!(h.total_tokens() >= 4 * 32 * 40, "the budget survives the detour");
+    }
+
+    #[test]
+    fn lr_shock_divergence_is_recovered_by_the_autopilot() {
+        // the scenario gate's headline contrast in miniature: a transient
+        // 400x LR shock destroys the open loop, while the autopilot decays
+        // LR through replays of the shock window and finishes the budget
+        let mut cfg = micro_cfg();
+        cfg.eval_every = 0;
+        cfg.token_budget = 4 * 32 * 60;
+        cfg.inject = crate::inject::InjectionSpec::parse("lr_shock:at=10,steps=4,mult=400")
+            .ok();
+        let open = Trainer::new(&root(), cfg.clone()).unwrap().run().unwrap();
+        let (_, max_ratio) = open.history.instability(1.2);
+        assert!(open.history.diverged() || max_ratio > 2.0,
+                "an unmanaged 0.8 LR burst must destabilize (max ratio {max_ratio})");
+
+        cfg.stability = Some(crate::stability::StabilityPolicy {
+            warmup_steps: 3,
+            snapshot_every: 3,
+            regrow_after: 5,
+            max_rollbacks: 20,
+            ..Default::default()
+        });
+        let auto = Trainer::new(&root(), cfg).unwrap().run().unwrap();
+        let h = &auto.history;
+        assert!(!h.diverged(), "autopilot must not record a divergence");
+        assert!(h.losses().last().unwrap().is_finite());
+        let trace = h.stability.as_ref().expect("trace");
+        assert!(trace.n_rollbacks() >= 1, "the shock must trigger a rollback");
+        assert!(!trace.gave_up);
+        assert!(h.total_tokens() >= 4 * 32 * 60);
     }
 
     #[test]
