@@ -1,0 +1,222 @@
+//! Observatory overhead: the same micro training loop run bare and with the
+//! full monitor stack attached — run registry wired into the sink, HTTP
+//! server up, and a scraper thread hammering `/metrics` + `/runs` for the
+//! whole run. The loop-level wall contrast is XLA-noise-dominated, so it is
+//! *reported* but not gated on; the enforced bounds are (a) `/metrics`
+//! scrape latency over real sockets (p99 < 50 ms) and (b) the per-step
+//! registry cost, microbenched under concurrent scraping and compared
+//! against the measured step time (< 2%). Also asserts the monitored and
+//! bare trajectories are bit-identical — the observatory observes, it never
+//! steers. Emits `BENCH_observatory.json`.
+//!
+//! `SLW_BENCH_SMOKE=1` shrinks the loop for CI.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use slw::config::{presets, DataRecipe};
+use slw::obs::{Monitor, Obs, ObsSink, RunRegistry};
+use slw::runtime::Engine;
+use slw::train::trainer::Trainer;
+use slw::util::json;
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> Option<String> {
+    let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(1)).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(2))).ok()?;
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).ok()?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).ok()?;
+    Some(out)
+}
+
+/// Background scraper: alternate `/metrics` and `/runs` as fast as the
+/// server answers, until told to stop. Returns the completed-request count.
+fn spawn_scraper(
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<u64> {
+    std::thread::spawn(move || {
+        let mut n = 0u64;
+        while !stop.load(Ordering::Acquire) {
+            if http_get(addr, "/metrics").is_some() {
+                n += 1;
+            }
+            if http_get(addr, "/runs").is_some() {
+                n += 1;
+            }
+        }
+        n
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let smoke = std::env::var("SLW_BENCH_SMOKE").is_ok();
+    let steps = if smoke { 40 } else { 120 };
+    let scrapes = if smoke { 50 } else { 200 };
+    let update_iters = if smoke { 20_000 } else { 100_000 };
+    let reps = 3usize;
+
+    let mut cfg = presets::base("micro")?;
+    cfg.token_budget = (steps * 4 * 32) as u64;
+    cfg.data = DataRecipe::Mixture { tokens: 40_000 };
+    cfg.eval_every = 0;
+
+    let registry = Arc::new(RunRegistry::new());
+    let mut monitor = Monitor::start("127.0.0.1:0", registry.clone(), Obs::off())?;
+    let addr = monitor.addr();
+
+    let mut engine = Engine::load(&root, "micro")?;
+    let mut plain_s: Vec<f64> = Vec::new();
+    let mut monitored_s: Vec<f64> = Vec::new();
+    let mut scraper_requests = 0u64;
+    // rep 0 warms the engine (compiles) and is discarded
+    for rep in 0..=reps {
+        let mut plain_traj: Vec<(usize, usize, u32)> = Vec::new();
+        for monitored in [false, true] {
+            let c = cfg.clone().with_name(&format!("bench_observatory_r{rep}_{monitored}"));
+            let mut t = Trainer::with_engine(engine, c)?;
+            let scraper = if monitored {
+                // registry only — no recorder, no metrics file — so the
+                // contrast isolates registry + server cost, under load
+                t.set_obs_sink(ObsSink {
+                    registry: Some(registry.clone()),
+                    worker: Some(0),
+                    ..Default::default()
+                });
+                let stop = Arc::new(AtomicBool::new(false));
+                Some((stop.clone(), spawn_scraper(addr, stop)))
+            } else {
+                None
+            };
+            let t0 = Instant::now();
+            let out = t.run_sync()?;
+            let dt = t0.elapsed().as_secs_f64();
+            engine = t.into_engine();
+            if let Some((stop, h)) = scraper {
+                stop.store(true, Ordering::Release);
+                scraper_requests += h.join().unwrap();
+            }
+            assert!(!out.history.diverged(), "bench run must stay healthy");
+            assert_eq!(out.history.steps.len(), steps);
+            let traj: Vec<(usize, usize, u32)> = out
+                .history
+                .steps
+                .iter()
+                .map(|r| (r.step, r.seqlen, r.stats.loss.to_bits()))
+                .collect();
+            if monitored {
+                assert_eq!(traj, plain_traj, "monitoring must not perturb the trajectory");
+            } else {
+                plain_traj = traj;
+            }
+            if rep > 0 {
+                if monitored {
+                    monitored_s.push(dt);
+                } else {
+                    plain_s.push(dt);
+                }
+            }
+        }
+    }
+    assert!(scraper_requests > 0, "the scraper must have landed requests mid-run");
+
+    // served tail sanity: the last monitored run is registered and its tail
+    // is the full surviving trajectory
+    let slug = format!("bench_observatory_r{reps}_true");
+    let tail = registry.steps_since(&slug, None).expect("monitored run registered");
+    assert_eq!(tail.lines().count(), steps, "tail must hold every committed step");
+
+    let median = |v: &mut Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let plain = median(&mut plain_s);
+    let monitored = median(&mut monitored_s);
+    let wall_overhead_pct = 100.0 * (monitored - plain) / plain;
+    let plain_step_ns = plain * 1e9 / steps as f64;
+
+    // scrape latency over real sockets against the populated registry
+    let mut lat_ms: Vec<f64> = (0..scrapes)
+        .map(|_| {
+            let t0 = Instant::now();
+            let resp = http_get(addr, "/metrics").expect("scrape must succeed");
+            assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50_ms = lat_ms[lat_ms.len() / 2];
+    let p99_ms = lat_ms[(lat_ms.len() * 99) / 100];
+
+    // per-step registry cost under concurrent scraping: the trainer's whole
+    // observatory hot path is one `update` per committed step
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = spawn_scraper(addr, stop.clone());
+    let rec = slw::train::metrics::StepRecord {
+        step: 0,
+        seqlen: 32,
+        bsz: 4,
+        lr: 1e-3,
+        tokens_after: 128,
+        stats: Default::default(),
+        sim_seconds: 1.0,
+    };
+    let row = slw::obs::metrics::step_row(
+        &rec,
+        3,
+        100,
+        &slw::pipeline::prefetch::PrefetchStats::default(),
+        Some("healthy"),
+        1.0,
+    );
+    registry.begin("bench_update", "bench update", "0", None);
+    let t0 = Instant::now();
+    for i in 0..update_iters {
+        let mut r = rec;
+        r.step = i;
+        registry.update("bench_update", &r, Some("healthy"), 1.0, &row);
+    }
+    let update_ns = t0.elapsed().as_nanos() as f64 / update_iters as f64;
+    stop.store(true, Ordering::Release);
+    scraper.join().unwrap();
+    let update_overhead_pct = 100.0 * update_ns / plain_step_ns;
+
+    monitor.shutdown();
+
+    println!(
+        "bench:\tobservatory\tsteps={steps}\tplain={plain:.3}s\tmonitored={monitored:.3}s\t\
+         wall_overhead={wall_overhead_pct:.2}%\tscrape_p50={p50_ms:.3}ms\t\
+         scrape_p99={p99_ms:.3}ms\tupdate={update_ns:.1}ns\t\
+         update_overhead={update_overhead_pct:.4}%\tscraper_requests={scraper_requests}"
+    );
+    let out = json::obj(vec![
+        ("bench", json::s("observatory")),
+        ("steps", json::num(steps as f64)),
+        ("reps", json::num(reps as f64)),
+        ("plain_s", json::num(plain)),
+        ("monitored_s", json::num(monitored)),
+        // wall-clock contrast: informative, XLA-noise-dominated, not gated
+        ("wall_overhead_pct", json::num(wall_overhead_pct)),
+        ("scrapes", json::num(scrapes as f64)),
+        ("scrape_p50_ms", json::num(p50_ms)),
+        ("scrape_p99_ms", json::num(p99_ms)),
+        ("update_ns", json::num(update_ns)),
+        // the enforced bounds
+        ("update_overhead_pct", json::num(update_overhead_pct)),
+        ("scraper_requests", json::num(scraper_requests as f64)),
+    ]);
+    std::fs::write("BENCH_observatory.json", out.to_string())?;
+    println!("wrote BENCH_observatory.json");
+    assert!(p99_ms < 50.0, "/metrics scrape p99 {p99_ms:.3}ms must stay < 50ms");
+    assert!(
+        update_overhead_pct < 2.0,
+        "per-step registry cost {update_overhead_pct:.4}% (under scraping) must stay < 2%"
+    );
+    Ok(())
+}

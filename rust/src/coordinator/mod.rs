@@ -38,7 +38,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
-use crate::obs::{Obs, ObsSink};
+use crate::obs::{Obs, ObsSink, RunRegistry};
 use crate::runtime::{Engine, HostState};
 use crate::train::metrics::RunHistory;
 use crate::train::trainer::{StoreCache, Trainer};
@@ -78,6 +78,7 @@ pub struct Coordinator {
     obs: Obs,
     metrics_root: Option<PathBuf>,
     incident_root: Option<PathBuf>,
+    registry: Option<Arc<RunRegistry>>,
 }
 
 impl Coordinator {
@@ -93,23 +94,28 @@ impl Coordinator {
             obs: Obs::off(),
             metrics_root: None,
             incident_root: None,
+            registry: None,
         }
     }
 
     /// Attach telemetry: workers share the event ring (per-run `run` spans,
     /// engine/prefetch spans from inside each trainer), write per-step
-    /// metrics to `<metrics_root>/<slug>.metrics.jsonl`, and dump incidents
-    /// under `<incident_root>/<slug>/`. Cached runs don't execute, so they
-    /// produce neither; observability settings never enter the cache key.
+    /// metrics to `<metrics_root>/<slug>.metrics.jsonl`, dump incidents
+    /// under `<incident_root>/<slug>/`, and (when a registry is attached)
+    /// publish live run state for the `--monitor` server. Cached runs don't
+    /// execute, so they produce none of these; observability settings never
+    /// enter the cache key.
     pub fn set_obs_sink(
         &mut self,
         obs: Obs,
         metrics_root: Option<PathBuf>,
         incident_root: Option<PathBuf>,
+        registry: Option<Arc<RunRegistry>>,
     ) {
         self.obs = obs;
         self.metrics_root = metrics_root;
         self.incident_root = incident_root;
+        self.registry = registry;
     }
 
     pub fn jobs(&self) -> usize {
@@ -247,8 +253,9 @@ impl Coordinator {
             let obs = self.obs.clone();
             let metrics_root = self.metrics_root.clone();
             let incident_root = self.incident_root.clone();
+            let registry = self.registry.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(w, root, queues, tx, obs, metrics_root, incident_root)
+                worker_loop(w, root, queues, tx, obs, metrics_root, incident_root, registry)
             }));
         }
         (rx, handles)
@@ -307,11 +314,13 @@ fn execute_job(
     artifacts_root: &std::path::Path,
     engines: &mut BTreeMap<String, Engine>,
     stores: &mut StoreCache,
+    w: usize,
     idx: usize,
     cfg: &RunConfig,
     obs: &Obs,
     metrics_root: Option<&PathBuf>,
     incident_root: Option<&PathBuf>,
+    registry: Option<&Arc<RunRegistry>>,
 ) -> Result<WorkerOut> {
     let model = cfg.model.clone();
     let engine = match engines.remove(&model) {
@@ -321,7 +330,7 @@ fn execute_job(
     // keep the warm engine whether the run succeeds, construction fails,
     // or training fails: one bad config must not cost the family's
     // compiled executables
-    engine.and_then(|engine| {
+    let run = engine.and_then(|engine| {
         match Trainer::with_engine_recoverable_cached(engine, cfg.clone(), Some(stores)) {
             Err((engine, e)) => {
                 engines.insert(model, engine);
@@ -334,6 +343,8 @@ fn execute_job(
                         .map(|d| d.join(format!("{}.metrics.jsonl", slugify(&cfg.name)))),
                     incident_root: incident_root.cloned(),
                     dump_warnings: false,
+                    registry: registry.cloned(),
+                    worker: Some(w),
                 });
                 let _run_span = crate::span!(obs, "run", idx);
                 let run = trainer.run().and_then(|out| {
@@ -347,7 +358,15 @@ fn execute_job(
                 run
             }
         }
-    })
+    });
+    // a run that never reached the trainer's own finish hook (construction
+    // failure, training error) still leaves a terminal registry state
+    if run.is_err() {
+        if let Some(reg) = registry {
+            reg.finish(&slugify(&cfg.name), "failed");
+        }
+    }
+    run
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -359,6 +378,7 @@ fn worker_loop(
     obs: Obs,
     metrics_root: Option<PathBuf>,
     incident_root: Option<PathBuf>,
+    registry: Option<Arc<RunRegistry>>,
 ) {
     // one warm engine per model family, reused across this worker's runs,
     // plus a per-worker corpus cache so sweep runs sharing a (recipe, seed)
@@ -373,11 +393,13 @@ fn worker_loop(
                 &artifacts_root,
                 &mut engines,
                 &mut stores,
+                w,
                 idx,
                 &cfg,
                 &obs,
                 metrics_root.as_ref(),
                 incident_root.as_ref(),
+                registry.as_ref(),
             )
         });
         if tx.send((idx, cfg, result, retries)).is_err() {

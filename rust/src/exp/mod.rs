@@ -29,12 +29,13 @@ pub mod table8_9;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::Coordinator;
-use crate::obs::{Obs, Recorder};
+use crate::obs::{Monitor, Obs, Recorder, RunRegistry};
 use crate::runtime::HostState;
 use crate::train::metrics::RunHistory;
 use crate::util::cli::Args;
@@ -119,13 +120,16 @@ impl ExpCtx {
 
     /// Route telemetry through the coordinator: worker spans land in `obs`,
     /// per-run JSONL metrics next to the step traces under
-    /// `<out>/runs/`, incident dumps under `<out>/incidents/`. Runs served
-    /// from the persistent cache produce neither (they never execute).
-    pub fn set_obs(&mut self, obs: Obs) {
+    /// `<out>/runs/`, incident dumps under `<out>/incidents/`, and live run
+    /// state into `registry` (the `--monitor` server's source). Runs served
+    /// from the persistent cache produce none of these (they never
+    /// execute).
+    pub fn set_obs(&mut self, obs: Obs, registry: Option<Arc<RunRegistry>>) {
         self.coord.set_obs_sink(
             obs,
             Some(self.out_dir.join("runs")),
             Some(self.out_dir.join("incidents")),
+            registry,
         );
     }
 
@@ -332,6 +336,8 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
     let no_cache = args.flag("no-cache");
     let n_seeds = args.usize_or("seeds", 1)?;
     let trace_path = args.opt_str("trace");
+    let monitor_addr = args.opt_str("monitor");
+    let monitor_linger = args.u64_or("monitor-linger", 0)?;
     args.finish()?;
     if jobs == 0 {
         bail!("--jobs must be >= 1");
@@ -342,11 +348,25 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
     let mut ctx = ExpCtx::configured(root, out_dir, scale, jobs, !no_cache);
     ctx.set_seeds(n_seeds);
     // --trace: record spans across the coordinator + every worker thread and
-    // export one Chrome/Perfetto trace for the whole invocation
-    let recorder = trace_path.as_ref().map(|_| Recorder::new(1 << 16));
+    // export one Chrome/Perfetto trace for the whole invocation. --monitor
+    // also needs a recorder (its /metrics endpoint exports the gauges), but
+    // only --trace writes the trace file.
+    let recorder =
+        (trace_path.is_some() || monitor_addr.is_some()).then(|| Recorder::new(1 << 16));
+    let registry = monitor_addr.as_ref().map(|_| Arc::new(RunRegistry::new()));
     if let Some(rec) = &recorder {
-        ctx.set_obs(Obs::new(rec.clone()));
+        ctx.set_obs(Obs::new(rec.clone()), registry.clone());
     }
+    let mut monitor = match (&monitor_addr, &registry) {
+        (Some(addr), Some(reg)) => {
+            let obs = recorder.as_ref().map(|r| Obs::new(r.clone())).unwrap_or_default();
+            let m = Monitor::start(addr, reg.clone(), obs)?;
+            // printed before any run starts so harnesses can scrape early
+            println!("monitor: listening on {}", m.url());
+            Some(m)
+        }
+        _ => None,
+    };
 
     fn run_one(ctx: &mut ExpCtx, id: &str) -> Result<()> {
         match id {
@@ -384,7 +404,8 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
             println!("experiments: {}", ALL_IDS.join(", "));
             println!(
                 "usage: slw exp <id|all> [--quick|--full|--scale X] [--jobs N] \
-                 [--seeds N] [--no-cache] [--out results/] [--trace out.json]"
+                 [--seeds N] [--no-cache] [--out results/] [--trace out.json] \
+                 [--monitor host:port] [--monitor-linger secs]"
             );
             Ok(())
         }
@@ -395,12 +416,30 @@ pub fn cmd_exp(mut args: Args) -> Result<()> {
     };
     if let (Some(rec), Some(path)) = (&recorder, &trace_path) {
         let events = rec.snapshot();
-        crate::obs::trace::export(&events, std::path::Path::new(path))?;
+        let dropped = rec.dropped();
+        crate::obs::trace::export(&events, dropped, std::path::Path::new(path))?;
         println!(
             "trace: {} events ({} dropped) -> {path}  (open in chrome://tracing or ui.perfetto.dev)",
             events.len(),
-            rec.dropped()
+            dropped
         );
+        if dropped > 0 {
+            crate::warn_!(
+                "trace: ring dropped {dropped} event(s); raise the ring capacity or trace a \
+                 shorter window"
+            );
+        }
+    }
+    if let Some(m) = &mut monitor {
+        if monitor_linger > 0 {
+            println!(
+                "monitor: lingering {}s at {} (all runs finished)",
+                monitor_linger,
+                m.url()
+            );
+            std::thread::sleep(std::time::Duration::from_secs(monitor_linger));
+        }
+        m.shutdown();
     }
     result
 }

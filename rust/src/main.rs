@@ -6,15 +6,17 @@
 //!   probes  score the zero/few-shot probe suite on a checkpoint
 //!   data    generate a synthetic corpus to a file
 //!   exp     regenerate a paper table/figure (fig1, table1, ... or `all`)
-//!   info    list artifact sets and models
+//!   analyze replay a results dir into a cross-run observability report
+//!   info    list artifact sets, models, and the results/cache footprint
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use slw::config::{presets, RunConfig};
 use slw::data::corpus::Corpus;
-use slw::obs::{Obs, ObsSink, Recorder};
+use slw::obs::{Monitor, Obs, ObsSink, Recorder, RunRegistry};
 use slw::pipeline::batcher::TruncationMode;
 use slw::train::checkpoint;
 use slw::train::trainer::Trainer;
@@ -31,6 +33,7 @@ fn main() -> Result<()> {
         "probes" => cmd_probes(args),
         "data" => cmd_data(args),
         "exp" => slw::exp::cmd_exp(args),
+        "analyze" => cmd_analyze(args),
         "info" => cmd_info(args),
         _ => {
             print_help();
@@ -106,23 +109,41 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let cfg = build_config(&mut args)?;
     let save = args.opt_str("save");
     let trace_path = args.opt_str("trace");
+    let monitor_addr = args.opt_str("monitor");
+    let monitor_linger = args.u64_or("monitor-linger", 0)?;
     args.finish()?;
     let name = cfg.name.clone();
     let mut trainer = Trainer::new(&root, cfg)?;
-    // telemetry: span recording + per-step JSONL metrics only with --trace;
-    // the divergence flight recorder is always armed (dumps are rare and
-    // only written when the sentinel fires or the run diverges)
-    let recorder = trace_path.as_ref().map(|_| Recorder::new(1 << 16));
+    // telemetry: span recording only with --trace or --monitor, per-step JSONL
+    // metrics only with --trace; the divergence flight recorder is always
+    // armed (dumps are rare and only written when the sentinel fires or the
+    // run diverges). The registry/monitor pair is strictly observe-only: the
+    // trainer never reads it back, so trajectories are bit-identical with or
+    // without --monitor.
+    let recorder =
+        (trace_path.is_some() || monitor_addr.is_some()).then(|| Recorder::new(1 << 16));
     let metrics_path = trace_path.as_ref().map(|p| {
         let stem = p.strip_suffix(".json").unwrap_or(p);
         PathBuf::from(format!("{stem}.metrics.jsonl"))
     });
+    let registry = monitor_addr.as_ref().map(|_| Arc::new(RunRegistry::new()));
     trainer.set_obs_sink(ObsSink {
         obs: recorder.as_ref().map(|r| Obs::new(r.clone())).unwrap_or_default(),
         metrics_path: metrics_path.clone(),
         incident_root: Some(PathBuf::from("results/incidents")),
         dump_warnings: false,
+        registry: registry.clone(),
+        worker: None,
     });
+    let monitor = match (&monitor_addr, &registry) {
+        (Some(addr), Some(reg)) => {
+            let obs = recorder.as_ref().map(|r| Obs::new(r.clone())).unwrap_or_default();
+            let m = Monitor::start(addr, reg.clone(), obs)?;
+            println!("monitor: listening on {}", m.url());
+            Some(m)
+        }
+        _ => None,
+    };
     let t0 = std::time::Instant::now();
     let out = trainer.run()?;
     let wall = t0.elapsed().as_secs_f64();
@@ -177,15 +198,28 @@ fn cmd_train(mut args: Args) -> Result<()> {
     }
     if let (Some(rec), Some(path)) = (&recorder, &trace_path) {
         let events = rec.snapshot();
-        slw::obs::trace::export(&events, std::path::Path::new(path))?;
+        let dropped = rec.dropped();
+        slw::obs::trace::export(&events, dropped, std::path::Path::new(path))?;
         println!(
-            "  trace: {} events ({} dropped) -> {path}  (chrome://tracing / ui.perfetto.dev)",
-            events.len(),
-            rec.dropped()
+            "  trace: {} events ({dropped} dropped) -> {path}  (chrome://tracing / ui.perfetto.dev)",
+            events.len()
         );
+        if dropped > 0 {
+            slw::warn_!(
+                "trace: ring dropped {dropped} event(s); oldest spans are missing — \
+                 raise the ring capacity or trace a shorter run"
+            );
+        }
         if let Some(m) = &metrics_path {
             println!("  metrics: {}", m.display());
         }
+    }
+    if let Some(mut m) = monitor {
+        if monitor_linger > 0 {
+            println!("monitor: lingering {monitor_linger}s at {} (run finished)", m.url());
+            std::thread::sleep(std::time::Duration::from_secs(monitor_linger));
+        }
+        m.shutdown();
     }
     Ok(())
 }
@@ -268,8 +302,52 @@ fn cmd_data(mut args: Args) -> Result<()> {
     Ok(())
 }
 
+/// Recursively sum the sizes of all regular files under `dir`.
+fn dir_bytes(dir: &std::path::Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    entries
+        .flatten()
+        .map(|e| {
+            let p = e.path();
+            if p.is_dir() {
+                dir_bytes(&p)
+            } else {
+                e.metadata().map(|m| m.len()).unwrap_or(0)
+            }
+        })
+        .sum()
+}
+
+fn cmd_analyze(args: Args) -> Result<()> {
+    let dir = PathBuf::from(
+        args.positionals.get(1).cloned().unwrap_or_else(|| "results".into()),
+    );
+    args.finish()?;
+    let analysis = slw::obs::analyze::analyze(&dir)?;
+    let report = analysis.save(&dir)?;
+    println!(
+        "analyze: {} run(s), {} incident(s), {} cluster(s), {} pair(s) compared",
+        analysis.runs.len(),
+        analysis.incidents.len(),
+        analysis.clusters.len(),
+        analysis.pairs.len()
+    );
+    for run in &analysis.runs {
+        println!(
+            "  {:<24} {:>5} steps  {:>3} rewound  {:>2} skipped line(s)",
+            run.slug,
+            run.rows.len(),
+            run.rewound,
+            run.skipped
+        );
+    }
+    println!("  report: {}", report.display());
+    Ok(())
+}
+
 fn cmd_info(mut args: Args) -> Result<()> {
     let root = artifacts_root(&mut args);
+    let results = PathBuf::from(args.str_or("results", "results"));
     args.finish()?;
     let index = std::fs::read_to_string(root.join("index.json"))
         .context("artifacts/index.json missing — run `make artifacts`")?;
@@ -297,6 +375,49 @@ fn cmd_info(mut args: Args) -> Result<()> {
         );
     }
     println!("warm_B/step = per-step host traffic at max seqlen; state never crosses back.");
+
+    // results footprint: run-cache entries + incident dumps under --results
+    let cache_dir = results.join("cache");
+    let mut cache_entries = 0usize;
+    if let Ok(entries) = std::fs::read_dir(&cache_dir) {
+        for e in entries.flatten() {
+            if e.path().join("entry.json").is_file() {
+                cache_entries += 1;
+            }
+        }
+    }
+    println!(
+        "results ({}): {cache_entries} cached run(s), {} B in {}",
+        results.display(),
+        dir_bytes(&cache_dir),
+        cache_dir.display()
+    );
+    let incidents_dir = results.join("incidents");
+    let mut slugs: Vec<(String, usize)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&incidents_dir) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if !p.is_dir() {
+                continue;
+            }
+            let n = std::fs::read_dir(&p)
+                .map(|d| {
+                    d.flatten()
+                        .filter(|f| f.path().extension().is_some_and(|x| x == "json"))
+                        .count()
+                })
+                .unwrap_or(0);
+            slugs.push((e.file_name().to_string_lossy().into_owned(), n));
+        }
+    }
+    slugs.sort();
+    if slugs.is_empty() {
+        println!("  incidents: none");
+    } else {
+        for (slug, n) in &slugs {
+            println!("  incidents: {slug} -> {n} dump(s)");
+        }
+    }
     Ok(())
 }
 
@@ -317,13 +438,18 @@ fn print_help() {
                    adaptive and autopilot runs stay threaded via plan re-publication)\n\
                    [--trace out.json]  (Chrome/Perfetto span trace + per-step\n\
                    JSONL metrics; incident dumps land in results/incidents/)\n\
+                   [--monitor host:port [--monitor-linger secs]]  (pull-based\n\
+                   HTTP observatory: /metrics /runs /runs/<slug>/steps /healthz)\n\
            tune    --model tiny [--probe-steps N] [--durations a,b,c] [--starts a,b]\n\
            probes  --model tiny [--ckpt file] [--shots K] [--batches N]\n\
            data    --kind mixture|markov|induction --tokens N --out file\n\
            exp     <fig1|table1|table2|table3|fig2|fig3|fig4|fig5_6|table4|table5|\n\
                     fig8|fig10|table8_9|stability|scenarios|all> [--quick] [--jobs N]\n\
                     [--seeds N] [--no-cache] [--out results/] [--trace out.json]\n\
-           info    list artifact sets\n\
+                    [--monitor host:port [--monitor-linger secs]]\n\
+           analyze [results-dir]  replay metrics JSONL + incident dumps into a\n\
+                    cross-run report (results/analysis/report.md + TSVs)\n\
+           info    list artifact sets [--results results/]  (+ cache/incident footprint)\n\
          \n\
          Run `make artifacts` first. SLW_LOG=error|warn|info|debug|trace\n\
          (strict: anything else warns and falls back to info)."

@@ -1,0 +1,762 @@
+//! Cross-run analysis engine (`slw analyze [results-dir]`).
+//!
+//! Replays the telemetry corpus a results directory accumulates —
+//! `*.metrics.jsonl` / `runs/*.metrics.jsonl` step streams, the flight
+//! recorder's `incidents/<slug>/<step>.json` dumps, and `scenarios.tsv` —
+//! into one cross-run report (markdown + TSV):
+//!
+//! - **Per-seqlen-bucket gradient-variance attribution** — the paper's
+//!   Fig. 2 finding (variance extremes concentrate at long sequences and
+//!   early steps) recomputed from our own telemetry.
+//! - **Incident clustering** — every dump attributed to the stats channel
+//!   that fired (first non-finite channel, else the largest spike over the
+//!   dump's own trailing-window medians) and the step phase it hit, then
+//!   grouped by (reason, channel, phase).
+//! - **Pairwise run comparison** — first-divergence-step detection by exact
+//!   loss-bit comparison over common steps.
+//!
+//! Parsing reuses [`super::metrics::parse_jsonl`], so the `"nan"`/`"inf"`
+//! string encodings and crash-truncated final lines are handled in one
+//! place. Rolled-back steps appear twice in the append-only JSONL (the
+//! rewound row and its replay); the analyzer deduplicates by step keeping
+//! the *last* occurrence — the surviving trajectory — and reports how many
+//! rows were rewound.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::exp::scenarios::{parse_report, ReportRow};
+use crate::util::json::{self, Json};
+use crate::util::tsv::{f2, f3, pct, TsvWriter};
+
+use super::metrics::{parse_jsonl, MetricsRow};
+
+/// Stats channels in attribution-priority order (matches `stats_json`).
+pub const CHANNELS: [&str; 10] = [
+    "loss", "grad_l2", "var_l1", "var_max", "mom_l1", "clip_coef", "urms_embed", "urms_early",
+    "urms_late", "urms_final",
+];
+
+/// Pairwise comparison is O(runs²); past this many runs the tail is
+/// dropped (loudly — the report says so).
+pub const MAX_PAIRWISE_RUNS: usize = 12;
+
+/// Variance extremes are defined as `var_max` at or above this percentile
+/// of the corpus (non-finite always counts as extreme).
+pub const EXTREME_PERCENTILE: f64 = 0.90;
+
+/// One run's deduplicated step stream.
+pub struct RunSeries {
+    pub slug: String,
+    /// step-sorted, one row per step (last occurrence wins)
+    pub rows: Vec<MetricsRow>,
+    /// unparseable non-blank lines (e.g. crash-truncated tail)
+    pub skipped: usize,
+    /// rows superseded by a rollback replay
+    pub rewound: usize,
+}
+
+/// One incident dump, attributed to a channel and step phase.
+pub struct Incident {
+    pub slug: String,
+    pub run: String,
+    pub step: usize,
+    pub reason: String,
+    pub scenario: Option<String>,
+    pub channel: &'static str,
+    pub phase: &'static str,
+}
+
+/// Aggregated variance stats for one bucket (seqlen or phase).
+#[derive(Clone, Default)]
+pub struct Bucket {
+    pub steps: usize,
+    pub sum_var_l1: f64,
+    pub sum_var_max: f64,
+    pub finite_var_l1: usize,
+    pub finite_var_max: usize,
+    pub max_var_max: f64,
+    pub extremes: usize,
+}
+
+impl Bucket {
+    fn add(&mut self, row: &MetricsRow, threshold: f64) {
+        self.steps += 1;
+        if row.var_l1.is_finite() {
+            self.sum_var_l1 += row.var_l1;
+            self.finite_var_l1 += 1;
+        }
+        if row.var_max.is_finite() {
+            self.sum_var_max += row.var_max;
+            self.finite_var_max += 1;
+            self.max_var_max = self.max_var_max.max(row.var_max);
+        }
+        if !row.var_max.is_finite() || row.var_max >= threshold {
+            self.extremes += 1;
+        }
+    }
+
+    pub fn mean_var_l1(&self) -> f64 {
+        self.sum_var_l1 / self.finite_var_l1.max(1) as f64
+    }
+
+    pub fn mean_var_max(&self) -> f64 {
+        self.sum_var_max / self.finite_var_max.max(1) as f64
+    }
+
+    pub fn extreme_share(&self) -> f64 {
+        self.extremes as f64 / self.steps.max(1) as f64
+    }
+}
+
+/// One pairwise run comparison.
+pub struct PairCompare {
+    pub a: String,
+    pub b: String,
+    pub common_steps: usize,
+    /// first common step where loss bits or the (seqlen, bsz) shape differ
+    pub first_divergence: Option<usize>,
+    /// max |loss_a - loss_b| over common finite steps
+    pub max_loss_delta: f64,
+}
+
+/// Everything `slw analyze` computes.
+pub struct Analysis {
+    pub runs: Vec<RunSeries>,
+    pub incidents: Vec<Incident>,
+    pub scenario_rows: Vec<ReportRow>,
+    pub extreme_threshold: f64,
+    pub seqlen_buckets: BTreeMap<usize, Bucket>,
+    pub phase_buckets: BTreeMap<&'static str, Bucket>,
+    pub clusters: BTreeMap<(String, &'static str, &'static str), Vec<usize>>,
+    pub pairs: Vec<PairCompare>,
+    pub pairwise_truncated: usize,
+}
+
+fn phase_of(step: usize, max_step: usize) -> &'static str {
+    if max_step == 0 {
+        return "early";
+    }
+    match 3 * step / (max_step + 1) {
+        0 => "early",
+        1 => "mid",
+        _ => "late",
+    }
+}
+
+const PHASE_ORDER: [&str; 4] = ["early", "mid", "late", "unknown"];
+
+// ---------------------------------------------------------------------------
+// loading
+
+/// Slug from `<slug>.metrics.jsonl`.
+fn metrics_slug(path: &Path) -> Option<String> {
+    Some(path.file_name()?.to_str()?.strip_suffix(".metrics.jsonl")?.to_string())
+}
+
+/// Load every metrics stream under `dir` (top level and `runs/`),
+/// deduplicating rows by step with last-occurrence-wins.
+pub fn load_runs(dir: &Path) -> Result<Vec<RunSeries>> {
+    let mut paths = Vec::new();
+    for sub in [dir.to_path_buf(), dir.join("runs")] {
+        let Ok(entries) = std::fs::read_dir(&sub) else { continue };
+        for e in entries.flatten() {
+            if metrics_slug(&e.path()).is_some() {
+                paths.push(e.path());
+            }
+        }
+    }
+    paths.sort();
+    let mut runs = Vec::new();
+    for path in paths {
+        let slug = metrics_slug(&path).expect("filtered above");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let (raw, skipped) = parse_jsonl(&text);
+        let n_raw = raw.len();
+        let mut by_step: BTreeMap<usize, MetricsRow> = BTreeMap::new();
+        for row in raw {
+            by_step.insert(row.step, row);
+        }
+        let rewound = n_raw - by_step.len();
+        runs.push(RunSeries {
+            slug,
+            rows: by_step.into_values().collect(),
+            skipped,
+            rewound,
+        });
+    }
+    Ok(runs)
+}
+
+/// Channel attribution for one incident: the first non-finite trigger
+/// channel, else the largest |trigger| / |median of the dump's own step
+/// tail| ratio, else `"loss"`.
+fn attribute_channel(trigger: &Json, tail_steps: &[Json]) -> &'static str {
+    let tval = |name: &str| trigger.opt(name).and_then(|v| json::get_nf(v).ok());
+    for name in CHANNELS {
+        if tval(name).is_some_and(|v| !v.is_finite()) {
+            return name;
+        }
+    }
+    let mut best: Option<(&'static str, f64)> = None;
+    for name in CHANNELS {
+        let Some(t) = tval(name) else { continue };
+        let mut hist: Vec<f64> = tail_steps
+            .iter()
+            .filter_map(|s| s.opt("stats")?.opt(name))
+            .filter_map(|v| json::get_nf(v).ok())
+            .filter(|v| v.is_finite())
+            .map(f64::abs)
+            .collect();
+        if hist.is_empty() {
+            continue;
+        }
+        hist.sort_by(f64::total_cmp);
+        let median = hist[hist.len() / 2];
+        let ratio = t.abs() / median.max(1e-12);
+        if best.is_none_or(|(_, r)| ratio > r) {
+            best = Some((name, ratio));
+        }
+    }
+    best.map(|(n, _)| n).unwrap_or("loss")
+}
+
+/// Load every incident dump under `dir/incidents/<slug>/<step>.json`,
+/// attributing each to a channel and (when the run's metrics stream was
+/// loaded) a step phase.
+pub fn load_incidents(dir: &Path, runs: &[RunSeries]) -> Vec<Incident> {
+    let max_step: BTreeMap<&str, usize> = runs
+        .iter()
+        .filter_map(|r| Some((r.slug.as_str(), r.rows.last()?.step)))
+        .collect();
+    let mut out = Vec::new();
+    let Ok(run_dirs) = std::fs::read_dir(dir.join("incidents")) else { return out };
+    let mut run_dirs: Vec<PathBuf> = run_dirs.flatten().map(|e| e.path()).collect();
+    run_dirs.sort();
+    for run_dir in run_dirs {
+        let Some(slug) = run_dir.file_name().and_then(|n| n.to_str()).map(String::from) else {
+            continue;
+        };
+        let Ok(dumps) = std::fs::read_dir(&run_dir) else { continue };
+        let mut dumps: Vec<PathBuf> = dumps
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        dumps.sort();
+        for path in dumps {
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            let Ok(doc) = Json::parse(&text) else { continue };
+            let (Ok(step), Ok(reason)) = (
+                doc.get("step").and_then(|v| v.usize()),
+                doc.get("reason").and_then(|v| v.str()),
+            ) else {
+                continue;
+            };
+            let tail: &[Json] =
+                doc.opt("steps").and_then(|s| s.arr().ok()).unwrap_or(&[]);
+            let channel = doc
+                .opt("trigger")
+                .map(|t| attribute_channel(t, tail))
+                .unwrap_or("loss");
+            let phase = max_step
+                .get(slug.as_str())
+                .map(|&m| phase_of(step, m))
+                .unwrap_or("unknown");
+            out.push(Incident {
+                slug: slug.clone(),
+                run: doc
+                    .opt("run")
+                    .and_then(|v| v.str().ok())
+                    .unwrap_or(&slug)
+                    .to_string(),
+                step,
+                reason: reason.to_string(),
+                scenario: doc
+                    .opt("scenario")
+                    .and_then(|v| v.str().ok())
+                    .map(String::from),
+                channel,
+                phase,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// analysis
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::INFINITY;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn compare_pair(a: &RunSeries, b: &RunSeries) -> PairCompare {
+    let by_step: BTreeMap<usize, &MetricsRow> = b.rows.iter().map(|r| (r.step, r)).collect();
+    let mut common = 0usize;
+    let mut first_div = None;
+    let mut max_delta = 0.0f64;
+    for ra in &a.rows {
+        let Some(rb) = by_step.get(&ra.step) else { continue };
+        common += 1;
+        let diverged = ra.loss.to_bits() != rb.loss.to_bits()
+            || ra.seqlen != rb.seqlen
+            || ra.bsz != rb.bsz;
+        if diverged && first_div.is_none() {
+            first_div = Some(ra.step);
+        }
+        if ra.loss.is_finite() && rb.loss.is_finite() {
+            max_delta = max_delta.max((ra.loss - rb.loss).abs());
+        }
+    }
+    PairCompare {
+        a: a.slug.clone(),
+        b: b.slug.clone(),
+        common_steps: common,
+        first_divergence: first_div,
+        max_loss_delta: max_delta,
+    }
+}
+
+/// Run the full analysis over a results directory.
+pub fn analyze(dir: &Path) -> Result<Analysis> {
+    let runs = load_runs(dir)?;
+    let incidents = load_incidents(dir, &runs);
+    let scenario_rows = match std::fs::read_to_string(dir.join("scenarios.tsv")) {
+        Ok(text) => parse_report(&text).unwrap_or_default(),
+        Err(_) => Vec::new(),
+    };
+
+    // corpus-wide extreme threshold over finite var_max
+    let mut var_max_all: Vec<f64> = runs
+        .iter()
+        .flat_map(|r| r.rows.iter())
+        .map(|row| row.var_max)
+        .filter(|v| v.is_finite())
+        .collect();
+    var_max_all.sort_by(f64::total_cmp);
+    let extreme_threshold = percentile(&var_max_all, EXTREME_PERCENTILE);
+
+    let mut seqlen_buckets: BTreeMap<usize, Bucket> = BTreeMap::new();
+    let mut phase_buckets: BTreeMap<&'static str, Bucket> = BTreeMap::new();
+    for run in &runs {
+        let max_step = run.rows.last().map(|r| r.step).unwrap_or(0);
+        for row in &run.rows {
+            seqlen_buckets.entry(row.seqlen).or_default().add(row, extreme_threshold);
+            phase_buckets
+                .entry(phase_of(row.step, max_step))
+                .or_default()
+                .add(row, extreme_threshold);
+        }
+    }
+
+    let mut clusters: BTreeMap<(String, &'static str, &'static str), Vec<usize>> =
+        BTreeMap::new();
+    for (i, inc) in incidents.iter().enumerate() {
+        clusters.entry((inc.reason.clone(), inc.channel, inc.phase)).or_default().push(i);
+    }
+
+    let n_pair_runs = runs.len().min(MAX_PAIRWISE_RUNS);
+    let mut pairs = Vec::new();
+    for i in 0..n_pair_runs {
+        for j in (i + 1)..n_pair_runs {
+            pairs.push(compare_pair(&runs[i], &runs[j]));
+        }
+    }
+
+    Ok(Analysis {
+        pairwise_truncated: runs.len().saturating_sub(n_pair_runs),
+        runs,
+        incidents,
+        scenario_rows,
+        extreme_threshold,
+        seqlen_buckets,
+        phase_buckets,
+        clusters,
+        pairs,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// rendering
+
+fn bucket_table<K: ToString>(
+    label: &str,
+    buckets: impl Iterator<Item = (K, Bucket)>,
+) -> TsvWriter {
+    let mut w = TsvWriter::new(&[
+        label,
+        "steps",
+        "mean_var_l1",
+        "mean_var_max",
+        "max_var_max",
+        "extremes",
+        "extreme_share",
+    ]);
+    for (k, b) in buckets {
+        w.row(&[
+            k.to_string(),
+            b.steps.to_string(),
+            f3(b.mean_var_l1()),
+            f3(b.mean_var_max()),
+            f3(b.max_var_max),
+            b.extremes.to_string(),
+            pct(b.extreme_share()),
+        ]);
+    }
+    w
+}
+
+impl Analysis {
+    pub fn seqlen_table(&self) -> TsvWriter {
+        bucket_table("seqlen", self.seqlen_buckets.iter().map(|(k, b)| (*k, b.clone())))
+    }
+
+    pub fn phase_table(&self) -> TsvWriter {
+        bucket_table(
+            "phase",
+            PHASE_ORDER
+                .iter()
+                .filter_map(|p| self.phase_buckets.get(p).map(|b| (*p, b.clone()))),
+        )
+    }
+
+    pub fn cluster_table(&self) -> TsvWriter {
+        let mut w =
+            TsvWriter::new(&["reason", "channel", "phase", "count", "runs", "example"]);
+        let mut entries: Vec<_> = self.clusters.iter().collect();
+        entries.sort_by_key(|(_, members)| std::cmp::Reverse(members.len()));
+        for ((reason, channel, phase), members) in entries {
+            let run_set: BTreeSet<&str> =
+                members.iter().map(|&i| self.incidents[i].slug.as_str()).collect();
+            let ex = &self.incidents[members[0]];
+            w.row(&[
+                reason.clone(),
+                channel.to_string(),
+                phase.to_string(),
+                members.len().to_string(),
+                run_set.into_iter().collect::<Vec<_>>().join(","),
+                format!("{}@{}", ex.slug, ex.step),
+            ]);
+        }
+        w
+    }
+
+    pub fn pair_table(&self) -> TsvWriter {
+        let mut w = TsvWriter::new(&[
+            "run_a",
+            "run_b",
+            "common_steps",
+            "first_divergence",
+            "max_loss_delta",
+        ]);
+        for p in &self.pairs {
+            w.row(&[
+                p.a.clone(),
+                p.b.clone(),
+                p.common_steps.to_string(),
+                p.first_divergence.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+                f3(p.max_loss_delta),
+            ]);
+        }
+        w
+    }
+
+    /// The full markdown report.
+    pub fn report_markdown(&self, dir: &Path) -> String {
+        let total_rows: usize = self.runs.iter().map(|r| r.rows.len()).sum();
+        let skipped: usize = self.runs.iter().map(|r| r.skipped).sum();
+        let rewound: usize = self.runs.iter().map(|r| r.rewound).sum();
+        let mut out = String::new();
+        out.push_str("# Observatory cross-run analysis\n\n");
+        out.push_str(&format!(
+            "Results dir: `{}` — {} run(s), {} surviving step row(s) ({} rewound by \
+             rollbacks, {} unparseable line(s) skipped), {} incident dump(s), {} scenario \
+             row(s).\n\n",
+            dir.display(),
+            self.runs.len(),
+            total_rows,
+            rewound,
+            skipped,
+            self.scenario_rows.len(),
+        ));
+        for run in &self.runs {
+            out.push_str(&format!(
+                "- `{}`: {} steps (final step {}, {} rewound, {} skipped)\n",
+                run.slug,
+                run.rows.len(),
+                run.rows.last().map(|r| r.step.to_string()).unwrap_or_else(|| "-".into()),
+                run.rewound,
+                run.skipped,
+            ));
+        }
+
+        out.push_str("\n## Per-seqlen-bucket gradient-variance attribution\n\n");
+        out.push_str(&format!(
+            "Extreme = `var_max` ≥ p{:.0} of the finite corpus ({}) or non-finite. The \
+             paper's Fig. 2 predicts the extreme share concentrates in the longest \
+             buckets.\n\n",
+            100.0 * EXTREME_PERCENTILE,
+            if self.extreme_threshold.is_finite() {
+                f2(self.extreme_threshold)
+            } else {
+                "n/a".into()
+            },
+        ));
+        out.push_str(&self.seqlen_table().to_markdown());
+
+        out.push_str("\n## Step-phase attribution\n\n");
+        out.push_str(
+            "Steps bucketed into thirds of each run's own step range (the paper's \
+             early-phase instability shows up as a higher extreme share in `early`).\n\n",
+        );
+        out.push_str(&self.phase_table().to_markdown());
+
+        out.push_str("\n## Incident clusters\n\n");
+        if self.clusters.is_empty() {
+            out.push_str("No incident dumps found.\n");
+        } else {
+            out.push_str(&self.cluster_table().to_markdown());
+        }
+
+        out.push_str("\n## Pairwise run comparison\n\n");
+        if self.pairs.is_empty() {
+            out.push_str("Fewer than two runs — nothing to compare.\n");
+        } else {
+            out.push_str(
+                "`first_divergence` is the first common step whose loss bits or \
+                 (seqlen, bsz) shape differ; `-` means bit-identical on every common \
+                 step.\n\n",
+            );
+            out.push_str(&self.pair_table().to_markdown());
+        }
+        if self.pairwise_truncated > 0 {
+            out.push_str(&format!(
+                "\n(Pairwise comparison capped at {} runs by slug order; {} run(s) not \
+                 compared.)\n",
+                MAX_PAIRWISE_RUNS, self.pairwise_truncated,
+            ));
+        }
+
+        out.push_str("\n## Scenario lab summary\n\n");
+        if self.scenario_rows.is_empty() {
+            out.push_str("No `scenarios.tsv` in this results dir.\n");
+        } else {
+            out.push_str(&crate::exp::scenarios::render_report(&self.scenario_rows).to_markdown());
+        }
+        out
+    }
+
+    /// Write `analysis/{report.md, *.tsv}` under the results dir; returns
+    /// the report path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        let out_dir = dir.join("analysis");
+        std::fs::create_dir_all(&out_dir)
+            .with_context(|| format!("creating {}", out_dir.display()))?;
+        self.seqlen_table().save(&out_dir.join("seqlen_variance.tsv"))?;
+        self.phase_table().save(&out_dir.join("phase_variance.tsv"))?;
+        self.cluster_table().save(&out_dir.join("incident_clusters.tsv"))?;
+        self.pair_table().save(&out_dir.join("run_pairs.tsv"))?;
+        let report = out_dir.join("report.md");
+        std::fs::write(&report, self.report_markdown(dir))
+            .with_context(|| format!("writing {}", report.display()))?;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::step_row;
+    use crate::pipeline::prefetch::PrefetchStats;
+    use crate::runtime::StepStats;
+    use crate::train::metrics::StepRecord;
+
+    fn row_line(step: usize, seqlen: usize, loss: f32, var_max: f32) -> String {
+        let rec = StepRecord {
+            step,
+            seqlen,
+            bsz: 4,
+            lr: 1e-3,
+            tokens_after: ((step + 1) * seqlen * 4) as u64,
+            stats: StepStats { loss, var_l1: var_max as f32 * 2.0, var_max, ..Default::default() },
+            sim_seconds: 1.0,
+        };
+        step_row(&rec, step, 64, &PrefetchStats::default(), Some("healthy"), 1.0).to_string()
+    }
+
+    fn temp_results(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("slw_analyze_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(dir.join("runs")).unwrap();
+        dir
+    }
+
+    /// 20-step run: short seqlen 8 for steps 0..9, long 64 for 10..19; the
+    /// long bucket carries the variance extremes.
+    fn write_run(dir: &Path, name: &str, bump: f32, truncate: bool) {
+        let mut text = String::new();
+        for step in 0..20 {
+            let (seqlen, var_max) =
+                if step < 10 { (8, 0.1) } else { (64, 5.0 + bump) };
+            let loss = 4.0 - 0.05 * step as f32 + bump;
+            text.push_str(&row_line(step, seqlen, loss, var_max));
+            text.push('\n');
+        }
+        // rollback artifact: steps 6 and 7 appear twice (replay wins)
+        text.push_str(&row_line(6, 8, 9.9, 0.1));
+        text.push('\n');
+        text.push_str(&row_line(7, 8, 9.9, 0.1));
+        text.push('\n');
+        if truncate {
+            let full = row_line(20, 64, 1.0, 1.0);
+            text.push_str(&full[..full.len() / 2]);
+        }
+        std::fs::write(dir.join("runs").join(format!("{name}.metrics.jsonl")), text).unwrap();
+    }
+
+    fn write_incident(dir: &Path, slug: &str, step: usize, reason: &str, nan_channel: bool) {
+        let d = dir.join("incidents").join(slug);
+        std::fs::create_dir_all(&d).unwrap();
+        let trigger = StepStats {
+            loss: 4.0,
+            grad_l2: if nan_channel { f32::NAN } else { 40.0 },
+            var_l1: 1.0,
+            var_max: 1.0,
+            mom_l1: 1.0,
+            clip_coef: 1.0,
+            ..Default::default()
+        };
+        let tail: Vec<Json> = (0..4)
+            .map(|i| {
+                crate::obs::metrics::record_json(&StepRecord {
+                    step: step.saturating_sub(4) + i,
+                    seqlen: 64,
+                    bsz: 4,
+                    lr: 1e-3,
+                    tokens_after: 100,
+                    stats: StepStats {
+                        loss: 4.0,
+                        grad_l2: 1.0,
+                        var_l1: 1.0,
+                        var_max: 1.0,
+                        mom_l1: 1.0,
+                        clip_coef: 1.0,
+                        ..Default::default()
+                    },
+                    sim_seconds: 1.0,
+                })
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("run", json::s(slug)),
+            ("step", json::num(step as f64)),
+            ("reason", json::s(reason)),
+            ("scenario", Json::Null),
+            ("trigger", crate::obs::metrics::stats_json(&trigger)),
+            ("detail", json::obj(vec![])),
+            ("steps", Json::Arr(tail)),
+            ("events", Json::Arr(vec![])),
+        ]);
+        std::fs::write(d.join(format!("{step}.json")), doc.to_string()).unwrap();
+    }
+
+    #[test]
+    fn end_to_end_report() {
+        let dir = temp_results("e2e");
+        write_run(&dir, "run_a", 0.0, true);
+        write_run(&dir, "run_b", 0.5, false);
+        write_incident(&dir, "run_a", 15, "rollback", true);
+        write_incident(&dir, "run_a", 18, "rollback", true);
+        write_incident(&dir, "run_b", 2, "divergence", false);
+
+        let a = analyze(&dir).unwrap();
+        assert_eq!(a.runs.len(), 2);
+        // dedup: 22 raw rows -> 20 steps, 2 rewound; truncated tail skipped
+        assert_eq!(a.runs[0].rows.len(), 20);
+        assert_eq!(a.runs[0].rewound, 2);
+        assert_eq!(a.runs[0].skipped, 1);
+        assert_eq!(a.runs[1].skipped, 0);
+        // rollback replay won: surviving step 6 has the replayed loss
+        let s6 = a.runs[0].rows.iter().find(|r| r.step == 6).unwrap();
+        assert_eq!(s6.loss, 9.9f32 as f64);
+
+        // extremes live exclusively in the long-seqlen bucket
+        let b8 = &a.seqlen_buckets[&8];
+        let b64 = &a.seqlen_buckets[&64];
+        assert_eq!(b8.steps, 20);
+        assert_eq!(b64.steps, 20);
+        assert_eq!(b8.extremes, 0);
+        assert!(b64.extremes > 0);
+        assert!(b64.mean_var_max() > b8.mean_var_max());
+
+        // incident attribution: NaN channel wins outright; the finite one
+        // is the largest spike over the tail medians (grad_l2 40x)
+        assert_eq!(a.incidents.len(), 3);
+        assert!(a.incidents.iter().all(|i| i.channel == "grad_l2"));
+        // phases come from the loaded runs: steps 15/18 of 0..19 are late,
+        // step 2 is early
+        let key_late = ("rollback".to_string(), "grad_l2", "late");
+        let key_early = ("divergence".to_string(), "grad_l2", "early");
+        assert_eq!(a.clusters[&key_late].len(), 2);
+        assert_eq!(a.clusters[&key_early].len(), 1);
+
+        // pairwise: same shapes, different losses -> diverges at step 0
+        assert_eq!(a.pairs.len(), 1);
+        assert_eq!(a.pairs[0].common_steps, 20);
+        assert_eq!(a.pairs[0].first_divergence, Some(0));
+        assert!(a.pairs[0].max_loss_delta > 0.0);
+
+        let report = a.save(&dir).unwrap();
+        let text = std::fs::read_to_string(&report).unwrap();
+        assert!(text.contains("# Observatory cross-run analysis"));
+        assert!(text.contains("## Per-seqlen-bucket gradient-variance attribution"));
+        assert!(text.contains("## Incident clusters"));
+        assert!(text.contains("rollback"));
+        assert!(dir.join("analysis/seqlen_variance.tsv").exists());
+        assert!(dir.join("analysis/incident_clusters.tsv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dir_is_not_an_error() {
+        let dir = temp_results("empty");
+        let a = analyze(&dir).unwrap();
+        assert!(a.runs.is_empty() && a.incidents.is_empty() && a.pairs.is_empty());
+        let report = a.save(&dir).unwrap();
+        let text = std::fs::read_to_string(report).unwrap();
+        assert!(text.contains("0 run(s)"));
+        assert!(text.contains("No incident dumps found."));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn identical_runs_have_no_divergence() {
+        let dir = temp_results("ident");
+        write_run(&dir, "a", 0.0, false);
+        write_run(&dir, "b", 0.0, false);
+        let a = analyze(&dir).unwrap();
+        assert_eq!(a.pairs[0].first_divergence, None);
+        assert_eq!(a.pairs[0].max_loss_delta, 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn phase_bucketing_splits_thirds() {
+        assert_eq!(phase_of(0, 29), "early");
+        assert_eq!(phase_of(9, 29), "early");
+        assert_eq!(phase_of(10, 29), "mid");
+        assert_eq!(phase_of(19, 29), "mid");
+        assert_eq!(phase_of(20, 29), "late");
+        assert_eq!(phase_of(29, 29), "late");
+        assert_eq!(phase_of(0, 0), "early");
+    }
+}

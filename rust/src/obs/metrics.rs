@@ -126,6 +126,111 @@ pub fn step_row(
     ])
 }
 
+/// One parsed metrics row — the read side of [`step_row`]. Shared by the
+/// analyzer and anything else replaying `*.metrics.jsonl` files.
+#[derive(Clone, Debug)]
+pub struct MetricsRow {
+    pub step: usize,
+    pub seqlen: usize,
+    pub bsz: usize,
+    pub lr: f64,
+    pub tokens: u64,
+    /// The ten stats channels may be NaN/±inf (string-encoded on disk).
+    pub loss: f64,
+    pub grad_l2: f64,
+    pub var_l1: f64,
+    pub var_max: f64,
+    pub mom_l1: f64,
+    pub clip_coef: f64,
+    pub urms_embed: f64,
+    pub urms_early: f64,
+    pub urms_late: f64,
+    pub urms_final: f64,
+    pub sim_s: f64,
+    pub host_transfers: usize,
+    pub host_bytes: u64,
+    pub pf_served: usize,
+    pub pf_hits: usize,
+    pub pf_stale: usize,
+    pub pf_replans: usize,
+    pub lr_scale: f64,
+    /// `None` for open-loop runs (written as JSON null).
+    pub verdict: Option<String>,
+}
+
+impl MetricsRow {
+    /// The stats-channel values by canonical name, in `stats_json` order.
+    pub fn channels(&self) -> [(&'static str, f64); 10] {
+        [
+            ("loss", self.loss),
+            ("grad_l2", self.grad_l2),
+            ("var_l1", self.var_l1),
+            ("var_max", self.var_max),
+            ("mom_l1", self.mom_l1),
+            ("clip_coef", self.clip_coef),
+            ("urms_embed", self.urms_embed),
+            ("urms_early", self.urms_early),
+            ("urms_late", self.urms_late),
+            ("urms_final", self.urms_final),
+        ]
+    }
+}
+
+/// Parse one metrics-JSONL line (the exact schema [`step_row`] writes,
+/// including the `"nan"`/`"inf"`/`"-inf"` string encodings and null
+/// `verdict`).
+pub fn parse_row(line: &str) -> Result<MetricsRow> {
+    let j = Json::parse(line)?;
+    let nf = |key: &str| -> Result<f64> { json::get_nf(j.get(key)?) };
+    Ok(MetricsRow {
+        step: j.get("step")?.usize()?,
+        seqlen: j.get("seqlen")?.usize()?,
+        bsz: j.get("bsz")?.usize()?,
+        lr: j.get("lr")?.num()?,
+        tokens: j.get("tokens")?.num()? as u64,
+        loss: nf("loss")?,
+        grad_l2: nf("grad_l2")?,
+        var_l1: nf("var_l1")?,
+        var_max: nf("var_max")?,
+        mom_l1: nf("mom_l1")?,
+        clip_coef: nf("clip_coef")?,
+        urms_embed: nf("urms_embed")?,
+        urms_early: nf("urms_early")?,
+        urms_late: nf("urms_late")?,
+        urms_final: nf("urms_final")?,
+        sim_s: j.get("sim_s")?.num()?,
+        host_transfers: j.get("host_transfers")?.usize()?,
+        host_bytes: j.get("host_bytes")?.num()? as u64,
+        pf_served: j.get("pf_served")?.usize()?,
+        pf_hits: j.get("pf_hits")?.usize()?,
+        pf_stale: j.get("pf_stale")?.usize()?,
+        pf_replans: j.get("pf_replans")?.usize()?,
+        lr_scale: j.get("lr_scale")?.num()?,
+        verdict: match j.get("verdict")? {
+            Json::Null => None,
+            v => Some(v.str()?.to_string()),
+        },
+    })
+}
+
+/// Parse a whole metrics-JSONL document, skipping lines that do not parse
+/// (blank lines, a final line truncated by a crash mid-write). Returns the
+/// good rows and the count of skipped non-blank lines.
+pub fn parse_jsonl(text: &str) -> (Vec<MetricsRow>, usize) {
+    let mut rows = Vec::new();
+    let mut skipped = 0;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_row(line) {
+            Ok(r) => rows.push(r),
+            Err(_) => skipped += 1,
+        }
+    }
+    (rows, skipped)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,5 +307,115 @@ mod tests {
             assert_eq!(j.get("step").unwrap().usize().unwrap(), i);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Property test: writer → parser round-trip over randomized rows,
+    /// covering non-finite stats channels (string-encoded), null verdicts,
+    /// and a final line truncated by a crash mid-write.
+    #[test]
+    fn writer_parser_property_roundtrip() {
+        use crate::util::rng::Pcg64;
+
+        let mut rng = Pcg64::new(0xC0FFEE);
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        let verdicts = [None, Some("healthy"), Some("warning"), Some("diverged")];
+
+        for case in 0..50 {
+            let n_rows = 1 + rng.usize_below(6);
+            let mut chan = |rng: &mut Pcg64| -> f32 {
+                if rng.f64() < 0.25 {
+                    specials[rng.usize_below(3)]
+                } else {
+                    (rng.f64() * 200.0 - 100.0) as f32
+                }
+            };
+            let mut written: Vec<(StepRecord, Option<&str>, f64)> = Vec::new();
+            let mut text = String::new();
+            for step in 0..n_rows {
+                let rec = StepRecord {
+                    step,
+                    seqlen: 8 << rng.usize_below(5),
+                    bsz: 1 + rng.usize_below(32),
+                    lr: rng.f64() * 1e-2,
+                    tokens_after: rng.below(1 << 20),
+                    stats: StepStats {
+                        loss: chan(&mut rng),
+                        grad_l2: chan(&mut rng),
+                        var_l1: chan(&mut rng),
+                        var_max: chan(&mut rng),
+                        mom_l1: chan(&mut rng),
+                        clip_coef: chan(&mut rng),
+                        urms_embed: chan(&mut rng),
+                        urms_early: chan(&mut rng),
+                        urms_late: chan(&mut rng),
+                        urms_final: chan(&mut rng),
+                    },
+                    sim_seconds: rng.f64() * 10.0,
+                };
+                let verdict = verdicts[rng.usize_below(4)];
+                let lr_scale = if rng.f64() < 0.5 { 1.0 } else { rng.f64() };
+                let pf = PrefetchStats {
+                    served: step + 1,
+                    hits: step,
+                    ..Default::default()
+                };
+                text.push_str(
+                    &step_row(&rec, 2 * step, 64 * step as u64, &pf, verdict, lr_scale)
+                        .to_string(),
+                );
+                text.push('\n');
+                written.push((rec, verdict, lr_scale));
+            }
+            // every other case: simulate a crash mid-write of one extra row
+            let truncated = case % 2 == 0;
+            if truncated {
+                let extra = step_row(
+                    &written[0].0,
+                    0,
+                    0,
+                    &PrefetchStats::default(),
+                    Some("healthy"),
+                    1.0,
+                )
+                .to_string();
+                text.push_str(&extra[..extra.len() / 2]);
+            }
+
+            let (rows, skipped) = parse_jsonl(&text);
+            assert_eq!(rows.len(), n_rows, "case {case}");
+            assert_eq!(skipped, usize::from(truncated), "case {case}");
+            for (row, (rec, verdict, lr_scale)) in rows.iter().zip(&written) {
+                assert_eq!(row.step, rec.step);
+                assert_eq!(row.seqlen, rec.seqlen);
+                assert_eq!(row.bsz, rec.bsz);
+                assert_eq!(row.lr, rec.lr);
+                assert_eq!(row.tokens, rec.tokens_after);
+                assert_eq!(row.lr_scale, *lr_scale);
+                assert_eq!(row.verdict.as_deref(), *verdict);
+                let expect = [
+                    rec.stats.loss,
+                    rec.stats.grad_l2,
+                    rec.stats.var_l1,
+                    rec.stats.var_max,
+                    rec.stats.mom_l1,
+                    rec.stats.clip_coef,
+                    rec.stats.urms_embed,
+                    rec.stats.urms_early,
+                    rec.stats.urms_late,
+                    rec.stats.urms_final,
+                ];
+                for ((name, got), want) in row.channels().iter().zip(expect) {
+                    if want.is_nan() {
+                        assert!(got.is_nan(), "{name} case {case}");
+                    } else {
+                        assert_eq!(*got, want as f64, "{name} case {case}");
+                    }
+                }
+            }
+            // a parse of any single intact line also succeeds standalone
+            if let Some(first) = text.lines().next() {
+                parse_row(first).unwrap();
+            }
+        }
     }
 }

@@ -28,18 +28,28 @@
 //!   rollback, dumps the last N ring events plus the surrounding
 //!   `StepRecord` window to `results/incidents/<run>/<step>.json` so each
 //!   instability is a self-contained artifact.
+//! - Observatory ([`registry`], [`serve`], [`analyze`]): a process-wide
+//!   [`RunRegistry`] of live and completed runs, the pull-based HTTP
+//!   monitor behind `--monitor <addr>` (`/metrics` Prometheus text,
+//!   `/runs`, `/runs/<slug>/steps`, `/healthz`), and the `slw analyze`
+//!   cross-run analysis engine over the accumulated telemetry corpus.
 //!
 //! Tracing only *observes* — no control-flow decision reads recorded data —
 //! so trajectories are bit-identical with tracing on or off. Observability
 //! settings live on [`ObsSink`] / `Trainer`, never in `RunConfig`, so the
 //! coordinator's persistent cache keys are unaffected.
 
+pub mod analyze;
 pub mod flight;
 pub mod metrics;
+pub mod registry;
+pub mod serve;
 pub mod trace;
 
 pub use flight::FlightRecorder;
 pub use metrics::MetricsWriter;
+pub use registry::RunRegistry;
+pub use serve::Monitor;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -309,7 +319,8 @@ macro_rules! span {
 }
 
 /// Where a trainer should emit telemetry: the event ring, an optional
-/// per-step JSONL metrics file, and an optional incident-dump root. Lives
+/// per-step JSONL metrics file, an optional incident-dump root, and an
+/// optional live run registry for the observatory's HTTP monitor. Lives
 /// outside `RunConfig` so coordinator cache keys are unaffected.
 #[derive(Clone, Default)]
 pub struct ObsSink {
@@ -318,6 +329,11 @@ pub struct ObsSink {
     pub incident_root: Option<PathBuf>,
     /// Also dump incidents on the Healthy->Warning edge (noisy; off by default).
     pub dump_warnings: bool,
+    /// Live run registry served by `--monitor` (observe-only: nothing in the
+    /// trainer ever reads it back).
+    pub registry: Option<Arc<RunRegistry>>,
+    /// Coordinator worker id running this trainer, surfaced in `/runs`.
+    pub worker: Option<usize>,
 }
 
 #[cfg(test)]

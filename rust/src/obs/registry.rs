@@ -1,0 +1,420 @@
+//! Live run registry — the observatory's shared state.
+//!
+//! A process-wide, thread-safe table of every run the process has started:
+//! identity (slug, display name, config digest, coordinator worker id),
+//! live position (step/seqlen/bsz/lr/tokens), the last `StepStats`, the
+//! sentinel verdict and LR scale, the rollback count, and a bounded tail of
+//! committed step rows (the same JSON rows `MetricsWriter` streams to
+//! disk). The trainer writes it from the exact seams that feed the metrics
+//! file; the HTTP monitor ([`super::serve`]) reads it.
+//!
+//! **Observe-only contract.** The registry is a write-only sink from the
+//! trainer's point of view: no control-flow decision ever reads it, so
+//! trajectories are bit-identical with it attached or not. It hangs off
+//! [`super::ObsSink`] — never `RunConfig` — so coordinator cache keys are
+//! unaffected.
+//!
+//! **Rollback semantics.** `RunHistory` rewinds on rollback and the
+//! buffered tail mirrors that: rows at or past the restore step are
+//! discarded, so `/runs/<slug>/steps` always shows the *surviving*
+//! trajectory (the append-only JSONL file on disk keeps the superseded
+//! rows; the analyzer deduplicates them by step, keeping the last).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::config::RunConfig;
+use crate::runtime::StepStats;
+use crate::train::metrics::StepRecord;
+use crate::util::json::{self, Json};
+
+use super::metrics::stats_json;
+
+/// Committed-step rows retained per run for `/runs/<slug>/steps`; beyond
+/// this the oldest are dropped (a counter keeps the loss visible).
+pub const DEFAULT_ROWS_CAP: usize = 4096;
+
+/// Stable digest of a run configuration (FNV-1a over its `Debug` form) —
+/// cheap run identity for the registry, not a cache key.
+pub fn config_digest(cfg: &RunConfig) -> String {
+    format!("{:016x}", crate::coordinator::cache::fnv1a64(format!("{cfg:?}").as_bytes()))
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+#[derive(Default)]
+struct RunEntry {
+    name: String,
+    digest: String,
+    worker: Option<usize>,
+    /// `None` while live; `"completed"`/`"diverged"`/`"gave_up"`/`"failed"`
+    /// once finished.
+    outcome: Option<String>,
+    step: usize,
+    seqlen: usize,
+    bsz: usize,
+    lr: f64,
+    tokens: u64,
+    lr_scale: f64,
+    verdict: Option<String>,
+    last_stats: Option<StepStats>,
+    rollbacks: u64,
+    /// Monotonic committed-step counter (never decremented by rollbacks).
+    steps_committed: u64,
+    /// Surviving committed rows, oldest first: (step, rendered JSON line).
+    rows: VecDeque<(usize, String)>,
+    rows_dropped: u64,
+    started_unix: u64,
+    updated_unix: u64,
+}
+
+impl RunEntry {
+    fn to_json(&self, slug: &str) -> Json {
+        json::obj(vec![
+            ("slug", json::s(slug)),
+            ("name", json::s(&self.name)),
+            ("config_digest", json::s(&self.digest)),
+            ("worker", self.worker.map(|w| json::num(w as f64)).unwrap_or(Json::Null)),
+            ("state", json::s(self.outcome.as_deref().unwrap_or("live"))),
+            ("step", json::num(self.step as f64)),
+            ("seqlen", json::num(self.seqlen as f64)),
+            ("bsz", json::num(self.bsz as f64)),
+            ("lr", json::num(self.lr)),
+            ("tokens", json::num(self.tokens as f64)),
+            ("lr_scale", json::num(self.lr_scale)),
+            ("verdict", self.verdict.as_deref().map(json::s).unwrap_or(Json::Null)),
+            ("stats", self.last_stats.as_ref().map(stats_json).unwrap_or(Json::Null)),
+            ("rollbacks", json::num(self.rollbacks as f64)),
+            ("steps_committed", json::num(self.steps_committed as f64)),
+            ("steps_buffered", json::num(self.rows.len() as f64)),
+            ("steps_dropped", json::num(self.rows_dropped as f64)),
+            ("started_unix", json::num(self.started_unix as f64)),
+            ("updated_unix", json::num(self.updated_unix as f64)),
+        ])
+    }
+}
+
+/// Fleet-level counters for the Prometheus endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Totals {
+    pub live: u64,
+    pub total: u64,
+    pub steps_committed: u64,
+    pub rollbacks: u64,
+    pub rows_dropped: u64,
+}
+
+/// Process-wide registry of live and completed runs. All methods take
+/// `&self`; share it as `Arc<RunRegistry>`.
+pub struct RunRegistry {
+    inner: Mutex<BTreeMap<String, RunEntry>>,
+    rows_cap: usize,
+}
+
+impl Default for RunRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunRegistry {
+    pub fn new() -> Self {
+        Self::with_rows_cap(DEFAULT_ROWS_CAP)
+    }
+
+    /// Registry with a custom per-run row-buffer cap (mainly for tests).
+    pub fn with_rows_cap(cap: usize) -> Self {
+        RunRegistry { inner: Mutex::new(BTreeMap::new()), rows_cap: cap.max(1) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, RunEntry>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register (or re-register) a run as live. Re-beginning an existing
+    /// slug resets its entry — a new attempt supersedes the old record.
+    pub fn begin(&self, slug: &str, name: &str, digest: &str, worker: Option<usize>) {
+        let now = unix_now();
+        let mut map = self.lock();
+        map.insert(
+            slug.to_string(),
+            RunEntry {
+                name: name.to_string(),
+                digest: digest.to_string(),
+                worker,
+                lr_scale: 1.0,
+                started_unix: now,
+                updated_unix: now,
+                ..Default::default()
+            },
+        );
+    }
+
+    /// Record one committed step. `row` is the flat metrics-JSONL object
+    /// the trainer already builds for `MetricsWriter` — rendered once and
+    /// buffered for `/runs/<slug>/steps`.
+    pub fn update(
+        &self,
+        slug: &str,
+        rec: &StepRecord,
+        verdict: Option<&str>,
+        lr_scale: f64,
+        row: &Json,
+    ) {
+        let mut map = self.lock();
+        let e = map.entry(slug.to_string()).or_default();
+        e.step = rec.step;
+        e.seqlen = rec.seqlen;
+        e.bsz = rec.bsz;
+        e.lr = rec.lr;
+        e.tokens = rec.tokens_after;
+        e.lr_scale = lr_scale;
+        e.verdict = verdict.map(|v| v.to_string());
+        e.last_stats = Some(rec.stats);
+        e.steps_committed += 1;
+        e.updated_unix = unix_now();
+        if e.rows.len() == self.rows_cap {
+            e.rows.pop_front();
+            e.rows_dropped += 1;
+        }
+        e.rows.push_back((rec.step, row.to_string()));
+    }
+
+    /// Mirror a trainer rollback: count it and discard buffered rows at or
+    /// past the restore step (they were rewound out of `RunHistory`).
+    pub fn rollback(&self, slug: &str, to_step: usize) {
+        let mut map = self.lock();
+        let e = map.entry(slug.to_string()).or_default();
+        e.rollbacks += 1;
+        e.step = to_step;
+        e.updated_unix = unix_now();
+        while e.rows.back().is_some_and(|(s, _)| *s >= to_step) {
+            e.rows.pop_back();
+        }
+    }
+
+    /// Mark a run finished: `"completed"`, `"diverged"`, `"gave_up"`, or
+    /// `"failed"`.
+    pub fn finish(&self, slug: &str, outcome: &str) {
+        let mut map = self.lock();
+        let e = map.entry(slug.to_string()).or_default();
+        e.outcome = Some(outcome.to_string());
+        e.updated_unix = unix_now();
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    pub fn totals(&self) -> Totals {
+        let map = self.lock();
+        let mut t = Totals { total: map.len() as u64, ..Default::default() };
+        for e in map.values() {
+            if e.outcome.is_none() {
+                t.live += 1;
+            }
+            t.steps_committed += e.steps_committed;
+            t.rollbacks += e.rollbacks;
+            t.rows_dropped += e.rows_dropped;
+        }
+        t
+    }
+
+    /// The `/runs` document: every registered run plus fleet totals.
+    pub fn runs_json(&self) -> Json {
+        let map = self.lock();
+        let runs: Vec<Json> = map.iter().map(|(slug, e)| e.to_json(slug)).collect();
+        let mut t = Totals { total: map.len() as u64, ..Default::default() };
+        for e in map.values() {
+            if e.outcome.is_none() {
+                t.live += 1;
+            }
+            t.steps_committed += e.steps_committed;
+            t.rollbacks += e.rollbacks;
+            t.rows_dropped += e.rows_dropped;
+        }
+        json::obj(vec![
+            ("runs", Json::Arr(runs)),
+            (
+                "totals",
+                json::obj(vec![
+                    ("live", json::num(t.live as f64)),
+                    ("total", json::num(t.total as f64)),
+                    ("steps_committed", json::num(t.steps_committed as f64)),
+                    ("rollbacks", json::num(t.rollbacks as f64)),
+                    ("rows_dropped", json::num(t.rows_dropped as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The `/runs/<slug>/steps?since=N` body: buffered committed rows with
+    /// step > `since` (all of them when `since` is `None`), as JSONL.
+    /// `None` when the slug is unknown.
+    pub fn steps_since(&self, slug: &str, since: Option<usize>) -> Option<String> {
+        let map = self.lock();
+        let e = map.get(slug)?;
+        let mut out = String::new();
+        for (step, line) in &e.rows {
+            if since.is_some_and(|n| *step <= n) {
+                continue;
+            }
+            out.push_str(line);
+            out.push('\n');
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::step_row;
+    use crate::pipeline::prefetch::PrefetchStats;
+
+    fn rec(step: usize) -> StepRecord {
+        StepRecord {
+            step,
+            seqlen: if step < 5 { 8 } else { 32 },
+            bsz: 4,
+            lr: 1e-3,
+            tokens_after: ((step + 1) * 128) as u64,
+            stats: StepStats { loss: 5.0 - 0.01 * step as f32, ..Default::default() },
+            sim_seconds: 1.0,
+        }
+    }
+
+    fn push(reg: &RunRegistry, slug: &str, step: usize) {
+        let r = rec(step);
+        let row = step_row(&r, 3, 100, &PrefetchStats::default(), Some("healthy"), 1.0);
+        reg.update(slug, &r, Some("healthy"), 1.0, &row);
+    }
+
+    #[test]
+    fn begin_update_finish_lifecycle() {
+        let reg = RunRegistry::new();
+        assert!(reg.is_empty());
+        reg.begin("run_a", "run a", "deadbeefdeadbeef", Some(2));
+        for s in 0..10 {
+            push(&reg, "run_a", s);
+        }
+        let j = reg.runs_json();
+        let runs = j.get("runs").unwrap().arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        let r = &runs[0];
+        assert_eq!(r.get("slug").unwrap().str().unwrap(), "run_a");
+        assert_eq!(r.get("state").unwrap().str().unwrap(), "live");
+        assert_eq!(r.get("worker").unwrap().usize().unwrap(), 2);
+        assert_eq!(r.get("step").unwrap().usize().unwrap(), 9);
+        assert_eq!(r.get("seqlen").unwrap().usize().unwrap(), 32);
+        assert_eq!(r.get("steps_committed").unwrap().usize().unwrap(), 10);
+        assert_eq!(r.get("verdict").unwrap().str().unwrap(), "healthy");
+        assert!(r.get("stats").unwrap().get("loss").is_ok());
+        assert_eq!(j.get("totals").unwrap().get("live").unwrap().usize().unwrap(), 1);
+
+        reg.finish("run_a", "completed");
+        let j = reg.runs_json();
+        assert_eq!(
+            j.get("runs").unwrap().arr().unwrap()[0].get("state").unwrap().str().unwrap(),
+            "completed"
+        );
+        assert_eq!(j.get("totals").unwrap().get("live").unwrap().usize().unwrap(), 0);
+        assert_eq!(reg.totals(), Totals {
+            live: 0,
+            total: 1,
+            steps_committed: 10,
+            rollbacks: 0,
+            rows_dropped: 0,
+        });
+    }
+
+    #[test]
+    fn rollback_truncates_the_buffered_tail() {
+        let reg = RunRegistry::new();
+        reg.begin("r", "r", "0", None);
+        for s in 0..8 {
+            push(&reg, "r", s);
+        }
+        // rollback to step 5: rows 5..8 were rewound out of history
+        reg.rollback("r", 5);
+        let tail = reg.steps_since("r", None).unwrap();
+        let steps: Vec<usize> = tail
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("step").unwrap().usize().unwrap())
+            .collect();
+        assert_eq!(steps, vec![0, 1, 2, 3, 4]);
+        assert_eq!(reg.totals().rollbacks, 1);
+        // the replay re-commits 5..8: no duplicate steps in the tail
+        for s in 5..8 {
+            push(&reg, "r", s);
+        }
+        let tail = reg.steps_since("r", None).unwrap();
+        let steps: Vec<usize> = tail
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("step").unwrap().usize().unwrap())
+            .collect();
+        assert_eq!(steps, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        // monotonic counter keeps counting replays
+        assert_eq!(reg.totals().steps_committed, 11);
+    }
+
+    #[test]
+    fn steps_since_filters_and_unknown_slug_is_none() {
+        let reg = RunRegistry::new();
+        reg.begin("r", "r", "0", None);
+        for s in 0..6 {
+            push(&reg, "r", s);
+        }
+        let tail = reg.steps_since("r", Some(3)).unwrap();
+        let steps: Vec<usize> = tail
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("step").unwrap().usize().unwrap())
+            .collect();
+        assert_eq!(steps, vec![4, 5]);
+        assert!(reg.steps_since("nope", None).is_none());
+    }
+
+    #[test]
+    fn row_buffer_is_bounded_and_counts_drops() {
+        let reg = RunRegistry::with_rows_cap(4);
+        reg.begin("r", "r", "0", None);
+        for s in 0..10 {
+            push(&reg, "r", s);
+        }
+        let tail = reg.steps_since("r", None).unwrap();
+        assert_eq!(tail.lines().count(), 4);
+        assert!(tail.lines().next().unwrap().contains("\"step\":6"));
+        assert_eq!(reg.totals().rows_dropped, 6);
+    }
+
+    #[test]
+    fn re_begin_resets_the_entry() {
+        let reg = RunRegistry::new();
+        reg.begin("r", "r", "0", None);
+        push(&reg, "r", 0);
+        reg.finish("r", "failed");
+        reg.begin("r", "r", "0", Some(1));
+        let j = reg.runs_json();
+        let r = &j.get("runs").unwrap().arr().unwrap()[0];
+        assert_eq!(r.get("state").unwrap().str().unwrap(), "live");
+        assert_eq!(r.get("steps_committed").unwrap().usize().unwrap(), 0);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn config_digest_is_stable_and_config_sensitive() {
+        let a = crate::config::presets::base("micro").unwrap();
+        let mut b = a.clone();
+        assert_eq!(config_digest(&a), config_digest(&b));
+        b.seed += 1;
+        assert_ne!(config_digest(&a), config_digest(&b));
+        assert_eq!(config_digest(&a).len(), 16);
+    }
+}

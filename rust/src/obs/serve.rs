@@ -1,0 +1,318 @@
+//! Pull-based metrics server — zero-dependency HTTP over `std::net`.
+//!
+//! `Monitor::start` binds a `TcpListener` (port 0 picks a free port) and
+//! serves read-only views of shared observatory state:
+//!
+//! - `GET /healthz` — liveness probe, plain `ok`.
+//! - `GET /metrics` — Prometheus text format: fleet counters from the
+//!   [`RunRegistry`], the event-ring drop counter, and every last-value
+//!   gauge the [`Recorder`](super::Recorder) holds.
+//! - `GET /runs` — the full registry as JSON.
+//! - `GET /runs/<slug>/steps?since=N` — JSONL tail of committed step rows
+//!   (the same rows `MetricsWriter` streams to disk).
+//!
+//! **Never blocks a step.** The trainer only ever touches the registry's
+//! mutex for O(1) row pushes; the server reads the same mutex briefly per
+//! request on its own threads. A slow scraper holds a socket, not the
+//! lock — and an absent scraper costs nothing because nothing is pushed.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::registry::RunRegistry;
+use super::Obs;
+
+/// Largest request head we will read before answering; enough for any
+/// scraper's GET line + headers.
+const MAX_REQUEST_BYTES: usize = 8192;
+
+/// Prometheus metric (and label) names allow `[a-zA-Z0-9_:]`; recorder
+/// gauge names are `&'static str` idents already, but sanitize defensively.
+fn prom_name(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' }).collect()
+}
+
+/// Render the Prometheus exposition document from registry + recorder.
+fn prometheus_text(reg: &RunRegistry, obs: &Obs) -> String {
+    let t = reg.totals();
+    let mut out = String::with_capacity(1024);
+    let mut counter = |name: &str, help: &str, v: u64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+    };
+    counter("slw_steps_committed_total", "Committed training steps across all runs.", t.steps_committed);
+    counter("slw_rollbacks_total", "Autopilot rollbacks across all runs.", t.rollbacks);
+    counter(
+        "slw_registry_rows_dropped_total",
+        "Buffered step rows evicted from the run registry.",
+        t.rows_dropped,
+    );
+    let ring_dropped = obs.recorder().map(|r| r.dropped()).unwrap_or(0);
+    counter(
+        "slw_ring_dropped_events_total",
+        "Telemetry events dropped by the bounded ring.",
+        ring_dropped,
+    );
+    let mut gauge = |name: &str, help: &str, v: i64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+    };
+    gauge("slw_up", "Monitor liveness.", 1);
+    gauge("slw_runs_live", "Runs currently training.", t.live as i64);
+    gauge("slw_runs_total", "Runs registered this process.", t.total as i64);
+    if let Some(rec) = obs.recorder() {
+        for (name, v) in rec.gauges() {
+            let prom = format!("slw_{}", prom_name(name));
+            out.push_str(&format!(
+                "# HELP {prom} Last recorded value of the `{name}` telemetry gauge.\n# TYPE {prom} gauge\n{prom} {v}\n",
+            ));
+        }
+    }
+    out
+}
+
+/// Dispatch one request target to `(status, content-type, body)`. Pure so
+/// tests can drive routing without sockets.
+pub fn route(target: &str, reg: &RunRegistry, obs: &Obs) -> (u16, &'static str, String) {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    match path {
+        "/healthz" => (200, "text/plain; charset=utf-8", "ok\n".to_string()),
+        "/metrics" => {
+            (200, "text/plain; version=0.0.4; charset=utf-8", prometheus_text(reg, obs))
+        }
+        "/runs" => (200, "application/json", reg.runs_json().to_string()),
+        "/" => (
+            200,
+            "text/plain; charset=utf-8",
+            "slw observatory\n/healthz\n/metrics\n/runs\n/runs/<slug>/steps?since=N\n"
+                .to_string(),
+        ),
+        _ => {
+            // /runs/<slug>/steps
+            if let Some(rest) = path.strip_prefix("/runs/") {
+                if let Some(slug) = rest.strip_suffix("/steps") {
+                    let since = query.and_then(|q| {
+                        q.split('&')
+                            .find_map(|kv| kv.strip_prefix("since="))
+                            .and_then(|v| v.parse::<usize>().ok())
+                    });
+                    return match reg.steps_since(slug, since) {
+                        Some(body) => (200, "application/x-ndjson", body),
+                        None => (404, "text/plain; charset=utf-8", "unknown run\n".to_string()),
+                    };
+                }
+            }
+            (404, "text/plain; charset=utf-8", "not found\n".to_string())
+        }
+    }
+}
+
+fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Bad Request",
+    }
+}
+
+/// Read the request head (start-line + headers) and answer it. Any parse
+/// or I/O problem just drops the connection — the trainer never notices.
+fn handle_conn(mut stream: TcpStream, reg: &RunRegistry, obs: &Obs) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    let head_end = loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                    break pos;
+                }
+                if buf.len() > MAX_REQUEST_BYTES {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or("/"));
+    let (status, ctype, body) = if method == "GET" {
+        route(target, reg, obs)
+    } else {
+        (405, "text/plain; charset=utf-8", "GET only\n".to_string())
+    };
+    let _ = stream.write_all(
+        format!(
+            "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            status_reason(status),
+            body.len(),
+        )
+        .as_bytes(),
+    );
+}
+
+/// Handle to a running metrics server. Call [`Monitor::shutdown`] (or
+/// drop) to stop accepting and join the accept thread.
+pub struct Monitor {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Monitor {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start serving in a background
+    /// accept thread; each connection is answered on its own short-lived
+    /// thread so one stuck scraper cannot starve the rest.
+    pub fn start(addr: &str, registry: Arc<RunRegistry>, obs: Obs) -> Result<Monitor> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("monitor: cannot bind {addr}"))?;
+        let local = listener.local_addr().context("monitor: local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("slw-monitor".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_t.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let reg = registry.clone();
+                    let obs = obs.clone();
+                    // Detached: bounded by the read/write timeouts above.
+                    let _ = std::thread::Builder::new()
+                        .name("slw-monitor-conn".to_string())
+                        .spawn(move || handle_conn(stream, &reg, &obs));
+                }
+            })
+            .context("monitor: spawn accept thread")?;
+        Ok(Monitor { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (useful when started on port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `http://host:port` for log lines.
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop accepting and join the accept thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.stop.store(true, Ordering::Release);
+            // Wake the blocking accept() with a throwaway connection.
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Recorder;
+
+    fn reg_with_run() -> Arc<RunRegistry> {
+        let reg = Arc::new(RunRegistry::new());
+        reg.begin("demo", "demo", "00000000000000ff", Some(0));
+        let rec = crate::train::metrics::StepRecord {
+            step: 0,
+            seqlen: 8,
+            bsz: 4,
+            lr: 1e-3,
+            tokens_after: 32,
+            stats: Default::default(),
+            sim_seconds: 1.0,
+        };
+        let row = crate::obs::metrics::step_row(
+            &rec,
+            0,
+            0,
+            &crate::pipeline::prefetch::PrefetchStats::default(),
+            None,
+            1.0,
+        );
+        reg.update("demo", &rec, None, 1.0, &row);
+        reg
+    }
+
+    #[test]
+    fn routes_cover_the_surface() {
+        let reg = reg_with_run();
+        let obs = Obs::off();
+        assert_eq!(route("/healthz", &reg, &obs).0, 200);
+        let (code, ctype, body) = route("/metrics", &reg, &obs);
+        assert_eq!(code, 200);
+        assert!(ctype.starts_with("text/plain"));
+        assert!(body.contains("slw_up 1"));
+        assert!(body.contains("slw_steps_committed_total 1"));
+        assert!(body.contains("slw_ring_dropped_events_total 0"));
+        let (code, _, body) = route("/runs", &reg, &obs);
+        assert_eq!(code, 200);
+        assert!(body.contains("\"slug\":\"demo\""));
+        let (code, _, body) = route("/runs/demo/steps", &reg, &obs);
+        assert_eq!(code, 200);
+        assert_eq!(body.lines().count(), 1);
+        assert_eq!(route("/runs/demo/steps?since=0", &reg, &obs).2, "");
+        assert_eq!(route("/runs/nope/steps", &reg, &obs).0, 404);
+        assert_eq!(route("/nope", &reg, &obs).0, 404);
+        assert_eq!(route("/", &reg, &obs).0, 200);
+    }
+
+    #[test]
+    fn metrics_include_recorder_gauges() {
+        let reg = Arc::new(RunRegistry::new());
+        let rec = Recorder::new(64);
+        rec.counter("queue_depth", 3);
+        let obs = Obs::new(rec);
+        let (_, _, body) = route("/metrics", &reg, &obs);
+        assert!(body.contains("slw_queue_depth 3"), "{body}");
+    }
+
+    #[test]
+    fn serves_over_a_real_socket_and_shuts_down() {
+        let reg = reg_with_run();
+        let mut mon = Monitor::start("127.0.0.1:0", reg, Obs::off()).unwrap();
+        let get = |path: &str| -> String {
+            let mut s = TcpStream::connect(mon.addr()).unwrap();
+            s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let resp = get("/healthz");
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.ends_with("ok\n"));
+        assert!(get("/metrics").contains("slw_up 1"));
+        assert!(get("/runs").contains("\"demo\""));
+        // non-GET is answered, not dropped
+        let mut s = TcpStream::connect(mon.addr()).unwrap();
+        s.write_all(b"POST / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+        mon.shutdown();
+        mon.shutdown(); // idempotent
+    }
+}

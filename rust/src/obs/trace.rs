@@ -4,6 +4,12 @@
 //! and speedscope all read: `{"traceEvents": [...], "displayTimeUnit": "ms"}`
 //! with one row per ring event. Timestamps are microseconds (fractional µs
 //! are allowed by the format and preserve our ns resolution).
+//!
+//! The first row is always a metadata record (`"ph": "M"`, name
+//! `slw_ring_stats`) carrying the ring's dropped-event counter next to the
+//! exported-event count, so a trace whose ring wrapped says so inside the
+//! artifact itself rather than relying on whoever ran it to notice a log
+//! line.
 
 use std::path::Path;
 
@@ -13,38 +19,56 @@ use crate::util::json::{self, Json};
 
 use super::{Event, EventKind};
 
+/// The ring-stats metadata row prepended to every export.
+fn ring_stats_row(exported: usize, dropped: u64) -> Json {
+    json::obj(vec![
+        ("name", json::s("slw_ring_stats")),
+        ("ph", json::s("M")),
+        ("pid", json::num(1.0)),
+        ("tid", json::num(0.0)),
+        (
+            "args",
+            json::obj(vec![
+                ("dropped_events", json::num(dropped as f64)),
+                ("exported_events", json::num(exported as f64)),
+            ]),
+        ),
+    ])
+}
+
 /// Convert a recorder snapshot into a Chrome trace-event document.
-pub fn chrome_trace(events: &[Event]) -> Json {
-    let rows: Vec<Json> = events
-        .iter()
-        .map(|e| {
-            let mut pairs = vec![
-                ("name", json::s(e.name)),
-                ("ph", json::s(e.kind.phase())),
-                ("ts", json::num(e.t_ns as f64 / 1000.0)),
-                ("pid", json::num(1.0)),
-                ("tid", json::num(e.tid as f64)),
-            ];
-            match e.kind {
-                EventKind::Counter => {
-                    pairs.push(("args", json::obj(vec![("value", json::num(e.arg as f64))])));
-                }
-                EventKind::Instant => {
-                    // Thread-scoped instant marker.
-                    pairs.push(("s", json::s("t")));
-                    if e.arg >= 0 {
-                        pairs.push(("args", json::obj(vec![("step", json::num(e.arg as f64))])));
-                    }
-                }
-                EventKind::Begin | EventKind::End => {
-                    if e.arg >= 0 {
-                        pairs.push(("args", json::obj(vec![("step", json::num(e.arg as f64))])));
-                    }
+/// `dropped` is the ring's overwrite counter ([`super::Recorder::dropped`])
+/// at snapshot time; it rides in a leading metadata record.
+pub fn chrome_trace(events: &[Event], dropped: u64) -> Json {
+    let mut rows: Vec<Json> = Vec::with_capacity(events.len() + 1);
+    rows.push(ring_stats_row(events.len(), dropped));
+    rows.extend(events.iter().map(|e| {
+        let mut pairs = vec![
+            ("name", json::s(e.name)),
+            ("ph", json::s(e.kind.phase())),
+            ("ts", json::num(e.t_ns as f64 / 1000.0)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(e.tid as f64)),
+        ];
+        match e.kind {
+            EventKind::Counter => {
+                pairs.push(("args", json::obj(vec![("value", json::num(e.arg as f64))])));
+            }
+            EventKind::Instant => {
+                // Thread-scoped instant marker.
+                pairs.push(("s", json::s("t")));
+                if e.arg >= 0 {
+                    pairs.push(("args", json::obj(vec![("step", json::num(e.arg as f64))])));
                 }
             }
-            json::obj(pairs)
-        })
-        .collect();
+            EventKind::Begin | EventKind::End => {
+                if e.arg >= 0 {
+                    pairs.push(("args", json::obj(vec![("step", json::num(e.arg as f64))])));
+                }
+            }
+        }
+        json::obj(pairs)
+    }));
     json::obj(vec![
         ("traceEvents", Json::Arr(rows)),
         ("displayTimeUnit", json::s("ms")),
@@ -52,14 +76,14 @@ pub fn chrome_trace(events: &[Event]) -> Json {
 }
 
 /// Write a recorder snapshot as Chrome trace JSON at `path`.
-pub fn export(events: &[Event], path: &Path) -> Result<()> {
+pub fn export(events: &[Event], dropped: u64, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating {}", dir.display()))?;
         }
     }
-    std::fs::write(path, chrome_trace(events).to_string())
+    std::fs::write(path, chrome_trace(events, dropped).to_string())
         .with_context(|| format!("writing trace {}", path.display()))
 }
 
@@ -77,27 +101,56 @@ mod tests {
         }
         obs.instant("rollback", 12);
         obs.counter("queue_depth", 5);
-        let doc = chrome_trace(&rec.snapshot());
+        let doc = chrome_trace(&rec.snapshot(), rec.dropped());
         let rows = doc.get("traceEvents").unwrap().arr().unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         assert_eq!(doc.get("displayTimeUnit").unwrap().str().unwrap(), "ms");
 
-        assert_eq!(rows[0].get("ph").unwrap().str().unwrap(), "B");
-        assert_eq!(rows[0].get("name").unwrap().str().unwrap(), "execute");
+        // leading metadata record: ring stats
+        assert_eq!(rows[0].get("ph").unwrap().str().unwrap(), "M");
+        assert_eq!(rows[0].get("name").unwrap().str().unwrap(), "slw_ring_stats");
         assert_eq!(
-            rows[0].get("args").unwrap().get("step").unwrap().usize().unwrap(),
+            rows[0].get("args").unwrap().get("dropped_events").unwrap().usize().unwrap(),
+            0
+        );
+        assert_eq!(
+            rows[0].get("args").unwrap().get("exported_events").unwrap().usize().unwrap(),
+            4
+        );
+
+        assert_eq!(rows[1].get("ph").unwrap().str().unwrap(), "B");
+        assert_eq!(rows[1].get("name").unwrap().str().unwrap(), "execute");
+        assert_eq!(
+            rows[1].get("args").unwrap().get("step").unwrap().usize().unwrap(),
             12
         );
-        assert_eq!(rows[1].get("ph").unwrap().str().unwrap(), "E");
-        assert!(rows[1].get("ts").unwrap().num().unwrap() >= rows[0].get("ts").unwrap().num().unwrap());
+        assert_eq!(rows[2].get("ph").unwrap().str().unwrap(), "E");
+        assert!(rows[2].get("ts").unwrap().num().unwrap() >= rows[1].get("ts").unwrap().num().unwrap());
 
-        assert_eq!(rows[2].get("ph").unwrap().str().unwrap(), "i");
-        assert_eq!(rows[2].get("s").unwrap().str().unwrap(), "t");
+        assert_eq!(rows[3].get("ph").unwrap().str().unwrap(), "i");
+        assert_eq!(rows[3].get("s").unwrap().str().unwrap(), "t");
 
-        assert_eq!(rows[3].get("ph").unwrap().str().unwrap(), "C");
+        assert_eq!(rows[4].get("ph").unwrap().str().unwrap(), "C");
         assert_eq!(
-            rows[3].get("args").unwrap().get("value").unwrap().num().unwrap(),
+            rows[4].get("args").unwrap().get("value").unwrap().num().unwrap(),
             5.0
+        );
+    }
+
+    #[test]
+    fn wrapped_ring_reports_drops_in_metadata() {
+        let rec = Recorder::new(32); // clamps to 16 per shard
+        for i in 0..1000 {
+            rec.instant("tick", i);
+        }
+        let doc = chrome_trace(&rec.snapshot(), rec.dropped());
+        let rows = doc.get("traceEvents").unwrap().arr().unwrap();
+        let dropped =
+            rows[0].get("args").unwrap().get("dropped_events").unwrap().usize().unwrap();
+        assert!(dropped > 0);
+        assert_eq!(
+            rows[0].get("args").unwrap().get("exported_events").unwrap().usize().unwrap(),
+            rows.len() - 1
         );
     }
 
@@ -109,10 +162,10 @@ mod tests {
         drop(_s);
         let dir = std::env::temp_dir().join(format!("slw_obs_trace_{}", std::process::id()));
         let path = dir.join("out.json");
-        export(&rec.snapshot(), &path).unwrap();
+        export(&rec.snapshot(), rec.dropped(), &path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = Json::parse(&text).unwrap();
-        assert_eq!(doc.get("traceEvents").unwrap().arr().unwrap().len(), 2);
+        assert_eq!(doc.get("traceEvents").unwrap().arr().unwrap().len(), 3);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -284,6 +284,19 @@ impl Trainer {
         );
         let lr = self.resolve_lr(plan_len.max(2))?;
         let obs = self.sink.obs.clone();
+        // live run registry: written from the same seams as the metrics
+        // file below, never read back — trajectories are bit-identical with
+        // it attached or not
+        let registry = self.sink.registry.clone();
+        let run_slug = crate::util::slugify(&self.config.name);
+        if let Some(reg) = &registry {
+            reg.begin(
+                &run_slug,
+                &self.config.name,
+                &crate::obs::registry::config_digest(&self.config),
+                self.sink.worker,
+            );
+        }
         let mut metrics = match &self.sink.metrics_path {
             Some(path) => Some(MetricsWriter::create(path)?),
             None => None,
@@ -439,6 +452,12 @@ impl Trainer {
                         pipe.publish(planner.tail_window(TAIL_WINDOW));
                         bad_streak = 0;
                         was_warning = false;
+                        if let Some(reg) = &registry {
+                            // mirror the history rewind: buffered rows at or
+                            // past the restore step are gone from the
+                            // surviving trajectory
+                            reg.rollback(&run_slug, to);
+                        }
                         continue;
                     }
                     Outcome::GaveUp => {
@@ -483,16 +502,23 @@ impl Trainer {
                 pipe.publish(planner.tail_window(TAIL_WINDOW));
             }
             let stop = self.record_step(&mut history, &spec, lr_t, stats, &mut bad_streak);
-            if let Some(m) = &mut metrics {
+            if metrics.is_some() || registry.is_some() {
+                // one row, rendered once, for both sinks
                 let rec = history.steps.last().expect("record_step just pushed");
-                m.write_row(&obs_metrics::step_row(
+                let row = obs_metrics::step_row(
                     rec,
                     self.engine.n_host_transfers(),
                     self.engine.host_bytes(),
                     &pipe.stats(),
                     verdict_name,
                     lr_scale,
-                ))?;
+                );
+                if let Some(m) = &mut metrics {
+                    m.write_row(&row)?;
+                }
+                if let Some(reg) = &registry {
+                    reg.update(&run_slug, rec, verdict_name, lr_scale, &row);
+                }
             }
             if obs.is_on() {
                 obs.counter("host_transfers", self.engine.n_host_transfers() as i64);
@@ -518,6 +544,16 @@ impl Trainer {
         self.engine.set_stats_fault(None);
         if let Some(p) = pilot {
             history.stability = Some(p.into_trace());
+        }
+        if let Some(reg) = &registry {
+            let outcome = if history.diverged() {
+                "diverged"
+            } else if history.stability.as_ref().is_some_and(|t| t.gave_up) {
+                "gave_up"
+            } else {
+                "completed"
+            };
+            reg.finish(&run_slug, outcome);
         }
         let plan_steps = static_plan_steps.unwrap_or(history.steps.len());
         Ok(RunResult { history, state, plan_steps, pipeline: pipe.stats() })

@@ -73,6 +73,7 @@ fn traced_autopilot_run_emits_trace_metrics_and_incidents() {
         metrics_path: Some(metrics_path.clone()),
         incident_root: Some(tmp.join("incidents")),
         dump_warnings: false,
+        ..Default::default()
     });
     let out = t.run().unwrap();
     let h = &out.history;
@@ -107,13 +108,15 @@ fn traced_autopilot_run_emits_trace_metrics_and_incidents() {
     let tids: BTreeSet<u32> = events.iter().map(|e| e.tid).collect();
     assert!(tids.len() >= 3, "expected spans from >= 3 threads, got {}", tids.len());
 
-    // the Chrome export round-trips: one trace event per ring event, and
-    // every instrumented phase shows up by name
+    // the Chrome export round-trips: one trace event per ring event plus the
+    // leading ring-stats metadata record, and every instrumented phase shows
+    // up by name
     let trace_path = tmp.join("trace.json");
-    trace::export(&events, &trace_path).unwrap();
+    trace::export(&events, rec.dropped(), &trace_path).unwrap();
     let tr = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
     let te = tr.get("traceEvents").unwrap().arr().unwrap();
-    assert_eq!(te.len(), events.len());
+    assert_eq!(te.len(), events.len() + 1);
+    assert_eq!(te[0].get("name").unwrap().str().unwrap(), "slw_ring_stats");
     let names: BTreeSet<&str> =
         te.iter().map(|e| e.get("name").unwrap().str().unwrap()).collect();
     for required in
@@ -157,6 +160,7 @@ fn forced_divergence_dumps_exactly_one_incident() {
         metrics_path: None,
         incident_root: Some(tmp.join("incidents")),
         dump_warnings: false,
+        ..Default::default()
     });
     let out = t.run().unwrap();
     let h = &out.history;

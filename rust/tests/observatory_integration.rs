@@ -1,0 +1,116 @@
+//! End-to-end observatory tests on the micro artifacts (real PJRT
+//! execution): a monitored divergent autopilot run must leave the registry
+//! showing a completed run with rollbacks, serve a coherent step tail over
+//! real HTTP (no rewound duplicates), and — the determinism contract — the
+//! monitored trajectory must be bit-identical to the unmonitored one.
+
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use slw::config::{presets, DataRecipe, RunConfig};
+use slw::obs::{Monitor, Obs, ObsSink, RunRegistry};
+use slw::train::metrics::RunHistory;
+use slw::train::trainer::Trainer;
+use slw::util::json::Json;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The divergent-recipe autopilot config (mirrors `obs_integration`): LR 1.0
+/// blows up fast, the sentinel rolls back, the decay ladder reaches
+/// stability, and the budget completes.
+fn divergent_cfg() -> RunConfig {
+    let mut cfg = presets::base("micro").unwrap();
+    cfg.token_budget = (60 * 4 * 32) as u64;
+    cfg.data = DataRecipe::Mixture { tokens: 40_000 };
+    cfg.eval_every = 0;
+    cfg.lr.horizon = slw::schedule::lr::Horizon::Steps { warmup: 1, total: 0 };
+    cfg.lr.peak = 1.0;
+    cfg.lr.min_lr = 0.1;
+    cfg.stability = Some(slw::stability::StabilityPolicy {
+        warmup_steps: 3,
+        snapshot_every: 3,
+        regrow_after: 5,
+        max_rollbacks: 20,
+        ..Default::default()
+    });
+    cfg
+}
+
+fn trajectory(h: &RunHistory) -> Vec<(usize, usize, u32)> {
+    h.steps.iter().map(|r| (r.step, r.seqlen, r.stats.loss.to_bits())).collect()
+}
+
+fn http_get(mon: &Monitor, path: &str) -> String {
+    let mut s = TcpStream::connect(mon.addr()).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn monitored_autopilot_run_is_bit_identical_and_registry_tracks_recovery() {
+    // unmonitored baseline
+    let mut plain = Trainer::new(&root(), divergent_cfg().with_name("obsv-mon")).unwrap();
+    let plain_out = plain.run().unwrap();
+    assert!(!plain_out.history.diverged(), "the autopilot must recover");
+
+    // monitored run: registry wired into the sink, live HTTP server up for
+    // the whole run
+    let reg = Arc::new(RunRegistry::new());
+    let mut mon = Monitor::start("127.0.0.1:0", reg.clone(), Obs::off()).unwrap();
+    let mut t = Trainer::new(&root(), divergent_cfg().with_name("obsv-mon")).unwrap();
+    t.set_obs_sink(ObsSink {
+        registry: Some(reg.clone()),
+        worker: Some(0),
+        ..Default::default()
+    });
+    let out = t.run().unwrap();
+    let h = &out.history;
+
+    // observe-only: the monitor must not perturb a single bit
+    assert_eq!(trajectory(h), trajectory(&plain_out.history));
+
+    // registry: one completed run with the autopilot's rollbacks counted
+    let st = h.stability.as_ref().expect("autopilot trace attached");
+    assert!(st.n_rollbacks() >= 1, "the divergent recipe must roll back");
+    let runs = reg.runs_json();
+    let run = &runs.get("runs").unwrap().arr().unwrap()[0];
+    assert_eq!(run.get("slug").unwrap().str().unwrap(), "obsv_mon");
+    assert_eq!(run.get("state").unwrap().str().unwrap(), "completed");
+    assert_eq!(run.get("rollbacks").unwrap().usize().unwrap(), st.n_rollbacks());
+    assert_eq!(run.get("step").unwrap().usize().unwrap(), h.steps.last().unwrap().step);
+    assert_eq!(run.get("worker").unwrap().usize().unwrap(), 0);
+    assert_eq!(
+        runs.get("totals").unwrap().get("live").unwrap().usize().unwrap(),
+        0,
+        "a finished run must not count as live"
+    );
+
+    // step tail: rollbacks truncate rewound rows, so the served tail is
+    // exactly the surviving trajectory — same length, no duplicate steps
+    let tail = reg.steps_since("obsv_mon", None).expect("slug is registered");
+    let steps: Vec<usize> = tail
+        .lines()
+        .map(|l| Json::parse(l).unwrap().get("step").unwrap().usize().unwrap())
+        .collect();
+    assert_eq!(steps.len(), h.steps.len());
+    let distinct: BTreeSet<usize> = steps.iter().copied().collect();
+    assert_eq!(distinct.len(), steps.len(), "no rewound duplicates in the tail");
+    assert_eq!(*steps.last().unwrap(), h.steps.last().unwrap().step);
+
+    // the live HTTP surface agrees with the in-process views
+    let resp = http_get(&mon, "/metrics");
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("slw_up 1"));
+    assert!(resp.contains(&format!("slw_rollbacks_total {}", st.n_rollbacks())));
+    assert!(http_get(&mon, "/runs").contains("\"slug\":\"obsv_mon\""));
+    let tail_http = http_get(&mon, "/runs/obsv_mon/steps");
+    assert!(tail_http.starts_with("HTTP/1.1 200"), "{tail_http}");
+    mon.shutdown();
+}
