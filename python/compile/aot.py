@@ -3,7 +3,9 @@
 Run once by `make artifacts`; Python never touches the request path after
 this. For every ArtifactSet in configs.DEFAULT_SETS it emits
 
-    artifacts/<set>/train_s<L>.hlo.txt     one per seqlen bucket L
+    artifacts/<set>/train_s<L>.hlo.txt     fused step, one per seqlen bucket L
+    artifacts/<set>/grad_s<L>.hlo.txt      grad-only half (data-parallel shards)
+    artifacts/<set>/apply.hlo.txt          optimizer half (reduced grads in)
     artifacts/<set>/eval_s<full>.hlo.txt   scoring pass (val PPL / probes)
     artifacts/<set>/manifest.json          shapes, param layout, bucket table
 
@@ -63,6 +65,38 @@ def lower_train(aset: ArtifactSet, seqlen: int) -> str:
     return to_hlo_text(lowered)
 
 
+def lower_grad(aset: ArtifactSet, seqlen: int) -> str:
+    """Gradient-only entry point for the data-parallel replica engine: each
+    replica feeds its row-contiguous token shard (shard bsz == the set's
+    batch_size) and returns (grads f32[n], loss f32)."""
+    cfg = aset.cfg()
+    n = M.n_params(cfg)
+    lowered = jax.jit(lambda *a: M.grad_step(*a, cfg)).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((aset.batch_size, seqlen + 1), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_apply(aset: ArtifactSet) -> str:
+    """Optimizer entry point applying tree-reduced gradients. Batch/seqlen
+    independent — one artifact per set. knobs f32[4] = [step, lr, clip_norm,
+    mean_loss]."""
+    cfg = aset.cfg()
+    n = M.n_params(cfg)
+    f32 = jnp.float32
+    spec = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)  # noqa: E731
+    lowered = jax.jit(lambda *a: M.apply_step(*a, cfg)).lower(
+        spec((n,), f32),   # flat params
+        spec((n,), f32),   # adam m
+        spec((n,), f32),   # adam v
+        spec((n,), f32),   # decay mask
+        spec((4,), f32),   # knobs [step, lr, clip_norm, mean_loss]
+        spec((n,), f32),   # reduced grads
+    )
+    return to_hlo_text(lowered)
+
+
 def lower_eval(aset: ArtifactSet, seqlen: int) -> str:
     cfg = aset.cfg()
     n = M.n_params(cfg)
@@ -100,16 +134,25 @@ def manifest(aset: ArtifactSet) -> dict:
         "seqlen_buckets": list(aset.seqlen_buckets),
         "full_only": aset.full_only,
         "train_artifacts": {str(s): f"train_s{s}.hlo.txt" for s in aset.seqlen_buckets},
+        "grad_artifacts": {str(s): f"grad_s{s}.hlo.txt" for s in aset.seqlen_buckets},
+        "apply_artifact": "apply.hlo.txt",
         "eval_artifact": f"eval_s{cfg.max_seqlen}.hlo.txt",
-        # Output layout 3: untupled results (state stays device-resident on
-        # the Rust side, only the packed stats tensor is read back — layout
-        # 2's contract) with the stats vector widened to f32[10] by the four
-        # per-layer-group update-RMS sentinel channels. Engine::load rejects
-        # older layouts.
-        "output_layout": 3,
+        # Output layout 4: layout 3's contract (untupled results, state
+        # device-resident, f32[10] stats readback) plus the split
+        # grad/apply entry points for the data-parallel replica engine —
+        # per-bucket grad_s<L> returns (grads, loss) against a shard-sized
+        # token batch, and one batch/seqlen-independent apply runs the Adam
+        # update from tree-reduced gradients with the mean loss riding in
+        # knob slot 3. Engine::load rejects older layouts.
+        "output_layout": 4,
         "train_inputs": ["params", "m", "v", "decay_mask", "knobs", "tokens"],
         "knob_fields": ["step", "lr", "clip_norm"],
         "train_outputs": ["params", "m", "v", "stats"],
+        "grad_inputs": ["params", "tokens"],
+        "grad_outputs": ["grads", "loss"],
+        "apply_inputs": ["params", "m", "v", "decay_mask", "knobs", "grads"],
+        "apply_knob_fields": ["step", "lr", "clip_norm", "mean_loss"],
+        "apply_outputs": ["params", "m", "v", "stats"],
         "stats_fields": list(M.STATS_FIELDS),
         "eval_outputs": ["sum_nll", "per_pos_nll", "correct"],
         "params": [
@@ -131,13 +174,25 @@ def build_set(aset: ArtifactSet, out_root: Path, force: bool) -> None:
         p = out / f"train_s{s}.hlo.txt"
         if force or not p.exists():
             todo.append(("train", s, p))
+        g = out / f"grad_s{s}.hlo.txt"
+        if force or not g.exists():
+            todo.append(("grad", s, g))
+    apply_p = out / "apply.hlo.txt"
+    if force or not apply_p.exists():
+        todo.append(("apply", 0, apply_p))
     eval_p = out / f"eval_s{aset.cfg().max_seqlen}.hlo.txt"
     if force or not eval_p.exists():
         todo.append(("eval", aset.cfg().max_seqlen, eval_p))
 
+    lower = {
+        "train": lambda s: lower_train(aset, s),
+        "grad": lambda s: lower_grad(aset, s),
+        "apply": lambda _s: lower_apply(aset),
+        "eval": lambda s: lower_eval(aset, s),
+    }
     for kind, s, path in todo:
         t0 = time.time()
-        text = lower_train(aset, s) if kind == "train" else lower_eval(aset, s)
+        text = lower[kind](s)
         path.write_text(text)
         print(f"  {aset.name}/{path.name}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s",
               flush=True)

@@ -272,6 +272,62 @@ def train_step(flat, m, v, dmask, knobs, tokens, cfg: ModelConfig):
     return (p_new, m_new, v_new, packed)
 
 
+def grad_step(flat, tokens, cfg: ModelConfig):
+    """Gradient-only half of the data-parallel split step (output layout 4).
+
+    Each replica runs this against its row-contiguous token shard and ships
+    the flat gradient vector to the host, where the replica group
+    tree-reduces the per-shard means (`loss_fn` is a mean over B·S
+    positions, so with equal shard sizes the mean of per-shard gradients is
+    exactly the global-batch gradient). Returns ``(grads f32[n], loss f32)``
+    — no optimizer state touched, so the artifact is a pure function of
+    (params, tokens).
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+    return grads, loss
+
+
+def apply_step(flat, m, v, dmask, knobs, grads, cfg: ModelConfig):
+    """Optimizer half of the data-parallel split step (output layout 4).
+
+    ``knobs`` is a packed f32[4] ``[step, lr, clip_norm, mean_loss]`` — the
+    reduced mean loss rides in the knob upload so the packed stats vector
+    keeps the exact ``STATS_FIELDS`` layout of the fused step and the Rust
+    `StepStats` decode is shared. ``grads`` is the tree-reduced global-batch
+    gradient; global-norm clipping therefore happens here, on the reduced
+    vector, matching the fused step's clip-then-update order. Batch- and
+    seqlen-independent, so one artifact per set serves every bucket, and
+    every replica applies the identical update to its own device-resident
+    state (bit-lockstep fan-back, no O(n_params) parameter broadcast).
+    """
+    step, lr, clip_norm = knobs[0], knobs[1], knobs[2]
+    if cfg.use_pallas:
+        p_new, m_new, v_new, stats = adam_update(
+            flat, m, v, grads, step, lr,
+            beta1=cfg.adam_beta1, beta2=cfg.adam_beta2, eps=cfg.adam_eps,
+            weight_decay=cfg.weight_decay, clip_norm=clip_norm,
+            decay_mask=dmask,
+        )
+    else:
+        p_new, m_new, v_new, stats = ref.adam_ref(
+            flat, m, v, grads, step, lr,
+            beta1=cfg.adam_beta1, beta2=cfg.adam_beta2, eps=cfg.adam_eps,
+            weight_decay=cfg.weight_decay, clip_norm=cfg.clip_norm,
+            decay_mask=dmask,
+        )
+    grad_l2, var_l1, var_max, mom_l1, clip_coef = stats
+    bc1 = 1.0 - cfg.adam_beta1 ** step
+    bc2 = 1.0 - cfg.adam_beta2 ** step
+    upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.adam_eps)
+    urms = [
+        jnp.sqrt(jnp.mean(jax.lax.slice(upd, (a,), (b,)) ** 2))
+        if b > a else jnp.float32(0.0)
+        for _, a, b in urms_group_bounds(cfg)
+    ]
+    packed = jnp.stack([knobs[3], grad_l2, var_l1, var_max, mom_l1, clip_coef, *urms])
+    return (p_new, m_new, v_new, packed)
+
+
 def eval_step(flat, tokens, cfg: ModelConfig):
     """Scoring pass used for validation PPL and the probe-task suite.
 

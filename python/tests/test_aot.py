@@ -1,11 +1,12 @@
 """AOT lowering: HLO text validity, manifest schema, config mirroring."""
 
 import json
+import re
 
 import pytest
 
 from compile import model as M
-from compile.aot import lower_eval, lower_train, manifest
+from compile.aot import lower_apply, lower_eval, lower_grad, lower_train, manifest
 from compile.configs import ARTIFACT_SETS, DEFAULT_SETS, MODELS
 
 ASET = ARTIFACT_SETS["micro_b4"]
@@ -38,6 +39,30 @@ def test_eval_hlo_structure():
     assert "parameter(1)" in text
 
 
+def test_grad_hlo_structure():
+    text = lower_grad(ASET, 8)
+    n = M.n_params(ASET.cfg())
+    # 2 inputs (params, shard tokens), 2 results (grads, loss)
+    assert f"f32[{n}]{{0}} parameter(0)" in text
+    assert f"s32[{ASET.batch_size},9]{{1,0}} parameter(1)" in text
+    assert f"(f32[{n}]{{0}}, f32[])" in text
+
+
+def test_apply_hlo_structure():
+    text = lower_apply(ASET)
+    n = M.n_params(ASET.cfg())
+    # 6 inputs: params, m, v, decay_mask, knobs f32[4], reduced grads
+    for i in range(6):
+        assert f"parameter({i})" in text
+    assert "parameter(6)" not in text
+    assert "f32[4]" in text  # [step, lr, clip_norm, mean_loss]
+    # same untupled state+stats root as the fused step
+    assert f"(f32[{n}]{{0}}, f32[{n}]{{0}}, f32[{n}]{{0}}, f32[10]{{0}})" in text
+    # batch/seqlen independence: no 2-D token array anywhere (s32 scalars
+    # from internal loop counters are fine)
+    assert not re.search(r"s32\[\d+,\d+\]", text)
+
+
 def test_manifest_schema():
     man = manifest(ASET)
     js = json.loads(json.dumps(man))  # round-trips
@@ -45,10 +70,18 @@ def test_manifest_schema():
     assert js["n_params"] == M.n_params(ASET.cfg())
     assert js["seqlen_buckets"] == list(ASET.seqlen_buckets)
     assert len(js["params"]) == len(M.param_specs(ASET.cfg()))
-    assert js["output_layout"] == 3
+    assert js["output_layout"] == 4
     assert js["train_inputs"] == ["params", "m", "v", "decay_mask", "knobs", "tokens"]
     assert js["knob_fields"] == ["step", "lr", "clip_norm"]
     assert js["train_outputs"] == ["params", "m", "v", "stats"]
+    # layout 4: split grad/apply entry points for the replica engine
+    assert js["grad_artifacts"] == {str(s): f"grad_s{s}.hlo.txt" for s in ASET.seqlen_buckets}
+    assert js["apply_artifact"] == "apply.hlo.txt"
+    assert js["grad_inputs"] == ["params", "tokens"]
+    assert js["grad_outputs"] == ["grads", "loss"]
+    assert js["apply_inputs"] == ["params", "m", "v", "decay_mask", "knobs", "grads"]
+    assert js["apply_knob_fields"] == ["step", "lr", "clip_norm", "mean_loss"]
+    assert js["apply_outputs"] == ["params", "m", "v", "stats"]
     assert js["stats_fields"][0] == "loss"
     assert js["stats_fields"][3] == "var_max"
     assert js["stats_fields"][6:] == [f"urms_{g}" for g in M.URMS_GROUPS]

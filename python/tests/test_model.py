@@ -175,6 +175,43 @@ def test_train_step_outputs():
         assert np.isfinite(value) and value > 0, (name, value)
 
 
+def test_split_grad_apply_matches_fused_step():
+    """The data-parallel split (per-shard grad_step → host mean-reduce →
+    apply_step on the reduced gradient) reproduces the fused train_step:
+    loss_fn is a mean over B·S positions, so with equal shard sizes the mean
+    of per-shard gradients is the global-batch gradient."""
+    cfg = CFG
+    flat, m, v, dm = _state(cfg, seed=3)
+    toks = rand_tokens(11, 4, cfg.max_seqlen + 1, cfg.vocab)
+    fused = M.train_step(flat, m, v, dm, _knobs(1, 3e-3), toks, cfg)
+
+    # two shards of two contiguous rows each (the Rust sharding rule)
+    g0, l0 = M.grad_step(flat, toks[:2], cfg)
+    g1, l1 = M.grad_step(flat, toks[2:], cfg)
+    g = (g0 + g1) / 2.0
+    loss = (l0 + l1) / 2.0
+    knobs4 = jnp.array([1.0, 3e-3, 1.0, float(loss)], jnp.float32)
+    split = M.apply_step(flat, m, v, dm, knobs4, g, cfg)
+
+    for a, b in zip(fused[:3], split[:3]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused[3]), np.asarray(split[3]),
+                               rtol=2e-4, atol=1e-6)
+
+
+def test_apply_step_packs_mean_loss_from_knobs():
+    """stats[0] of the apply half is exactly the mean loss delivered in knob
+    slot 3 — the replica group's reduced loss, not a recomputation."""
+    cfg = CFG
+    flat, m, v, dm = _state(cfg, seed=4)
+    toks = rand_tokens(12, 4, cfg.max_seqlen + 1, cfg.vocab)
+    g, _ = M.grad_step(flat, toks, cfg)
+    marker = 7.125  # exactly representable
+    knobs4 = jnp.array([1.0, 1e-3, 1.0, marker], jnp.float32)
+    out = M.apply_step(flat, m, v, dm, knobs4, g, cfg)
+    assert float(out[3][0]) == marker
+
+
 def test_urms_group_bounds_partition():
     """Groups tile the flat vector exactly, in order, for every preset."""
     for cfg in MODELS.values():

@@ -1,0 +1,149 @@
+//! Data-parallel scaling + determinism gates for the replica engine.
+//!
+//! Phase 1 drives the raw step loop on the gpt3 testbed at a fixed global
+//! batch of 64: the fused single-engine path vs a 4-replica `ReplicaGroup`
+//! (b16 shards, host tree reduction, one fanned-back apply). The enforced
+//! bound is the issue's scaling gate: **>= 1.5x steps/s at 4 replicas** at
+//! equal global batch. Phase 2 certifies the N=1 contract: with
+//! `n_replicas = 1` the trainer never builds a group and dispatches to the
+//! untouched fused `Engine::train_step` — so two divergent-recipe autopilot
+//! runs (each forcing at least one rollback) must be bit-identical, which
+//! is exactly the pre-change trajectory guarantee carried through a
+//! rollback. Emits `BENCH_dp.json`.
+//!
+//! `SLW_BENCH_SMOKE=1` shrinks both phases for CI.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use slw::config::{presets, DataRecipe, RunConfig};
+use slw::runtime::{Engine, ReplicaGroup};
+use slw::train::trainer::Trainer;
+use slw::util::json;
+
+fn rand_tokens(n: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = slw::util::rng::Pcg64::new(seed);
+    (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+/// The divergent micro autopilot recipe (mirrors the trainer's recovery
+/// tests): absurd LR from step 1 so the sentinel must roll back at least
+/// once before the decay ladder stabilizes the run.
+fn divergent_cfg(steps: usize) -> RunConfig {
+    let mut cfg = presets::base("micro").unwrap();
+    cfg.lr.peak = 1.0;
+    cfg.lr.min_lr = 0.1;
+    cfg.lr.horizon = slw::schedule::lr::Horizon::Steps { warmup: 1, total: 0 };
+    cfg.eval_every = 0;
+    cfg.token_budget = (4 * 32 * steps) as u64;
+    cfg.data = DataRecipe::Mixture { tokens: 40_000 };
+    cfg.stability = Some(slw::stability::StabilityPolicy {
+        warmup_steps: 3,
+        snapshot_every: 3,
+        regrow_after: 5,
+        max_rollbacks: 20,
+        ..Default::default()
+    });
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let smoke = std::env::var("SLW_BENCH_SMOKE").is_ok();
+    let (warm, steps, reps) = if smoke { (2, 5, 2) } else { (3, 12, 3) };
+    let rollback_steps = if smoke { 40 } else { 60 };
+
+    // --- phase 1: scaling at equal global batch (gpt3, b64 s64) --------
+    // 4 replicas shard onto the lowered b16 rung; the single-engine
+    // baseline runs the fused b64 artifact. Both paths step the same
+    // token stream from the same initial state.
+    const BSZ: usize = 64;
+    const SEQ: usize = 64;
+    const REPLICAS: usize = 4;
+    let mut engine = Engine::load(&root, "gpt3")?;
+    let vocab = engine.model().vocab;
+    let batches: Vec<Vec<i32>> = (0..steps + warm)
+        .map(|k| rand_tokens(BSZ * (SEQ + 1), vocab, 1000 + k as u64))
+        .collect();
+
+    let mut single_sps = Vec::new();
+    let mut group_sps = Vec::new();
+    for rep in 0..reps {
+        // fused single-engine baseline
+        let mut state = engine.init_state(BSZ, 42 + rep as u64)?;
+        for toks in batches.iter().take(warm) {
+            engine.train_step(&mut state, toks, BSZ, SEQ, 1e-3, 1.0)?;
+        }
+        let t0 = Instant::now();
+        for toks in batches.iter().skip(warm) {
+            let stats = engine.train_step(&mut state, toks, BSZ, SEQ, 1e-3, 1.0)?;
+            assert!(stats.is_finite());
+        }
+        single_sps.push(steps as f64 / t0.elapsed().as_secs_f64());
+
+        // 4-replica group from the same initial state
+        let state2 = engine.init_state(BSZ, 42 + rep as u64)?;
+        let mut group = ReplicaGroup::new(&engine, &state2, REPLICAS)?;
+        let mut state2 = state2;
+        for toks in batches.iter().take(warm) {
+            group.train_step(&mut engine, &mut state2, toks, BSZ, SEQ, 1e-3, 1.0)?;
+        }
+        let t0 = Instant::now();
+        for toks in batches.iter().skip(warm) {
+            let stats = group.train_step(&mut engine, &mut state2, toks, BSZ, SEQ, 1e-3, 1.0)?;
+            assert!(stats.is_finite());
+        }
+        group_sps.push(steps as f64 / t0.elapsed().as_secs_f64());
+    }
+    let best = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+    let single = best(&single_sps);
+    let group4 = best(&group_sps);
+    let speedup = group4 / single;
+
+    // --- phase 2: N=1 bit-identity through an autopilot rollback -------
+    // n_replicas = 1 builds no group: the trainer dispatches to the same
+    // fused `Engine::train_step` call the pre-replica trainer made, so a
+    // reproducible rolled-back trajectory certifies the unchanged path.
+    let mut traj: Vec<Vec<(usize, u32)>> = Vec::new();
+    let mut rollbacks = 0usize;
+    for _ in 0..2 {
+        let mut cfg = divergent_cfg(rollback_steps);
+        cfg.n_replicas = 1;
+        let out = Trainer::new(&root, cfg)?.run()?;
+        let trace = out.history.stability.as_ref().expect("autopilot trace");
+        assert!(trace.n_rollbacks() >= 1, "the recipe must force a rollback");
+        assert!(!out.history.diverged(), "the autopilot must recover");
+        rollbacks = trace.n_rollbacks();
+        traj.push(out.history.steps.iter().map(|r| (r.step, r.stats.loss.to_bits())).collect());
+    }
+    let bit_identical = traj[0] == traj[1];
+
+    println!(
+        "bench:\tdata_parallel\tglobal_bsz={BSZ}\treplicas={REPLICAS}\tsteps={steps}\t\
+         single={single:.3} steps/s\tdp4={group4:.3} steps/s\tspeedup={speedup:.2}x\t\
+         rollbacks={rollbacks}\tbit_identical={bit_identical}"
+    );
+    let out = json::obj(vec![
+        ("bench", json::s("data_parallel")),
+        ("global_bsz", json::num(BSZ as f64)),
+        ("seqlen", json::num(SEQ as f64)),
+        ("replicas", json::num(REPLICAS as f64)),
+        ("steps", json::num(steps as f64)),
+        ("reps", json::num(reps as f64)),
+        ("single_steps_per_s", json::num(single)),
+        ("dp4_steps_per_s", json::num(group4)),
+        // the enforced gates
+        ("speedup_4x", json::num(speedup)),
+        ("rollbacks", json::num(rollbacks as f64)),
+        ("n1_bit_identical", json::num(bit_identical as u8 as f64)),
+    ]);
+    std::fs::write("BENCH_dp.json", out.to_string())?;
+    println!("wrote BENCH_dp.json");
+    assert!(bit_identical, "N=1 trajectory must be bit-identical through a rollback");
+    assert!(
+        speedup >= 1.5,
+        "4-replica scaling {speedup:.2}x must stay >= 1.5x over the fused single engine"
+    );
+    Ok(())
+}

@@ -174,6 +174,7 @@ fn main() -> anyhow::Result<()> {
         &slw::pipeline::prefetch::PrefetchStats::default(),
         Some("healthy"),
         1.0,
+        1,
     );
     registry.begin("bench_update", "bench update", "0", None);
     let t0 = Instant::now();

@@ -62,6 +62,12 @@ pub struct RunConfig {
     /// truncation.
     pub n_workers: usize,
     pub prefetch_depth: usize,
+    /// Data-parallel replica count. `1` runs the fused single-engine path
+    /// (bit-identical to pre-replica builds); `N > 1` shards each logical
+    /// batch over N device engines and tree-reduces gradients in fixed
+    /// order (see docs/PARALLELISM.md). Requires `batch % n_replicas == 0`
+    /// and a lowered artifact set at the shard size.
+    pub n_replicas: usize,
     /// Stability autopilot (sentinel + rollback + closed-loop pacing/LR);
     /// None = open loop. Autopilot interventions are plan patches, so these
     /// runs stay on the threaded prefetch pipeline.
@@ -82,6 +88,18 @@ impl RunConfig {
         }
         // n_workers = 0 is valid: the inline degenerate mode of the
         // reactive loop (no prefetch threads)
+        if self.n_replicas == 0 {
+            bail!("n_replicas must be >= 1");
+        }
+        if self.n_replicas > 1 && self.batch % self.n_replicas != 0 {
+            bail!("batch {} not divisible by n_replicas {}", self.batch, self.n_replicas);
+        }
+        if self.n_replicas > 1 && self.bsz_warmup.is_some() {
+            bail!(
+                "bsz warmup cannot combine with n_replicas > 1 \
+                 (the shard size would change mid-run)"
+            );
+        }
         if let Some(w) = &self.bsz_warmup {
             if w.start > self.batch {
                 bail!("bsz warmup start {} > target batch {}", w.start, self.batch);
@@ -152,6 +170,7 @@ fn apply_key(cfg: &mut RunConfig, key: &str, v: &str) -> Result<()> {
         "val_frac" => cfg.val_frac = v.parse()?,
         "clip_norm" => cfg.clip_norm = v.parse()?,
         "n_workers" => cfg.n_workers = v.parse()?,
+        "replicas" => cfg.n_replicas = v.parse()?,
         "prefetch_depth" => cfg.prefetch_depth = v.parse()?,
         "lr" => cfg.lr.peak = v.parse()?,
         "min_lr" => cfg.lr.min_lr = v.parse()?,
@@ -289,6 +308,17 @@ mod tests {
         let cfg = parse_config("model = micro\ninject = none\n").unwrap();
         assert!(cfg.inject.is_none());
         assert!(parse_config("inject = \"lr_shock:at=5,steps=0,mult=50\"\n").is_err());
+    }
+
+    #[test]
+    fn replicas_key_parses_and_validates() {
+        let cfg = parse_config("model = gpt3\nbatch = 8\nreplicas = 4\n").unwrap();
+        assert_eq!(cfg.n_replicas, 4);
+        // preset default is the single-engine path
+        assert_eq!(presets::base("tiny").unwrap().n_replicas, 1);
+        // 0 replicas and non-divisible shards are rejected up front
+        assert!(parse_config("model = gpt3\nbatch = 8\nreplicas = 0\n").is_err());
+        assert!(parse_config("model = gpt3\nbatch = 8\nreplicas = 3\n").is_err());
     }
 
     #[test]

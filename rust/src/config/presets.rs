@@ -78,6 +78,7 @@ pub fn base(model: &str) -> Result<RunConfig> {
         seed: 1234,
         n_workers: 2,
         prefetch_depth: 4,
+        n_replicas: 1,
         stability: None,
         inject: None,
     })

@@ -63,9 +63,16 @@ pub fn run_key_with(cfg: &RunConfig, family_text: &str) -> String {
     // reactive loop produces bit-identical trajectories for any worker
     // count (enforced by the trainer's determinism tests), so they are
     // normalized out of the key and equivalent runs share a cache entry.
+    // n_replicas is different: N = 1 routes through the fused single-engine
+    // path (bit-identical to pre-replica builds, so it normalizes to 1),
+    // but each N > 1 has its own fixed reduction tree whose rounding
+    // differs — those trajectories must not share entries across counts.
     let mut keyed = cfg.clone();
     keyed.n_workers = 0;
     keyed.prefetch_depth = 0;
+    if keyed.n_replicas <= 1 {
+        keyed.n_replicas = 1;
+    }
     let text = format!(
         "{}+xla:{}|{keyed:?}|seed={}{family_text}",
         env!("SLW_BUILD_REV"),
@@ -396,20 +403,48 @@ mod tests {
     fn key_folds_in_the_artifact_output_layout() {
         // each re-lowering bumps the step's result layout; entries keyed
         // against older manifests must never be served for the new numerics
-        // — the raw manifest text (which now carries "output_layout": 3) is
+        // — the raw manifest text (which now carries "output_layout": 4) is
         // part of every key
         let cfg = presets::base("micro").unwrap().with_name("k-layout");
-        let t3 = family_text(&root(), "micro").unwrap();
+        let t4 = family_text(&root(), "micro").unwrap();
         assert!(
-            t3.contains("\"output_layout\": 3"),
+            t4.contains("\"output_layout\": 4"),
             "manifest text must carry the layout version"
         );
-        let t2 = t3.replace("\"output_layout\": 3", "\"output_layout\": 2");
+        let t3 = t4.replace("\"output_layout\": 4", "\"output_layout\": 3");
         assert_ne!(
+            run_key_with(&cfg, &t4),
             run_key_with(&cfg, &t3),
-            run_key_with(&cfg, &t2),
             "a layout change must re-key cached runs"
         );
+    }
+
+    #[test]
+    fn key_folds_in_the_replica_count_only_above_one() {
+        // N = 1 runs the fused single-engine path, bit-identical to a
+        // pre-replica build — so it shares the entry. Each N > 1 has its
+        // own fixed reduction tree (different rounding) and must re-key.
+        let cfg = presets::base("gpt3").unwrap().with_name("k-replicas");
+        let text = family_text(&root(), "gpt3").unwrap();
+        let k1 = run_key_with(&cfg, &text);
+        let mut two = cfg.clone();
+        two.n_replicas = 2;
+        let mut four = cfg.clone();
+        four.n_replicas = 4;
+        assert_ne!(k1, run_key_with(&two, &text), "N=2 rounds differently from N=1");
+        assert_ne!(
+            run_key_with(&two, &text),
+            run_key_with(&four, &text),
+            "each replica count is its own trajectory"
+        );
+        // every single-engine spelling normalizes to the same entry as the
+        // preset default (0 never survives validation, but the key must not
+        // depend on it either)
+        for n in [0, 1] {
+            let mut one = cfg.clone();
+            one.n_replicas = n;
+            assert_eq!(k1, run_key_with(&one, &text));
+        }
     }
 
     #[test]

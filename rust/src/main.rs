@@ -98,6 +98,7 @@ fn build_config(args: &mut Args) -> Result<RunConfig> {
     cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.n_workers = args.usize_or("workers", cfg.n_workers)?;
+    cfg.n_replicas = args.usize_or("replicas", cfg.n_replicas)?;
     if let Some(n) = args.opt_str("name") {
         cfg.name = n;
     }
@@ -436,6 +437,8 @@ fn print_help() {
                    \"lr_shock:at=40,steps=10,mult=30;stats_nan:at=60,channel=0\")\n\
                    [--workers N]  (prefetch threads; 0 = inline, same trajectory —\n\
                    adaptive and autopilot runs stay threaded via plan re-publication)\n\
+                   [--replicas N]  (data-parallel engines; shards each batch,\n\
+                   tree-reduces grads in fixed order — see docs/PARALLELISM.md)\n\
                    [--trace out.json]  (Chrome/Perfetto span trace + per-step\n\
                    JSONL metrics; incident dumps land in results/incidents/)\n\
                    [--monitor host:port [--monitor-linger secs]]  (pull-based\n\

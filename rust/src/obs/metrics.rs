@@ -97,6 +97,7 @@ pub fn step_row(
     pf: &PrefetchStats,
     verdict: Option<&str>,
     lr_scale: f64,
+    n_replicas: usize,
 ) -> Json {
     json::obj(vec![
         ("step", json::num(rec.step as f64)),
@@ -122,6 +123,7 @@ pub fn step_row(
         ("pf_stale", json::num(pf.stale_dropped as f64)),
         ("pf_replans", json::num(pf.republished as f64)),
         ("lr_scale", json::num(lr_scale)),
+        ("n_replicas", json::num(n_replicas as f64)),
         ("verdict", verdict.map(json::s).unwrap_or(Json::Null)),
     ])
 }
@@ -154,6 +156,9 @@ pub struct MetricsRow {
     pub pf_stale: usize,
     pub pf_replans: usize,
     pub lr_scale: f64,
+    /// Data-parallel replica count; rows from pre-replica builds (no
+    /// `n_replicas` key) parse as 1.
+    pub n_replicas: usize,
     /// `None` for open-loop runs (written as JSON null).
     pub verdict: Option<String>,
 }
@@ -206,6 +211,10 @@ pub fn parse_row(line: &str) -> Result<MetricsRow> {
         pf_stale: j.get("pf_stale")?.usize()?,
         pf_replans: j.get("pf_replans")?.usize()?,
         lr_scale: j.get("lr_scale")?.num()?,
+        n_replicas: match j.opt("n_replicas") {
+            Some(v) => v.usize()?,
+            None => 1,
+        },
         verdict: match j.get("verdict")? {
             Json::Null => None,
             v => Some(v.str()?.to_string()),
@@ -261,7 +270,7 @@ mod tests {
     #[test]
     fn step_row_has_all_fields_and_survives_nan() {
         let pf = PrefetchStats { n_workers: 2, served: 4, hits: 3, ..Default::default() };
-        let row = step_row(&sample_record(), 12, 4096, &pf, Some("healthy"), 0.5);
+        let row = step_row(&sample_record(), 12, 4096, &pf, Some("healthy"), 0.5, 4);
         let text = row.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("step").unwrap().usize().unwrap(), 3);
@@ -269,11 +278,34 @@ mod tests {
         assert_eq!(back.get("host_transfers").unwrap().usize().unwrap(), 12);
         assert_eq!(back.get("verdict").unwrap().str().unwrap(), "healthy");
         assert_eq!(back.get("lr_scale").unwrap().num().unwrap(), 0.5);
+        assert_eq!(back.get("n_replicas").unwrap().usize().unwrap(), 4);
         assert!(json::get_nf(back.get("var_max").unwrap()).unwrap().is_nan());
         assert_eq!(back.get("urms_late").unwrap().num().unwrap(), 0.03f32 as f64);
         // open-loop rows have a null verdict
-        let row = step_row(&sample_record(), 0, 0, &PrefetchStats::default(), None, 1.0);
+        let row = step_row(&sample_record(), 0, 0, &PrefetchStats::default(), None, 1.0, 1);
         assert_eq!(*row.get("verdict").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn parser_defaults_n_replicas_for_pre_replica_rows() {
+        // a row written by this build parses its replica count back
+        let pf = PrefetchStats::default();
+        let row = step_row(&sample_record(), 3, 100, &pf, None, 1.0, 2).to_string();
+        assert_eq!(parse_row(&row).unwrap().n_replicas, 2);
+        // rows from pre-replica metrics files have no n_replicas key and
+        // must keep parsing (as the single-engine count)
+        let legacy = {
+            let j = Json::parse(&row).unwrap();
+            let Json::Obj(map) = j else { unreachable!() };
+            let kept: Vec<(&str, Json)> = map
+                .iter()
+                .filter(|(k, _)| k.as_str() != "n_replicas")
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect();
+            json::obj(kept).to_string()
+        };
+        assert!(!legacy.contains("n_replicas"));
+        assert_eq!(parse_row(&legacy).unwrap().n_replicas, 1);
     }
 
     #[test]
@@ -295,7 +327,7 @@ mod tests {
         for step in 0..3 {
             let mut r = sample_record();
             r.step = step;
-            w.write_row(&step_row(&r, 3 * (step + 1), 100, &pf, None, 1.0)).unwrap();
+            w.write_row(&step_row(&r, 3 * (step + 1), 100, &pf, None, 1.0, 1)).unwrap();
         }
         w.finish().unwrap();
         assert_eq!(w.lines(), 3);
@@ -329,7 +361,7 @@ mod tests {
                     (rng.f64() * 200.0 - 100.0) as f32
                 }
             };
-            let mut written: Vec<(StepRecord, Option<&str>, f64)> = Vec::new();
+            let mut written: Vec<(StepRecord, Option<&str>, f64, usize)> = Vec::new();
             let mut text = String::new();
             for step in 0..n_rows {
                 let rec = StepRecord {
@@ -354,17 +386,18 @@ mod tests {
                 };
                 let verdict = verdicts[rng.usize_below(4)];
                 let lr_scale = if rng.f64() < 0.5 { 1.0 } else { rng.f64() };
+                let n_replicas = 1 << rng.usize_below(3);
                 let pf = PrefetchStats {
                     served: step + 1,
                     hits: step,
                     ..Default::default()
                 };
                 text.push_str(
-                    &step_row(&rec, 2 * step, 64 * step as u64, &pf, verdict, lr_scale)
+                    &step_row(&rec, 2 * step, 64 * step as u64, &pf, verdict, lr_scale, n_replicas)
                         .to_string(),
                 );
                 text.push('\n');
-                written.push((rec, verdict, lr_scale));
+                written.push((rec, verdict, lr_scale, n_replicas));
             }
             // every other case: simulate a crash mid-write of one extra row
             let truncated = case % 2 == 0;
@@ -376,6 +409,7 @@ mod tests {
                     &PrefetchStats::default(),
                     Some("healthy"),
                     1.0,
+                    1,
                 )
                 .to_string();
                 text.push_str(&extra[..extra.len() / 2]);
@@ -384,13 +418,14 @@ mod tests {
             let (rows, skipped) = parse_jsonl(&text);
             assert_eq!(rows.len(), n_rows, "case {case}");
             assert_eq!(skipped, usize::from(truncated), "case {case}");
-            for (row, (rec, verdict, lr_scale)) in rows.iter().zip(&written) {
+            for (row, (rec, verdict, lr_scale, n_replicas)) in rows.iter().zip(&written) {
                 assert_eq!(row.step, rec.step);
                 assert_eq!(row.seqlen, rec.seqlen);
                 assert_eq!(row.bsz, rec.bsz);
                 assert_eq!(row.lr, rec.lr);
                 assert_eq!(row.tokens, rec.tokens_after);
                 assert_eq!(row.lr_scale, *lr_scale);
+                assert_eq!(row.n_replicas, *n_replicas);
                 assert_eq!(row.verdict.as_deref(), *verdict);
                 let expect = [
                     rec.stats.loss,

@@ -293,7 +293,7 @@ mod tests {
 
     fn push(reg: &RunRegistry, slug: &str, step: usize) {
         let r = rec(step);
-        let row = step_row(&r, 3, 100, &PrefetchStats::default(), Some("healthy"), 1.0);
+        let row = step_row(&r, 3, 100, &PrefetchStats::default(), Some("healthy"), 1.0, 1);
         reg.update(slug, &r, Some("healthy"), 1.0, &row);
     }
 

@@ -252,6 +252,7 @@ mod tests {
             &crate::pipeline::prefetch::PrefetchStats::default(),
             None,
             1.0,
+            1,
         );
         reg.update("demo", &rec, None, 1.0, &row);
         reg
@@ -285,9 +286,11 @@ mod tests {
         let reg = Arc::new(RunRegistry::new());
         let rec = Recorder::new(64);
         rec.counter("queue_depth", 3);
+        rec.counter("replicas", 4); // the trainer's data-parallel gauge
         let obs = Obs::new(rec);
         let (_, _, body) = route("/metrics", &reg, &obs);
         assert!(body.contains("slw_queue_depth 3"), "{body}");
+        assert!(body.contains("slw_replicas 4"), "{body}");
     }
 
     #[test]

@@ -51,6 +51,21 @@ pub struct Batch {
     pub fresh_rows: usize,
 }
 
+impl Batch {
+    /// Row-contiguous shard `i` of `n` for the data-parallel replica
+    /// engine: rows `[i·bsz/n, (i+1)·bsz/n)` as a contiguous slice of the
+    /// row-major token buffer. The boundaries are a pure function of
+    /// `(bsz, n)` — the sample stream itself is untouched, so assembly
+    /// stays a pure function of `(StepSpec, seed)` for any replica count
+    /// (`runtime::replica::shard_range` is the same rule). Requires
+    /// `bsz % n == 0`, validated by the replica group at startup.
+    pub fn shard(&self, i: usize, n: usize) -> &[i32] {
+        let width = self.seqlen + 1;
+        let (r0, r1) = crate::runtime::replica::shard_range(self.bsz, n, i);
+        &self.tokens[r0 * width..r1 * width]
+    }
+}
+
 /// The shared per-batch truncation core both batch builders call: serve
 /// `bsz` rows of `width` columns from the Recycle leftover queue when
 /// possible, otherwise from `fetch_row` (called with the fresh-row ordinal),
@@ -269,6 +284,33 @@ mod tests {
     use super::*;
     use crate::data::corpus::{Corpus, MarkovCorpus};
     use crate::pipeline::pacing::Pacing;
+
+    #[test]
+    fn batch_shards_are_contiguous_rows_in_order() {
+        let bsz = 8;
+        let seqlen = 4;
+        let width = seqlen + 1;
+        let batch = Batch {
+            tokens: (0..(bsz * width) as i32).collect(),
+            bsz,
+            seqlen,
+            train_tokens: (bsz * seqlen) as u64,
+            dropped_tokens: 0,
+            fresh_rows: bsz,
+        };
+        for n in [1, 2, 4, 8] {
+            let mut seen = Vec::new();
+            for i in 0..n {
+                let s = batch.shard(i, n);
+                assert_eq!(s.len(), bsz / n * width);
+                seen.extend_from_slice(s);
+            }
+            // shards tile the row-major buffer exactly, in index order
+            assert_eq!(seen, batch.tokens, "n={n}");
+        }
+        // shard boundaries are a pure function of (bsz, n): same slice twice
+        assert_eq!(batch.shard(1, 4), batch.shard(1, 4));
+    }
 
     fn setup(full: usize) -> (TokenStore, Sampler) {
         let toks = MarkovCorpus::new(512, 0).generate(full * 200 + 1);

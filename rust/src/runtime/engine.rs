@@ -35,9 +35,23 @@
 //! `sync_bytes` count the boundary's, so tests and the `engine_residency`
 //! bench can assert the warm path moves zero state bytes.
 //!
-//! This requires output-layout-3 artifacts (untupled results: params, m, v,
-//! stats as four separate buffers per execute, stats widened to `f32[10]` —
-//! see `compile/aot.py`); [`Engine::load`] rejects older layouts.
+//! This requires output-layout-4 artifacts (untupled results: params, m, v,
+//! stats as four separate buffers per execute, stats widened to `f32[10]`,
+//! plus the split grad/apply entry points — see `compile/aot.py`);
+//! [`Engine::load`] rejects older layouts.
+//!
+//! # The split grad/apply path (data parallelism)
+//!
+//! Layout 4 adds two more entry points used by `runtime::replica`'s
+//! [`ReplicaGroup`](super::replica::ReplicaGroup): [`Engine::grad_step`]
+//! runs the per-bucket gradient-only artifact against a row shard and reads
+//! the flat gradient (plus shard loss) back to the host — an O(n_params)
+//! crossing *by design*, the host-tree-reduce transport — and
+//! [`Engine::apply_step`] uploads the reduced gradient with a `f32[4]` knob
+//! vector (`[step, lr, clip_norm, mean_loss]`) and applies the Adam update
+//! in place, reading back only the packed stats. The single-engine
+//! [`Engine::train_step`] path is untouched: at one replica the trainer
+//! still runs the fused artifact with its exactly-three-crossings contract.
 //!
 //! The engine also hosts the fault-injection harness's **stats seam**
 //! ([`Engine::set_stats_fault`]): a configured [`StatsFault`] overwrites one
@@ -62,6 +76,9 @@ use crate::obs::Obs;
 
 /// Bytes of the packed per-step knob upload (`f32[3]`: step, lr, clip).
 pub const KNOB_BYTES: u64 = 3 * 4;
+/// Bytes of the packed apply-step knob upload (`f32[4]`: step, lr, clip,
+/// mean loss) on the split data-parallel path.
+pub const APPLY_KNOB_BYTES: u64 = 4 * 4;
 /// Bytes of the packed per-step stats readback (`f32[10]`).
 pub const STATS_BYTES: u64 = 10 * 4;
 
@@ -177,7 +194,15 @@ pub struct Engine {
     client: Rc<PjRtClient>,
     /// primary manifest (the set matching the run's target batch)
     manifests: Vec<Manifest>,
+    /// artifacts root the family was loaded from (replica workers re-load
+    /// sibling engines from it on their own threads)
+    root: PathBuf,
     train: BTreeMap<(usize, usize), LazyExe>,
+    /// gradient-only entry points, keyed like `train` (shard batch, bucket)
+    grad: BTreeMap<(usize, usize), LazyExe>,
+    /// batch/seqlen-independent optimizer entry point (one per family —
+    /// every set lowers the identical computation)
+    apply: LazyExe,
     eval: LazyExe,
     eval_batch: usize,
     compiles: std::cell::Cell<usize>,
@@ -206,11 +231,11 @@ impl Engine {
             bail!("model '{model}' has no artifact sets under {root:?}");
         };
         for man in &manifests {
-            if man.output_layout != 3 {
+            if man.output_layout != 4 {
                 bail!(
                     "artifact set '{}' uses output layout {}; the engine needs \
-                     layout 3 (untupled results, f32[10] stats with the update-RMS \
-                     channels) — re-run `make artifacts` \
+                     layout 4 (untupled results, f32[10] stats, split grad/apply \
+                     entry points) — re-run `make artifacts` \
                      (python -m compile.aot --force)",
                     man.set,
                     man.output_layout
@@ -219,9 +244,16 @@ impl Engine {
         }
         let client = Rc::new(PjRtClient::cpu()?);
         let mut train = BTreeMap::new();
+        let mut grad = BTreeMap::new();
         for man in &manifests {
             for (&seqlen, file) in &man.train_artifacts {
                 train.insert((man.batch_size, seqlen), LazyExe {
+                    path: man.dir.join(file),
+                    exe: None,
+                });
+            }
+            for (&seqlen, file) in &man.grad_artifacts {
+                grad.insert((man.batch_size, seqlen), LazyExe {
                     path: man.dir.join(file),
                     exe: None,
                 });
@@ -230,11 +262,17 @@ impl Engine {
         // eval executable from the first (lowest-batch) set — they all share
         // the model; eval batch is uniform across sets by construction
         let eval = LazyExe { path: man0.eval_path(), exe: None };
+        // apply is batch/seqlen-independent, so any set's lowering serves
+        // the whole family
+        let apply = LazyExe { path: man0.apply_path()?, exe: None };
         let eval_batch = man0.eval_batch;
         Ok(Self {
             client,
             manifests,
+            root: root.to_path_buf(),
             train,
+            grad,
+            apply,
             eval,
             eval_batch,
             compiles: std::cell::Cell::new(0),
@@ -457,6 +495,169 @@ impl Engine {
         state.params = outs.pop().expect("3 state outputs");
         state.step += 1;
         state.tokens += (bsz * seqlen) as u64;
+        Ok(stats)
+    }
+
+    /// The artifacts root this family was loaded from. `ReplicaGroup`
+    /// workers use it to load sibling engines on their own threads (PJRT
+    /// clients are thread-confined, so each replica owns a full engine).
+    pub fn artifacts_root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Gradient-only half of the split data-parallel step: run the
+    /// per-bucket grad artifact against a row shard and read the flat
+    /// gradient (and shard mean loss) back to the host. Does not touch the
+    /// optimizer state or the step/token counters — that happens in
+    /// [`Engine::apply_step`] after the host tree-reduce. The O(n_params)
+    /// gradient readback is the reduce transport and is counted on the
+    /// engine's transfer counters like any other crossing.
+    pub fn grad_step(
+        &mut self,
+        state: &TrainState,
+        tokens: &[i32],
+        bsz: usize,
+        seqlen: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        if tokens.len() != bsz * (seqlen + 1) {
+            bail!("shard is {} tokens, expected {}x{}", tokens.len(), bsz, seqlen + 1);
+        }
+        let key = (bsz, seqlen);
+        if !self.grad.contains_key(&key) {
+            bail!(
+                "no grad executable for shard batch {bsz} seqlen {seqlen} \
+                 (lowered buckets: {:?})",
+                self.grad.keys().collect::<Vec<_>>()
+            );
+        }
+        let toks = {
+            let _s = crate::span!(self.obs, "upload", state.step);
+            self.token_buffer(tokens, bsz, seqlen + 1)?
+        };
+        let lazy = self.grad.get_mut(&key).expect("presence checked above");
+        if lazy.exe.is_none() {
+            self.compiles.set(self.compiles.get() + 1);
+        }
+        let exe = lazy.get(&self.client)?;
+        let mut results = {
+            let _s = crate::span!(self.obs, "execute", state.step);
+            exe.execute_b::<&PjRtBuffer>(&[&state.params, &toks])?
+        };
+        if results.is_empty() {
+            bail!("grad step produced no per-device results");
+        }
+        let outs = results.swap_remove(0);
+        if outs.len() != 2 {
+            bail!(
+                "grad step returned {} results, expected 2 (grads, loss) — \
+                 stale artifact layout? re-run `make artifacts`",
+                outs.len()
+            );
+        }
+        let (grads, loss) = {
+            let _s = crate::span!(self.obs, "readback", state.step);
+            let grads = outs[0].to_literal_sync()?.to_vec::<f32>()?;
+            self.count(grads.len() as u64 * 4);
+            let loss = outs[1].to_literal_sync()?.get_first_element::<f32>()?;
+            self.count(4);
+            (grads, loss)
+        };
+        if grads.len() != state.n_params {
+            bail!("grad tensor has {} elements, expected {}", grads.len(), state.n_params);
+        }
+        Ok((grads, loss))
+    }
+
+    /// Optimizer half of the split data-parallel step: upload the
+    /// tree-reduced gradient plus the `f32[4]` knob vector
+    /// `[step, lr, clip_norm, mean_loss]`, apply the Adam update in place
+    /// against the device-resident state, and read back the packed stats.
+    /// `tokens_delta` is the *global* batch's token count (the step's
+    /// bsz·seqlen across all shards) — every replica applies the identical
+    /// update, so fan-back is bit-lockstep with no parameter broadcast.
+    pub fn apply_step(
+        &mut self,
+        state: &mut TrainState,
+        grads: &[f32],
+        lr: f64,
+        clip_norm: f64,
+        mean_loss: f32,
+        tokens_delta: u64,
+    ) -> Result<StepStats> {
+        if grads.len() != state.n_params {
+            bail!("reduced grads have {} elements, expected {}", grads.len(), state.n_params);
+        }
+        let (knobs, gbuf) = {
+            let _s = crate::span!(self.obs, "upload", state.step);
+            let knobs = self.client.buffer_from_host_literal(
+                None,
+                &Literal::vec1(&[(state.step + 1) as f32, lr as f32, clip_norm as f32, mean_loss]),
+            )?;
+            self.count(APPLY_KNOB_BYTES);
+            let gbuf = self.client.buffer_from_host_literal(None, &Literal::vec1(grads))?;
+            self.count(grads.len() as u64 * 4);
+            (knobs, gbuf)
+        };
+        if self.apply.exe.is_none() {
+            self.compiles.set(self.compiles.get() + 1);
+        }
+        let exe = self.apply.get(&self.client)?;
+        let mut results = {
+            let _s = crate::span!(self.obs, "apply", state.step);
+            exe.execute_b::<&PjRtBuffer>(&[
+                &state.params,
+                &state.m,
+                &state.v,
+                &state.decay_mask,
+                &knobs,
+                &gbuf,
+            ])?
+        };
+        if results.is_empty() {
+            bail!("apply step produced no per-device results");
+        }
+        let mut outs = results.swap_remove(0);
+        if outs.len() != 4 {
+            bail!(
+                "apply step returned {} results, expected 4 (params, m, v, stats) — \
+                 stale artifact layout? re-run `make artifacts`",
+                outs.len()
+            );
+        }
+        let s = {
+            let _s = crate::span!(self.obs, "readback", state.step);
+            outs[3].to_literal_sync()?.to_vec::<f32>()?
+        };
+        self.count(STATS_BYTES);
+        if s.len() != 10 {
+            bail!("stats tensor has {} elements, expected 10", s.len());
+        }
+        let mut stats = StepStats {
+            loss: s[0],
+            grad_l2: s[1],
+            var_l1: s[2],
+            var_max: s[3],
+            mom_l1: s[4],
+            clip_coef: s[5],
+            urms_embed: s[6],
+            urms_early: s[7],
+            urms_late: s[8],
+            urms_final: s[9],
+        };
+        // same injection stats seam as the fused path: replica-0 scenario
+        // runs keep working at N>1 (the fault keys on executed calls)
+        if let Some(f) = self.stats_fault {
+            if f.at_call == self.train_calls {
+                stats.set_channel(f.channel, f.value);
+            }
+        }
+        self.train_calls += 1;
+        outs.truncate(3);
+        state.v = outs.pop().expect("3 state outputs");
+        state.m = outs.pop().expect("3 state outputs");
+        state.params = outs.pop().expect("3 state outputs");
+        state.step += 1;
+        state.tokens += tokens_delta;
         Ok(stats)
     }
 
@@ -686,6 +887,40 @@ mod tests {
         let etoks = rand_tokens(b * (s + 1), man.model.vocab, 3);
         e.eval_step(&st, &etoks).unwrap();
         assert_eq!(e.n_host_transfers(), 10);
+    }
+
+    #[test]
+    fn split_grad_apply_tracks_fused_step() {
+        let mut e = engine();
+        let man = e.manifest_for_batch(4).unwrap().clone();
+        let toks = rand_tokens(4 * 9, man.model.vocab, 9);
+        // fused path
+        let mut st_fused = e.init_state(4, 5).unwrap();
+        let fused = e.train_step(&mut st_fused, &toks, 4, 8, 1e-3, 1.0).unwrap();
+        // split path on the same (single-shard) batch
+        let mut st_split = e.init_state(4, 5).unwrap();
+        let (grads, loss) = e.grad_step(&st_split, &toks, 4, 8).unwrap();
+        // grad_step is read-only and bit-deterministic on a fixed state
+        let (grads2, loss2) = e.grad_step(&st_split, &toks, 4, 8).unwrap();
+        assert_eq!(loss.to_bits(), loss2.to_bits());
+        assert_eq!(grads, grads2);
+        assert_eq!(st_split.step, 0, "grad half must not advance the step");
+        let split = e.apply_step(&mut st_split, &grads, 1e-3, 1.0, loss, 32).unwrap();
+        assert_eq!(split.loss.to_bits(), loss.to_bits(), "stats[0] is the delivered mean loss");
+        assert_eq!(st_split.step, 1);
+        assert_eq!(st_split.tokens, 32);
+        // the split update tracks the fused one (separate lowerings, so
+        // bit-identity is not promised — N=1 runs stay on the fused path)
+        assert!((fused.loss - split.loss).abs() / fused.loss < 1e-4);
+        assert!((fused.grad_l2 - split.grad_l2).abs() / fused.grad_l2 < 1e-3);
+        let a = st_fused.params_vec().unwrap();
+        let b = st_split.params_vec().unwrap();
+        let max = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+        assert!(max < 1e-5, "split update must track the fused one (max diff {max})");
+        // wrong shard shape is rejected without advancing anything
+        assert!(e.grad_step(&st_split, &[0i32; 3], 4, 8).is_err());
+        assert!(e.apply_step(&mut st_split, &[0f32; 3], 1e-3, 1.0, 0.0, 0).is_err());
+        assert_eq!(st_split.step, 1);
     }
 
     #[test]

@@ -45,13 +45,22 @@ pub struct Manifest {
     pub seqlen_buckets: Vec<usize>,
     pub full_only: bool,
     pub train_artifacts: BTreeMap<usize, String>,
+    /// Per-bucket gradient-only entry points (layout 4): each takes
+    /// `(params, tokens[batch_size, L+1])` and returns `(grads, loss)` —
+    /// the replica engine's shard step. Empty for older layouts.
+    pub grad_artifacts: BTreeMap<usize, String>,
+    /// Batch/seqlen-independent optimizer entry point (layout 4): applies
+    /// tree-reduced gradients with knobs `[step, lr, clip_norm, mean_loss]`.
+    pub apply_artifact: Option<String>,
     pub eval_artifact: String,
     /// Result-layout version of the lowered steps. Layout 1 (legacy):
     /// everything wrapped in one tuple the host must materialize per step;
     /// layout 2: untupled results (params, m, v, stats) so state stays
     /// device-resident; layout 3: layout 2 with the stats tensor widened to
-    /// `f32[10]` by the four per-layer-group update-RMS channels. Manifests
-    /// without the key read as 1; `Engine::load` accepts only 3.
+    /// `f32[10]` by the four per-layer-group update-RMS channels; layout 4:
+    /// layout 3 plus the split grad/apply entry points for the
+    /// data-parallel replica engine. Manifests without the key read as 1;
+    /// `Engine::load` accepts only 4.
     pub output_layout: usize,
     pub params: Vec<ParamSpec>,
     pub dir: PathBuf,
@@ -82,6 +91,17 @@ impl Manifest {
             }
         } else {
             bail!("train_artifacts must be an object");
+        }
+
+        let mut grad_artifacts = BTreeMap::new();
+        if let Some(g) = j.opt("grad_artifacts") {
+            if let Json::Obj(map) = g {
+                for (k, v) in map {
+                    grad_artifacts.insert(k.parse::<usize>()?, v.str()?.to_string());
+                }
+            } else {
+                bail!("grad_artifacts must be an object");
+            }
         }
 
         let mut params = Vec::new();
@@ -120,6 +140,11 @@ impl Manifest {
                 .collect::<Result<_>>()?,
             full_only: j.get("full_only")?.bool()?,
             train_artifacts,
+            grad_artifacts,
+            apply_artifact: match j.opt("apply_artifact") {
+                Some(v) => Some(v.str()?.to_string()),
+                None => None,
+            },
             eval_artifact: j.get("eval_artifact")?.str()?.to_string(),
             output_layout: match j.opt("output_layout") {
                 Some(v) => v.usize()?,
@@ -135,6 +160,12 @@ impl Manifest {
             if !man.train_artifacts.contains_key(&b) {
                 bail!("bucket {b} has no train artifact");
             }
+            if man.output_layout >= 4 && !man.grad_artifacts.contains_key(&b) {
+                bail!("bucket {b} has no grad artifact (layout 4)");
+            }
+        }
+        if man.output_layout >= 4 && man.apply_artifact.is_none() {
+            bail!("layout-4 manifest for set {} is missing apply_artifact", man.set);
         }
         Ok(man)
     }
@@ -179,6 +210,20 @@ impl Manifest {
         }
     }
 
+    pub fn grad_path(&self, seqlen: usize) -> Result<PathBuf> {
+        match self.grad_artifacts.get(&seqlen) {
+            Some(f) => Ok(self.dir.join(f)),
+            None => bail!("no grad artifact for seqlen {seqlen} in set {}", self.set),
+        }
+    }
+
+    pub fn apply_path(&self) -> Result<PathBuf> {
+        match &self.apply_artifact {
+            Some(f) => Ok(self.dir.join(f)),
+            None => bail!("no apply artifact in set {} (pre-layout-4 manifest)", self.set),
+        }
+    }
+
     pub fn eval_path(&self) -> PathBuf {
         self.dir.join(&self.eval_artifact)
     }
@@ -219,11 +264,14 @@ mod tests {
         assert_eq!(man.model.vocab, 256);
         assert_eq!(man.batch_size, 4);
         assert_eq!(man.seqlen_buckets, vec![8, 16, 24, 32]);
-        assert_eq!(man.output_layout, 3, "committed artifacts carry the f32[10] stats (v3)");
+        assert_eq!(man.output_layout, 4, "committed artifacts carry the grad/apply split (v4)");
         assert_eq!(man.params.len(), 2 + 12 * man.model.n_layer + 2);
         assert!(man.train_path(8).unwrap().exists());
+        assert!(man.grad_path(8).unwrap().exists());
+        assert!(man.apply_path().unwrap().exists());
         assert!(man.eval_path().exists());
         assert!(man.train_path(12).is_err());
+        assert!(man.grad_path(12).is_err());
     }
 
     #[test]

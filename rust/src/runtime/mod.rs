@@ -5,8 +5,12 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod replica;
 pub mod state;
 
-pub use engine::{Engine, StatsFault, StepStats, KNOB_BYTES, STATS_BYTES, URMS_GROUPS};
+pub use engine::{
+    Engine, StatsFault, StepStats, APPLY_KNOB_BYTES, KNOB_BYTES, STATS_BYTES, URMS_GROUPS,
+};
 pub use manifest::Manifest;
+pub use replica::ReplicaGroup;
 pub use state::{HostState, TrainState};

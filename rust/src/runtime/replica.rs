@@ -1,0 +1,542 @@
+//! Data-parallel replica engine: one logical `StepSpec` executed as N
+//! sharded sub-batches with host-tree-reduced gradients.
+//!
+//! A [`ReplicaGroup`] manages replicas `1..N-1` as worker threads — PJRT
+//! clients are thread-confined, so each worker owns a full [`Engine`] (its
+//! own client) plus a device-resident [`TrainState`] — while replica 0 is
+//! the trainer's existing engine/state, driven inline on the calling
+//! thread (it also serves eval and probe batches unchanged). Only `Send`
+//! data crosses threads: token shards up, flat gradients back, one shared
+//! [`HostState`] for restores.
+//!
+//! # One logical step
+//!
+//! 1. **shard** — the row-major `[bsz, seqlen+1]` batch splits into N
+//!    contiguous row shards of `bsz/N` rows (see [`shard_range`]; the
+//!    boundaries are a pure function of `(bsz, n_replicas)`, so the sample
+//!    stream stays spec-pure and a shard is a contiguous slice, no copy
+//!    until the channel send).
+//! 2. **grad** — every replica runs the layout-4 grad artifact on its
+//!    shard and ships `(grads, shard mean loss)` to the host.
+//! 3. **reduce** — gradients and losses reduce on the host in a **fixed
+//!    binary-tree order** over replica indices ([`tree_reduce`]): strides
+//!    1, 2, 4, … always combining `acc[i] += acc[i+stride]`, then one
+//!    `1/N` scale. The order is a function of N alone — deterministic for
+//!    a fixed replica count; different N may round differently, which is
+//!    why the coordinator folds `n_replicas > 1` into its cache keys.
+//!    `loss_fn` is a mean over `B·S` positions, so with equal shard sizes
+//!    the mean of per-shard gradients is exactly the global-batch
+//!    gradient.
+//! 4. **apply** — every replica uploads the same reduced gradient and runs
+//!    the identical batch-independent apply artifact against its own
+//!    device state. Replicas advance in bit-lockstep (verified each step
+//!    by cross-checking the packed-stats loss bits), so fan-back costs one
+//!    O(n_params) gradient upload per replica and never broadcasts
+//!    parameters.
+//!
+//! # Determinism contract
+//!
+//! * **N=1 never reaches this module**: the trainer routes single-replica
+//!   runs through the fused `Engine::train_step` path untouched, so they
+//!   are bit-identical to the pre-replica engine (including through
+//!   autopilot rollbacks) and keep the exactly-three-crossings contract.
+//! * **Fixed N is reproducible**: same config, seed, and replica count →
+//!   the same reduction tree → bit-identical trajectories.
+//! * **Rollback restores every replica**: the autopilot restores replica
+//!   0's state in place; [`ReplicaGroup::sync_from`] then materializes it
+//!   once and uploads the same `HostState` to every worker, re-entering
+//!   lockstep.
+//!
+//! See `docs/PARALLELISM.md` for the full contract.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::engine::{Engine, StepStats};
+use super::state::{HostState, TrainState};
+use crate::obs::Obs;
+
+/// Row range `[start, end)` of shard `i` of `n` over a `bsz`-row batch —
+/// the sharding rule, a pure function of `(bsz, n)`. Requires `bsz % n == 0`
+/// (validated by [`validate_sharding`] / the callers).
+pub fn shard_range(bsz: usize, n: usize, i: usize) -> (usize, usize) {
+    let rows = bsz / n;
+    (i * rows, (i + 1) * rows)
+}
+
+/// Check that a global batch of `bsz` rows can execute on `n` replicas
+/// against `engine`'s artifact family: rows must split evenly and the shard
+/// batch must be a lowered rung (the grad artifacts are shaped per set).
+pub fn validate_sharding(engine: &Engine, bsz: usize, n: usize) -> Result<()> {
+    if n == 0 {
+        bail!("replica count must be >= 1");
+    }
+    if bsz % n != 0 {
+        bail!("batch {bsz} does not split evenly across {n} replicas");
+    }
+    let shard = bsz / n;
+    if !engine.batch_rungs().contains(&shard) {
+        bail!(
+            "shard batch {shard} (= {bsz}/{n}) has no lowered artifact set; \
+             available rungs: {:?} — pick a replica count whose shard size \
+             is a lowered rung",
+            engine.batch_rungs()
+        );
+    }
+    Ok(())
+}
+
+/// Fixed-order binary-tree reduction over per-replica gradient vectors and
+/// shard losses: strides 1, 2, 4, … always folding `acc[i] += acc[i+stride]`,
+/// then one `1/n` scale. Deterministic for a fixed `n`; the order never
+/// depends on worker timing because shards are collected into index order
+/// first. Returns the reduced (mean) gradient and mean loss.
+pub fn tree_reduce(mut parts: Vec<Vec<f32>>, mut losses: Vec<f32>) -> Result<(Vec<f32>, f32)> {
+    let n = parts.len();
+    if n == 0 || losses.len() != n {
+        bail!("tree_reduce needs non-empty matching shards ({n} grads, {} losses)", losses.len());
+    }
+    let len = parts[0].len();
+    if parts.iter().any(|p| p.len() != len) {
+        bail!("shard gradients disagree on length");
+    }
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (left, right) = parts.split_at_mut(i + stride);
+            for (d, s) in left[i].iter_mut().zip(right[0].iter()) {
+                *d += *s;
+            }
+            losses[i] += losses[i + stride];
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    let scale = 1.0 / n as f32;
+    let mut grads = parts.swap_remove(0);
+    for x in grads.iter_mut() {
+        *x *= scale;
+    }
+    Ok((grads, losses[0] * scale))
+}
+
+enum Cmd {
+    Grad { tokens: Vec<i32>, bsz: usize, seqlen: usize },
+    Apply { grads: Arc<Vec<f32>>, lr: f64, clip_norm: f64, mean_loss: f32, tokens_delta: u64 },
+    Upload { host: Arc<HostState> },
+    Shutdown,
+}
+
+enum Reply {
+    Ready,
+    Grad { grads: Vec<f32>, loss: f32 },
+    Applied { loss_bits: u32, step: u64 },
+    Uploaded,
+    Err(String),
+}
+
+struct Worker {
+    tx: Sender<Cmd>,
+    rx: Receiver<Reply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Worker {
+    fn recv(&self) -> Result<Reply> {
+        match self.rx.recv() {
+            Ok(Reply::Err(e)) => Err(anyhow!("replica worker: {e}")),
+            Ok(r) => Ok(r),
+            Err(_) => Err(anyhow!("replica worker hung up (thread died)")),
+        }
+    }
+}
+
+fn worker_loop(
+    root: std::path::PathBuf,
+    model: String,
+    init: Arc<HostState>,
+    rx: Receiver<Cmd>,
+    tx: Sender<Reply>,
+) {
+    let mut boot = || -> Result<(Engine, TrainState)> {
+        let engine = Engine::load(&root, &model)?;
+        let state = engine.state_from_host(&init)?;
+        Ok((engine, state))
+    };
+    let (mut engine, mut state) = match boot() {
+        Ok(v) => {
+            let _ = tx.send(Reply::Ready);
+            v
+        }
+        Err(e) => {
+            let _ = tx.send(Reply::Err(format!("{e:#}")));
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        let reply = match cmd {
+            Cmd::Grad { tokens, bsz, seqlen } => {
+                match engine.grad_step(&state, &tokens, bsz, seqlen) {
+                    Ok((grads, loss)) => Reply::Grad { grads, loss },
+                    Err(e) => Reply::Err(format!("{e:#}")),
+                }
+            }
+            Cmd::Apply { grads, lr, clip_norm, mean_loss, tokens_delta } => {
+                match engine.apply_step(&mut state, &grads, lr, clip_norm, mean_loss, tokens_delta)
+                {
+                    Ok(stats) => {
+                        Reply::Applied { loss_bits: stats.loss.to_bits(), step: state.step }
+                    }
+                    Err(e) => Reply::Err(format!("{e:#}")),
+                }
+            }
+            Cmd::Upload { host } => match state.upload(&host) {
+                Ok(()) => Reply::Uploaded,
+                Err(e) => Reply::Err(format!("{e:#}")),
+            },
+            Cmd::Shutdown => break,
+        };
+        if tx.send(reply).is_err() {
+            break;
+        }
+    }
+}
+
+/// N-way data-parallel execution of one logical train step. Replica 0 is
+/// the caller's engine/state (driven inline); replicas `1..N-1` are worker
+/// threads owning their own engines. See the module docs for the step
+/// anatomy and the determinism contract.
+pub struct ReplicaGroup {
+    n: usize,
+    workers: Vec<Worker>,
+    obs: Obs,
+}
+
+impl ReplicaGroup {
+    /// Spawn replicas `1..n-1`, each seeded from a one-time materialization
+    /// of replica 0's state (an explicit sync point — the group starts in
+    /// lockstep). Requires `n >= 2`; the trainer keeps N=1 on the fused
+    /// single-engine path, bit-identical to the pre-replica build.
+    pub fn new(engine: &Engine, state: &TrainState, n: usize) -> Result<Self> {
+        if n < 2 {
+            bail!("ReplicaGroup needs n >= 2 (n=1 runs stay on the fused single-engine path)");
+        }
+        let root = engine.artifacts_root().to_path_buf();
+        let model = engine.model().name.clone();
+        let init = Arc::new(state.materialize()?);
+        let mut workers = Vec::with_capacity(n - 1);
+        for i in 1..n {
+            let (tx_cmd, rx_cmd) = channel();
+            let (tx_rep, rx_rep) = channel();
+            let (root, model, init) = (root.clone(), model.clone(), init.clone());
+            let handle = std::thread::Builder::new()
+                .name(format!("replica-{i}"))
+                .spawn(move || worker_loop(root, model, init, rx_cmd, tx_rep))?;
+            workers.push(Worker { tx: tx_cmd, rx: rx_rep, handle: Some(handle) });
+        }
+        let group = Self { n, workers, obs: Obs::off() };
+        for w in &group.workers {
+            match w.recv()? {
+                Reply::Ready => {}
+                _ => bail!("replica worker sent an unexpected boot reply"),
+            }
+        }
+        Ok(group)
+    }
+
+    /// Attach a telemetry handle for the orchestration spans
+    /// (`shard`/`reduce`/`apply`). Observe-only, like every other obs hook.
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Execute one logical `[bsz, seqlen]` step across the group: shard →
+    /// per-replica grad → fixed-order tree reduce → fan the reduced
+    /// gradient back through the apply artifact on every replica. Returns
+    /// replica 0's decoded stats (all replicas are cross-checked to have
+    /// applied the identical update).
+    pub fn train_step(
+        &mut self,
+        engine: &mut Engine,
+        state: &mut TrainState,
+        tokens: &[i32],
+        bsz: usize,
+        seqlen: usize,
+        lr: f64,
+        clip_norm: f64,
+    ) -> Result<StepStats> {
+        if tokens.len() != bsz * (seqlen + 1) {
+            bail!("batch is {} tokens, expected {}x{}", tokens.len(), bsz, seqlen + 1);
+        }
+        if bsz % self.n != 0 {
+            bail!("batch {bsz} does not split evenly across {} replicas", self.n);
+        }
+        let width = seqlen + 1;
+        let shard_bsz = bsz / self.n;
+
+        // shard + fan out: contiguous row slices in replica-index order
+        {
+            let _s = crate::span!(self.obs, "shard", state.step);
+            for (w, i) in self.workers.iter().zip(1..self.n) {
+                let (r0, r1) = shard_range(bsz, self.n, i);
+                let shard = tokens[r0 * width..r1 * width].to_vec();
+                w.tx.send(Cmd::Grad { tokens: shard, bsz: shard_bsz, seqlen })
+                    .map_err(|_| anyhow!("replica worker hung up"))?;
+            }
+        }
+
+        // replica 0's shard runs inline while the workers grind
+        let (r0, r1) = shard_range(bsz, self.n, 0);
+        let (g0, l0) = engine.grad_step(state, &tokens[r0 * width..r1 * width], shard_bsz, seqlen)?;
+
+        // collect into index order, then reduce in the fixed tree
+        let (reduced, mean_loss) = {
+            let _s = crate::span!(self.obs, "reduce", state.step);
+            let mut parts = Vec::with_capacity(self.n);
+            let mut losses = Vec::with_capacity(self.n);
+            parts.push(g0);
+            losses.push(l0);
+            for w in &self.workers {
+                match w.recv()? {
+                    Reply::Grad { grads, loss } => {
+                        parts.push(grads);
+                        losses.push(loss);
+                    }
+                    _ => bail!("replica worker sent an unexpected grad reply"),
+                }
+            }
+            tree_reduce(parts, losses)?
+        };
+
+        // fan the reduced gradient back: identical apply on every replica
+        let stats = {
+            let _s = crate::span!(self.obs, "apply", state.step);
+            let tokens_delta = (bsz * seqlen) as u64;
+            let shared = Arc::new(reduced);
+            for w in &self.workers {
+                w.tx.send(Cmd::Apply {
+                    grads: shared.clone(),
+                    lr,
+                    clip_norm,
+                    mean_loss,
+                    tokens_delta,
+                })
+                .map_err(|_| anyhow!("replica worker hung up"))?;
+            }
+            let stats = engine.apply_step(state, &shared, lr, clip_norm, mean_loss, tokens_delta)?;
+            for (w, i) in self.workers.iter().zip(1..self.n) {
+                match w.recv()? {
+                    Reply::Applied { loss_bits, step } => {
+                        if loss_bits != stats.loss.to_bits() || step != state.step {
+                            bail!(
+                                "replica {i} fell out of lockstep at step {} \
+                                 (loss bits {loss_bits:#x} vs {:#x}, step {step}) — \
+                                 state divergence across replicas",
+                                state.step,
+                                stats.loss.to_bits()
+                            );
+                        }
+                    }
+                    _ => bail!("replica worker sent an unexpected apply reply"),
+                }
+            }
+            stats
+        };
+        Ok(stats)
+    }
+
+    /// Restore every worker replica from replica 0's current state (one
+    /// materialization, fanned out as a shared `HostState`). Called after
+    /// an autopilot rollback has restored replica 0 in place, re-entering
+    /// bit-lockstep across the group.
+    pub fn sync_from(&mut self, state: &TrainState) -> Result<()> {
+        let _s = crate::span!(self.obs, "sync_replicas", state.step);
+        let host = Arc::new(state.materialize()?);
+        for w in &self.workers {
+            w.tx.send(Cmd::Upload { host: host.clone() })
+                .map_err(|_| anyhow!("replica worker hung up"))?;
+        }
+        for w in &self.workers {
+            match w.recv()? {
+                Reply::Uploaded => {}
+                _ => bail!("replica worker sent an unexpected upload reply"),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ReplicaGroup {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn rand_tokens(n: usize, vocab: usize, seed: u64) -> Vec<i32> {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+    }
+
+    /// Run `steps` logical gpt3 b8/s64 steps at `n` replicas, returning the
+    /// per-step loss bits and the final parameters.
+    fn run_group(n: usize, steps: usize) -> (Vec<u32>, Vec<f32>) {
+        let mut engine = Engine::load(&root(), "gpt3").unwrap();
+        let mut state = engine.init_state(8, 42).unwrap();
+        let vocab = engine.model().vocab;
+        let mut group = ReplicaGroup::new(&engine, &state, n).unwrap();
+        let mut bits = Vec::new();
+        for k in 0..steps {
+            let toks = rand_tokens(8 * 65, vocab, 100 + k as u64);
+            let stats = group
+                .train_step(&mut engine, &mut state, &toks, 8, 64, 1e-3, 1.0)
+                .unwrap();
+            assert!(stats.is_finite());
+            bits.push(stats.loss.to_bits());
+        }
+        (bits, state.params_vec().unwrap())
+    }
+
+    #[test]
+    fn shard_ranges_tile_the_batch() {
+        for (bsz, n) in [(8, 2), (8, 4), (64, 4), (16, 1)] {
+            let mut covered = 0;
+            for i in 0..n {
+                let (a, b) = shard_range(bsz, n, i);
+                assert_eq!(a, covered, "shards must be contiguous in order");
+                assert_eq!(b - a, bsz / n);
+                covered = b;
+            }
+            assert_eq!(covered, bsz);
+        }
+    }
+
+    #[test]
+    fn tree_reduce_is_fixed_order_and_exact_mean_shape() {
+        // n=4: ((0+1) + (2+3)) — verify against the explicit tree
+        let parts = vec![vec![1.0f32, 8.0], vec![2.0, 16.0], vec![4.0, 32.0], vec![8.0, 64.0]];
+        let losses = vec![1.0, 2.0, 4.0, 8.0];
+        let (g, l) = tree_reduce(parts.clone(), losses.clone()).unwrap();
+        let expect0 = ((1.0f32 + 2.0) + (4.0 + 8.0)) * 0.25;
+        let expect1 = ((8.0f32 + 16.0) + (32.0 + 64.0)) * 0.25;
+        assert_eq!(g, vec![expect0, expect1]);
+        assert_eq!(l, ((1.0f32 + 2.0) + (4.0 + 8.0)) * 0.25);
+        // n=3 (non-power-of-two): (0+1) then (01+2)
+        let parts3 = vec![vec![1.0f32], vec![2.0], vec![4.0]];
+        let (g3, _) = tree_reduce(parts3, vec![0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(g3, vec![((1.0f32 + 2.0) + 4.0) / 3.0]);
+        // n=1 is identity
+        let (g1, l1) = tree_reduce(vec![vec![3.0f32]], vec![5.0]).unwrap();
+        assert_eq!((g1, l1), (vec![3.0f32], 5.0));
+        // mismatched shapes rejected
+        assert!(tree_reduce(vec![vec![1.0], vec![1.0, 2.0]], vec![0.0, 0.0]).is_err());
+        assert!(tree_reduce(vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn validate_sharding_knows_the_rungs() {
+        let engine = Engine::load(&root(), "gpt3").unwrap();
+        // gpt3 rungs: 2, 4, 8, 16, 64
+        validate_sharding(&engine, 8, 1).unwrap();
+        validate_sharding(&engine, 8, 2).unwrap();
+        validate_sharding(&engine, 8, 4).unwrap();
+        validate_sharding(&engine, 64, 4).unwrap();
+        assert!(validate_sharding(&engine, 8, 3).is_err(), "uneven split");
+        assert!(validate_sharding(&engine, 64, 2).is_err(), "32 is not a rung");
+        assert!(validate_sharding(&engine, 8, 0).is_err());
+    }
+
+    #[test]
+    fn fixed_replica_count_reproduces_bit_identically() {
+        let (bits_a, params_a) = run_group(2, 3);
+        let (bits_b, params_b) = run_group(2, 3);
+        assert_eq!(bits_a, bits_b, "N=2 must reproduce bit-identically");
+        assert_eq!(params_a, params_b);
+        let (bits_c, bits_d) = (run_group(4, 2).0, run_group(4, 2).0);
+        assert_eq!(bits_c, bits_d, "N=4 must reproduce bit-identically");
+    }
+
+    #[test]
+    fn replica_counts_agree_to_tolerance() {
+        // different N → different reduction trees, so bit-identity is not
+        // promised across counts, but the mean-of-means math must agree
+        let (bits_2, params_2) = run_group(2, 2);
+        let (bits_4, params_4) = run_group(4, 2);
+        for (a, b) in bits_2.iter().zip(&bits_4) {
+            let (la, lb) = (f32::from_bits(*a), f32::from_bits(*b));
+            assert!((la - lb).abs() / la < 1e-4, "losses diverged: {la} vs {lb}");
+        }
+        let max = params_2
+            .iter()
+            .zip(&params_4)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max < 1e-4, "params diverged across replica counts: {max}");
+    }
+
+    #[test]
+    fn sync_from_restores_every_replica_to_lockstep() {
+        let mut engine = Engine::load(&root(), "gpt3").unwrap();
+        let mut state = engine.init_state(8, 7).unwrap();
+        let vocab = engine.model().vocab;
+        let mut group = ReplicaGroup::new(&engine, &state, 2).unwrap();
+        let t1 = rand_tokens(8 * 65, vocab, 1);
+        let t2 = rand_tokens(8 * 65, vocab, 2);
+        group.train_step(&mut engine, &mut state, &t1, 8, 64, 1e-3, 1.0).unwrap();
+        let snap = state.materialize().unwrap();
+        let s2a = group.train_step(&mut engine, &mut state, &t2, 8, 64, 1e-3, 1.0).unwrap();
+        let params_a = state.params_vec().unwrap();
+        // roll replica 0 back (what Autopilot::observe does in place), then
+        // fan the restore out — the replay must be bit-identical, which the
+        // in-step lockstep cross-check enforces on the worker side too
+        state.upload(&snap).unwrap();
+        group.sync_from(&state).unwrap();
+        let s2b = group.train_step(&mut engine, &mut state, &t2, 8, 64, 1e-3, 1.0).unwrap();
+        assert_eq!(s2a.loss.to_bits(), s2b.loss.to_bits());
+        assert_eq!(params_a, state.params_vec().unwrap());
+        // without sync_from the workers would be a step ahead and the
+        // lockstep check would fail — prove the guard trips
+        state.upload(&snap).unwrap();
+        let res = group.train_step(&mut engine, &mut state, &t2, 8, 64, 1e-3, 1.0);
+        assert!(res.is_err(), "desynced replicas must be detected, not averaged over");
+    }
+
+    #[test]
+    fn group_rejects_bad_shapes_and_counts() {
+        let engine = Engine::load(&root(), "gpt3").unwrap();
+        let state = engine.init_state(8, 0).unwrap();
+        assert!(ReplicaGroup::new(&engine, &state, 1).is_err(), "N=1 stays on the fused path");
+        let mut engine = engine;
+        let mut state = state;
+        let mut group = ReplicaGroup::new(&engine, &state, 2).unwrap();
+        let vocab = engine.model().vocab;
+        let toks = rand_tokens(8 * 65, vocab, 3);
+        assert!(group.train_step(&mut engine, &mut state, &toks, 7, 64, 1e-3, 1.0).is_err());
+        assert!(group
+            .train_step(&mut engine, &mut state, &toks[..10], 8, 64, 1e-3, 1.0)
+            .is_err());
+    }
+}

@@ -33,6 +33,13 @@ pub struct ClusterConfig {
     pub allreduce_bw: f64,
     /// per-step fixed launch/sync latency (s)
     pub step_latency: f64,
+    /// data-parallel replica groups layered on top of the GPU ring (the
+    /// testbed's `--replicas N` engine): each group computes shard
+    /// gradients, the host folds them in a fixed binary tree
+    /// (`ceil(log2 R)` rounds of f32 grads) and fans the reduced gradient
+    /// back. `1` (the default) contributes no extra time — projections for
+    /// single-engine runs are unchanged.
+    pub replicas: usize,
 }
 
 impl Default for ClusterConfig {
@@ -43,6 +50,7 @@ impl Default for ClusterConfig {
             batch_eff_half: 4.0,
             allreduce_bw: 10e9,
             step_latency: 2e-3,
+            replicas: 1,
         }
     }
 }
@@ -107,8 +115,17 @@ impl ClusterSim {
         let compute = self.step_flops(bsz, seqlen) / (c.gpu_flops * eff * c.n_gpus as f64);
         // ring all-reduce of fp16 grads: 2·(n-1)/n · P · 2 bytes / bw
         let n = c.n_gpus as f64;
-        let comm = 2.0 * (n - 1.0) / n * self.model.n_params as f64 * 2.0 / c.allreduce_bw;
-        SimTime { compute_s: compute, comm_s: comm, latency_s: c.step_latency }
+        let ring = 2.0 * (n - 1.0) / n * self.model.n_params as f64 * 2.0 / c.allreduce_bw;
+        // replica-engine tree reduce (R > 1 only): ceil(log2 R) sequential
+        // fold rounds of f32 gradients, plus one fan-back crossing of the
+        // reduced gradient. Like the ring term, independent of B and L.
+        let tree = if c.replicas > 1 {
+            let rounds = (c.replicas as f64).log2().ceil() + 1.0;
+            rounds * self.model.n_params as f64 * 4.0 / c.allreduce_bw
+        } else {
+            0.0
+        };
+        SimTime { compute_s: compute, comm_s: ring + tree, latency_s: c.step_latency }
     }
 
     /// Total simulated hours for a full plan.
@@ -167,6 +184,36 @@ mod tests {
     fn comm_independent_of_batch_and_seqlen() {
         let sim = sim_1_5b();
         assert_eq!(sim.step_time(512, 1024).comm_s, sim.step_time(4096, 8).comm_s);
+    }
+
+    #[test]
+    fn replica_tree_reduce_adds_comm_time() {
+        // R = 1 (the default) must leave projections bit-identical; each
+        // doubling of R adds one fixed-tree fold round, so step and plan
+        // times grow monotonically — and stay independent of B and L
+        let base = sim_1_5b();
+        let at = |replicas: usize| {
+            ClusterSim::new(ClusterConfig { replicas, ..Default::default() }, gpt2_1_5b())
+        };
+        assert_eq!(at(1).step_time(512, 1024), base.step_time(512, 1024));
+        let (t1, t2, t4, t8) = (
+            at(1).step_time(512, 1024),
+            at(2).step_time(512, 1024),
+            at(4).step_time(512, 1024),
+            at(8).step_time(512, 1024),
+        );
+        assert!(t2.comm_s > t1.comm_s, "a 2-replica reduce costs communication");
+        assert!(t4.comm_s > t2.comm_s && t8.comm_s > t4.comm_s);
+        assert_eq!(t1.compute_s, t4.compute_s, "the tree term is pure communication");
+        assert_eq!(
+            at(4).step_time(512, 1024).comm_s,
+            at(4).step_time(4096, 8).comm_s,
+            "like the ring term, independent of batch and seqlen"
+        );
+        // plan_hours inherits the per-step term
+        let p = BucketedPacing::new(Pacing::Constant { seqlen: 1024 }, vec![8, 1024]).unwrap();
+        let plan = plan_run(&p, &BszWarmup::constant(512), Budget::Tokens(100_000_000)).unwrap();
+        assert!(at(4).plan_hours(&plan) > at(1).plan_hours(&plan));
     }
 
     #[test]
