@@ -138,7 +138,7 @@ fn main() -> anyhow::Result<()> {
         ("rollbacks", json::num(rollbacks as f64)),
         ("n1_bit_identical", json::num(bit_identical as u8 as f64)),
     ]);
-    std::fs::write("BENCH_dp.json", out.to_string())?;
+    slw::util::fsx::write_atomic(std::path::Path::new("BENCH_dp.json"), out.to_string().as_bytes())?;
     println!("wrote BENCH_dp.json");
     assert!(bit_identical, "N=1 trajectory must be bit-identical through a rollback");
     assert!(

@@ -1,0 +1,146 @@
+//! The elastic-supervision acceptance gate: inject each replica-fault
+//! family (worker panic, hang, NaN gradient shard) into a 2-replica gpt3
+//! autopilot run and enforce the degrade-and-recover contract — the run
+//! survives to its full budget, the fault costs exactly one quarantine
+//! (one mechanical rollback, controller untouched), and the finished
+//! trajectory is bit-identical to the fault-free 2-replica baseline:
+//! the survivors cover the quarantined rank's sub-batches in canonical
+//! shard order, so degraded steps reduce to the same gradient bits.
+//! Emits `BENCH_elastic.json`.
+//!
+//! `SLW_BENCH_SMOKE=1` shrinks the budget for CI.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use slw::config::{presets, DataRecipe, RunConfig};
+use slw::inject::InjectionSpec;
+use slw::runtime::Engine;
+use slw::train::trainer::{RunResult, Trainer};
+use slw::util::json::{self, Json};
+
+const FAMILIES: &[&str] = &["replica_panic", "replica_hang", "replica_grad_nan"];
+
+fn trajectory(out: &RunResult) -> Vec<(usize, usize, usize, u64, u32)> {
+    out.history
+        .steps
+        .iter()
+        .map(|r| (r.step, r.bsz, r.seqlen, r.tokens_after, r.stats.loss.to_bits()))
+        .collect()
+}
+
+/// The shared 2-replica gpt3 recipe: b8 shards onto the lowered b4 rung at
+/// the full-only seqlen-64 bucket; the tight snapshot cadence keeps the
+/// mechanical-rollback replay short.
+fn elastic_cfg(steps: usize) -> RunConfig {
+    let mut cfg = presets::base("gpt3").unwrap();
+    cfg.n_replicas = 2;
+    cfg.eval_every = 0;
+    cfg.token_budget = (8 * 64 * steps) as u64;
+    cfg.data = DataRecipe::Mixture { tokens: 40_000 };
+    cfg.stability = Some(slw::stability::StabilityPolicy {
+        warmup_steps: 3,
+        snapshot_every: 3,
+        regrow_after: 5,
+        max_rollbacks: 20,
+        ..Default::default()
+    });
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    slw::util::log::init_from_env();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let smoke = std::env::var("SLW_BENCH_SMOKE").is_ok();
+    let steps: usize = if smoke { 8 } else { 16 };
+    let fault_at: usize = 6;
+
+    let mut engine = Engine::load(&root, "gpt3")?;
+
+    // --- fault-free 2-replica baseline: the reference trajectory ---------
+    let t0 = Instant::now();
+    let mut t = Trainer::with_engine(engine, elastic_cfg(steps).with_name("elastic_baseline"))?;
+    let baseline = t.run()?;
+    engine = t.into_engine();
+    let baseline_s = t0.elapsed().as_secs_f64();
+    let reference = trajectory(&baseline);
+    let base_trace = baseline.history.stability.as_ref().expect("autopilot trace");
+    println!(
+        "bench:\telastic_dp\tbaseline\tsteps={}\trollbacks={}\twall={baseline_s:.2}s",
+        baseline.history.steps.len(),
+        base_trace.n_rollbacks()
+    );
+
+    // --- one run per fault family: quarantine, degrade, retrace ----------
+    let mut fam_objs: Vec<Json> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for family in FAMILIES {
+        let spec = format!("{family}:at={fault_at},rank=1");
+        let mut cfg = elastic_cfg(steps).with_name(&format!("elastic_{family}"));
+        cfg.inject = Some(InjectionSpec::parse(&spec)?);
+        let t0 = Instant::now();
+        let mut t = Trainer::with_engine(engine, cfg)?;
+        let out = t.run()?;
+        engine = t.into_engine();
+        let wall = t0.elapsed().as_secs_f64();
+
+        let survived = !out.history.diverged() && out.history.steps.len() == reference.len();
+        let identical = trajectory(&out) == reference;
+        let trace = out.history.stability.as_ref().expect("autopilot trace");
+        let quarantines = trace.n_rollbacks();
+        let mechanical = trace.rollbacks.first().is_some_and(|r| r.lr_scale_after == 1.0);
+        let wasted: usize = trace.rollbacks.iter().map(|r| r.wasted_steps).sum();
+        println!(
+            "bench:\telastic_dp\t{family}\tsurvived={survived}\tbit_identical={identical}\t\
+             quarantines={quarantines}\twasted={wasted}\twall={wall:.2}s"
+        );
+        if !(survived && identical && quarantines == 1 && mechanical) {
+            failures.push(format!(
+                "{family}: survived={survived} identical={identical} \
+                 quarantines={quarantines} mechanical={mechanical}"
+            ));
+        }
+        fam_objs.push(json::obj(vec![
+            ("family", json::s(*family)),
+            ("spec", json::s(&spec)),
+            ("survived", Json::Bool(survived)),
+            ("bit_identical", Json::Bool(identical)),
+            ("quarantines", json::num(quarantines as f64)),
+            ("wasted_steps", json::num(wasted as f64)),
+            ("mechanical_rollback", Json::Bool(mechanical)),
+            ("wall_s", json::num(wall)),
+        ]));
+    }
+
+    // write the report before asserting so CI uploads the numbers even
+    // when a gate trips
+    let out = json::obj(vec![
+        ("bench", json::s("elastic_dp")),
+        ("smoke", Json::Bool(smoke)),
+        ("replicas", json::num(2.0)),
+        ("steps", json::num(steps as f64)),
+        ("fault_at", json::num(fault_at as f64)),
+        ("baseline_rollbacks", json::num(base_trace.n_rollbacks() as f64)),
+        ("baseline_wall_s", json::num(baseline_s)),
+        ("families", Json::Arr(fam_objs)),
+    ]);
+    slw::util::fsx::write_atomic(
+        std::path::Path::new("BENCH_elastic.json"),
+        out.to_string().as_bytes(),
+    )?;
+    println!("wrote BENCH_elastic.json");
+
+    assert!(!baseline.history.diverged(), "the fault-free baseline must complete");
+    assert_eq!(
+        base_trace.n_rollbacks(),
+        0,
+        "the healthy recipe must not roll back on its own — the faulted arms' single \
+         rollback would be unattributable otherwise"
+    );
+    assert!(
+        failures.is_empty(),
+        "every replica-fault family must quarantine exactly once and retrace the \
+         fault-free trajectory bit for bit; violations: {failures:?}"
+    );
+    Ok(())
+}

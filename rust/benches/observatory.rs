@@ -175,6 +175,7 @@ fn main() -> anyhow::Result<()> {
         Some("healthy"),
         1.0,
         1,
+        1,
     );
     registry.begin("bench_update", "bench update", "0", None);
     let t0 = Instant::now();

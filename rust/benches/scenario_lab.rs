@@ -1,8 +1,9 @@
 //! The scenario lab's acceptance gate: run the destructive (gated) fault
 //! families of `exp::scenarios::MATRIX` open-loop and under the autopilot,
-//! multi-seed, on one warm micro engine — and enforce that the autopilot's
+//! multi-seed, on one warm engine per model (micro for the recipe faults,
+//! gpt3 for the replica faults) — and enforce that the autopilot's
 //! recovery rate is *strictly* above open-loop survival on every gated
-//! family (>= 3 of them). Also enforces the harness's determinism
+//! family (>= 6 of them). Also enforces the harness's determinism
 //! contract: a run with `inject: Some(none())` is bit-identical to one
 //! with no injection config at all. Emits `BENCH_scenarios.json`.
 //!
@@ -56,24 +57,32 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- recovery gate: every destructive family, both arms -------------
+    // one warm engine per model: the recipe faults ride micro, the
+    // replica faults need the gpt3 testbed (its batch rungs shard)
+    let mut engines = std::collections::HashMap::new();
+    engines.insert("micro", engine);
     let gated: Vec<&ScenarioCase> = MATRIX.iter().filter(|c| c.gated).collect();
-    assert!(gated.len() >= 3, "the gate needs >= 3 destructive families");
+    assert!(gated.len() >= 6, "the gate needs the destructive recipe + replica families");
     let mut fam_objs: Vec<Json> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
     for case in &gated {
-        assert_eq!(case.model, "micro", "gated families share the warm micro engine");
+        let mut eng = match engines.remove(case.model) {
+            Some(e) => e,
+            None => Engine::load(&root, case.model)?,
+        };
         let mut arms: Vec<Vec<RunHistory>> = Vec::new();
         for autopilot in [false, true] {
             let mut runs = Vec::new();
             for &seed in seeds {
                 let cfg = scenarios::scenario_cfg(case, budget, seed, autopilot, None)?;
-                let mut t = Trainer::with_engine(engine, cfg)?;
+                let mut t = Trainer::with_engine(eng, cfg)?;
                 let out = t.run()?;
-                engine = t.into_engine();
+                eng = t.into_engine();
                 runs.push(out.history);
             }
             arms.push(runs);
         }
+        engines.insert(case.model, eng);
         let summarize = |arm: &str, runs: &[RunHistory]| {
             let refs: Vec<&RunHistory> = runs.iter().collect();
             scenarios::summarize(case, arm, &refs)

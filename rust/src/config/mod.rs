@@ -110,6 +110,21 @@ impl RunConfig {
         }
         if let Some(i) = &self.inject {
             i.validate()?;
+            if let Some((_, rank, _)) = i.replica_fault() {
+                if self.n_replicas < 2 {
+                    bail!(
+                        "a replica fault needs data parallelism: n_replicas {} < 2",
+                        self.n_replicas
+                    );
+                }
+                if rank >= self.n_replicas {
+                    bail!(
+                        "replica fault targets rank {rank} but worker ranks run 1..{} \
+                         (rank 0 is the coordinator)",
+                        self.n_replicas
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -319,6 +334,26 @@ mod tests {
         // 0 replicas and non-divisible shards are rejected up front
         assert!(parse_config("model = gpt3\nbatch = 8\nreplicas = 0\n").is_err());
         assert!(parse_config("model = gpt3\nbatch = 8\nreplicas = 3\n").is_err());
+    }
+
+    #[test]
+    fn replica_faults_require_a_matching_replica_group() {
+        // fault on rank 1 with 2 replicas: fine
+        let cfg = parse_config(
+            "model = gpt3\nbatch = 8\nreplicas = 2\n\
+             inject = \"replica_grad_nan:at=3,rank=1\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.inject.unwrap().replica_fault().unwrap().1, 1);
+        // no replica group to fault
+        assert!(parse_config("model = gpt3\nbatch = 8\ninject = \"replica_panic:at=3,rank=1\"\n")
+            .is_err());
+        // rank beyond the group
+        assert!(parse_config(
+            "model = gpt3\nbatch = 8\nreplicas = 2\n\
+             inject = \"replica_hang:at=3,rank=2\"\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -201,7 +201,10 @@ impl RunCache {
         std::fs::create_dir_all(&dir)?;
         checkpoint::save(state, &dir.join("state.ckpt"))?;
         let j = history_to_json(cfg, &key, history, plan_steps);
-        std::fs::write(dir.join("entry.json"), j.to_string())
+        // entry.json is the cache's commit record: written atomically so a
+        // crash can never leave a readable-but-partial entry that a later
+        // lookup would trust (state.ckpt above self-validates via checksum)
+        crate::util::fsx::write_atomic(&dir.join("entry.json"), j.to_string().as_bytes())
             .with_context(|| format!("writing cache entry in {dir:?}"))?;
         Ok(())
     }

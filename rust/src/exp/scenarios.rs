@@ -32,22 +32,35 @@ pub struct ScenarioCase {
     pub spec: &'static str,
     /// peak-LR factor over the model's base LR (the recipe the fault hits)
     pub lr_factor: f64,
+    /// data-parallel width (1 = fused engine; >= 2 runs the elastic
+    /// supervisor, which the replica-fault families need a target in)
+    pub replicas: usize,
     /// true = the scenario_lab bench gates recovery > open-loop survival
     pub gated: bool,
 }
 
-/// The sweep matrix. Three families are destructive enough to kill the
-/// open loop deterministically (NaN in the stats stream, a 400x LR shock,
-/// and a corrupted-token burst under an LR shock) — those carry the gate.
-/// The rest probe schedule-level sabotage (long-tail init lengths, cap
-/// oscillation, a batch shock, mild corruption, a poisoned spill slot)
-/// where the interesting output is the cost column, not survival.
+/// The sweep matrix. Three recipe families are destructive enough to kill
+/// the open loop deterministically (NaN in the stats stream, a 400x LR
+/// shock, and a corrupted-token burst under an LR shock), and the three
+/// replica-fault families kill it by construction (losing a worker with no
+/// checkpoint ring is terminal) — those six carry the gate. The rest probe
+/// schedule-level sabotage (long-tail init lengths, cap oscillation, a
+/// batch shock, mild corruption, a poisoned spill slot) where the
+/// interesting output is the cost column, not survival.
+///
+/// The replica families run the gpt3 testbed at `replicas: 2` (micro has
+/// no replica sharding rungs): rank 1 dies mid-run via panic, hang, or a
+/// non-finite gradient shard. The autopilot arm quarantines the rank,
+/// rolls back mechanically, and retraces the healthy trajectory on the
+/// survivors; the open arm has no trusted restore point and dies on the
+/// spot — the purest form of the gate's asymmetry.
 pub const MATRIX: &[ScenarioCase] = &[
     ScenarioCase {
         family: "longtail",
         model: "micro",
         spec: "longtail:steps=10,len=32",
         lr_factor: 2.0,
+        replicas: 1,
         gated: false,
     },
     ScenarioCase {
@@ -55,6 +68,7 @@ pub const MATRIX: &[ScenarioCase] = &[
         model: "micro",
         spec: "cap_osc:from=20,period=5,len=8",
         lr_factor: 2.0,
+        replicas: 1,
         gated: false,
     },
     ScenarioCase {
@@ -62,6 +76,7 @@ pub const MATRIX: &[ScenarioCase] = &[
         model: "tiny",
         spec: "batch_shock:at=15,steps=5,bsz=64",
         lr_factor: 1.0,
+        replicas: 1,
         gated: false,
     },
     ScenarioCase {
@@ -69,6 +84,7 @@ pub const MATRIX: &[ScenarioCase] = &[
         model: "micro",
         spec: "data_burst:at=15,steps=5,frac=0.5",
         lr_factor: 2.0,
+        replicas: 1,
         gated: false,
     },
     ScenarioCase {
@@ -76,6 +92,7 @@ pub const MATRIX: &[ScenarioCase] = &[
         model: "micro",
         spec: "stats_nan:at=12,channel=0",
         lr_factor: 2.0,
+        replicas: 1,
         gated: true,
     },
     ScenarioCase {
@@ -83,6 +100,7 @@ pub const MATRIX: &[ScenarioCase] = &[
         model: "micro",
         spec: "lr_shock:at=10,steps=4,mult=400",
         lr_factor: 2.0,
+        replicas: 1,
         gated: true,
     },
     ScenarioCase {
@@ -90,6 +108,7 @@ pub const MATRIX: &[ScenarioCase] = &[
         model: "micro",
         spec: "data_burst:at=10,steps=6,frac=0.8;lr_shock:at=10,steps=6,mult=300",
         lr_factor: 2.0,
+        replicas: 1,
         gated: true,
     },
     ScenarioCase {
@@ -97,7 +116,32 @@ pub const MATRIX: &[ScenarioCase] = &[
         model: "micro",
         spec: "spill:nth=1,mode=corrupt",
         lr_factor: 2.0,
+        replicas: 1,
         gated: false,
+    },
+    ScenarioCase {
+        family: "replica_panic",
+        model: "gpt3",
+        spec: "replica_panic:at=10,rank=1",
+        lr_factor: 1.0,
+        replicas: 2,
+        gated: true,
+    },
+    ScenarioCase {
+        family: "replica_hang",
+        model: "gpt3",
+        spec: "replica_hang:at=10,rank=1",
+        lr_factor: 1.0,
+        replicas: 2,
+        gated: true,
+    },
+    ScenarioCase {
+        family: "replica_grad_nan",
+        model: "gpt3",
+        spec: "replica_grad_nan:at=10,rank=1",
+        lr_factor: 1.0,
+        replicas: 2,
+        gated: true,
     },
 ];
 
@@ -143,9 +187,16 @@ pub fn scenario_cfg(
     c.token_budget = budget;
     c.eval_every = 0;
     c.seed = seed;
-    // every family rides the paper's SLW ramp so the schedule-level faults
-    // (long-tail init, cap oscillation) have a ramp to sabotage
-    c = presets::with_slw(c, 8, 30)?;
+    c.n_replicas = case.replicas;
+    // every fused-engine family rides the paper's SLW ramp so the
+    // schedule-level faults (long-tail init, cap oscillation) have a ramp
+    // to sabotage; the replica families run the gpt3 b8 rung, a full-only
+    // artifact set (single seqlen-64 bucket) where a ramp start of 8 has
+    // no executable — and the fault they probe lives in the replica
+    // group, not the schedule
+    if case.replicas == 1 {
+        c = presets::with_slw(c, 8, 30)?;
+    }
     if autopilot {
         let mut policy = autopilot_policy();
         if spec.spill_fault.is_some() {
@@ -336,8 +387,8 @@ mod tests {
 
     #[test]
     fn matrix_specs_parse_and_both_arms_validate() {
-        assert!(MATRIX.iter().filter(|c| c.gated).count() >= 3,
-                "the bench gate needs >= 3 destructive families");
+        assert!(MATRIX.iter().filter(|c| c.gated).count() >= 6,
+                "the bench gate needs the destructive recipe + replica families");
         for case in MATRIX {
             let spec = InjectionSpec::parse(case.spec).unwrap();
             assert!(!spec.is_none(), "family '{}' must inject something", case.family);
@@ -346,6 +397,7 @@ mod tests {
                 cfg.validate().unwrap();
                 assert_eq!(cfg.stability.is_some(), autopilot);
                 assert_eq!(cfg.inject.as_ref().unwrap(), &spec);
+                assert_eq!(cfg.n_replicas, case.replicas);
                 assert!(cfg.name.starts_with(&format!("scn_{}_", case.family)));
             }
         }
@@ -358,6 +410,28 @@ mod tests {
             })
             .collect();
         assert_eq!(names.len(), MATRIX.len() * 3);
+    }
+
+    #[test]
+    fn replica_fault_families_target_a_worker_in_a_two_wide_group() {
+        let replica: Vec<&ScenarioCase> =
+            MATRIX.iter().filter(|c| c.family.starts_with("replica_")).collect();
+        assert_eq!(replica.len(), 3, "panic, hang, and grad-nan families");
+        for case in replica {
+            assert!(case.gated, "losing a worker is terminal for the open loop");
+            assert_eq!(case.replicas, 2);
+            let cfg = scenario_cfg(case, 25_000, 7, true, None).unwrap();
+            let (at, rank, _) = cfg.inject.as_ref().unwrap().replica_fault().expect("armed");
+            assert_eq!(rank, 1, "rank 1 is the only worker at width 2");
+            assert!(at > 0, "the fault must land after the bootstrap snapshot");
+            // both arms cross-validate against the replica group width
+            scenario_cfg(case, 25_000, 7, false, None).unwrap().validate().unwrap();
+        }
+        // the recipe families stay on the fused engine
+        assert!(MATRIX
+            .iter()
+            .filter(|c| !c.family.starts_with("replica_"))
+            .all(|c| c.replicas == 1));
     }
 
     #[test]

@@ -21,6 +21,10 @@
 //!   (maps onto [`crate::runtime::StatsFault`] in the engine).
 //! - [`SpillFault`] — corrupt or fail the nth checkpoint-ring spill write
 //!   (exercises the rollback ring's deep-restore path).
+//! - [`ReplicaFaultSpec`] (`replica_panic` / `replica_hang` /
+//!   `replica_grad_nan`) — kill, wedge, or NaN-poison one data-parallel
+//!   worker replica at a given step (exercises the elastic supervisor's
+//!   quarantine / degrade / rejoin contract).
 //!
 //! ## Determinism contract
 //!
@@ -109,6 +113,28 @@ pub struct SpillFault {
     pub mode: SpillMode,
 }
 
+/// Which replica fault a [`ReplicaFaultSpec`] arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaFaultKind {
+    /// the worker thread panics mid-gradient
+    Panic,
+    /// the worker wedges and never replies (caught by the recv deadline)
+    Hang,
+    /// the worker returns a NaN-poisoned gradient shard
+    GradNan,
+}
+
+/// Sabotage data-parallel worker replica `rank` (1-based; rank 0 is the
+/// coordinator engine and cannot be targeted) on train-step `at` (relative
+/// to the run start). The supervisor retries the shard once on a fresh
+/// engine; the armed fault re-fires on the retry, so exactly one
+/// quarantine results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaFaultSpec {
+    pub at: usize,
+    pub rank: usize,
+}
+
 /// One scenario: any combination of the injectors, all optional. The
 /// default / [`InjectionSpec::none`] spec perturbs nothing.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -120,6 +146,9 @@ pub struct InjectionSpec {
     pub data_burst: Option<DataBurst>,
     pub stats_nan: Option<StatsNan>,
     pub spill_fault: Option<SpillFault>,
+    pub replica_panic: Option<ReplicaFaultSpec>,
+    pub replica_hang: Option<ReplicaFaultSpec>,
+    pub replica_grad_nan: Option<ReplicaFaultSpec>,
 }
 
 impl InjectionSpec {
@@ -160,6 +189,15 @@ impl InjectionSpec {
         if self.spill_fault.is_some() {
             parts.push("spill");
         }
+        if self.replica_panic.is_some() {
+            parts.push("replica_panic");
+        }
+        if self.replica_hang.is_some() {
+            parts.push("replica_hang");
+        }
+        if self.replica_grad_nan.is_some() {
+            parts.push("replica_grad_nan");
+        }
         if parts.is_empty() {
             "none".to_string()
         } else {
@@ -198,7 +236,40 @@ impl InjectionSpec {
                 bail!("stats_nan channel {} out of range (packed stats has 10)", n.channel);
             }
         }
+        for (name, spec) in
+            [("replica_panic", self.replica_panic), ("replica_hang", self.replica_hang), (
+                "replica_grad_nan",
+                self.replica_grad_nan,
+            )]
+        {
+            if let Some(r) = spec {
+                if r.rank == 0 {
+                    bail!("{name} rank must be >= 1 (rank 0 is the coordinator engine)");
+                }
+            }
+        }
+        let armed =
+            [self.replica_panic, self.replica_hang, self.replica_grad_nan].iter().flatten().count();
+        if armed > 1 {
+            bail!("at most one replica-fault family may be armed per scenario (got {armed})");
+        }
         Ok(())
+    }
+
+    /// The armed replica fault, if any: `(step, rank, kind)`. At most one
+    /// family can be armed (enforced by [`validate`](Self::validate)), so
+    /// the supervisor needs only a single fuse.
+    pub fn replica_fault(&self) -> Option<(usize, usize, ReplicaFaultKind)> {
+        if let Some(r) = self.replica_panic {
+            return Some((r.at, r.rank, ReplicaFaultKind::Panic));
+        }
+        if let Some(r) = self.replica_hang {
+            return Some((r.at, r.rank, ReplicaFaultKind::Hang));
+        }
+        if let Some(r) = self.replica_grad_nan {
+            return Some((r.at, r.rank, ReplicaFaultKind::GradNan));
+        }
+        None
     }
 
     /// Forced sequence length at `step` (pre-snap), if any. Replaces the
@@ -245,7 +316,9 @@ impl InjectionSpec {
     /// each `name:key=val,key=val`. Example:
     /// `longtail:steps=4,len=512;lr_shock:at=40,steps=4,mult=64`.
     /// Clause names: `longtail`, `lr_shock`, `batch_shock`, `cap_osc`,
-    /// `data_burst`, `stats_nan`, `spill`. `none` (alone) is the empty spec.
+    /// `data_burst`, `stats_nan`, `spill`, `replica_panic`,
+    /// `replica_hang`, `replica_grad_nan`. `none` (alone) is the empty
+    /// spec.
     pub fn parse(text: &str) -> Result<Self> {
         let mut spec = Self::none();
         let text = text.trim();
@@ -312,6 +385,17 @@ impl InjectionSpec {
                         m => bail!("spill mode '{m}' is not 'corrupt' or 'fail'"),
                     };
                     spec.spill_fault = Some(SpillFault { nth: usz("nth")?, mode })
+                }
+                "replica_panic" => {
+                    spec.replica_panic =
+                        Some(ReplicaFaultSpec { at: usz("at")?, rank: usz("rank")? })
+                }
+                "replica_hang" => {
+                    spec.replica_hang = Some(ReplicaFaultSpec { at: usz("at")?, rank: usz("rank")? })
+                }
+                "replica_grad_nan" => {
+                    spec.replica_grad_nan =
+                        Some(ReplicaFaultSpec { at: usz("at")?, rank: usz("rank")? })
                 }
                 other => bail!("unknown injection clause '{other}'"),
             }
@@ -424,6 +508,34 @@ mod tests {
         assert_eq!(InjectionSpec::parse("  ").unwrap(), InjectionSpec::none());
         assert_eq!(InjectionSpec::parse("spill:nth=0,mode=fail").unwrap().spill_fault,
             Some(SpillFault { nth: 0, mode: SpillMode::Fail }));
+    }
+
+    #[test]
+    fn replica_fault_families_parse_and_resolve_to_one_fuse() {
+        let panic = InjectionSpec::parse("replica_panic:at=3,rank=1").unwrap();
+        assert_eq!(panic.replica_panic, Some(ReplicaFaultSpec { at: 3, rank: 1 }));
+        assert_eq!(panic.replica_fault(), Some((3, 1, ReplicaFaultKind::Panic)));
+        assert_eq!(panic.label(), "replica_panic");
+
+        let hang = InjectionSpec::parse("replica_hang:at=5,rank=2").unwrap();
+        assert_eq!(hang.replica_fault(), Some((5, 2, ReplicaFaultKind::Hang)));
+        assert_eq!(hang.label(), "replica_hang");
+
+        let nan = InjectionSpec::parse("replica_grad_nan:at=0,rank=1").unwrap();
+        assert_eq!(nan.replica_fault(), Some((0, 1, ReplicaFaultKind::GradNan)));
+        assert_eq!(nan.label(), "replica_grad_nan");
+
+        assert_eq!(InjectionSpec::none().replica_fault(), None);
+
+        // rank 0 is the coordinator engine — untargetable
+        assert!(InjectionSpec::parse("replica_panic:at=3,rank=0").is_err());
+        // only one replica-fault family per scenario
+        assert!(InjectionSpec::parse("replica_panic:at=3,rank=1;replica_hang:at=5,rank=1")
+            .is_err());
+        // combining with a non-replica family is fine
+        let mixed = InjectionSpec::parse("lr_shock:at=4,steps=2,mult=8;replica_hang:at=9,rank=1")
+            .unwrap();
+        assert_eq!(mixed.label(), "lr_shock+replica_hang");
     }
 
     #[test]

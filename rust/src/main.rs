@@ -106,6 +106,10 @@ fn build_config(args: &mut Args) -> Result<RunConfig> {
 }
 
 fn cmd_train(mut args: Args) -> Result<()> {
+    // graceful Ctrl-C: the trainer polls the latch between steps and winds
+    // down cleanly — spilled checkpoint, flushed trace/metrics, run marked
+    // `interrupted`, exit 130 — instead of dying mid-write
+    slw::util::interrupt::install();
     let root = artifacts_root(&mut args);
     let cfg = build_config(&mut args)?;
     let save = args.opt_str("save");
@@ -153,6 +157,9 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let (spikes, max_ratio) = h.instability(1.2);
     let corr = h.variance_correlations();
     println!("run: {name}");
+    if out.interrupted {
+        println!("  interrupted (SIGINT) — state valid at the last completed step");
+    }
     println!(
         "  steps: {}  tokens: {}  wall: {wall:.1}s  sim_hours: {:.2}",
         h.steps.len(),
@@ -192,7 +199,13 @@ fn cmd_train(mut args: Args) -> Result<()> {
     if let Some(p) = h.best_val_ppl() {
         println!("  best val ppl: {p:.3}");
     }
-    if let Some(path) = save {
+    // an interrupted run spills a checkpoint even without --save: the
+    // partial run must be resumable, not lost
+    let spill = save.or_else(|| {
+        out.interrupted
+            .then(|| format!("results/interrupted/{}.ckpt", slw::util::slugify(&name)))
+    });
+    if let Some(path) = spill {
         // explicit sync point: materialize the device-resident state once
         checkpoint::save(&out.state.materialize()?, &PathBuf::from(&path))?;
         println!("  checkpoint: {path}");
@@ -221,6 +234,12 @@ fn cmd_train(mut args: Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs(monitor_linger));
         }
         m.shutdown();
+    }
+    if out.interrupted {
+        // everything is flushed; exit with the conventional SIGINT status
+        // so callers and CI see the same code a default-disposition kill
+        // would have produced
+        std::process::exit(slw::util::interrupt::EXIT_CODE);
     }
     Ok(())
 }
@@ -437,8 +456,11 @@ fn print_help() {
                    \"lr_shock:at=40,steps=10,mult=30;stats_nan:at=60,channel=0\")\n\
                    [--workers N]  (prefetch threads; 0 = inline, same trajectory —\n\
                    adaptive and autopilot runs stay threaded via plan re-publication)\n\
-                   [--replicas N]  (data-parallel engines; shards each batch,\n\
-                   tree-reduces grads in fixed order — see docs/PARALLELISM.md)\n\
+                   [--replicas N]  (elastic data-parallel engines; shards each\n\
+                   batch, tree-reduces grads in fixed order, quarantines faulty\n\
+                   workers and degrades — see docs/PARALLELISM.md)\n\
+                   Ctrl-C exits cleanly: checkpoint spilled, run marked\n\
+                   interrupted, exit code 130\n\
                    [--trace out.json]  (Chrome/Perfetto span trace + per-step\n\
                    JSONL metrics; incident dumps land in results/incidents/)\n\
                    [--monitor host:port [--monitor-linger secs]]  (pull-based\n\

@@ -589,7 +589,8 @@ mod tests {
             stats: StepStats { loss, var_l1: var_max as f32 * 2.0, var_max, ..Default::default() },
             sim_seconds: 1.0,
         };
-        step_row(&rec, step, 64, &PrefetchStats::default(), Some("healthy"), 1.0, 1).to_string()
+        step_row(&rec, step, 64, &PrefetchStats::default(), Some("healthy"), 1.0, 1, 1)
+            .to_string()
     }
 
     fn temp_results(tag: &str) -> PathBuf {

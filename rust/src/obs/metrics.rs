@@ -19,10 +19,15 @@ use crate::runtime::StepStats;
 use crate::train::metrics::StepRecord;
 use crate::util::json::{self, Json};
 
-/// Buffered line-per-row JSONL writer.
+/// Buffered line-per-row JSONL writer. Rows stream to a `.tmp` sibling;
+/// [`finish`](MetricsWriter::finish) flushes and atomically renames it into
+/// place, so the final path either holds a complete file or nothing — a
+/// crash mid-run leaves only the diagnosable `.tmp` behind, never a
+/// half-written result that downstream analysis would mistake for a run.
 pub struct MetricsWriter {
     out: BufWriter<File>,
     path: PathBuf,
+    tmp: PathBuf,
     n: usize,
 }
 
@@ -35,20 +40,23 @@ impl MetricsWriter {
                     .with_context(|| format!("creating {}", dir.display()))?;
             }
         }
-        let file = File::create(&path)
-            .with_context(|| format!("creating metrics file {}", path.display()))?;
-        Ok(MetricsWriter { out: BufWriter::new(file), path, n: 0 })
+        let tmp = crate::util::fsx::tmp_sibling(&path);
+        let file = File::create(&tmp)
+            .with_context(|| format!("creating metrics file {}", tmp.display()))?;
+        Ok(MetricsWriter { out: BufWriter::new(file), path, tmp, n: 0 })
     }
 
     pub fn write_row(&mut self, row: &Json) -> Result<()> {
         writeln!(self.out, "{}", row.to_string())
-            .with_context(|| format!("writing {}", self.path.display()))?;
+            .with_context(|| format!("writing {}", self.tmp.display()))?;
         self.n += 1;
         Ok(())
     }
 
     pub fn finish(&mut self) -> Result<()> {
-        self.out.flush().with_context(|| format!("flushing {}", self.path.display()))
+        self.out.flush().with_context(|| format!("flushing {}", self.tmp.display()))?;
+        std::fs::rename(&self.tmp, &self.path)
+            .with_context(|| format!("publishing {}", self.path.display()))
     }
 
     pub fn lines(&self) -> usize {
@@ -90,6 +98,7 @@ pub fn record_json(r: &StepRecord) -> Json {
 }
 
 /// One flat metrics row for a recorded step.
+#[allow(clippy::too_many_arguments)]
 pub fn step_row(
     rec: &StepRecord,
     transfers: usize,
@@ -98,6 +107,7 @@ pub fn step_row(
     verdict: Option<&str>,
     lr_scale: f64,
     n_replicas: usize,
+    n_healthy: usize,
 ) -> Json {
     json::obj(vec![
         ("step", json::num(rec.step as f64)),
@@ -124,6 +134,7 @@ pub fn step_row(
         ("pf_replans", json::num(pf.republished as f64)),
         ("lr_scale", json::num(lr_scale)),
         ("n_replicas", json::num(n_replicas as f64)),
+        ("n_healthy", json::num(n_healthy as f64)),
         ("verdict", verdict.map(json::s).unwrap_or(Json::Null)),
     ])
 }
@@ -159,6 +170,10 @@ pub struct MetricsRow {
     /// Data-parallel replica count; rows from pre-replica builds (no
     /// `n_replicas` key) parse as 1.
     pub n_replicas: usize,
+    /// Live replica count under the elastic supervisor (`<= n_replicas`
+    /// after a quarantine); rows from pre-supervisor builds parse as
+    /// `n_replicas` (a fully-healthy group).
+    pub n_healthy: usize,
     /// `None` for open-loop runs (written as JSON null).
     pub verdict: Option<String>,
 }
@@ -187,6 +202,10 @@ impl MetricsRow {
 pub fn parse_row(line: &str) -> Result<MetricsRow> {
     let j = Json::parse(line)?;
     let nf = |key: &str| -> Result<f64> { json::get_nf(j.get(key)?) };
+    let n_replicas = match j.opt("n_replicas") {
+        Some(v) => v.usize()?,
+        None => 1,
+    };
     Ok(MetricsRow {
         step: j.get("step")?.usize()?,
         seqlen: j.get("seqlen")?.usize()?,
@@ -211,9 +230,10 @@ pub fn parse_row(line: &str) -> Result<MetricsRow> {
         pf_stale: j.get("pf_stale")?.usize()?,
         pf_replans: j.get("pf_replans")?.usize()?,
         lr_scale: j.get("lr_scale")?.num()?,
-        n_replicas: match j.opt("n_replicas") {
+        n_replicas,
+        n_healthy: match j.opt("n_healthy") {
             Some(v) => v.usize()?,
-            None => 1,
+            None => n_replicas,
         },
         verdict: match j.get("verdict")? {
             Json::Null => None,
@@ -270,7 +290,7 @@ mod tests {
     #[test]
     fn step_row_has_all_fields_and_survives_nan() {
         let pf = PrefetchStats { n_workers: 2, served: 4, hits: 3, ..Default::default() };
-        let row = step_row(&sample_record(), 12, 4096, &pf, Some("healthy"), 0.5, 4);
+        let row = step_row(&sample_record(), 12, 4096, &pf, Some("healthy"), 0.5, 4, 3);
         let text = row.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("step").unwrap().usize().unwrap(), 3);
@@ -279,33 +299,43 @@ mod tests {
         assert_eq!(back.get("verdict").unwrap().str().unwrap(), "healthy");
         assert_eq!(back.get("lr_scale").unwrap().num().unwrap(), 0.5);
         assert_eq!(back.get("n_replicas").unwrap().usize().unwrap(), 4);
+        assert_eq!(back.get("n_healthy").unwrap().usize().unwrap(), 3);
         assert!(json::get_nf(back.get("var_max").unwrap()).unwrap().is_nan());
         assert_eq!(back.get("urms_late").unwrap().num().unwrap(), 0.03f32 as f64);
         // open-loop rows have a null verdict
-        let row = step_row(&sample_record(), 0, 0, &PrefetchStats::default(), None, 1.0, 1);
+        let row = step_row(&sample_record(), 0, 0, &PrefetchStats::default(), None, 1.0, 1, 1);
         assert_eq!(*row.get("verdict").unwrap(), Json::Null);
     }
 
     #[test]
     fn parser_defaults_n_replicas_for_pre_replica_rows() {
-        // a row written by this build parses its replica count back
+        // a row written by this build parses its replica counts back
         let pf = PrefetchStats::default();
-        let row = step_row(&sample_record(), 3, 100, &pf, None, 1.0, 2).to_string();
-        assert_eq!(parse_row(&row).unwrap().n_replicas, 2);
-        // rows from pre-replica metrics files have no n_replicas key and
-        // must keep parsing (as the single-engine count)
-        let legacy = {
-            let j = Json::parse(&row).unwrap();
+        let row = step_row(&sample_record(), 3, 100, &pf, None, 1.0, 2, 1).to_string();
+        let parsed = parse_row(&row).unwrap();
+        assert_eq!(parsed.n_replicas, 2);
+        assert_eq!(parsed.n_healthy, 1, "a degraded row keeps its live count");
+        let drop_keys = |row: &str, dropped: &[&str]| -> String {
+            let j = Json::parse(row).unwrap();
             let Json::Obj(map) = j else { unreachable!() };
             let kept: Vec<(&str, Json)> = map
                 .iter()
-                .filter(|(k, _)| k.as_str() != "n_replicas")
+                .filter(|(k, _)| !dropped.contains(&k.as_str()))
                 .map(|(k, v)| (k.as_str(), v.clone()))
                 .collect();
             json::obj(kept).to_string()
         };
+        // rows from pre-supervisor builds have no n_healthy key: the group
+        // was implicitly fully healthy
+        let pre_supervisor = drop_keys(&row, &["n_healthy"]);
+        assert_eq!(parse_row(&pre_supervisor).unwrap().n_healthy, 2);
+        // rows from pre-replica metrics files have neither key and must
+        // keep parsing (as the single-engine count)
+        let legacy = drop_keys(&row, &["n_replicas", "n_healthy"]);
         assert!(!legacy.contains("n_replicas"));
-        assert_eq!(parse_row(&legacy).unwrap().n_replicas, 1);
+        let parsed = parse_row(&legacy).unwrap();
+        assert_eq!(parsed.n_replicas, 1);
+        assert_eq!(parsed.n_healthy, 1);
     }
 
     #[test]
@@ -327,10 +357,16 @@ mod tests {
         for step in 0..3 {
             let mut r = sample_record();
             r.step = step;
-            w.write_row(&step_row(&r, 3 * (step + 1), 100, &pf, None, 1.0, 1)).unwrap();
+            w.write_row(&step_row(&r, 3 * (step + 1), 100, &pf, None, 1.0, 1, 1)).unwrap();
         }
+        // crash-safety: rows live in the .tmp sibling until finish renames
+        // the complete file into place
+        assert!(!path.exists(), "the final path must not exist mid-run");
+        assert!(crate::util::fsx::tmp_sibling(&path).exists());
         w.finish().unwrap();
         assert_eq!(w.lines(), 3);
+        assert!(path.exists());
+        assert!(!crate::util::fsx::tmp_sibling(&path).exists(), "finish must consume the temp");
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 3);
@@ -361,7 +397,7 @@ mod tests {
                     (rng.f64() * 200.0 - 100.0) as f32
                 }
             };
-            let mut written: Vec<(StepRecord, Option<&str>, f64, usize)> = Vec::new();
+            let mut written: Vec<(StepRecord, Option<&str>, f64, usize, usize)> = Vec::new();
             let mut text = String::new();
             for step in 0..n_rows {
                 let rec = StepRecord {
@@ -387,17 +423,27 @@ mod tests {
                 let verdict = verdicts[rng.usize_below(4)];
                 let lr_scale = if rng.f64() < 0.5 { 1.0 } else { rng.f64() };
                 let n_replicas = 1 << rng.usize_below(3);
+                let n_healthy = 1 + rng.usize_below(n_replicas);
                 let pf = PrefetchStats {
                     served: step + 1,
                     hits: step,
                     ..Default::default()
                 };
                 text.push_str(
-                    &step_row(&rec, 2 * step, 64 * step as u64, &pf, verdict, lr_scale, n_replicas)
-                        .to_string(),
+                    &step_row(
+                        &rec,
+                        2 * step,
+                        64 * step as u64,
+                        &pf,
+                        verdict,
+                        lr_scale,
+                        n_replicas,
+                        n_healthy,
+                    )
+                    .to_string(),
                 );
                 text.push('\n');
-                written.push((rec, verdict, lr_scale, n_replicas));
+                written.push((rec, verdict, lr_scale, n_replicas, n_healthy));
             }
             // every other case: simulate a crash mid-write of one extra row
             let truncated = case % 2 == 0;
@@ -410,6 +456,7 @@ mod tests {
                     Some("healthy"),
                     1.0,
                     1,
+                    1,
                 )
                 .to_string();
                 text.push_str(&extra[..extra.len() / 2]);
@@ -418,7 +465,8 @@ mod tests {
             let (rows, skipped) = parse_jsonl(&text);
             assert_eq!(rows.len(), n_rows, "case {case}");
             assert_eq!(skipped, usize::from(truncated), "case {case}");
-            for (row, (rec, verdict, lr_scale, n_replicas)) in rows.iter().zip(&written) {
+            for (row, (rec, verdict, lr_scale, n_replicas, n_healthy)) in rows.iter().zip(&written)
+            {
                 assert_eq!(row.step, rec.step);
                 assert_eq!(row.seqlen, rec.seqlen);
                 assert_eq!(row.bsz, rec.bsz);
@@ -426,6 +474,7 @@ mod tests {
                 assert_eq!(row.tokens, rec.tokens_after);
                 assert_eq!(row.lr_scale, *lr_scale);
                 assert_eq!(row.n_replicas, *n_replicas);
+                assert_eq!(row.n_healthy, *n_healthy);
                 assert_eq!(row.verdict.as_deref(), *verdict);
                 let expect = [
                     rec.stats.loss,

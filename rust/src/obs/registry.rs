@@ -50,8 +50,8 @@ struct RunEntry {
     name: String,
     digest: String,
     worker: Option<usize>,
-    /// `None` while live; `"completed"`/`"diverged"`/`"gave_up"`/`"failed"`
-    /// once finished.
+    /// `None` while live; `"completed"`/`"diverged"`/`"gave_up"`/
+    /// `"failed"`/`"interrupted"` once finished.
     outcome: Option<String>,
     step: usize,
     seqlen: usize,
@@ -196,8 +196,8 @@ impl RunRegistry {
         }
     }
 
-    /// Mark a run finished: `"completed"`, `"diverged"`, `"gave_up"`, or
-    /// `"failed"`.
+    /// Mark a run finished: `"completed"`, `"diverged"`, `"gave_up"`,
+    /// `"failed"`, or `"interrupted"` (clean SIGINT shutdown).
     pub fn finish(&self, slug: &str, outcome: &str) {
         let mut map = self.lock();
         let e = map.entry(slug.to_string()).or_default();
@@ -293,7 +293,7 @@ mod tests {
 
     fn push(reg: &RunRegistry, slug: &str, step: usize) {
         let r = rec(step);
-        let row = step_row(&r, 3, 100, &PrefetchStats::default(), Some("healthy"), 1.0, 1);
+        let row = step_row(&r, 3, 100, &PrefetchStats::default(), Some("healthy"), 1.0, 1, 1);
         reg.update(slug, &r, Some("healthy"), 1.0, &row);
     }
 

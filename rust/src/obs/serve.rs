@@ -253,6 +253,7 @@ mod tests {
             None,
             1.0,
             1,
+            1,
         );
         reg.update("demo", &rec, None, 1.0, &row);
         reg

@@ -7,10 +7,12 @@ pub mod engine;
 pub mod manifest;
 pub mod replica;
 pub mod state;
+pub mod supervisor;
 
 pub use engine::{
     Engine, StatsFault, StepStats, APPLY_KNOB_BYTES, KNOB_BYTES, STATS_BYTES, URMS_GROUPS,
 };
 pub use manifest::Manifest;
-pub use replica::ReplicaGroup;
+pub use replica::{FailMode, FaultKind, ReplicaFault, ReplicaGroup};
 pub use state::{HostState, TrainState};
+pub use supervisor::{ArmedReplicaFault, ReplicaSupervisor, SupOutcome, SupervisorPolicy};

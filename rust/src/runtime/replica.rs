@@ -49,15 +49,101 @@
 //!
 //! See `docs/PARALLELISM.md` for the full contract.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::engine::{Engine, StepStats};
 use super::state::{HostState, TrainState};
 use crate::obs::Obs;
+
+/// Bounded deadline for the non-elastic [`ReplicaGroup`]'s replies. A
+/// healthy worker answers a shard in milliseconds; minutes of silence
+/// means the thread is dead or wedged, and blocking forever (the old
+/// behavior) hangs `slw train` with it. The elastic supervisor uses its
+/// own, tighter [`crate::runtime::supervisor::SupervisorPolicy::deadline`].
+pub const GROUP_RECV_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Classified replica fault. Every error a worker channel can produce maps
+/// onto one of these, so supervision can choose retry vs quarantine per
+/// kind instead of pattern-matching strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker thread panicked (its channel disconnected and `join`
+    /// returned the panic payload).
+    Panic,
+    /// No reply within the deadline — the worker is wedged or starved.
+    Hang,
+    /// The worker replied, but its gradient shard or shard loss is
+    /// non-finite.
+    NonFiniteGrad,
+    /// Post-apply cross-check failed: the replica applied a different
+    /// update than replica 0 (state divergence).
+    LockstepDrift,
+    /// The channel closed without a panic (worker exited cleanly but
+    /// unexpectedly), or the worker reported an engine error.
+    ChannelClosed,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Hang => "hang",
+            FaultKind::NonFiniteGrad => "non_finite_grad",
+            FaultKind::LockstepDrift => "lockstep_drift",
+            FaultKind::ChannelClosed => "channel_closed",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Structured replica failure: which rank, at which optimizer step, what
+/// kind, and how long since the worker last produced a healthy reply.
+#[derive(Clone, Debug)]
+pub struct ReplicaFault {
+    pub rank: usize,
+    pub step: u64,
+    pub kind: FaultKind,
+    /// Seconds since this worker's last healthy reply (the last-healthy
+    /// timestamp the satellite fix requires, rendered as an age).
+    pub since_healthy: f64,
+    /// Worker-reported detail (engine error text), when there is one.
+    pub detail: Option<String>,
+}
+
+impl std::fmt::Display for ReplicaFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "replica {} {} at step {} ({:.1}s since last healthy reply)",
+            self.rank, self.kind, self.step, self.since_healthy
+        )?;
+        if let Some(d) = &self.detail {
+            write!(f, ": {d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ReplicaFault {}
+
+/// Deterministic worker-side failure behaviors, armed by the injection
+/// harness through [`Cmd::Fail`]: the *next* grad the worker receives
+/// fails in the requested way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailMode {
+    /// Panic the worker thread (channel disconnects, `join` errs).
+    Panic,
+    /// Wedge: stop replying, but keep draining commands so `Shutdown`
+    /// still kills the thread (teardown never blocks on an injected hang).
+    Hang,
+    /// Compute the shard, then poison the gradient and loss with NaNs.
+    GradNan,
+}
 
 /// Row range `[start, end)` of shard `i` of `n` over a `bsz`-row batch —
 /// the sharding rule, a pure function of `(bsz, n)`. Requires `bsz % n == 0`
@@ -124,14 +210,16 @@ pub fn tree_reduce(mut parts: Vec<Vec<f32>>, mut losses: Vec<f32>) -> Result<(Ve
     Ok((grads, losses[0] * scale))
 }
 
-enum Cmd {
+pub(crate) enum Cmd {
     Grad { tokens: Vec<i32>, bsz: usize, seqlen: usize },
     Apply { grads: Arc<Vec<f32>>, lr: f64, clip_norm: f64, mean_loss: f32, tokens_delta: u64 },
     Upload { host: Arc<HostState> },
+    /// Arm a deterministic failure for the next `Grad` (injection only).
+    Fail(FailMode),
     Shutdown,
 }
 
-enum Reply {
+pub(crate) enum Reply {
     Ready,
     Grad { grads: Vec<f32>, loss: f32 },
     Applied { loss_bits: u32, step: u64 },
@@ -139,23 +227,93 @@ enum Reply {
     Err(String),
 }
 
-struct Worker {
+pub(crate) struct Worker {
     tx: Sender<Cmd>,
     rx: Receiver<Reply>,
     handle: Option<JoinHandle<()>>,
+    last_healthy: Instant,
 }
 
 impl Worker {
-    fn recv(&self) -> Result<Reply> {
-        match self.rx.recv() {
+    /// Spawn one worker thread for `rank`, booting its own engine from a
+    /// shared host snapshot. The `Ready`/`Err` boot reply is still in
+    /// flight when this returns — await it with [`Worker::recv_deadline`].
+    pub(crate) fn spawn(
+        root: std::path::PathBuf,
+        model: String,
+        init: Arc<HostState>,
+        rank: usize,
+    ) -> Result<Self> {
+        let (tx_cmd, rx_cmd) = channel();
+        let (tx_rep, rx_rep) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("replica-{rank}"))
+            .spawn(move || worker_loop(root, model, init, rx_cmd, tx_rep))?;
+        Ok(Worker { tx: tx_cmd, rx: rx_rep, handle: Some(handle), last_healthy: Instant::now() })
+    }
+
+    pub(crate) fn send(&self, cmd: Cmd) -> Result<()> {
+        self.tx.send(cmd).map_err(|_| anyhow!("replica worker hung up"))
+    }
+
+    /// Bounded receive with fault classification: a timeout is a `Hang`, a
+    /// disconnect is a `Panic` (the thread's `join` carries a payload) or
+    /// `ChannelClosed`. Worker-reported engine errors pass through as
+    /// `Ok(Reply::Err)` for the caller to classify in context.
+    pub(crate) fn recv_deadline(
+        &mut self,
+        rank: usize,
+        step: u64,
+        deadline: Duration,
+    ) -> std::result::Result<Reply, ReplicaFault> {
+        let since_healthy = self.last_healthy.elapsed().as_secs_f64();
+        match self.rx.recv_timeout(deadline) {
+            Ok(r) => {
+                self.last_healthy = Instant::now();
+                Ok(r)
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                Err(ReplicaFault { rank, step, kind: FaultKind::Hang, since_healthy, detail: None })
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let kind = match self.handle.take() {
+                    Some(h) if h.join().is_err() => FaultKind::Panic,
+                    _ => FaultKind::ChannelClosed,
+                };
+                Err(ReplicaFault { rank, step, kind, since_healthy, detail: None })
+            }
+        }
+    }
+
+    fn recv(&mut self, rank: usize, step: u64) -> Result<Reply> {
+        match self.recv_deadline(rank, step, GROUP_RECV_DEADLINE) {
             Ok(Reply::Err(e)) => Err(anyhow!("replica worker: {e}")),
             Ok(r) => Ok(r),
-            Err(_) => Err(anyhow!("replica worker hung up (thread died)")),
+            Err(fault) => Err(anyhow!(fault)),
         }
+    }
+
+    /// Cooperative teardown: request shutdown and join. Safe on injected
+    /// hangs (the wedge loop drains commands), not on a genuinely wedged
+    /// thread — use [`Worker::abandon`] for those.
+    pub(crate) fn shutdown(mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Detach without joining: drop the channels (a live worker exits on
+    /// the next `recv` error) and leave the thread to the OS. This is the
+    /// only safe way to discard a wedged worker — joining it would move
+    /// the hang into the supervisor.
+    pub(crate) fn abandon(mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        drop(self.handle.take());
     }
 }
 
-fn worker_loop(
+pub(crate) fn worker_loop(
     root: std::path::PathBuf,
     model: String,
     init: Arc<HostState>,
@@ -177,14 +335,34 @@ fn worker_loop(
             return;
         }
     };
+    let mut armed: Option<FailMode> = None;
     while let Ok(cmd) = rx.recv() {
         let reply = match cmd {
-            Cmd::Grad { tokens, bsz, seqlen } => {
-                match engine.grad_step(&state, &tokens, bsz, seqlen) {
-                    Ok((grads, loss)) => Reply::Grad { grads, loss },
-                    Err(e) => Reply::Err(format!("{e:#}")),
+            Cmd::Grad { tokens, bsz, seqlen } => match armed.take() {
+                Some(FailMode::Panic) => panic!("injected replica panic"),
+                Some(FailMode::Hang) => {
+                    // Wedge: never reply, but keep draining so Shutdown
+                    // (and channel teardown) still ends the thread.
+                    loop {
+                        match rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(Cmd::Shutdown) | Err(RecvTimeoutError::Disconnected) => return,
+                            Ok(_) | Err(RecvTimeoutError::Timeout) => {}
+                        }
+                    }
                 }
-            }
+                mode => match engine.grad_step(&state, &tokens, bsz, seqlen) {
+                    Ok((mut grads, mut loss)) => {
+                        if mode == Some(FailMode::GradNan) {
+                            for g in grads.iter_mut() {
+                                *g = f32::NAN;
+                            }
+                            loss = f32::NAN;
+                        }
+                        Reply::Grad { grads, loss }
+                    }
+                    Err(e) => Reply::Err(format!("{e:#}")),
+                },
+            },
             Cmd::Apply { grads, lr, clip_norm, mean_loss, tokens_delta } => {
                 match engine.apply_step(&mut state, &grads, lr, clip_norm, mean_loss, tokens_delta)
                 {
@@ -198,6 +376,10 @@ fn worker_loop(
                 Ok(()) => Reply::Uploaded,
                 Err(e) => Reply::Err(format!("{e:#}")),
             },
+            Cmd::Fail(mode) => {
+                armed = Some(mode);
+                continue; // fire-and-forget: no reply for arming
+            }
             Cmd::Shutdown => break,
         };
         if tx.send(reply).is_err() {
@@ -230,17 +412,11 @@ impl ReplicaGroup {
         let init = Arc::new(state.materialize()?);
         let mut workers = Vec::with_capacity(n - 1);
         for i in 1..n {
-            let (tx_cmd, rx_cmd) = channel();
-            let (tx_rep, rx_rep) = channel();
-            let (root, model, init) = (root.clone(), model.clone(), init.clone());
-            let handle = std::thread::Builder::new()
-                .name(format!("replica-{i}"))
-                .spawn(move || worker_loop(root, model, init, rx_cmd, tx_rep))?;
-            workers.push(Worker { tx: tx_cmd, rx: rx_rep, handle: Some(handle) });
+            workers.push(Worker::spawn(root.clone(), model.clone(), init.clone(), i)?);
         }
-        let group = Self { n, workers, obs: Obs::off() };
-        for w in &group.workers {
-            match w.recv()? {
+        let mut group = Self { n, workers, obs: Obs::off() };
+        for (i, w) in group.workers.iter_mut().enumerate() {
+            match w.recv(i + 1, 0)? {
                 Reply::Ready => {}
                 _ => bail!("replica worker sent an unexpected boot reply"),
             }
@@ -298,14 +474,15 @@ impl ReplicaGroup {
         let (g0, l0) = engine.grad_step(state, &tokens[r0 * width..r1 * width], shard_bsz, seqlen)?;
 
         // collect into index order, then reduce in the fixed tree
+        let step_now = state.step;
         let (reduced, mean_loss) = {
             let _s = crate::span!(self.obs, "reduce", state.step);
             let mut parts = Vec::with_capacity(self.n);
             let mut losses = Vec::with_capacity(self.n);
             parts.push(g0);
             losses.push(l0);
-            for w in &self.workers {
-                match w.recv()? {
+            for (i, w) in self.workers.iter_mut().enumerate() {
+                match w.recv(i + 1, step_now)? {
                     Reply::Grad { grads, loss } => {
                         parts.push(grads);
                         losses.push(loss);
@@ -332,8 +509,9 @@ impl ReplicaGroup {
                 .map_err(|_| anyhow!("replica worker hung up"))?;
             }
             let stats = engine.apply_step(state, &shared, lr, clip_norm, mean_loss, tokens_delta)?;
-            for (w, i) in self.workers.iter().zip(1..self.n) {
-                match w.recv()? {
+            let step_now = state.step;
+            for (w, i) in self.workers.iter_mut().zip(1..) {
+                match w.recv(i, step_now)? {
                     Reply::Applied { loss_bits, step } => {
                         if loss_bits != stats.loss.to_bits() || step != state.step {
                             bail!(
@@ -364,8 +542,9 @@ impl ReplicaGroup {
             w.tx.send(Cmd::Upload { host: host.clone() })
                 .map_err(|_| anyhow!("replica worker hung up"))?;
         }
-        for w in &self.workers {
-            match w.recv()? {
+        let step_now = state.step;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            match w.recv(i + 1, step_now)? {
                 Reply::Uploaded => {}
                 _ => bail!("replica worker sent an unexpected upload reply"),
             }
@@ -538,5 +717,38 @@ mod tests {
         assert!(group
             .train_step(&mut engine, &mut state, &toks[..10], 8, 64, 1e-3, 1.0)
             .is_err());
+    }
+
+    #[test]
+    fn dead_or_wedged_worker_times_out_with_a_classified_fault() {
+        let engine = Engine::load(&root(), "gpt3").unwrap();
+        let state = engine.init_state(8, 0).unwrap();
+        let init = Arc::new(state.materialize().unwrap());
+        let vocab = engine.model().vocab;
+        let toks = rand_tokens(4 * 65, vocab, 9);
+
+        // wedged worker: no reply within the deadline -> Hang carrying
+        // rank, step, and a last-healthy age (the satellite fix — the old
+        // recv() would block here forever)
+        let mut w = Worker::spawn(root(), "gpt3".into(), init.clone(), 1).unwrap();
+        assert!(matches!(w.recv_deadline(1, 0, Duration::from_secs(60)), Ok(Reply::Ready)));
+        w.send(Cmd::Fail(FailMode::Hang)).unwrap();
+        w.send(Cmd::Grad { tokens: toks.clone(), bsz: 4, seqlen: 64 }).unwrap();
+        let fault = w.recv_deadline(1, 7, Duration::from_millis(200)).unwrap_err();
+        assert_eq!(fault.kind, FaultKind::Hang);
+        assert_eq!((fault.rank, fault.step), (1, 7));
+        assert!(fault.since_healthy >= 0.0);
+        assert!(fault.to_string().contains("hang"), "{fault}");
+        // the wedge loop drains Shutdown, so even a hung worker tears down
+        w.shutdown();
+
+        // panicked worker: the disconnect classifies as Panic via join
+        let mut w = Worker::spawn(root(), "gpt3".into(), init, 2).unwrap();
+        assert!(matches!(w.recv_deadline(2, 0, Duration::from_secs(60)), Ok(Reply::Ready)));
+        w.send(Cmd::Fail(FailMode::Panic)).unwrap();
+        w.send(Cmd::Grad { tokens: toks, bsz: 4, seqlen: 64 }).unwrap();
+        let fault = w.recv_deadline(2, 3, Duration::from_secs(60)).unwrap_err();
+        assert_eq!(fault.kind, FaultKind::Panic);
+        w.abandon();
     }
 }

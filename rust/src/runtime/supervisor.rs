@@ -1,0 +1,873 @@
+//! Elastic replica supervision: fault-tolerant data-parallel execution
+//! with a deterministic degrade-and-recover contract.
+//!
+//! [`ReplicaSupervisor`] wraps the worker fleet the plain
+//! [`super::ReplicaGroup`] drives, and adds the robustness layer the
+//! ROADMAP's elastic-scaling work needs: every channel interaction has a
+//! bounded deadline, every failure is classified into a
+//! [`FaultKind`](super::replica::FaultKind), a faulted shard is retried
+//! once on a fresh engine with backoff (mirroring the coordinator's
+//! panic-retry), and a rank that fails twice in one step is
+//! **quarantined** — the group degrades to the survivors instead of
+//! killing the run.
+//!
+//! # The degrade-and-recover contract
+//!
+//! The logical step shape never changes: a `[bsz, seqlen+1]` batch always
+//! splits into the **same N canonical shards** (`shard_range(bsz, N, i)`),
+//! and the reduction is always the same fixed N-leaf tree
+//! ([`tree_reduce`]) over shard gradients in **canonical shard-index
+//! order**. Supervision only changes *which engine computes each shard*:
+//!
+//! * healthy: shard `i` runs on replica `i`;
+//! * degraded: the quarantined ranks' shards are dealt round-robin over
+//!   the sorted survivors (replica 0 inline + live workers), each
+//!   computing its assigned shards sequentially — per-rank gradient
+//!   accumulation at the same shard boundaries.
+//!
+//! `grad` executions are bit-deterministic functions of (artifact, state,
+//! shard), so a shard's gradient does not depend on which engine computes
+//! it, and the reduced gradient — and therefore the post-recovery
+//! trajectory — is **bit-identical to a fault-free N-replica run**. This
+//! is why a quarantine is recoverable at all: after the trainer rolls back
+//! through the autopilot checkpoint ring and re-syncs the survivors, the
+//! replay retraces the fault-free trajectory exactly.
+//!
+//! # Fault phases
+//!
+//! Faults during the **grad** phase (the only phase the injection families
+//! target) are detected before any apply: no replica has advanced, so the
+//! step simply aborts (`state_advanced: false`) and can be replayed in
+//! place. Faults during the **apply** phase (hang/drift after the update
+//! started fanning out) leave replicas potentially inconsistent
+//! (`state_advanced: true`); the trainer must restore a ring snapshot
+//! before continuing.
+//!
+//! # Rejoin
+//!
+//! After [`SupervisorPolicy::rejoin_after`] consecutive healthy supervised
+//! steps, quarantined ranks are respawned from a fresh materialization of
+//! replica 0's state — the same host-snapshot upload `sync_from` uses — and
+//! return to the lockstep group.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::engine::{Engine, StepStats};
+use super::replica::{
+    shard_range, tree_reduce, Cmd, FailMode, FaultKind, Reply, ReplicaFault, Worker,
+    GROUP_RECV_DEADLINE,
+};
+use super::state::{HostState, TrainState};
+use crate::obs::Obs;
+
+/// Supervision policy: deadlines, retry backoff, and the rejoin threshold.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorPolicy {
+    /// Per-reply deadline during a step; silence past this is a `Hang`.
+    /// A healthy worker answers a shard in milliseconds, so the default
+    /// carries a >100x margin without stalling fault handling for long.
+    pub deadline: Duration,
+    /// Backoff before the one retry on a fresh engine.
+    pub retry_backoff: Duration,
+    /// Consecutive healthy supervised steps before quarantined ranks are
+    /// respawned and rejoined.
+    pub rejoin_after: usize,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            deadline: Duration::from_secs(10),
+            retry_backoff: Duration::from_millis(50),
+            rejoin_after: 8,
+        }
+    }
+}
+
+/// A deterministic injected replica fault: fires on the supervised call
+/// with lifetime index `at_call` (the initial attempt *and* the in-call
+/// retry, so the full retry-then-quarantine path is exercised), against
+/// worker `rank`.
+#[derive(Clone, Copy, Debug)]
+pub struct ArmedReplicaFault {
+    pub at_call: u64,
+    pub rank: usize,
+    pub mode: FailMode,
+}
+
+/// Outcome of one supervised logical step.
+#[derive(Debug)]
+pub enum SupOutcome {
+    /// The step applied in lockstep on every live replica; replica 0's
+    /// decoded stats.
+    Stepped(StepStats),
+    /// A rank exhausted its retry and was quarantined; the step was
+    /// aborted. `state_advanced` says whether any replica had already
+    /// started applying (apply-phase fault) — if `false` the training
+    /// state is untouched and the same batch can be re-dispatched.
+    Quarantined { fault: ReplicaFault, state_advanced: bool },
+}
+
+enum Slot {
+    Live(Worker),
+    Quarantined(ReplicaFault),
+}
+
+impl Slot {
+    fn is_live(&self) -> bool {
+        matches!(self, Slot::Live(_))
+    }
+}
+
+/// Elastic N-way data-parallel execution: the fault-tolerant counterpart
+/// of [`super::ReplicaGroup`] (which stays the minimal, fail-fast path).
+/// Replica 0 is the caller's engine/state; ranks `1..N-1` are supervised
+/// worker slots that can be live or quarantined.
+pub struct ReplicaSupervisor {
+    n: usize,
+    root: PathBuf,
+    model: String,
+    policy: SupervisorPolicy,
+    /// Worker slot for rank `i + 1`.
+    slots: Vec<Slot>,
+    obs: Obs,
+    /// Lifetime supervised-step counter (the injection clock, mirroring
+    /// `Engine::train_calls`).
+    calls: u64,
+    armed: Option<ArmedReplicaFault>,
+    healthy_streak: usize,
+    retries: u64,
+    quarantines: u64,
+    rejoins: u64,
+}
+
+impl ReplicaSupervisor {
+    /// Spawn and certify workers `1..n-1`, each booted from a one-time
+    /// materialization of replica 0's state. Requires `n >= 2` (N=1 runs
+    /// stay on the fused single-engine path, like `ReplicaGroup`).
+    pub fn new(
+        engine: &Engine,
+        state: &TrainState,
+        n: usize,
+        policy: SupervisorPolicy,
+    ) -> Result<Self> {
+        if n < 2 {
+            bail!("ReplicaSupervisor needs n >= 2 (n=1 runs stay on the fused path)");
+        }
+        let root = engine.artifacts_root().to_path_buf();
+        let model = engine.model().name.clone();
+        let init = Arc::new(state.materialize()?);
+        let mut slots = Vec::with_capacity(n - 1);
+        for rank in 1..n {
+            let mut w = Worker::spawn(root.clone(), model.clone(), init.clone(), rank)?;
+            match w.recv_deadline(rank, 0, GROUP_RECV_DEADLINE) {
+                Ok(Reply::Ready) => slots.push(Slot::Live(w)),
+                Ok(Reply::Err(e)) => bail!("replica {rank} failed to boot: {e}"),
+                Ok(_) => bail!("replica {rank} sent an unexpected boot reply"),
+                Err(f) => bail!("replica boot: {f}"),
+            }
+        }
+        Ok(Self {
+            n,
+            root,
+            model,
+            policy,
+            slots,
+            obs: Obs::off(),
+            calls: 0,
+            armed: None,
+            healthy_streak: 0,
+            retries: 0,
+            quarantines: 0,
+            rejoins: 0,
+        })
+    }
+
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
+        self.obs.counter("replicas_healthy", self.n_healthy() as i64);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Live replica count, replica 0 included — the `slw_replicas_healthy`
+    /// gauge and the `n_healthy` metrics column.
+    pub fn n_healthy(&self) -> usize {
+        1 + self.slots.iter().filter(|s| s.is_live()).count()
+    }
+
+    /// Currently quarantined ranks, ascending.
+    pub fn quarantined_ranks(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.is_live())
+            .map(|(i, _)| i + 1)
+            .collect()
+    }
+
+    /// Lifetime supervised-step counter — the clock `ArmedReplicaFault`
+    /// fires against (arm with `calls() + at`, like `StatsFault`).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines
+    }
+
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins
+    }
+
+    /// Arm one deterministic fault (replaces any previous arming). The
+    /// injection disarms itself after it forces a quarantine.
+    pub fn arm_fault(&mut self, fault: ArmedReplicaFault) {
+        self.armed = Some(fault);
+    }
+
+    /// Sorted live ranks, replica 0 first — the canonical survivor order
+    /// the degraded shard assignment deals over.
+    fn live_ranks(&self) -> Vec<usize> {
+        let mut v = vec![0];
+        v.extend(self.slots.iter().enumerate().filter(|(_, s)| s.is_live()).map(|(i, _)| i + 1));
+        v
+    }
+
+    /// Spawn a fresh worker for `rank` from `init` and await its boot.
+    fn respawn(
+        &self,
+        init: Arc<HostState>,
+        rank: usize,
+    ) -> std::result::Result<Worker, ReplicaFault> {
+        let closed = |detail: String| ReplicaFault {
+            rank,
+            step: 0,
+            kind: FaultKind::ChannelClosed,
+            since_healthy: 0.0,
+            detail: Some(detail),
+        };
+        let mut w = Worker::spawn(self.root.clone(), self.model.clone(), init, rank)
+            .map_err(|e| closed(format!("spawn failed: {e:#}")))?;
+        match w.recv_deadline(rank, 0, GROUP_RECV_DEADLINE) {
+            Ok(Reply::Ready) => Ok(w),
+            Ok(Reply::Err(e)) => Err(closed(format!("boot failed: {e}"))),
+            Ok(_) => Err(closed("unexpected boot reply".into())),
+            Err(f) => Err(f),
+        }
+    }
+
+    /// Move `rank` into quarantine, abandoning its worker (never joined —
+    /// it may be wedged). Bumps the gauge and counters.
+    fn quarantine(&mut self, fault: ReplicaFault) {
+        let rank = fault.rank;
+        let _s = crate::span!(self.obs, "quarantine", rank);
+        let old = std::mem::replace(&mut self.slots[rank - 1], Slot::Quarantined(fault));
+        if let Slot::Live(w) = old {
+            w.abandon();
+        }
+        self.quarantines += 1;
+        self.healthy_streak = 0;
+        self.armed = None; // an injected fault has done its job
+        self.obs.counter("replicas_healthy", self.n_healthy() as i64);
+        crate::info!(
+            "supervisor: quarantined replica {rank} ({} of {} replicas healthy)",
+            self.n_healthy(),
+            self.n
+        );
+    }
+
+    /// Respawn every quarantined rank from replica 0's current state (the
+    /// same host-snapshot upload `sync_from` fans out) once the healthy
+    /// streak clears the policy threshold.
+    fn maybe_rejoin(&mut self, state: &TrainState) -> Result<()> {
+        if self.healthy_streak < self.policy.rejoin_after
+            || self.slots.iter().all(|s| s.is_live())
+        {
+            return Ok(());
+        }
+        let _s = crate::span!(self.obs, "rejoin", state.step);
+        let init = Arc::new(state.materialize()?);
+        for rank in self.quarantined_ranks() {
+            match self.respawn(init.clone(), rank) {
+                Ok(w) => {
+                    self.slots[rank - 1] = Slot::Live(w);
+                    self.rejoins += 1;
+                    crate::info!("supervisor: replica {rank} rejoined at step {}", state.step);
+                }
+                Err(f) => {
+                    // stay quarantined; the streak reset spaces out the
+                    // next attempt by another rejoin_after healthy steps
+                    self.slots[rank - 1] = Slot::Quarantined(f);
+                    self.healthy_streak = 0;
+                }
+            }
+        }
+        self.obs.counter("replicas_healthy", self.n_healthy() as i64);
+        Ok(())
+    }
+
+    /// Execute one supervised logical `[bsz, seqlen]` step: canonical
+    /// N-shard split, per-survivor gradient accumulation, fixed-order tree
+    /// reduce, lockstep apply — with bounded deadlines, one retry on a
+    /// fresh engine, and quarantine on repeated failure.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        engine: &mut Engine,
+        state: &mut TrainState,
+        tokens: &[i32],
+        bsz: usize,
+        seqlen: usize,
+        lr: f64,
+        clip_norm: f64,
+    ) -> Result<SupOutcome> {
+        if tokens.len() != bsz * (seqlen + 1) {
+            bail!("batch is {} tokens, expected {}x{}", tokens.len(), bsz, seqlen + 1);
+        }
+        if bsz % self.n != 0 {
+            bail!("batch {bsz} does not split evenly across {} replicas", self.n);
+        }
+        self.maybe_rejoin(state)?;
+        let call = self.calls;
+        self.calls += 1;
+        let inject: Option<(usize, FailMode)> = self
+            .armed
+            .filter(|a| a.at_call == call && a.rank >= 1 && a.rank < self.n)
+            .map(|a| (a.rank, a.mode));
+
+        let width = seqlen + 1;
+        let shard_bsz = bsz / self.n;
+        let step_now = state.step;
+
+        // --- grad: canonical N shards dealt over the sorted survivors ---
+        let live = self.live_ranks();
+        let degraded = live.len() < self.n;
+        let mut assign: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+        for shard in 0..self.n {
+            assign[live[shard % live.len()]].push(shard);
+        }
+
+        let mut parts: Vec<Option<(Vec<f32>, f32)>> = vec![None; self.n];
+        let mut faults: Vec<ReplicaFault> = Vec::new();
+        {
+            let _s = if degraded {
+                crate::span!(self.obs, "reshard", step_now)
+            } else {
+                crate::span!(self.obs, "shard", step_now)
+            };
+            for rank in 1..self.n {
+                let Slot::Live(w) = &self.slots[rank - 1] else { continue };
+                if let Some((_, mode)) = inject.filter(|&(r, _)| r == rank) {
+                    let _ = w.send(Cmd::Fail(mode));
+                }
+                for &sh in &assign[rank] {
+                    let (a, b) = shard_range(bsz, self.n, sh);
+                    if w.send(Cmd::Grad {
+                        tokens: tokens[a * width..b * width].to_vec(),
+                        bsz: shard_bsz,
+                        seqlen,
+                    })
+                    .is_err()
+                    {
+                        faults.push(ReplicaFault {
+                            rank,
+                            step: step_now,
+                            kind: FaultKind::ChannelClosed,
+                            since_healthy: 0.0,
+                            detail: Some("command channel closed".into()),
+                        });
+                        break;
+                    }
+                }
+            }
+        }
+
+        // replica 0's shards run inline while the workers grind
+        for &sh in &assign[0] {
+            let (a, b) = shard_range(bsz, self.n, sh);
+            let (g, l) = engine.grad_step(state, &tokens[a * width..b * width], shard_bsz, seqlen)?;
+            parts[sh] = Some((g, l));
+        }
+
+        // collect worker shards (every live worker is drained fully, so a
+        // fault on one rank never leaves stale replies on another)
+        let faulted: Vec<usize> = faults.iter().map(|f| f.rank).collect();
+        for rank in 1..self.n {
+            if faulted.contains(&rank) {
+                continue;
+            }
+            let deadline = self.policy.deadline;
+            let Slot::Live(w) = &mut self.slots[rank - 1] else { continue };
+            for &sh in &assign[rank] {
+                match Self::recv_grad(w, rank, step_now, deadline) {
+                    Ok(part) => parts[sh] = Some(part),
+                    Err(f) => {
+                        faults.push(f);
+                        break;
+                    }
+                }
+            }
+        }
+
+        // --- retry: one fresh engine per faulted rank, with backoff -----
+        if !faults.is_empty() {
+            let snap = Arc::new(state.materialize()?);
+            let mut fatal: Option<ReplicaFault> = None;
+            for fault in std::mem::take(&mut faults) {
+                let rank = fault.rank;
+                self.retries += 1;
+                crate::warn_!("supervisor: {fault}; retrying on a fresh engine");
+                // the failed worker is unusable either way; replace it
+                let old =
+                    std::mem::replace(&mut self.slots[rank - 1], Slot::Quarantined(fault));
+                if let Slot::Live(w) = old {
+                    w.abandon();
+                }
+                std::thread::sleep(self.policy.retry_backoff);
+                let missing: Vec<usize> =
+                    assign[rank].iter().copied().filter(|&sh| parts[sh].is_none()).collect();
+                match self.retry_shards(
+                    snap.clone(),
+                    rank,
+                    &missing,
+                    inject,
+                    tokens,
+                    bsz,
+                    seqlen,
+                    &mut parts,
+                ) {
+                    Ok(w) => self.slots[rank - 1] = Slot::Live(w),
+                    Err(second) => fatal = fatal.or(Some(second)),
+                }
+            }
+            if let Some(fault) = fatal {
+                self.quarantine(fault.clone());
+                return Ok(SupOutcome::Quarantined { fault, state_advanced: false });
+            }
+        }
+
+        // --- reduce: fixed N-leaf tree in canonical shard-index order ---
+        let mut grads = Vec::with_capacity(self.n);
+        let mut losses = Vec::with_capacity(self.n);
+        for part in parts {
+            let (g, l) = part.expect("every canonical shard is accounted for");
+            grads.push(g);
+            losses.push(l);
+        }
+        let (reduced, mean_loss) = {
+            let _s = crate::span!(self.obs, "reduce", step_now);
+            tree_reduce(grads, losses)?
+        };
+
+        // --- apply: fan to the live workers, lockstep cross-check -------
+        let (stats, apply_fault) = {
+            let _s = crate::span!(self.obs, "apply", step_now);
+            let tokens_delta = (bsz * seqlen) as u64;
+            let shared = Arc::new(reduced);
+            let mut apply_fault: Option<ReplicaFault> = None;
+            for rank in 1..self.n {
+                let Slot::Live(w) = &self.slots[rank - 1] else { continue };
+                if w.send(Cmd::Apply {
+                    grads: shared.clone(),
+                    lr,
+                    clip_norm,
+                    mean_loss,
+                    tokens_delta,
+                })
+                .is_err()
+                {
+                    apply_fault = apply_fault.or(Some(ReplicaFault {
+                        rank,
+                        step: step_now,
+                        kind: FaultKind::ChannelClosed,
+                        since_healthy: 0.0,
+                        detail: Some("command channel closed before apply".into()),
+                    }));
+                }
+            }
+            let stats = engine.apply_step(state, &shared, lr, clip_norm, mean_loss, tokens_delta)?;
+            let applied = state.step;
+            for rank in 1..self.n {
+                if apply_fault.as_ref().is_some_and(|f| f.rank == rank) {
+                    continue;
+                }
+                let deadline = self.policy.deadline;
+                let Slot::Live(w) = &mut self.slots[rank - 1] else { continue };
+                let fault = match w.recv_deadline(rank, applied, deadline) {
+                    Ok(Reply::Applied { loss_bits, step }) => {
+                        if loss_bits != stats.loss.to_bits() || step != applied {
+                            Some(ReplicaFault {
+                                rank,
+                                step: applied,
+                                kind: FaultKind::LockstepDrift,
+                                since_healthy: 0.0,
+                                detail: Some(format!(
+                                    "loss bits {loss_bits:#x} vs {:#x}, step {step}",
+                                    stats.loss.to_bits()
+                                )),
+                            })
+                        } else {
+                            None
+                        }
+                    }
+                    Ok(Reply::Err(e)) => Some(ReplicaFault {
+                        rank,
+                        step: applied,
+                        kind: FaultKind::ChannelClosed,
+                        since_healthy: 0.0,
+                        detail: Some(e),
+                    }),
+                    Ok(_) => Some(ReplicaFault {
+                        rank,
+                        step: applied,
+                        kind: FaultKind::ChannelClosed,
+                        since_healthy: 0.0,
+                        detail: Some("unexpected apply reply".into()),
+                    }),
+                    Err(f) => Some(f),
+                };
+                if let Some(f) = fault {
+                    apply_fault = apply_fault.or(Some(f));
+                }
+            }
+            (stats, apply_fault)
+        };
+        if let Some(fault) = apply_fault {
+            // apply-phase faults skip the retry (the update cannot be
+            // replayed against advanced peers): quarantine directly and
+            // tell the trainer state moved.
+            self.quarantine(fault.clone());
+            return Ok(SupOutcome::Quarantined { fault, state_advanced: true });
+        }
+
+        self.healthy_streak += 1;
+        Ok(SupOutcome::Stepped(stats))
+    }
+
+    /// One bounded grad receive with fault classification (worker errors,
+    /// non-finite shards, hangs, disconnects).
+    fn recv_grad(
+        w: &mut Worker,
+        rank: usize,
+        step: u64,
+        deadline: Duration,
+    ) -> std::result::Result<(Vec<f32>, f32), ReplicaFault> {
+        let fault = |kind: FaultKind, detail: Option<String>| ReplicaFault {
+            rank,
+            step,
+            kind,
+            since_healthy: 0.0,
+            detail,
+        };
+        match w.recv_deadline(rank, step, deadline) {
+            Ok(Reply::Grad { grads, loss }) => {
+                if !loss.is_finite() || grads.iter().any(|x| !x.is_finite()) {
+                    Err(fault(
+                        FaultKind::NonFiniteGrad,
+                        Some(format!("shard loss {loss}")),
+                    ))
+                } else {
+                    Ok((grads, loss))
+                }
+            }
+            Ok(Reply::Err(e)) => Err(fault(FaultKind::ChannelClosed, Some(e))),
+            Ok(_) => Err(fault(FaultKind::ChannelClosed, Some("unexpected grad reply".into()))),
+            Err(f) => Err(f),
+        }
+    }
+
+    /// The single retry: a fresh worker for `rank` (booted from the
+    /// current state snapshot — grads are read-only, so it is in lockstep)
+    /// re-runs exactly the missing shards. An armed injection re-fires
+    /// here, which is what forces the quarantine path deterministically.
+    #[allow(clippy::too_many_arguments)]
+    fn retry_shards(
+        &mut self,
+        snap: Arc<HostState>,
+        rank: usize,
+        missing: &[usize],
+        inject: Option<(usize, FailMode)>,
+        tokens: &[i32],
+        bsz: usize,
+        seqlen: usize,
+        parts: &mut [Option<(Vec<f32>, f32)>],
+    ) -> std::result::Result<Worker, ReplicaFault> {
+        let width = seqlen + 1;
+        let shard_bsz = bsz / self.n;
+        let mut w = self.respawn(snap, rank)?;
+        if let Some((_, mode)) = inject.filter(|&(r, _)| r == rank) {
+            let _ = w.send(Cmd::Fail(mode));
+        }
+        for &sh in missing {
+            let (a, b) = shard_range(bsz, self.n, sh);
+            w.send(Cmd::Grad {
+                tokens: tokens[a * width..b * width].to_vec(),
+                bsz: shard_bsz,
+                seqlen,
+            })
+            .map_err(|_| ReplicaFault {
+                rank,
+                step: 0,
+                kind: FaultKind::ChannelClosed,
+                since_healthy: 0.0,
+                detail: Some("retry command channel closed".into()),
+            })?;
+        }
+        for &sh in missing {
+            match Self::recv_grad(&mut w, rank, 0, self.policy.deadline) {
+                Ok(part) => parts[sh] = Some(part),
+                Err(f) => {
+                    w.abandon();
+                    return Err(f);
+                }
+            }
+        }
+        Ok(w)
+    }
+
+    /// Restore every *live* worker from replica 0's current state (one
+    /// materialization, fanned out). Called after a trainer rollback;
+    /// quarantined slots stay quarantined until their rejoin.
+    pub fn sync_from(&mut self, state: &TrainState) -> Result<()> {
+        let span = crate::span!(self.obs, "sync_replicas", state.step);
+        let host = Arc::new(state.materialize()?);
+        let step_now = state.step;
+        let mut faults: Vec<ReplicaFault> = Vec::new();
+        for rank in 1..self.n {
+            let Slot::Live(w) = &self.slots[rank - 1] else { continue };
+            if w.send(Cmd::Upload { host: host.clone() }).is_err() {
+                faults.push(ReplicaFault {
+                    rank,
+                    step: step_now,
+                    kind: FaultKind::ChannelClosed,
+                    since_healthy: 0.0,
+                    detail: Some("command channel closed before sync".into()),
+                });
+            }
+        }
+        for rank in 1..self.n {
+            if faults.iter().any(|f| f.rank == rank) {
+                continue;
+            }
+            let deadline = self.policy.deadline;
+            let Slot::Live(w) = &mut self.slots[rank - 1] else { continue };
+            match w.recv_deadline(rank, step_now, deadline) {
+                Ok(Reply::Uploaded) => {}
+                Ok(Reply::Err(e)) => faults.push(ReplicaFault {
+                    rank,
+                    step: step_now,
+                    kind: FaultKind::ChannelClosed,
+                    since_healthy: 0.0,
+                    detail: Some(e),
+                }),
+                Ok(_) => faults.push(ReplicaFault {
+                    rank,
+                    step: step_now,
+                    kind: FaultKind::ChannelClosed,
+                    since_healthy: 0.0,
+                    detail: Some("unexpected sync reply".into()),
+                }),
+                Err(f) => faults.push(f),
+            }
+        }
+        drop(span);
+        // a rank that cannot even resync is quarantined, not fatal — the
+        // supervised group degrades and the run continues
+        for f in faults {
+            self.quarantine(f);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ReplicaSupervisor {
+    fn drop(&mut self) {
+        for slot in self.slots.drain(..) {
+            if let Slot::Live(w) = slot {
+                // cooperative: live workers (and injected wedges) drain
+                // Shutdown; genuinely hung workers were already abandoned
+                w.shutdown();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn rand_tokens(n: usize, vocab: usize, seed: u64) -> Vec<i32> {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+    }
+
+    fn test_policy() -> SupervisorPolicy {
+        SupervisorPolicy {
+            deadline: Duration::from_millis(500),
+            retry_backoff: Duration::from_millis(1),
+            rejoin_after: 1_000_000, // stay degraded for the whole test
+        }
+    }
+
+    /// Run `steps` supervised gpt3 steps at `n` replicas and global batch
+    /// `bsz`, re-dispatching aborted steps (what the trainer does on a
+    /// grad-phase quarantine). Returns per-step loss bits, final params,
+    /// and the quarantine count.
+    fn run_supervised(
+        n: usize,
+        bsz: usize,
+        steps: usize,
+        fault: Option<ArmedReplicaFault>,
+    ) -> (Vec<u32>, Vec<f32>, u64) {
+        let mut engine = Engine::load(&root(), "gpt3").unwrap();
+        let mut state = engine.init_state(8, 42).unwrap();
+        let vocab = engine.model().vocab;
+        let mut sup = ReplicaSupervisor::new(&engine, &state, n, test_policy()).unwrap();
+        if let Some(f) = fault {
+            sup.arm_fault(f);
+        }
+        let mut bits = Vec::new();
+        for k in 0..steps {
+            let toks = rand_tokens(bsz * 65, vocab, 100 + k as u64);
+            loop {
+                match sup
+                    .train_step(&mut engine, &mut state, &toks, bsz, 64, 1e-3, 1.0)
+                    .unwrap()
+                {
+                    SupOutcome::Stepped(stats) => {
+                        assert!(stats.is_finite());
+                        bits.push(stats.loss.to_bits());
+                        break;
+                    }
+                    SupOutcome::Quarantined { state_advanced, .. } => {
+                        assert!(!state_advanced, "grad-phase faults never advance state");
+                    }
+                }
+            }
+        }
+        (bits, state.params_vec().unwrap(), sup.quarantines())
+    }
+
+    /// The fused single-surviving-engine reference: one engine computes
+    /// all N canonical shards sequentially and reduces them in the same
+    /// fixed tree — the trajectory every degraded configuration must
+    /// reproduce bit-identically.
+    fn run_fused_accumulating(n: usize, bsz: usize, steps: usize) -> (Vec<u32>, Vec<f32>) {
+        let mut engine = Engine::load(&root(), "gpt3").unwrap();
+        let mut state = engine.init_state(8, 42).unwrap();
+        let vocab = engine.model().vocab;
+        let shard_bsz = bsz / n;
+        let mut bits = Vec::new();
+        for k in 0..steps {
+            let toks = rand_tokens(bsz * 65, vocab, 100 + k as u64);
+            let mut grads = Vec::new();
+            let mut losses = Vec::new();
+            for sh in 0..n {
+                let (a, b) = shard_range(bsz, n, sh);
+                let (g, l) = engine
+                    .grad_step(&state, &toks[a * 65..b * 65], shard_bsz, 64)
+                    .unwrap();
+                grads.push(g);
+                losses.push(l);
+            }
+            let (reduced, mean_loss) = tree_reduce(grads, losses).unwrap();
+            let stats = engine
+                .apply_step(&mut state, &reduced, 1e-3, 1.0, mean_loss, (bsz * 64) as u64)
+                .unwrap();
+            bits.push(stats.loss.to_bits());
+        }
+        (bits, state.params_vec().unwrap())
+    }
+
+    #[test]
+    fn degraded_group_reproduces_fused_and_healthy_trajectories_bit_identically() {
+        // property: for N in {2,3,4} at equal global batch, one rank
+        // quarantined from step 0 (survivors accumulating in canonical
+        // shard-index order) == healthy N == fused single-engine
+        // accumulation, bit for bit
+        for (n, bsz) in [(2usize, 8usize), (3, 12), (4, 8)] {
+            let steps = 3;
+            let (fused_bits, fused_params) = run_fused_accumulating(n, bsz, steps);
+            let (healthy_bits, healthy_params, q0) = run_supervised(n, bsz, steps, None);
+            let fault =
+                ArmedReplicaFault { at_call: 0, rank: n - 1, mode: FailMode::GradNan };
+            let (deg_bits, deg_params, q1) = run_supervised(n, bsz, steps, Some(fault));
+            assert_eq!(q0, 0, "healthy N={n} must not quarantine");
+            assert_eq!(q1, 1, "injected fault must quarantine exactly once at N={n}");
+            assert_eq!(healthy_bits, fused_bits, "healthy N={n} vs fused accumulation");
+            assert_eq!(deg_bits, fused_bits, "degraded N={n} vs fused accumulation");
+            assert_eq!(healthy_params, fused_params, "params healthy N={n}");
+            assert_eq!(deg_params, fused_params, "params degraded N={n}");
+        }
+    }
+
+    #[test]
+    fn injected_grad_nan_quarantines_exactly_once_and_recovers() {
+        // the retry re-fires the injection (fresh engine, same NaN), so
+        // the rank is quarantined; every later step runs degraded and
+        // healthy, with no second quarantine
+        let fault = ArmedReplicaFault { at_call: 1, rank: 1, mode: FailMode::GradNan };
+        let (bits, _, quarantines) = run_supervised(2, 8, 4, Some(fault));
+        assert_eq!(quarantines, 1);
+        assert_eq!(bits.len(), 4);
+        let (healthy_bits, _, _) = run_supervised(2, 8, 4, None);
+        assert_eq!(bits, healthy_bits, "recovery trajectory must match fault-free");
+    }
+
+    #[test]
+    fn panic_and_hang_faults_follow_the_same_quarantine_contract() {
+        for mode in [FailMode::Panic, FailMode::Hang] {
+            let fault = ArmedReplicaFault { at_call: 0, rank: 1, mode };
+            let (bits, _, quarantines) = run_supervised(2, 8, 2, Some(fault));
+            assert_eq!(quarantines, 1, "{mode:?} must quarantine exactly once");
+            assert_eq!(bits.len(), 2);
+        }
+    }
+
+    #[test]
+    fn rejoin_restores_the_full_group_after_a_healthy_streak() {
+        let mut engine = Engine::load(&root(), "gpt3").unwrap();
+        let mut state = engine.init_state(8, 42).unwrap();
+        let vocab = engine.model().vocab;
+        let mut policy = test_policy();
+        policy.rejoin_after = 2;
+        let mut sup = ReplicaSupervisor::new(&engine, &state, 2, policy).unwrap();
+        sup.arm_fault(ArmedReplicaFault { at_call: 0, rank: 1, mode: FailMode::GradNan });
+        let mut stepped = 0;
+        let mut k = 0u64;
+        while stepped < 4 {
+            let toks = rand_tokens(8 * 65, vocab, 500 + k);
+            k += 1;
+            match sup.train_step(&mut engine, &mut state, &toks, 8, 64, 1e-3, 1.0).unwrap() {
+                SupOutcome::Stepped(_) => stepped += 1,
+                SupOutcome::Quarantined { state_advanced, .. } => assert!(!state_advanced),
+            }
+        }
+        assert_eq!(sup.quarantines(), 1);
+        assert_eq!(sup.rejoins(), 1, "the rank must rejoin after the healthy streak");
+        assert_eq!(sup.n_healthy(), 2);
+        assert!(sup.quarantined_ranks().is_empty());
+        // and the rejoined group still steps in lockstep
+        let toks = rand_tokens(8 * 65, vocab, 999);
+        assert!(matches!(
+            sup.train_step(&mut engine, &mut state, &toks, 8, 64, 1e-3, 1.0).unwrap(),
+            SupOutcome::Stepped(_)
+        ));
+    }
+}

@@ -328,6 +328,44 @@ impl Autopilot {
         }
     }
 
+    /// Mechanical rollback for an external, non-numerical fault (a replica
+    /// quarantine): restore the newest ring snapshot in place **without
+    /// touching the closed-loop controller** — no LR decay, no re-entry
+    /// cap, no `max_rollbacks` charge — so the degraded replay retraces
+    /// the fault-free trajectory bit-identically (grads are a pure
+    /// function of state + shard, and the schedule is unchanged). The
+    /// sentinel resets like any restore; the snapshot stays in the ring
+    /// (it is not suspect — the fault was mechanical). Returns the restore
+    /// point, or `None` when the ring is empty.
+    pub fn rollback_for_fault(
+        &mut self,
+        step: usize,
+        state: &mut TrainState,
+    ) -> Result<Option<(u64, u64)>> {
+        let Some(snap) = self.ring.latest() else {
+            return Ok(None);
+        };
+        {
+            let _s = crate::span!(self.obs, "rollback_restore", step);
+            state.upload(snap)?;
+        }
+        let (to_step, to_tokens) = (snap.step, snap.tokens);
+        self.sentinel.reset();
+        self.steps_since_snapshot = 0;
+        self.trace.rollbacks.push(RollbackEvent {
+            at_step: step,
+            restored_step: to_step,
+            // the faulted step never applied; only the replay distance is
+            // wasted work
+            wasted_steps: step.saturating_sub(to_step as usize),
+            loss_ratio: 1.0,
+            var_ratio: 1.0,
+            lr_scale_after: self.controller.lr_scale(),
+            reentry_seqlen: self.controller.override_len().unwrap_or(0),
+        });
+        Ok(Some((to_step, to_tokens)))
+    }
+
     pub fn trace(&self) -> &StabilityTrace {
         &self.trace
     }

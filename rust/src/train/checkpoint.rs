@@ -57,7 +57,12 @@ pub fn save(state: &HostState, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    // stream to a temp sibling, then atomically rename into place: a torn
+    // write (crash, full disk) must never *replace* a good checkpoint at
+    // the target path — the trailing checksum would reject the torn file on
+    // load, but the previous good one would already be gone
+    let tmp = crate::util::fsx::tmp_sibling(path);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
     let mut sum = Fnv::new();
     f.write_all(MAGIC)?;
     for header in [n as u64, state.step, state.tokens] {
@@ -71,6 +76,9 @@ pub fn save(state: &HostState, path: &Path) -> Result<()> {
         f.write_all(&bytes)?;
     }
     f.write_all(&sum.0.to_le_bytes())?;
+    f.flush()?;
+    drop(f);
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing checkpoint {path:?}"))?;
     Ok(())
 }
 
@@ -139,6 +147,10 @@ mod tests {
         let dir = std::env::temp_dir().join("slw_ckpt_test");
         let path = dir.join("a.ckpt");
         save(&state, &path).unwrap();
+        assert!(
+            !crate::util::fsx::tmp_sibling(&path).exists(),
+            "save must consume its temp sibling"
+        );
         let loaded = load(&man, &path).unwrap();
         assert_eq!(loaded.step, 42);
         assert_eq!(loaded.tokens, 12345);

@@ -31,7 +31,11 @@ use crate::pipeline::pacing::{BucketedPacing, Pacing};
 use crate::pipeline::plan::{Budget, PlanCursor, Planner, StepSpec};
 use crate::pipeline::prefetch::{PrefetchStats, Prefetcher};
 use crate::pipeline::bsz_warmup::BszWarmup;
-use crate::runtime::{Engine, TrainState};
+use crate::inject::ReplicaFaultKind;
+use crate::runtime::{
+    ArmedReplicaFault, Engine, FailMode, ReplicaSupervisor, SupOutcome, SupervisorPolicy,
+    TrainState,
+};
 use crate::schedule::lr::{Horizon, LrSchedule};
 use crate::sim::cluster::{ClusterConfig, ClusterSim, ModelDims};
 use crate::stability::{Autopilot, Outcome, Verdict};
@@ -57,6 +61,9 @@ pub struct RunResult {
     pub plan_steps: usize,
     /// data-pipeline counters (prefetch hit rate, re-plans, stale drops)
     pub pipeline: PrefetchStats,
+    /// the run stopped early on SIGINT (state is valid at the last
+    /// completed step; the CLI spills a checkpoint and exits 130)
+    pub interrupted: bool,
 }
 
 /// Worker-level corpus cache: generated `TokenStore`s keyed by
@@ -342,20 +349,47 @@ impl Trainer {
         // device-resident state: one init upload here, then params/m/v stay
         // on the device — per-step host traffic is tokens + knobs + stats
         let mut state = self.engine.init_state(self.config.batch, self.config.seed)?;
-        // data-parallel replica group (N > 1 only): replica 0 is this
-        // trainer's engine/state; workers 1..N-1 own their own engines and
-        // start from one materialization of the just-initialized state.
-        // N = 1 stays on the fused single-engine path below, bit-identical
-        // to the pre-replica build.
-        let mut group = match self.config.n_replicas {
+        // elastic data-parallel replica group (N > 1 only): replica 0 is
+        // this trainer's engine/state; workers 1..N-1 own their own engines
+        // and start from one materialization of the just-initialized state.
+        // The supervisor wraps every worker channel in a bounded deadline,
+        // retries a failed shard once on a fresh engine, and quarantines
+        // the replica on repeated failure (see docs/PARALLELISM.md). N = 1
+        // stays on the fused single-engine path below, bit-identical to the
+        // pre-replica build.
+        let replica_fault = inject.as_ref().and_then(|i| i.replica_fault());
+        let mut sup = match self.config.n_replicas {
             0 | 1 => None,
             n => {
                 crate::runtime::replica::validate_sharding(&self.engine, self.config.batch, n)?;
-                let mut g = crate::runtime::ReplicaGroup::new(&self.engine, &state, n)?;
-                g.set_obs(obs.clone());
+                // a wedged worker costs up to 2x the deadline (initial
+                // attempt + retry) before quarantine; scenario runs that
+                // *arm* a hang shorten it so the lab stays fast — the
+                // deadline only ever decides when a dead worker is declared
+                // dead, never a healthy trajectory
+                let deadline = match replica_fault {
+                    Some((_, _, ReplicaFaultKind::Hang)) => {
+                        std::time::Duration::from_millis(500)
+                    }
+                    _ => SupervisorPolicy::default().deadline,
+                };
+                let policy = SupervisorPolicy { deadline, ..Default::default() };
+                let mut s = ReplicaSupervisor::new(&self.engine, &state, n, policy)?;
+                s.set_obs(obs.clone());
                 // surfaces as the `slw_replicas` gauge on /metrics
                 obs.counter("replicas", n as i64);
-                Some(g)
+                // armed against the supervisor's *lifetime* call counter
+                // (like the engine's StatsFault), so post-rollback replays
+                // of the same step index run clean
+                if let Some((at, rank, kind)) = replica_fault {
+                    let mode = match kind {
+                        ReplicaFaultKind::Panic => FailMode::Panic,
+                        ReplicaFaultKind::Hang => FailMode::Hang,
+                        ReplicaFaultKind::GradNan => FailMode::GradNan,
+                    };
+                    s.arm_fault(ArmedReplicaFault { at_call: s.calls() + at as u64, rank, mode });
+                }
+                Some(s)
             }
         };
         // the stability autopilot: sentinel over every executed step, a
@@ -375,7 +409,20 @@ impl Trainer {
         // resume points a rollback re-plans from
         let mut cursors: Vec<PlanCursor> = Vec::new();
         let mut bad_streak = 0usize;
+        let mut interrupted = false;
         loop {
+            // SIGINT lands between steps: the state is valid at the last
+            // completed step, so stop cleanly — no incident dump, a spilled
+            // checkpoint instead of a lost run (see `slw train`)
+            if crate::util::interrupt::triggered() {
+                crate::info!(
+                    "{}: interrupt received, stopping cleanly at step {}",
+                    self.config.name,
+                    planner.cursor().step
+                );
+                interrupted = true;
+                break;
+            }
             if planner.cursor().step >= max_steps {
                 break;
             }
@@ -414,9 +461,10 @@ impl Trainer {
                 // pre-scaled version of it
                 lr_t *= inj.lr_mult(spec.step);
             }
-            let stats = match group.as_mut() {
-                // sharded grad + fixed-order tree reduce + fanned-back apply
-                Some(g) => g.train_step(
+            let stats = match sup.as_mut() {
+                // supervised sharded grad + fixed-order tree reduce +
+                // fanned-back apply, with quarantine on unrecoverable faults
+                Some(s) => match s.train_step(
                     &mut self.engine,
                     &mut state,
                     &batch.tokens,
@@ -424,7 +472,94 @@ impl Trainer {
                     batch.seqlen,
                     lr_t,
                     self.config.clip_norm,
-                )?,
+                )? {
+                    SupOutcome::Stepped(stats) => stats,
+                    SupOutcome::Quarantined { fault, state_advanced } => {
+                        crate::warn_!(
+                            "{}: replica {} quarantined at step {} ({}) — {}/{} replicas \
+                             remain",
+                            self.config.name,
+                            fault.rank,
+                            spec.step,
+                            fault.kind,
+                            s.n_healthy(),
+                            s.n()
+                        );
+                        obs.instant("quarantine", spec.step as i64);
+                        // every quarantine dumps an incident: the fault, the
+                        // surviving group shape, and the lead-in window
+                        if let Some(fr) = &mut flight {
+                            let detail = vec![
+                                ("rank", json::num(fault.rank as f64)),
+                                ("fault_kind", json::s(&fault.kind.to_string())),
+                                ("since_healthy_s", json::num(fault.since_healthy)),
+                                ("state_advanced", json::num(state_advanced as i64 as f64)),
+                                ("n_healthy", json::num(s.n_healthy() as f64)),
+                            ];
+                            fr.incident(
+                                spec.step,
+                                "quarantine",
+                                &crate::runtime::StepStats::default(),
+                                detail,
+                                &history,
+                                &obs,
+                            )?;
+                        }
+                        // recovery: the autopilot's checkpoint ring is the
+                        // trusted restore point; restore it *mechanically*
+                        // (no LR decay, no re-entry cap) so the degraded
+                        // replay retraces the fault-free trajectory bit for
+                        // bit
+                        let restored = match pilot.as_mut() {
+                            Some(p) => p.rollback_for_fault(spec.step, &mut state)?,
+                            None => None,
+                        };
+                        match restored {
+                            Some((to_step, _)) => {
+                                let to = to_step as usize;
+                                let resume = if to >= cursors.len() {
+                                    planner.cursor()
+                                } else {
+                                    cursors[to]
+                                };
+                                history.rewind(to);
+                                cursors.truncate(to);
+                                planner.seek(resume);
+                                pipe.publish(planner.tail_window(TAIL_WINDOW));
+                                // fan the restored state out so the
+                                // survivors replay in bit-lockstep
+                                s.sync_from(&state)?;
+                                bad_streak = 0;
+                                was_warning = false;
+                                if let Some(reg) = &registry {
+                                    reg.rollback(&run_slug, to);
+                                }
+                                continue;
+                            }
+                            None if pilot.is_some() && !state_advanced => {
+                                // autopilot with an exhausted ring but an
+                                // untouched state: replay this step in place
+                                // on the degraded group
+                                pipe.publish(planner.tail_window(TAIL_WINDOW));
+                                s.sync_from(&state)?;
+                                continue;
+                            }
+                            None => {
+                                // open loop (or advanced state with no
+                                // snapshot): no trusted restore point — the
+                                // run dies like a checkpoint-less job losing
+                                // a worker. This is the scenario gate's
+                                // open-loop-vs-autopilot contrast.
+                                crate::warn_!(
+                                    "{}: no recovery path for the quarantine, stopping",
+                                    self.config.name
+                                );
+                                history.diverged_at = Some(spec.step);
+                                break;
+                            }
+                        }
+                    }
+                },
                 None => self.engine.train_step(
                     &mut state,
                     &batch.tokens,
@@ -486,8 +621,8 @@ impl Trainer {
                         // the autopilot restored replica 0 in place; fan the
                         // same HostState out so every worker replica rejoins
                         // bit-lockstep before the replay
-                        if let Some(g) = group.as_mut() {
-                            g.sync_from(&state)?;
+                        if let Some(s) = sup.as_mut() {
+                            s.sync_from(&state)?;
                         }
                         bad_streak = 0;
                         was_warning = false;
@@ -552,6 +687,7 @@ impl Trainer {
                     verdict_name,
                     lr_scale,
                     self.config.n_replicas.max(1),
+                    sup.as_ref().map_or(1, |s| s.n_healthy()),
                 );
                 if let Some(m) = &mut metrics {
                     m.write_row(&row)?;
@@ -586,7 +722,9 @@ impl Trainer {
             history.stability = Some(p.into_trace());
         }
         if let Some(reg) = &registry {
-            let outcome = if history.diverged() {
+            let outcome = if interrupted {
+                "interrupted"
+            } else if history.diverged() {
                 "diverged"
             } else if history.stability.as_ref().is_some_and(|t| t.gave_up) {
                 "gave_up"
@@ -596,7 +734,7 @@ impl Trainer {
             reg.finish(&run_slug, outcome);
         }
         let plan_steps = static_plan_steps.unwrap_or(history.steps.len());
-        Ok(RunResult { history, state, plan_steps, pipeline: pipe.stats() })
+        Ok(RunResult { history, state, plan_steps, pipeline: pipe.stats(), interrupted })
     }
 
     /// Record one executed step and advance the divergence-patience
@@ -1079,6 +1217,43 @@ mod tests {
             trace.rollbacks.iter().map(|r| (r.at_step, r.restored_step)).collect::<Vec<_>>(),
             tb.rollbacks.iter().map(|r| (r.at_step, r.restored_step)).collect::<Vec<_>>(),
         );
+    }
+
+    #[test]
+    fn injected_replica_fault_degrades_and_retraces_the_healthy_trajectory() {
+        // the elastic contract end to end at the trainer level: a NaN-
+        // poisoned gradient shard quarantines worker 1, the autopilot
+        // restores the newest ring snapshot *mechanically* (no LR decay, no
+        // re-entry cap), and the surviving replica covers both shards in
+        // canonical order — so the finished run is bit-identical to the
+        // fault-free N=2 run
+        let healthy = Trainer::new(&root(), gpt3_replica_cfg(2)).unwrap().run().unwrap();
+        let mut cfg = gpt3_replica_cfg(2);
+        cfg.stability = Some(crate::stability::StabilityPolicy::default());
+        cfg.inject = crate::inject::InjectionSpec::parse("replica_grad_nan:at=2,rank=1").ok();
+        let faulted = Trainer::new(&root(), cfg).unwrap().run().unwrap();
+        assert!(!faulted.history.diverged(), "the quarantine must not kill the run");
+        assert_eq!(
+            trajectory(&healthy),
+            trajectory(&faulted),
+            "the degraded replay must retrace the fault-free trajectory bit for bit"
+        );
+        let trace = faulted.history.stability.as_ref().expect("trace");
+        assert_eq!(trace.n_rollbacks(), 1, "one quarantine, one mechanical rollback");
+        // mechanical: the controller was never touched
+        assert_eq!(trace.rollbacks[0].lr_scale_after, 1.0);
+    }
+
+    #[test]
+    fn open_loop_replica_fault_kills_the_run() {
+        // the scenario gate's contrast: without the autopilot's checkpoint
+        // ring there is no trusted restore point, so a quarantine ends the
+        // run like a checkpoint-less job losing a worker
+        let mut cfg = gpt3_replica_cfg(2);
+        cfg.inject = crate::inject::InjectionSpec::parse("replica_panic:at=2,rank=1").ok();
+        let out = Trainer::new(&root(), cfg).unwrap().run().unwrap();
+        assert!(out.history.diverged(), "open loop must record the lost run");
+        assert!(out.history.steps.len() < 6, "the budget must not complete");
     }
 
     #[test]

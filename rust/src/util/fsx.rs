@@ -1,0 +1,74 @@
+//! Crash-safe filesystem helpers.
+//!
+//! Every durable artifact the pipeline serves back to itself later — run
+//! cache entries, checkpoints, metrics JSONL, `BENCH_*.json` — goes
+//! through [`write_atomic`]: bytes land in a sibling temp file first and
+//! are renamed into place only after a successful flush. A crash mid-write
+//! leaves either the old file or a stray `*.tmp`, never a torn file at the
+//! final path (the coordinator treats a missing/partial entry as a cache
+//! miss, so stray temps are harmless).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Sibling temp path for `path`: same directory with `.tmp` appended to
+/// the file name, so the final `rename` stays on one filesystem (the
+/// atomicity requirement).
+pub fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name =
+        path.file_name().map(|n| n.to_os_string()).unwrap_or_else(|| "out".into());
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path` atomically: temp sibling + flush + rename.
+/// Replaces an existing file in one step; never exposes a partial write.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_sibling(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("slw_fsx_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn tmp_sibling_appends_to_the_file_name() {
+        let p = Path::new("/a/b/entry.json");
+        assert_eq!(tmp_sibling(p), Path::new("/a/b/entry.json.tmp"));
+    }
+
+    #[test]
+    fn write_atomic_creates_and_replaces_without_leaving_temps() {
+        let dir = scratch("replace");
+        let p = dir.join("out.json");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer payload");
+        assert!(!tmp_sibling(&p).exists(), "temp must be renamed away");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_atomic_fails_cleanly_on_missing_parent() {
+        let p = Path::new("/nonexistent_slw_dir/x/y.json");
+        assert!(write_atomic(p, b"x").is_err());
+    }
+}

@@ -4,6 +4,8 @@
 pub mod bench;
 pub mod bytes;
 pub mod cli;
+pub mod fsx;
+pub mod interrupt;
 pub mod json;
 pub mod log;
 pub mod rng;
